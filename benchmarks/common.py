@@ -1,0 +1,62 @@
+"""Shared benchmark utilities: timed runs, CSV emit, graph zoo.
+
+Measurement methodology mirrors the paper (§7): runtime excludes graph
+build/transfer; each primitive runs once to compile then `repeats` times
+for the average; MTEPS = edges visited / runtime.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import graph as G
+
+REPEATS = 3
+
+# CPU-scaled dataset zoo (paper Table 4 families: scale-free rmat ×3
+# sizes, web-ish low-ef rmat, mesh-like grid + rgg)
+DATASETS = {
+    "rmat_s12_e16": lambda: G.rmat(12, 16, seed=1, weighted=True),
+    "rmat_s13_e8": lambda: G.rmat(13, 8, seed=2, weighted=True),
+    "rmat_s14_e4": lambda: G.rmat(14, 4, seed=3, weighted=True),
+    "web_s13_e4": lambda: G.rmat(13, 4, a=0.65, b=0.15, c=0.15, seed=4,
+                                 weighted=True),
+    "grid_90": lambda: G.grid2d(90, weighted=True, seed=5),
+    "rgg_s13": lambda: G.random_geometric(1 << 13, 0.018, seed=6,
+                                          weighted=True),
+}
+
+_CACHE = {}
+
+
+def dataset(name: str):
+    if name not in _CACHE:
+        _CACHE[name] = DATASETS[name]()
+    return _CACHE[name]
+
+
+def best_source(g) -> int:
+    deg = np.diff(np.asarray(g.row_offsets))
+    return int(np.argmax(deg))
+
+
+def timed(fn, *args, repeats: int = REPEATS, **kw):
+    """Compile once, then average wall time. Returns (result, seconds)."""
+    out = fn(*args, **kw)
+    jax.block_until_ready(jax.tree.leaves(out))
+    times = []
+    for _ in range(repeats):
+        t0 = time.monotonic()
+        out = fn(*args, **kw)
+        jax.block_until_ready(jax.tree.leaves(out))
+        times.append(time.monotonic() - t0)
+    return out, float(np.median(times))
+
+
+def emit(rows, header):
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(x) for x in r))
+    return rows

@@ -1,0 +1,28 @@
+"""Paper Fig. 19 analogue: BFS under the 4 combinations of idempotence ×
+direction-optimized traversal. Paper claims reproduced (relative):
+DO speeds up scale-free graphs and not meshes; idempotence on very
+uniform-degree graphs can hurt (extra filter pass ≥ atomic savings)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.primitives import bfs
+
+from .common import DATASETS, best_source, dataset, emit, timed
+
+
+def run():
+    rows = []
+    for name in DATASETS:
+        g = dataset(name)
+        src = best_source(g)
+        for direction in (False, True):
+            for idem in (False, True):
+                r, t = timed(lambda: bfs(g, src, direction=direction,
+                                         idempotence=idem))
+                rows.append([name, int(direction), int(idem),
+                             round(t * 1e3, 2),
+                             round(int(r.edges_visited) / t / 1e6, 1),
+                             int(r.pull_iters)])
+    return emit(rows, ["dataset", "direction_opt", "idempotence", "ms",
+                       "mteps", "pull_iters"])

@@ -1,0 +1,32 @@
+"""Paper Fig. 21 analogue: direction-optimizing parameter sweep — BFS
+TEPS as a function of (do_a, do_b) on a scale-free and a mesh graph.
+Reproduces the paper's observation that no single (do_a, do_b) is optimal
+for all datasets and that a rectangular high-performance region exists."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.primitives import bfs
+
+from .common import best_source, dataset, emit, timed
+
+DO_VALUES = [0.0001, 0.001, 0.01, 0.1, 1.0, 10.0]
+
+
+def run():
+    rows = []
+    for name in ("rmat_s12_e16", "grid_90"):
+        g = dataset(name)
+        src = best_source(g)
+        for do_a in DO_VALUES:
+            for do_b in DO_VALUES:
+                r, t = timed(lambda: bfs(g, src, direction=True,
+                                         do_a=do_a, do_b=do_b),
+                             repeats=1)
+                ok = int(np.all(np.asarray(r.labels)[
+                    np.asarray(r.labels) >= 0] >= 0))
+                rows.append([name, do_a, do_b, round(t * 1e3, 2),
+                             round(int(r.edges_visited) / t / 1e6, 1),
+                             int(r.pull_iters), ok])
+    return emit(rows, ["dataset", "do_a", "do_b", "ms", "mteps",
+                       "pull_iters", "ok"])

@@ -1,0 +1,110 @@
+"""Roofline analysis (deliverable g): renders results/dryrun.json into
+the §Dry-run and §Roofline tables of EXPERIMENTS.md.
+
+Terms (per device, v5e):
+  compute    = flops / 197e12          [s]
+  memory     = bytes / 819e9           [s]
+  collective = link_bytes / 50e9       [s]
+Dominant term = bottleneck. Roofline fraction for the compute term =
+MODEL_FLOPS/(chips · 197e12) ÷ max(term)s — how close the *useful* math
+comes to the machine's peak given the measured program.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def load(path: str):
+    with open(path) as f:
+        return json.load(f)
+
+
+def terms(row):
+    est = row.get("est") or {}
+    flops = est.get("flops", 0.0)
+    bytes_ = est.get("bytes", 0.0)
+    coll = est.get("coll_link_bytes", 0.0)
+    t_c = flops / PEAK_FLOPS
+    t_m = bytes_ / HBM_BW
+    t_x = coll / LINK_BW
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])
+    model_t = row["model_flops_global"] / row["chips"] / PEAK_FLOPS
+    frac = model_t / dom[1] if dom[1] > 0 else 0.0
+    useful = (row["model_flops_global"] / row["chips"] / flops
+              if flops else 0.0)
+    return t_c, t_m, t_x, dom[0], frac, useful
+
+
+def advice(row, dom):
+    kind = row["kind"]
+    if dom == "collective":
+        return ("overlap/shrink FSDP gathers (bf16 gathers, wider TP) "
+                if kind == "train" else "shrink EP all-to-all / "
+                "replicate small weights")
+    if dom == "memory":
+        return ("fuse attention (flash kernel) / raise arithmetic "
+                "intensity per HBM byte" if kind != "train"
+                else "larger microbatch per device / fused optimizer")
+    return "already MXU-bound: tune tile shapes, cut remat recompute"
+
+
+def render(path: str, multi: bool = False):
+    data = load(path)
+    rows = [r for r in data["rows"]]
+    out = []
+    out.append("| arch | shape | mesh | peak GiB/dev | compute s | "
+               "memory s | collective s | bottleneck | MODEL/HLO flops | "
+               "roofline frac |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if (r["mesh"] != "16x16") and not multi:
+            continue
+        t_c, t_m, t_x, dom, frac, useful = terms(r)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['memory']['peak_per_device']/2**30:.2f} | "
+            f"{t_c:.3e} | {t_m:.3e} | {t_x:.3e} | {dom} | "
+            f"{useful:.2f} | {frac:.3f} |")
+    if data.get("failures"):
+        out.append("")
+        out.append(f"FAILURES: {data['failures']}")
+    return "\n".join(out)
+
+
+def run():
+    path = os.environ.get("REPRO_DRYRUN_JSON", "results/dryrun.json")
+    if not os.path.exists(path):
+        alt = "results/dryrun_single.json"
+        if os.path.exists(alt):
+            path = alt
+        else:
+            print("roofline: no dryrun json found — run "
+                  "`python -m repro.launch.dryrun --all --out "
+                  "results/dryrun.json` first")
+            return []
+    text = render(path, multi=True)
+    print(text)
+    os.makedirs("results", exist_ok=True)
+    with open("results/roofline.md", "w") as f:
+        f.write(text + "\n")
+    return text.splitlines()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="results/dryrun.json")
+    ap.add_argument("--multi", action="store_true", default=True)
+    args = ap.parse_args()
+    os.environ["REPRO_DRYRUN_JSON"] = args.json
+    run()
+
+
+if __name__ == "__main__":
+    main()

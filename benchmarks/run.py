@@ -1,0 +1,58 @@
+"""Benchmark harness — one module per paper table/figure (§7):
+
+  table6_primitives   runtime + MTEPS per primitive × dataset (Table 6)
+  table7_scaling      size scaling on Kronecker graphs (Table 7)
+  table8_utilization  load-balance quality / lane utilization (Table 8)
+  fig19_optimizations idempotence × direction-optimization (Fig. 19)
+  fig20_strategies    LB / TWC / THREAD workload mappings (Fig. 20)
+  fig21_doab          do_a/do_b direction-parameter sweep (Fig. 21)
+  fig25_tc            TC filtered vs full vs CPU baseline (Fig. 25)
+  table10_wtf         Who-To-Follow pipeline + scaling (Tables 9-11)
+  roofline            LM dry-run roofline tables (deliverable g)
+
+Run all:  PYTHONPATH=src python -m benchmarks.run
+One:      PYTHONPATH=src python -m benchmarks.run --only fig25_tc
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+import traceback
+
+MODULES = [
+    "table6_primitives",
+    "table7_scaling",
+    "table8_utilization",
+    "fig19_optimizations",
+    "fig20_strategies",
+    "fig21_doab",
+    "fig25_tc",
+    "table10_wtf",
+    "roofline",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    mods = [args.only] if args.only else MODULES
+    failures = []
+    for name in mods:
+        print(f"\n===== {name} =====", flush=True)
+        t0 = time.monotonic()
+        try:
+            mod = importlib.import_module(f"benchmarks.{name}")
+            mod.run()
+            print(f"# {name} done in {time.monotonic()-t0:.1f}s",
+                  flush=True)
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Paper Tables 9/10 + Fig. 24 analogue: Who-To-Follow pipeline runtimes
+(PPR / CoT+SALSA split) and scalability over growing follow graphs."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import graph as G
+from repro.core.primitives import who_to_follow
+from repro.core.primitives.wtf import _wtf_impl
+
+from .common import emit, timed
+
+
+def run():
+    rows = []
+    for scale, avg_deg in [(10, 8), (12, 8), (13, 16), (14, 16)]:
+        n_users = 1 << scale
+        g = G.bipartite_random(n_users, n_users // 2, avg_deg, seed=scale)
+        deg = np.diff(np.asarray(g.row_offsets))
+        user = int(np.argmax(deg))
+        r, t = timed(lambda: who_to_follow(g, user, k=min(
+            1000, g.num_vertices - 1), ppr_iters=20, salsa_iters=8))
+        rows.append([f"follow_s{scale}", g.num_vertices, g.num_edges,
+                     round(t * 1e3, 2),
+                     int(np.sum(np.asarray(r.auth_scores) > 0))])
+    return emit(rows, ["dataset", "n", "m", "total_ms",
+                       "nonzero_recommendations"])

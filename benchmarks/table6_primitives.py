@@ -1,0 +1,49 @@
+"""Paper Table 6 analogue: runtime (ms) + MTEPS for every primitive on
+every dataset, with oracle validation (the 'hardwired' comparison role is
+played by the numpy references — correctness + relative scaling claims)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ref as R
+from repro.core.primitives import (bc, bfs, connected_components, pagerank,
+                                   sssp, triangle_count)
+
+from .common import DATASETS, best_source, dataset, emit, timed
+
+
+def run():
+    rows = []
+    for name in DATASETS:
+        g = dataset(name)
+        src = best_source(g)
+        m = g.num_edges
+
+        r, t = timed(lambda: bfs(g, src))
+        rows.append([name, "bfs", round(t * 1e3, 2),
+                     round(int(r.edges_visited) / t / 1e6, 1),
+                     int(np.array_equal(np.asarray(r.labels),
+                                        R.bfs_ref(g, src)))])
+        r, t = timed(lambda: sssp(g, src))
+        rows.append([name, "sssp", round(t * 1e3, 2), "",
+                     int(np.allclose(np.asarray(r.dist),
+                                     R.sssp_ref(g, src), rtol=1e-5))])
+        r, t = timed(lambda: pagerank(g, max_iter=20))
+        rows.append([name, "pagerank", round(t * 1e3, 2),
+                     round(20 * m / t / 1e6, 1),
+                     int(np.allclose(np.asarray(r.rank),
+                                     R.pagerank_ref(g, iters=20),
+                                     atol=1e-6))])
+        r, t = timed(lambda: connected_components(g))
+        ref = R.cc_ref(g)
+        rows.append([name, "cc", round(t * 1e3, 2), "",
+                     int(int(r.num_components) == len(set(ref.tolist())))])
+        r, t = timed(lambda: bc(g, src))
+        rows.append([name, "bc", round(t * 1e3, 2),
+                     round(2 * m / t / 1e6, 1),
+                     int(np.allclose(np.asarray(r.bc), R.bc_ref(g, src),
+                                     rtol=1e-3, atol=1e-3))])
+        r, t = timed(lambda: triangle_count(g))
+        rows.append([name, "tc", round(t * 1e3, 2), "",
+                     int(int(r.total) == R.tc_ref(g))])
+    return emit(rows, ["dataset", "primitive", "ms", "mteps", "valid"])

@@ -1,0 +1,36 @@
+"""Paper Table 7 analogue: scalability of the primitives on
+synthetically-grown Kronecker graphs of similar structure (runtime +
+MTEPS vs size; the paper observes near-linear BFS scaling and atomic-
+contention sublinearity for BC/SSSP/PR)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import graph as G
+from repro.core.primitives import bc, bfs, connected_components, pagerank, \
+    sssp
+
+from .common import best_source, emit, timed
+
+
+def run():
+    rows = []
+    for scale in (10, 11, 12, 13):
+        g = G.rmat(scale, 8, seed=scale, weighted=True)
+        src = best_source(g)
+        m = g.num_edges
+        for pname, fn, edges in [
+            ("bfs", lambda: bfs(g, src), None),
+            ("sssp", lambda: sssp(g, src), None),
+            ("bc", lambda: bc(g, src), 2 * m),
+            ("pagerank", lambda: pagerank(g, max_iter=10), 10 * m),
+            ("cc", lambda: connected_components(g), None),
+        ]:
+            r, t = timed(fn)
+            ev = edges
+            if pname == "bfs":
+                ev = int(r.edges_visited)
+            mteps = round(ev / t / 1e6, 1) if ev else ""
+            rows.append([f"kron_s{scale}", g.num_vertices, m, pname,
+                         round(t * 1e3, 2), mteps])
+    return emit(rows, ["dataset", "n", "m", "primitive", "ms", "mteps"])

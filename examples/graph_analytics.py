@@ -1,0 +1,12 @@
+"""End-to-end graph-analytics driver — the paper's application kind
+(deliverable b): generate a graph, run all primitives, validate each
+against its oracle, report runtime + MTEPS like the paper's §7 tables.
+
+    PYTHONPATH=src python examples/graph_analytics.py
+"""
+from repro.launch.graph_run import main
+
+if __name__ == "__main__":
+    main(["--graph", "rmat", "--scale", "12", "--edge-factor", "8",
+          "--primitives", "bfs,sssp,pagerank,cc,bc,tc,wtf",
+          "--validate"])

@@ -1,0 +1,10 @@
+"""Batched serving: prefill + lockstep decode against a static KV cache
+(the inference-side end-to-end driver).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "minicpm-2b", "--smoke", "--requests", "8",
+          "--batch", "4", "--prompt-len", "32", "--gen-len", "16"])

@@ -1,0 +1,19 @@
+"""Gunrock-JAX core: the paper's data-centric frontier abstraction.
+
+Public surface:
+  graph      — CSR/CSC containers + generators (R-MAT, RGG, grid, bipartite)
+  frontier   — Sparse/Dense frontier reps + compaction
+  operators  — advance / filter / segmented_intersect / neighborhood_reduce
+               / compute + LB/TWC/THREAD workload-mapping strategies
+  direction  — push/pull direction-optimization heuristics
+  enactor    — BSP convergence-loop driver
+  primitives — bfs, sssp, pagerank, connected_components, bc,
+               triangle_count, who_to_follow
+"""
+from . import direction, enactor, frontier, graph, operators
+from .primitives import (bc, bfs, connected_components, pagerank, sssp,
+                         triangle_count, who_to_follow)
+
+__all__ = ["graph", "frontier", "operators", "direction", "enactor",
+           "bfs", "sssp", "pagerank", "connected_components", "bc",
+           "triangle_count", "who_to_follow"]

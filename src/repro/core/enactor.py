@@ -1,0 +1,41 @@
+"""The enactor: Gunrock's iterative-convergent BSP loop driver (paper §3).
+
+A Gunrock program is a `Problem` (algorithm state pytree), a set of functors,
+and an `Enactor` that runs bulk-synchronous operator steps until convergence
+(typically: empty frontier, or max-iteration / volatile-flag criteria).
+
+`run_until` wraps `jax.lax.while_loop` with an iteration guard so every
+primitive shares the same convergence contract and can be jitted end-to-end
+(one XLA program per primitive — the whole-primitive analogue of the paper's
+kernel-fusion philosophy).
+"""
+from __future__ import annotations
+
+from typing import Callable, TypeVar
+
+import jax
+import jax.numpy as jnp
+
+S = TypeVar("S")
+
+
+def run_until(cond: Callable[[S], jax.Array],
+              body: Callable[[S], S],
+              state: S,
+              max_iter: int) -> tuple[S, jax.Array]:
+    """while (cond(state) && it < max_iter): state = body(state).
+
+    Returns (final_state, iterations_run). ``max_iter`` bounds the loop so
+    XLA sees a well-founded while; primitives pass n (or a diameter bound).
+    """
+
+    def _cond(carry):
+        state, it = carry
+        return jnp.logical_and(cond(state), it < max_iter)
+
+    def _body(carry):
+        state, it = carry
+        return body(state), it + 1
+
+    (final, iters) = jax.lax.while_loop(_cond, _body, (state, jnp.int32(0)))
+    return final, iters

@@ -1,0 +1,126 @@
+"""Frontier data structures — the core abstraction of the paper (§3).
+
+A frontier is "a subset of the edges or vertices within the graph that is
+currently of interest". On TPU, XLA requires static shapes, so a frontier
+is a fixed-capacity buffer:
+
+  SparseFrontier: ids (capacity,) int32, padded with -1 past ``length``.
+                  This is Gunrock's compacted work queue.
+  DenseFrontier:  flags (n,) bool — one bit per vertex. This is exactly the
+                  bitmap Gunrock uses for the pull phase (§5.1.4) and the
+                  visited-status arrays of idempotent traversal (§5.2.1).
+
+Conversions between the two are first-class, because the paper's
+direction-optimized traversal is precisely a representation switch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+INVALID = jnp.int32(-1)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class SparseFrontier:
+    """Compacted queue of vertex or edge IDs with static capacity."""
+
+    ids: jax.Array      # (capacity,) int32; entries >= length are INVALID
+    length: jax.Array   # () int32
+
+    def tree_flatten(self):
+        return (self.ids, self.length), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def capacity(self) -> int:
+        return int(self.ids.shape[0])
+
+    @property
+    def valid_mask(self) -> jax.Array:
+        return jnp.arange(self.capacity, dtype=jnp.int32) < self.length
+
+    def to_dense(self, n: int) -> "DenseFrontier":
+        flags = jnp.zeros((n,), dtype=bool)
+        # max-scatter: invalid lanes (mapped to slot 0) must never clear a
+        # real member's flag
+        safe = jnp.where(self.valid_mask, self.ids, 0)
+        flags = flags.at[safe].max(self.valid_mask, mode="drop")
+        return DenseFrontier(flags)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class DenseFrontier:
+    """Bitmap frontier over all n vertices."""
+
+    flags: jax.Array    # (n,) bool
+
+    def tree_flatten(self):
+        return (self.flags,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def n(self) -> int:
+        return int(self.flags.shape[0])
+
+    @property
+    def length(self) -> jax.Array:
+        return jnp.sum(self.flags.astype(jnp.int32))
+
+    def to_sparse(self, capacity: int | None = None) -> SparseFrontier:
+        capacity = self.n if capacity is None else capacity
+        return compact_indices(self.flags, capacity)
+
+
+def from_ids(ids, capacity: int) -> SparseFrontier:
+    """Build a SparseFrontier from a (short) list/array of IDs."""
+    ids = jnp.asarray(ids, dtype=jnp.int32).reshape(-1)
+    k = ids.shape[0]
+    buf = jnp.full((capacity,), INVALID, dtype=jnp.int32)
+    buf = buf.at[:k].set(ids)
+    return SparseFrontier(ids=buf, length=jnp.int32(k))
+
+
+def empty(capacity: int) -> SparseFrontier:
+    return SparseFrontier(ids=jnp.full((capacity,), INVALID, jnp.int32),
+                          length=jnp.int32(0))
+
+
+def compact_indices(mask: jax.Array, capacity: int) -> SparseFrontier:
+    """Stream-compact ``nonzero(mask)`` into a fixed-size buffer.
+
+    Prefix-sum + scatter — the standard GPU compaction the paper builds
+    filter on (§4.2), expressed as XLA ops.
+    """
+    n = mask.shape[0]
+    mask_i = mask.astype(jnp.int32)
+    pos = jnp.cumsum(mask_i) - mask_i            # exclusive scan
+    length = jnp.minimum(pos[-1] + mask_i[-1] if n else jnp.int32(0),
+                         jnp.int32(capacity))
+    buf = jnp.full((capacity,), INVALID, jnp.int32)
+    tgt = jnp.where(mask & (pos < capacity), pos, capacity)  # drop overflow
+    buf = buf.at[tgt].set(jnp.arange(n, dtype=jnp.int32), mode="drop")
+    return SparseFrontier(ids=buf, length=length.astype(jnp.int32))
+
+
+def compact_values(values: jax.Array, mask: jax.Array,
+                   capacity: int, fill=INVALID) -> tuple[jax.Array, jax.Array]:
+    """Compact ``values[mask]`` into a fixed-size buffer. Returns (buf, len)."""
+    n = mask.shape[0]
+    mask_i = mask.astype(jnp.int32)
+    pos = jnp.cumsum(mask_i) - mask_i
+    length = jnp.minimum(jnp.sum(mask_i), capacity)
+    buf = jnp.full((capacity,), fill, values.dtype)
+    tgt = jnp.where(mask & (pos < capacity), pos, capacity)
+    buf = buf.at[tgt].set(values, mode="drop")
+    return buf, length.astype(jnp.int32)

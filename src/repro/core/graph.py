@@ -1,0 +1,273 @@
+"""Graph containers and generators for the Gunrock-JAX engine.
+
+Gunrock stores graphs in CSR (compressed sparse row) for vertex-centric
+operations and optionally COO for edge-centric operations (paper §5.4).
+We mirror that: ``Graph`` is a frozen pytree of int32 arrays
+
+    row_offsets : (n+1,)  CSR offsets
+    col_indices : (m,)    neighbor vertex IDs
+    edge_values : (m,)    optional per-edge weights (float32)
+
+plus an optional CSC mirror (``csc_*``) used by pull-direction traversal
+(paper §5.1.4) and reverse advance (BC backward pass).
+
+All shapes are static; n and m are Python ints so a Graph can be closed
+over by jitted functions without retracing on content changes.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class Graph:
+    """Static-topology graph in CSR (+ optional CSC) form."""
+
+    row_offsets: jax.Array          # (n+1,) int32
+    col_indices: jax.Array          # (m,)  int32
+    edge_values: Optional[jax.Array] = None   # (m,) float32
+    # CSC mirror (for pull traversal / reverse advance)
+    csc_offsets: Optional[jax.Array] = None   # (n+1,) int32
+    csc_indices: Optional[jax.Array] = None   # (m,)  int32
+    csc_edge_values: Optional[jax.Array] = None
+    # mapping from CSC slot -> original edge id (for edge-centric pulls)
+    csc_edge_ids: Optional[jax.Array] = None
+
+    # --- pytree plumbing -------------------------------------------------
+    def tree_flatten(self):
+        children = (self.row_offsets, self.col_indices, self.edge_values,
+                    self.csc_offsets, self.csc_indices, self.csc_edge_values,
+                    self.csc_edge_ids)
+        return children, None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    # --- basic properties -------------------------------------------------
+    @property
+    def num_vertices(self) -> int:
+        return int(self.row_offsets.shape[0]) - 1
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.col_indices.shape[0])
+
+    @property
+    def degrees(self) -> jax.Array:
+        return self.row_offsets[1:] - self.row_offsets[:-1]
+
+    @property
+    def has_csc(self) -> bool:
+        return self.csc_offsets is not None
+
+    @property
+    def weighted(self) -> bool:
+        return self.edge_values is not None
+
+    def neighbors_padded(self, max_degree: int) -> tuple[jax.Array, jax.Array]:
+        """Dense (n, max_degree) neighbor table + validity mask (ELL format)."""
+        n = self.num_vertices
+        lanes = jnp.arange(max_degree, dtype=jnp.int32)[None, :]
+        starts = self.row_offsets[:-1, None]
+        deg = self.degrees[:, None]
+        idx = jnp.minimum(starts + lanes, self.num_edges - 1)
+        nbrs = self.col_indices[idx]
+        mask = lanes < deg
+        return jnp.where(mask, nbrs, -1), mask
+
+
+def _build_csc(n: int, src: np.ndarray, dst: np.ndarray,
+               vals: Optional[np.ndarray]):
+    """Transpose an edge list into CSC arrays (numpy, host-side)."""
+    order = np.argsort(dst, kind="stable")
+    csc_indices = src[order].astype(np.int32)
+    csc_edge_ids = order.astype(np.int32)
+    counts = np.bincount(dst, minlength=n)
+    csc_offsets = np.zeros(n + 1, dtype=np.int32)
+    np.cumsum(counts, out=csc_offsets[1:])
+    csc_vals = vals[order].astype(np.float32) if vals is not None else None
+    return csc_offsets, csc_indices, csc_vals, csc_edge_ids
+
+
+def from_edge_list(src, dst, n: Optional[int] = None, values=None,
+                   undirected: bool = False, build_csc: bool = True,
+                   sort_neighbors: bool = True,
+                   remove_self_loops: bool = True,
+                   deduplicate: bool = True) -> Graph:
+    """Build a Graph from host-side edge arrays.
+
+    Mirrors the paper's dataset preparation: optionally symmetrize,
+    remove self loops and duplicate edges (paper Table 4 note).
+    """
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if values is not None:
+        values = np.asarray(values, dtype=np.float32)
+    if n is None:
+        n = int(max(src.max(initial=-1), dst.max(initial=-1))) + 1 if len(src) else 0
+    if undirected:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+        if values is not None:
+            values = np.concatenate([values, values])
+    if remove_self_loops and len(src):
+        keep = src != dst
+        src, dst = src[keep], dst[keep]
+        if values is not None:
+            values = values[keep]
+    if deduplicate and len(src):
+        key = src * n + dst
+        _, first = np.unique(key, return_index=True)
+        first.sort()
+        src, dst = src[first], dst[first]
+        if values is not None:
+            values = values[first]
+    # CSR: sort by (src, dst) so neighbor lists are sorted (needed by
+    # segmented intersection; paper §4.3 assumes sorted adjacency lists).
+    if sort_neighbors and len(src):
+        order = np.lexsort((dst, src))
+    else:
+        order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    if values is not None:
+        values = values[order]
+    counts = np.bincount(src, minlength=n)
+    row_offsets = np.zeros(n + 1, dtype=np.int32)
+    np.cumsum(counts, out=row_offsets[1:])
+    col_indices = dst.astype(np.int32)
+    csc = (None, None, None, None)
+    if build_csc:
+        csc = _build_csc(n, src.astype(np.int32), dst.astype(np.int64), values)
+    return Graph(
+        row_offsets=jnp.asarray(row_offsets),
+        col_indices=jnp.asarray(col_indices),
+        edge_values=jnp.asarray(values) if values is not None else None,
+        csc_offsets=jnp.asarray(csc[0]) if csc[0] is not None else None,
+        csc_indices=jnp.asarray(csc[1]) if csc[1] is not None else None,
+        csc_edge_values=jnp.asarray(csc[2]) if csc[2] is not None else None,
+        csc_edge_ids=jnp.asarray(csc[3]) if csc[3] is not None else None,
+    )
+
+
+def edge_list(graph: Graph) -> tuple[np.ndarray, np.ndarray]:
+    """Recover (src, dst) host arrays from CSR."""
+    ro = np.asarray(graph.row_offsets)
+    ci = np.asarray(graph.col_indices)
+    src = np.repeat(np.arange(len(ro) - 1, dtype=np.int32), np.diff(ro))
+    return src, ci
+
+
+# ---------------------------------------------------------------------------
+# Generators (paper Table 4 families: scale-free R-MAT, random geometric,
+# mesh-like road networks).
+# ---------------------------------------------------------------------------
+
+def rmat(scale: int, edge_factor: int = 16, a: float = 0.57, b: float = 0.19,
+         c: float = 0.19, seed: int = 0, weighted: bool = False,
+         undirected: bool = True) -> Graph:
+    """R-MAT / Kronecker generator with Graph500 parameters (paper §7).
+
+    a=0.57, b=0.19, c=0.19, d=0.05 is the Graph500 initiator used in the
+    paper's rmat_s22_e64 etc. datasets.
+    """
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    m = n * edge_factor
+    src = np.zeros(m, dtype=np.int64)
+    dst = np.zeros(m, dtype=np.int64)
+    for level in range(scale):
+        r = rng.random(m)
+        # quadrant probabilities: a (0,0), b (0,1), c (1,0), d (1,1)
+        go_right = ((r >= a) & (r < a + b)) | (r >= a + b + c)
+        go_down = r >= a + b
+        src |= go_down.astype(np.int64) << level
+        dst |= go_right.astype(np.int64) << level
+    # permute vertex IDs to remove locality bias
+    perm = rng.permutation(n)
+    src, dst = perm[src], perm[dst]
+    values = rng.integers(1, 64, size=m).astype(np.float32) if weighted else None
+    return from_edge_list(src, dst, n=n, values=values, undirected=undirected)
+
+
+def random_geometric(n: int, radius: float, seed: int = 0,
+                     weighted: bool = False) -> Graph:
+    """Random geometric graph on the unit square (paper's rgg datasets)."""
+    rng = np.random.default_rng(seed)
+    pts = rng.random((n, 2))
+    # grid-bucket neighbor search to stay O(n) at small radius
+    cell = max(radius, 1e-6)
+    gx = (pts[:, 0] / cell).astype(np.int64)
+    gy = (pts[:, 1] / cell).astype(np.int64)
+    ncell = int(1.0 / cell) + 1
+    bucket = gx * ncell + gy
+    order = np.argsort(bucket)
+    src_l, dst_l = [], []
+    sorted_bucket = bucket[order]
+    starts = np.searchsorted(sorted_bucket, np.arange(ncell * ncell))
+    r2 = radius * radius
+    for dxy in ((0, 0), (0, 1), (1, -1), (1, 0), (1, 1)):
+        nb = (gx + dxy[0]) * ncell + (gy + dxy[1])
+        valid = (gx + dxy[0] < ncell) & (gy + dxy[1] >= 0) & (gy + dxy[1] < ncell)
+        for i in np.nonzero(valid)[0]:
+            b = nb[i]
+            if b < 0 or b >= ncell * ncell:
+                continue
+            lo = starts[b]
+            hi = starts[b + 1] if b + 1 < len(starts) else n
+            cand = order[lo:hi]
+            if dxy == (0, 0):
+                cand = cand[cand > i]
+            d2 = ((pts[cand] - pts[i]) ** 2).sum(axis=1)
+            close = cand[d2 <= r2]
+            src_l.append(np.full(len(close), i, dtype=np.int64))
+            dst_l.append(close.astype(np.int64))
+    src = np.concatenate(src_l) if src_l else np.zeros(0, np.int64)
+    dst = np.concatenate(dst_l) if dst_l else np.zeros(0, np.int64)
+    values = (rng.integers(1, 64, size=len(src)).astype(np.float32)
+              if weighted else None)
+    return from_edge_list(src, dst, n=n, values=values, undirected=True)
+
+
+def grid2d(side: int, weighted: bool = False, seed: int = 0) -> Graph:
+    """2-D grid — the mesh-like / road-network stand-in (large diameter,
+    uniform small degree, like the paper's roadnet_USA)."""
+    rng = np.random.default_rng(seed)
+    idx = np.arange(side * side, dtype=np.int64).reshape(side, side)
+    right = np.stack([idx[:, :-1].ravel(), idx[:, 1:].ravel()], axis=0)
+    down = np.stack([idx[:-1, :].ravel(), idx[1:, :].ravel()], axis=0)
+    src = np.concatenate([right[0], down[0]])
+    dst = np.concatenate([right[1], down[1]])
+    values = (rng.integers(1, 64, size=len(src)).astype(np.float32)
+              if weighted else None)
+    return from_edge_list(src, dst, n=side * side, values=values,
+                          undirected=True)
+
+
+def bipartite_random(n_users: int, n_items: int, avg_degree: int,
+                     seed: int = 0) -> Graph:
+    """Random bipartite follow-graph for the WTF primitive (paper §7.5).
+
+    Users [0, n_users) point at items [n_users, n_users+n_items).
+    Directed; CSC gives the reverse (who-follows-me) direction.
+    """
+    rng = np.random.default_rng(seed)
+    m = n_users * avg_degree
+    src = rng.integers(0, n_users, size=m).astype(np.int64)
+    dst = (n_users + rng.integers(0, n_items, size=m)).astype(np.int64)
+    return from_edge_list(src, dst, n=n_users + n_items, undirected=False)
+
+
+@functools.lru_cache(maxsize=32)
+def demo_graph() -> Graph:
+    """The 7-node / 15-edge sample graph from paper Fig. 5/6."""
+    src = [0, 0, 0, 1, 1, 2, 2, 3, 3, 4, 4, 5, 5, 6, 6]
+    dst = [1, 2, 3, 2, 4, 3, 5, 4, 5, 5, 6, 6, 0, 0, 2]
+    return from_edge_list(src, dst, n=7, undirected=False,
+                          deduplicate=False, remove_self_loops=False)

@@ -1,0 +1,444 @@
+"""Gunrock's graph operators in JAX (paper §3–§5).
+
+Operators:
+  advance               — neighbor expansion (V→V, V→E, E→V, E→E), the
+                          irregular workhorse. Implemented with the paper's
+                          merge-based Load-Balanced partitioning (LB):
+                          prefix-sum over degrees + per-output-slot binary
+                          search (sorted search), which is the TPU-native
+                          translation of Davidson/Merrill load balancing.
+  advance_pull          — pull/reverse advance over CSC from an unvisited
+                          frontier (direction-optimized traversal, §5.1.4).
+  filter                — stream compaction with exact or heuristic
+                          uniquification (§4.2, §5.2.1).
+  neighborhood_reduce   — advance + per-source segmented reduction (§8.2.3).
+  segmented_intersect   — pairwise sorted neighbor-list intersection (§4.3),
+                          SmallLarge binary-probe scheme.
+  compute               — per-element map over a frontier (fused by XLA into
+                          adjacent traversal ops — the paper's kernel fusion).
+
+Conventions:
+  * All shapes static. Invalid lanes carry id == -1 and mask == False.
+  * "Functors" are *vectorized*: they receive whole vectors
+    (src, dst, edge_id, rank) + problem-data pytree and return
+    (keep_mask, new_data). This is the JAX translation of Gunrock's
+    per-edge cond/apply functors; XLA fuses them into the traversal,
+    exactly as Gunrock fuses functors into operator kernels at
+    compile time (§5.3).
+  * Load-balancing strategy is selectable (LB | TWC | THREAD) to support the
+    paper's Fig.-20 ablation; LB is the default (the paper's LB_CULL).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .frontier import (INVALID, DenseFrontier, SparseFrontier, compact_values,
+                       from_ids)
+from .graph import Graph
+
+# ---------------------------------------------------------------------------
+# Expansion geometry: given per-input segment sizes, map output slots back to
+# (input position, rank within segment). This is the LB sorted-search.
+# ---------------------------------------------------------------------------
+
+
+class Expansion(NamedTuple):
+    in_pos: jax.Array    # (cap_out,) int32: which input item produced the slot
+    rank: jax.Array      # (cap_out,) int32: index within the input's segment
+    valid: jax.Array     # (cap_out,) bool
+    total: jax.Array     # () int32: true number of output items
+
+
+def lb_expand(sizes: jax.Array, valid_in: jax.Array, cap_out: int) -> Expansion:
+    """Merge-based load-balanced expansion (paper §5.1.3, Fig. 11).
+
+    sizes: (cap_in,) int32 per-input segment length (0 for invalid lanes).
+    Every output slot costs O(log cap_in) — perfectly balanced by output.
+    """
+    sizes = jnp.where(valid_in, sizes, 0).astype(jnp.int32)
+    offsets = jnp.cumsum(sizes) - sizes                     # exclusive scan
+    total = (offsets[-1] + sizes[-1]) if sizes.shape[0] else jnp.int32(0)
+    slots = jnp.arange(cap_out, dtype=jnp.int32)
+    # sorted search: which segment does each output slot land in?
+    in_pos = jnp.searchsorted(offsets, slots, side="right").astype(jnp.int32) - 1
+    in_pos = jnp.clip(in_pos, 0, max(sizes.shape[0] - 1, 0))
+    rank = slots - offsets[in_pos]
+    valid = slots < total
+    return Expansion(in_pos=in_pos, rank=rank, valid=valid,
+                     total=total.astype(jnp.int32))
+
+
+def twc_expand(sizes: jax.Array, valid_in: jax.Array, cap_out: int) -> Expansion:
+    """Dynamic-grouping (TWC) emulation (paper §5.1.2).
+
+    GPU TWC arbitrates threads/warps/CTAs; that mechanism has no TPU
+    analogue (documented in DESIGN.md). We keep its *grouping* idea:
+    segments are stably reordered by size class (small ≤ 32 "thread",
+    ≤ 256 "warp", else "block") so each class is processed together, then
+    expanded with the LB machinery — identical output multiset, distinct
+    scheduling order (the Fig.-20 ablation contrast)."""
+    sizes = jnp.where(valid_in, sizes, 0).astype(jnp.int32)
+    cls = jnp.where(sizes <= 32, 0, jnp.where(sizes <= 256, 1, 2))
+    order = jnp.argsort(cls, stable=True)
+    exp = lb_expand(sizes[order], valid_in[order], cap_out)
+    in_pos = order[exp.in_pos]
+    return Expansion(in_pos=in_pos, rank=exp.rank, valid=exp.valid,
+                     total=exp.total)
+
+
+_EXPANDERS = {"LB": lb_expand, "TWC": twc_expand}
+
+# ---------------------------------------------------------------------------
+# advance
+# ---------------------------------------------------------------------------
+
+
+class AdvanceResult(NamedTuple):
+    src: jax.Array        # (cap_out,) int32 source vertex of each output slot
+    dst: jax.Array        # (cap_out,) int32 destination vertex
+    edge_id: jax.Array    # (cap_out,) int32 CSR edge index
+    in_pos: jax.Array     # (cap_out,) int32 input-frontier lane of each slot
+    valid: jax.Array      # (cap_out,) bool
+    total: jax.Array      # () int32 number of valid outputs (pre-functor)
+
+
+def _frontier_base_vertices(graph: Graph, frontier: SparseFrontier,
+                            input_kind: str):
+    """Resolve the vertex whose neighbor list each input item expands."""
+    ids = jnp.where(frontier.valid_mask, frontier.ids, 0)
+    if input_kind == "vertex":
+        return ids, frontier.valid_mask
+    if input_kind == "edge":
+        # an edge item expands the neighbor list of its destination vertex
+        return graph.col_indices[ids], frontier.valid_mask
+    raise ValueError(f"unknown input_kind {input_kind}")
+
+
+def advance(graph: Graph, frontier: SparseFrontier, cap_out: int,
+            functor: Optional[Callable] = None, data=None,
+            input_kind: str = "vertex", strategy: str = "LB",
+            use_kernel: bool = False) -> tuple[AdvanceResult, object]:
+    """Gunrock advance (push): expand neighbor lists of the input frontier.
+
+    functor(src, dst, edge_id, rank, valid, data) -> (keep_mask, data')
+    applied in the same pass (kernel fusion). Returns the raw expansion (so
+    callers can build V or E output frontiers) plus updated problem data.
+    """
+    if strategy == "THREAD":
+        # Static per-vertex mapping (ThreadExpand, §5.1.1) — the
+        # Harish-Narayanan quadratic mapping the paper cites [32]: sweep
+        # EVERY CSR slot and keep those whose source is in the frontier.
+        # No load balancing, no compaction of the work list; cost is
+        # O(m) per advance regardless of frontier size (the ablation
+        # contrast to LB/TWC). Vertex frontiers only.
+        assert input_kind == "vertex", "THREAD supports vertex frontiers"
+        n, m = graph.num_vertices, graph.num_edges
+        flags = frontier.to_dense(n).flags
+        slot = jnp.arange(m, dtype=jnp.int32)
+        src_of = jnp.searchsorted(graph.row_offsets, slot,
+                                  side="right").astype(jnp.int32) - 1
+        valid = flags[src_of]
+        res = AdvanceResult(
+            src=jnp.where(valid, src_of, INVALID)[:cap_out],
+            dst=jnp.where(valid, graph.col_indices, INVALID)[:cap_out],
+            edge_id=jnp.where(valid, slot, INVALID)[:cap_out],
+            in_pos=src_of[:cap_out],
+            valid=valid[:cap_out],
+            total=jnp.sum(valid.astype(jnp.int32)))
+        if functor is None:
+            return res, data
+        keep, data = functor(res.src, res.dst, res.edge_id,
+                             jnp.zeros_like(res.src), res.valid, data)
+        keep = keep & res.valid
+        return AdvanceResult(src=jnp.where(keep, res.src, INVALID),
+                             dst=jnp.where(keep, res.dst, INVALID),
+                             edge_id=jnp.where(keep, res.edge_id, INVALID),
+                             in_pos=res.in_pos, valid=keep,
+                             total=res.total), data
+
+    base, valid_in = _frontier_base_vertices(graph, frontier, input_kind)
+    deg = graph.row_offsets[base + 1] - graph.row_offsets[base]
+    if use_kernel and strategy == "LB":
+        from repro.kernels import ops as kops
+        exp = kops.lb_expand(jnp.where(valid_in, deg, 0), cap_out)
+    else:
+        exp = _EXPANDERS[strategy](deg, valid_in, cap_out)
+    src = base[exp.in_pos]
+    edge_id = graph.row_offsets[src] + exp.rank
+    edge_id = jnp.where(exp.valid, edge_id, 0)
+    dst = graph.col_indices[edge_id]
+    res = AdvanceResult(
+        src=jnp.where(exp.valid, src, INVALID),
+        dst=jnp.where(exp.valid, dst, INVALID),
+        edge_id=jnp.where(exp.valid, edge_id, INVALID),
+        in_pos=exp.in_pos,
+        valid=exp.valid, total=exp.total)
+    if functor is None:
+        return res, data
+    keep, data = functor(res.src, res.dst, res.edge_id, exp.rank, res.valid,
+                         data)
+    keep = keep & res.valid
+    res = AdvanceResult(src=jnp.where(keep, res.src, INVALID),
+                        dst=jnp.where(keep, res.dst, INVALID),
+                        edge_id=jnp.where(keep, res.edge_id, INVALID),
+                        in_pos=exp.in_pos,
+                        valid=keep, total=res.total)
+    return res, data
+
+
+def advance_to_vertex_frontier(res: AdvanceResult,
+                               cap: Optional[int] = None) -> SparseFrontier:
+    """Compact an advance result's destinations into a vertex frontier."""
+    cap = int(res.dst.shape[0]) if cap is None else cap
+    buf, length = compact_values(res.dst, res.valid, cap)
+    return SparseFrontier(ids=buf, length=length)
+
+
+def advance_to_edge_frontier(res: AdvanceResult,
+                             cap: Optional[int] = None) -> SparseFrontier:
+    cap = int(res.edge_id.shape[0]) if cap is None else cap
+    buf, length = compact_values(res.edge_id, res.valid, cap)
+    return SparseFrontier(ids=buf, length=length)
+
+
+def advance_pull(graph: Graph, unvisited: DenseFrontier,
+                 current: DenseFrontier, return_preds: bool = False):
+    """Pull-based advance (paper §5.1.4, Fig. 13).
+
+    For every unvisited vertex, test whether any in-neighbor (CSC) is in the
+    current frontier; those become the new frontier. Dense formulation: a
+    masked segment-max over CSC — one sweep of the edge list, which is the
+    pull phase's defining cost (and why it wins only when the active
+    frontier is large).
+    """
+    assert graph.has_csc, "pull advance requires a CSC mirror"
+    n = graph.num_vertices
+    m = graph.num_edges
+    # For each CSC slot e: dst vertex = segment owner, src = csc_indices[e].
+    seg = jnp.searchsorted(graph.csc_offsets,
+                           jnp.arange(m, dtype=jnp.int32), side="right") - 1
+    pred_active = current.flags[graph.csc_indices]
+    hit = jax.ops.segment_max(pred_active.astype(jnp.int32), seg,
+                              num_segments=n, indices_are_sorted=True)
+    new_flags = (hit > 0) & unvisited.flags
+    if not return_preds:
+        return DenseFrontier(new_flags)
+    pred_id = jnp.where(pred_active, graph.csc_indices, -1)
+    preds = jax.ops.segment_max(pred_id, seg, num_segments=n,
+                                indices_are_sorted=True)
+    return DenseFrontier(new_flags), preds
+
+
+# ---------------------------------------------------------------------------
+# filter
+# ---------------------------------------------------------------------------
+
+
+def filter_frontier(frontier: SparseFrontier,
+                    functor: Optional[Callable] = None, data=None,
+                    n: Optional[int] = None, uniquify: str = "none",
+                    cap: Optional[int] = None,
+                    hash_size: int = 1024) -> tuple[SparseFrontier, object]:
+    """Gunrock filter: predicate + compaction (+ optional uniquification).
+
+    functor(ids, valid, data) -> (keep_mask, data')
+    uniquify: 'none' | 'exact' (global scatter winner test) |
+              'hash' (heuristic history-hashtable culling, §5.2.1 — removes
+              only some duplicates, never valid items).
+    """
+    ids, valid = frontier.ids, frontier.valid_mask
+    keep = valid
+    if functor is not None:
+        fkeep, data = functor(ids, valid, data)
+        keep = keep & fkeep
+    if uniquify == "exact":
+        assert n is not None, "exact uniquify needs vertex count n"
+        slot_of = jnp.full((n,), INVALID, jnp.int32)
+        lane = jnp.arange(frontier.capacity, dtype=jnp.int32)
+        safe = jnp.where(keep, ids, 0)
+        slot_of = slot_of.at[safe].max(jnp.where(keep, lane, INVALID),
+                                       mode="drop")
+        keep = keep & (slot_of[safe] == lane)
+    elif uniquify == "hash":
+        lane = jnp.arange(frontier.capacity, dtype=jnp.int32)
+        slot = jnp.where(keep, ids % hash_size, hash_size)
+        h_id = jnp.full((hash_size + 1,), INVALID, jnp.int32)
+        h_ln = jnp.full((hash_size + 1,), INVALID, jnp.int32)
+        h_id = h_id.at[slot].set(ids, mode="drop")
+        h_ln = h_ln.at[slot].set(lane, mode="drop")
+        dup = (h_id[slot] == ids) & (h_ln[slot] != lane)
+        keep = keep & ~dup
+    cap = frontier.capacity if cap is None else cap
+    buf, length = compact_values(ids, keep, cap)
+    return SparseFrontier(ids=buf, length=length), data
+
+
+def partition_frontier(frontier: SparseFrontier, predicate: jax.Array,
+                       cap_near: Optional[int] = None,
+                       cap_far: Optional[int] = None
+                       ) -> tuple[SparseFrontier, SparseFrontier]:
+    """Two-way split of a frontier (the 2-level priority queue, §5.1.5):
+    items with predicate=True go to the near pile, others to the far pile."""
+    valid = frontier.valid_mask
+    near_mask = valid & predicate
+    far_mask = valid & ~predicate
+    cap_near = frontier.capacity if cap_near is None else cap_near
+    cap_far = frontier.capacity if cap_far is None else cap_far
+    nbuf, nlen = compact_values(frontier.ids, near_mask, cap_near)
+    fbuf, flen = compact_values(frontier.ids, far_mask, cap_far)
+    return (SparseFrontier(nbuf, nlen), SparseFrontier(fbuf, flen))
+
+
+# ---------------------------------------------------------------------------
+# neighborhood reduction
+# ---------------------------------------------------------------------------
+
+
+def neighborhood_reduce(graph: Graph, frontier: SparseFrontier, cap_out: int,
+                        edge_map: Callable, reduce_op: str = "add",
+                        init=None, data=None,
+                        strategy: str = "LB") -> jax.Array:
+    """Advance + per-source segmented reduction (paper §8.2.3).
+
+    edge_map(src, dst, edge_id, valid, data) -> values (cap_out,)
+    Returns (cap_in,) reduced values aligned with the input frontier lanes.
+    """
+    res, _ = advance(graph, frontier, cap_out, strategy=strategy)
+    vals = edge_map(res.src, res.dst, res.edge_id, res.valid, data)
+    seg_fn = {"add": jax.ops.segment_sum, "max": jax.ops.segment_max,
+              "min": jax.ops.segment_min}[reduce_op]
+    neutral = {"add": 0.0, "max": -jnp.inf, "min": jnp.inf}[reduce_op]
+    vals = jnp.where(res.valid, vals, jnp.asarray(neutral, vals.dtype))
+    out = seg_fn(vals, res.in_pos, num_segments=frontier.capacity,
+                 indices_are_sorted=True)
+    if init is not None:
+        out = jnp.where(frontier.valid_mask, out, init)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# segmented intersection (paper §4.3)
+# ---------------------------------------------------------------------------
+
+
+def _searchsorted_segment(haystack: jax.Array, lo: jax.Array, hi: jax.Array,
+                          needles: jax.Array, iters: int = 32) -> jax.Array:
+    """Vectorized binary search of ``needles`` within haystack[lo:hi) per
+    lane; returns True where found. The SmallLarge kernel's probe (§4.3)."""
+    lo = lo.astype(jnp.int32)
+    hi = hi.astype(jnp.int32)
+
+    def body(_, carry):
+        lo_, hi_ = carry
+        mid = (lo_ + hi_) // 2
+        mid_val = haystack[jnp.clip(mid, 0, haystack.shape[0] - 1)]
+        go_right = mid_val < needles
+        lo_ = jnp.where(go_right & (lo_ < hi_), mid + 1, lo_)
+        hi_ = jnp.where(~go_right & (lo_ < hi_), mid, hi_)
+        return lo_, hi_
+
+    lo_f, _ = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    in_range = lo_f < hi
+    found_val = haystack[jnp.clip(lo_f, 0, haystack.shape[0] - 1)]
+    return in_range & (found_val == needles)
+
+
+class IntersectResult(NamedTuple):
+    items: jax.Array      # (cap_out,) intersected vertex IDs (compacted)
+    pair_of: jax.Array    # (cap_out,) which input pair produced the item
+    length: jax.Array     # () int32
+    counts: jax.Array     # (cap_in,) per-pair intersection sizes
+    total: jax.Array      # () int32 global intersection count
+
+
+def segmented_intersect(graph: Graph, fa: SparseFrontier, fb: SparseFrontier,
+                        cap_out: int, use_kernel: bool = False
+                        ) -> IntersectResult:
+    """Intersect neighbor lists of paired items from two frontiers.
+
+    Adjacency lists must be sorted (graph.from_edge_list guarantees it).
+    Strategy: expand the *smaller* list of each pair (LB), binary-search each
+    element in the larger list (SmallLarge scheme; TwoSmall is subsumed since
+    a binary probe of a tiny list is equally cheap on the VPU).
+    """
+    valid_pair = fa.valid_mask & fb.valid_mask
+    a = jnp.where(valid_pair, fa.ids, 0)
+    b = jnp.where(valid_pair, fb.ids, 0)
+    deg_a = graph.row_offsets[a + 1] - graph.row_offsets[a]
+    deg_b = graph.row_offsets[b + 1] - graph.row_offsets[b]
+    a_small = deg_a <= deg_b
+    small = jnp.where(a_small, a, b)
+    large = jnp.where(a_small, b, a)
+    deg_small = jnp.where(a_small, deg_a, deg_b)
+    exp = lb_expand(deg_small, valid_pair, cap_out)
+    pair = exp.in_pos
+    s_vert = small[pair]
+    l_vert = large[pair]
+    probe_idx = graph.row_offsets[s_vert] + exp.rank
+    probe_idx = jnp.where(exp.valid, probe_idx, 0)
+    needles = graph.col_indices[probe_idx]
+    if use_kernel:
+        from repro.kernels import ops as kops
+        found = kops.segment_search(graph.col_indices,
+                                    graph.row_offsets[l_vert],
+                                    graph.row_offsets[l_vert + 1], needles)
+    else:
+        found = _searchsorted_segment(graph.col_indices,
+                                      graph.row_offsets[l_vert],
+                                      graph.row_offsets[l_vert + 1], needles)
+    found = found & exp.valid
+    counts = jax.ops.segment_sum(found.astype(jnp.int32), pair,
+                                 num_segments=fa.capacity,
+                                 indices_are_sorted=True)
+    items, length = compact_values(needles, found, cap_out)
+    pair_c, _ = compact_values(pair, found, cap_out)
+    return IntersectResult(items=items, pair_of=pair_c, length=length,
+                           counts=counts, total=jnp.sum(counts))
+
+
+# ---------------------------------------------------------------------------
+# compute
+# ---------------------------------------------------------------------------
+
+
+def compute(frontier: SparseFrontier, functor: Callable, data):
+    """Per-element operation on all frontier elements (paper §3 'compute').
+
+    functor(ids, valid, data) -> data'. XLA fuses this with neighbors.
+    """
+    return functor(jnp.where(frontier.valid_mask, frontier.ids, 0),
+                   frontier.valid_mask, data)
+
+
+# ---------------------------------------------------------------------------
+# scatter helpers (atomic-replacement semantics, §5.2)
+# ---------------------------------------------------------------------------
+
+
+def scatter_min(values: jax.Array, index: jax.Array, valid: jax.Array,
+                target: jax.Array) -> jax.Array:
+    """atomicMin replacement: segment-min merged into ``target``."""
+    safe_idx = jnp.where(valid, index, 0)
+    big = jnp.asarray(jnp.inf, target.dtype) if jnp.issubdtype(
+        target.dtype, jnp.floating) else jnp.iinfo(target.dtype).max
+    vals = jnp.where(valid, values, big)
+    return target.at[safe_idx].min(vals, mode="drop")
+
+
+def scatter_add(values: jax.Array, index: jax.Array, valid: jax.Array,
+                target: jax.Array) -> jax.Array:
+    """atomicAdd replacement."""
+    safe_idx = jnp.where(valid, index, 0)
+    vals = jnp.where(valid, values, jnp.zeros((), target.dtype))
+    return target.at[safe_idx].add(vals, mode="drop")
+
+
+def scatter_or(index: jax.Array, valid: jax.Array,
+               target: jax.Array) -> jax.Array:
+    """Idempotent visited-bit set — no atomics needed (paper §5.2.1)."""
+    safe_idx = jnp.where(valid, index, 0)
+    return target.at[safe_idx].max(valid.astype(target.dtype), mode="drop")

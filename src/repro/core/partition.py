@@ -1,0 +1,79 @@
+"""Multi-device graph partitioning (paper §8.2.1 Scale-Out; Pan et al. [56]).
+
+1-D contiguous vertex partition: device d owns vertices
+[d·ceil(n/p), (d+1)·ceil(n/p)) and the out-edges (CSR rows) of those
+vertices. Per-device CSR slices are rebased and padded to the max local
+edge count so the partition stacks into dense (p, …) arrays that
+shard_map can split over the mesh.
+
+This is the same partitioning Gunrock's multi-GPU framework uses; the
+frontier exchange strategies live in core/distributed.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import numpy as np
+
+from .graph import Graph
+
+
+@dataclass(frozen=True)
+class PartitionedGraph:
+    """Host-side stacked per-device CSR slices (leading axis = device)."""
+
+    n: int                     # global vertex count
+    m: int                     # global edge count
+    num_parts: int
+    verts_per_part: int        # ceil(n / p)
+    row_offsets: np.ndarray    # (p, verts_per_part+1) rebased local CSR
+    col_indices: np.ndarray    # (p, max_local_edges) global dst ids, pad -1
+    edge_values: Optional[np.ndarray]  # (p, max_local_edges)
+    vertex_base: np.ndarray    # (p,) first global vertex id of each part
+
+    @property
+    def max_local_edges(self) -> int:
+        return int(self.col_indices.shape[1])
+
+    def owner_of(self, v: np.ndarray) -> np.ndarray:
+        return v // self.verts_per_part
+
+
+def partition_1d(graph: Graph, num_parts: int) -> PartitionedGraph:
+    ro = np.asarray(graph.row_offsets)
+    ci = np.asarray(graph.col_indices)
+    ev = (np.asarray(graph.edge_values)
+          if graph.edge_values is not None else None)
+    n = graph.num_vertices
+    vpp = -(-n // num_parts)  # ceil
+    max_edges = 0
+    slices = []
+    for p in range(num_parts):
+        lo_v = min(p * vpp, n)
+        hi_v = min((p + 1) * vpp, n)
+        lo_e, hi_e = int(ro[lo_v]), int(ro[hi_v])
+        local_ro = ro[lo_v:hi_v + 1] - ro[lo_v]
+        # pad vertex dim (parts at the tail may own fewer vertices)
+        pad_v = vpp - (hi_v - lo_v)
+        if pad_v:
+            local_ro = np.concatenate(
+                [local_ro, np.full(pad_v, local_ro[-1], local_ro.dtype)])
+        slices.append((local_ro, ci[lo_e:hi_e],
+                       ev[lo_e:hi_e] if ev is not None else None, lo_v))
+        max_edges = max(max_edges, hi_e - lo_e)
+    max_edges = max(max_edges, 1)
+    p_ro = np.stack([s[0] for s in slices]).astype(np.int32)
+    p_ci = np.full((num_parts, max_edges), -1, np.int32)
+    p_ev = (np.zeros((num_parts, max_edges), np.float32)
+            if ev is not None else None)
+    base = np.zeros((num_parts,), np.int32)
+    for p, (_, c, v, lo_v) in enumerate(slices):
+        p_ci[p, :len(c)] = c
+        if v is not None:
+            p_ev[p, :len(v)] = v
+        base[p] = lo_v
+    return PartitionedGraph(n=n, m=graph.num_edges, num_parts=num_parts,
+                            verts_per_part=vpp, row_offsets=p_ro,
+                            col_indices=p_ci, edge_values=p_ev,
+                            vertex_base=base)

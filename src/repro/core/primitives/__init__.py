@@ -1,0 +1,11 @@
+from .bfs import bfs
+from .sssp import sssp
+from .pagerank import pagerank
+from .cc import connected_components
+from .bc import bc
+from .tc import triangle_count
+from .wtf import who_to_follow
+from .subgraph import subgraph_match
+
+__all__ = ["bfs", "sssp", "pagerank", "connected_components", "bc",
+           "triangle_count", "who_to_follow", "subgraph_match"]

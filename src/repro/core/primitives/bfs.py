@@ -1,0 +1,147 @@
+"""Breadth-first search (paper §6.1) with the full optimization surface:
+
+  * push advance with LB / TWC / THREAD workload mapping (Fig. 20 ablation)
+  * direction-optimized push↔pull switching with do_a/do_b (Fig. 21)
+  * idempotent mode: skip exact uniquification, rely on the heuristic
+    hash/bitmask culling filter (Fig. 19 ablation)
+  * predecessor recording
+
+The whole search is one jitted XLA while-loop (kernel-fusion philosophy).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import operators as ops
+from ..direction import PULL, PUSH, DirectionParams, decide_direction
+from ..enactor import run_until
+from ..frontier import DenseFrontier, SparseFrontier, from_ids
+from ..graph import Graph
+
+
+class BFSState(NamedTuple):
+    labels: jax.Array        # (n,) int32 depth, -1 unvisited
+    preds: jax.Array         # (n,) int32 predecessor, -1 none
+    frontier: SparseFrontier  # sparse rep (push)
+    dense: jax.Array         # (n,) bool current frontier bitmap (pull)
+    visited: jax.Array       # (n,) bool status-check array (§5.2.1)
+    n_f: jax.Array           # () int32 current frontier size
+    n_u: jax.Array           # () int32 unvisited count
+    depth: jax.Array         # () int32
+    mode: jax.Array          # () int32 PUSH/PULL
+    pull_iters: jax.Array    # () int32 (for characterization)
+
+
+class BFSResult(NamedTuple):
+    labels: jax.Array
+    preds: jax.Array
+    iterations: jax.Array
+    pull_iters: jax.Array
+    edges_visited: jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "direction", "idempotence", "strategy", "record_preds", "use_kernel"))
+def _bfs_impl(graph: Graph, src: jax.Array, do_a: float, do_b: float,
+              direction: bool, idempotence: bool, strategy: str,
+              record_preds: bool, use_kernel: bool) -> BFSResult:
+    n, m = graph.num_vertices, graph.num_edges
+    # frontier buffers are edge-capacity: pre-uniquify frontiers hold
+    # duplicates (idempotent mode keeps them on purpose), so a vertex-
+    # capacity buffer could silently drop discoveries (paper: frontiers
+    # are sized by worst-case expansion)
+    cap_v = m
+    cap_e = m
+    params = DirectionParams(do_a=do_a, do_b=do_b, enabled=direction)
+
+    labels = jnp.full((n,), -1, jnp.int32).at[src].set(0)
+    preds = jnp.full((n,), -1, jnp.int32)
+    visited = jnp.zeros((n,), bool).at[src].set(True)
+    frontier = from_ids(src[None], cap_v)
+    state = BFSState(labels=labels, preds=preds, frontier=frontier,
+                     dense=visited, visited=visited,
+                     n_f=jnp.int32(1), n_u=jnp.int32(n - 1),
+                     depth=jnp.int32(0), mode=PUSH,
+                     pull_iters=jnp.int32(0))
+
+    def push_step(st: BFSState):
+        depth1 = st.depth + 1
+
+        def functor(s, d, e, rank, valid, data):
+            # cond functor: discover unvisited destinations
+            unseen = ~data["visited"][jnp.where(valid, d, 0)]
+            return valid & unseen, data
+
+        res, _ = ops.advance(graph, st.frontier, cap_e, functor=functor,
+                             data={"visited": st.visited}, strategy=strategy,
+                             use_kernel=use_kernel)
+        # apply: set depth (idempotent write — same value for all dups,
+        # so no atomics are needed; paper §5.2.1)
+        tgt = jnp.where(res.valid, res.dst, n)   # n = out of bounds → drop
+        labels = st.labels.at[tgt].set(depth1, mode="drop")
+        if record_preds:
+            preds = st.preds.at[tgt].set(res.src, mode="drop")
+        else:
+            preds = st.preds
+        visited = ops.scatter_or(res.dst, res.valid, st.visited)
+        new_frontier = ops.advance_to_vertex_frontier(res, cap_v)
+        # contract: uniquify (exact unless idempotent mode; idempotent mode
+        # uses the cheap hash-culling heuristic and tolerates leftover dups)
+        uniq = "hash" if idempotence else "exact"
+        new_frontier, _ = ops.filter_frontier(new_frontier, n=n,
+                                              uniquify=uniq, cap=cap_v)
+        return st._replace(labels=labels, preds=preds, frontier=new_frontier,
+                           dense=visited, visited=visited,
+                           n_f=new_frontier.length,
+                           n_u=st.n_u - new_frontier.length, depth=depth1)
+
+    def pull_step(st: BFSState):
+        depth1 = st.depth + 1
+        current = DenseFrontier(st.dense)
+        unvisited = DenseFrontier(~st.visited)
+        new_dense, pull_preds = ops.advance_pull(graph, unvisited, current,
+                                                 return_preds=True)
+        labels = jnp.where(new_dense.flags, depth1, st.labels)
+        preds = (jnp.where(new_dense.flags, pull_preds, st.preds)
+                 if record_preds else st.preds)
+        visited = st.visited | new_dense.flags
+        n_new = new_dense.length.astype(jnp.int32)
+        sparse = new_dense.to_sparse(cap_v)
+        return st._replace(labels=labels, preds=preds, frontier=sparse,
+                           dense=new_dense.flags, visited=visited,
+                           n_f=n_new, n_u=st.n_u - n_new, depth=depth1,
+                           pull_iters=st.pull_iters + 1)
+
+    def body(st: BFSState):
+        mode = decide_direction(st.mode, st.n_f, st.n_u, n, m, params)
+        st = st._replace(mode=mode)
+        if not direction:
+            return push_step(st)
+        # dense rep of the *current* frontier is required by pull; push_step
+        # keeps `dense` = visited, so rebuild it from the sparse frontier.
+        dense_cur = st.frontier.to_dense(n).flags
+        st = st._replace(dense=dense_cur)
+        return jax.lax.cond(mode == PULL, pull_step, push_step, st)
+
+    final, iters = run_until(lambda st: st.n_f > 0, body, state,
+                             max_iter=n + 1)
+    edges = jnp.sum(jnp.where(final.labels >= 0,
+                              graph.degrees, 0)).astype(jnp.int32)
+    return BFSResult(labels=final.labels, preds=final.preds,
+                     iterations=iters, pull_iters=final.pull_iters,
+                     edges_visited=edges)
+
+
+def bfs(graph: Graph, src: int, *, direction: bool = True,
+        do_a: float = 0.001, do_b: float = 0.2, idempotence: bool = True,
+        strategy: str = "LB", record_preds: bool = True,
+        use_kernel: bool = False) -> BFSResult:
+    """Run BFS from ``src``. See module docstring for options."""
+    if direction and not graph.has_csc:
+        direction = False
+    return _bfs_impl(graph, jnp.int32(src), do_a, do_b, direction,
+                     idempotence, strategy, record_preds, use_kernel)

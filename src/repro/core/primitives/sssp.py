@@ -1,0 +1,133 @@
+"""Single-source shortest path (paper §6.2, Algorithm 1).
+
+Delta-stepping [Davidson et al. / Meyer-Sanders] via Gunrock's two-level
+priority queue (§5.1.5): each iteration advances the *near* frontier,
+relaxes distances with a segment-min (the atomicMin replacement), filters
+redundant discoveries, and splits the improved set into near/far piles by
+the current bucket threshold. When the near pile drains, the bucket index
+advances and the far pile is re-split.
+
+``delta=None`` selects Bellman-Ford mode (everything is near — the
+baseline the paper compares against via Ligra).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .. import operators as ops
+from ..enactor import run_until
+from ..frontier import DenseFrontier, SparseFrontier, from_ids
+from ..graph import Graph
+
+INF = jnp.float32(jnp.inf)
+
+
+class SSSPState(NamedTuple):
+    dist: jax.Array       # (n,) float32
+    preds: jax.Array      # (n,) int32
+    near: jax.Array       # (n,) bool  near-pile membership mask
+    far: jax.Array        # (n,) bool  far-pile membership mask
+    bucket: jax.Array     # () int32   current priority level
+    n_near: jax.Array     # () int32
+    relaxations: jax.Array  # () int32 total edge relaxations (work measure)
+
+
+class SSSPResult(NamedTuple):
+    dist: jax.Array
+    preds: jax.Array
+    iterations: jax.Array
+    relaxations: jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("use_delta", "strategy",
+                                             "use_kernel"))
+def _sssp_impl(graph: Graph, src: jax.Array, delta: jax.Array,
+               use_delta: bool, strategy: str,
+               use_kernel: bool) -> SSSPResult:
+    n, m = graph.num_vertices, graph.num_edges
+    dist = jnp.full((n,), INF).at[src].set(0.0)
+    preds = jnp.full((n,), -1, jnp.int32)
+    near = jnp.zeros((n,), bool).at[src].set(True)
+    state = SSSPState(dist=dist, preds=preds, near=near,
+                      far=jnp.zeros((n,), bool), bucket=jnp.int32(0),
+                      n_near=jnp.int32(1), relaxations=jnp.int32(0))
+
+    def relax_step(st: SSSPState):
+        frontier = DenseFrontier(st.near).to_sparse(n)
+
+        def functor(s, d, e, rank, valid, data):
+            return valid, data
+
+        res, _ = ops.advance(graph, frontier, m, functor=functor,
+                             strategy=strategy, use_kernel=use_kernel)
+        w = graph.edge_values[jnp.where(res.valid, res.edge_id, 0)]
+        cand = st.dist[jnp.where(res.valid, res.src, 0)] + w
+        # atomicMin replacement: segment-min into dist (paper Update_Label)
+        new_dist = ops.scatter_min(cand, res.dst, res.valid, st.dist)
+        improved = new_dist < st.dist
+        # Set_Pred: the winning edge writes the predecessor
+        winner = res.valid & (cand <= new_dist[jnp.where(res.valid, res.dst, 0)])
+        preds = st.preds.at[jnp.where(winner, res.dst, n)].set(
+            res.src, mode="drop")
+        # priority-queue split (near/far) on the improved vertices
+        thresh = (st.bucket.astype(jnp.float32) + 1.0) * delta
+        if use_delta:
+            add_near = improved & (new_dist < thresh)
+            add_far = improved & (new_dist >= thresh)
+        else:
+            add_near = improved
+            add_far = jnp.zeros_like(improved)
+        # vertices stay in far until their bucket comes up; improved ones
+        # migrate piles according to their *new* distance
+        far = (st.far | add_far) & ~add_near
+        relax = st.relaxations + res.total
+        return st._replace(dist=new_dist, preds=preds, near=add_near,
+                           far=far, n_near=jnp.sum(add_near).astype(jnp.int32),
+                           relaxations=relax)
+
+    def pop_far(st: SSSPState):
+        # near pile empty: advance the bucket to the smallest far distance
+        far_min = jnp.min(jnp.where(st.far, st.dist, INF))
+        new_bucket = jnp.where(jnp.isfinite(far_min),
+                               (far_min / delta).astype(jnp.int32),
+                               st.bucket + 1)
+        thresh = (new_bucket.astype(jnp.float32) + 1.0) * delta
+        near = st.far & (st.dist < thresh)
+        far = st.far & ~near
+        return st._replace(near=near, far=far, bucket=new_bucket,
+                           n_near=jnp.sum(near).astype(jnp.int32))
+
+    def body(st: SSSPState):
+        return jax.lax.cond(st.n_near > 0, relax_step, pop_far, st)
+
+    def cond(st: SSSPState):
+        return (st.n_near > 0) | jnp.any(st.far)
+
+    final, iters = run_until(cond, body, state, max_iter=4 * n + 8)
+    return SSSPResult(dist=final.dist, preds=final.preds, iterations=iters,
+                      relaxations=final.relaxations)
+
+
+def sssp(graph: Graph, src: int, *, delta: Optional[float] = None,
+         strategy: str = "LB", use_kernel: bool = False) -> SSSPResult:
+    """Delta-stepping SSSP; ``delta=None`` = auto (avg weight × avg degree
+    heuristic from Davidson et al.), ``delta=inf``-like big → Bellman-Ford."""
+    assert graph.weighted, "SSSP needs edge weights"
+    if delta is None:
+        mean_w = float(jnp.mean(graph.edge_values))
+        avg_deg = max(graph.num_edges / max(graph.num_vertices, 1), 1.0)
+        delta = mean_w * avg_deg / 2.0
+    use_delta = bool(jnp.isfinite(delta)) and delta > 0
+    return _sssp_impl(graph, jnp.int32(src), jnp.float32(delta), use_delta,
+                      strategy, use_kernel)
+
+
+def sssp_bellman_ford(graph: Graph, src: int, **kw) -> SSSPResult:
+    """Bellman-Ford-style full relaxation (the Ligra comparison baseline)."""
+    big = 1e30
+    return _sssp_impl(graph, jnp.int32(src), jnp.float32(big), False,
+                      kw.get("strategy", "LB"), kw.get("use_kernel", False))

@@ -1,0 +1,154 @@
+"""Subgraph matching (paper §6.7) — the filtering-and-joining procedure.
+
+Finds all embeddings of a small connected query pattern in the data
+graph:
+
+  filter phase — candidates for each query vertex are pruned by degree
+      (and optional label) — a Gunrock filter over the vertex frontier.
+  join phase   — query vertices are bound one at a time in BFS order;
+      each extension expands the candidate neighbor list of one bound
+      anchor (LB advance) and probes membership in every other bound
+      anchor's adjacency with the segmented-intersection binary search
+      (kernels/segment_search) + distinctness filter.
+
+Static shapes: the partial-embedding table is a fixed-capacity buffer
+(cap × n_q); overflow is reported (matches beyond `cap` are dropped and
+`truncated` is set). Embeddings are *ordered* maps query→data vertex, so
+each undirected match is found once per query automorphism (e.g. a
+triangle query yields 6 embeddings per triangle) — same convention as
+the paper's join-based enumeration.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import operators as ops
+from ..frontier import compact_values
+from ..graph import Graph
+
+
+class MatchResult(NamedTuple):
+    embeddings: jax.Array    # (cap, n_q) int32, -1 padded
+    count: jax.Array         # () int32
+    truncated: bool
+
+
+def _bfs_order_ok(n_q: int, q_edges) -> bool:
+    seen = {0}
+    for k in range(1, n_q):
+        if not any((a in seen) for a, b in q_edges if b == k) and \
+           not any((b in seen) for a, b in q_edges if a == k):
+            return False
+        seen.add(k)
+    return True
+
+
+def subgraph_match(graph: Graph, n_q: int,
+                   q_edges: Sequence[tuple], cap: int = 4096,
+                   labels: Optional[jax.Array] = None,
+                   q_labels: Optional[Sequence[int]] = None) -> MatchResult:
+    """Enumerate embeddings of the query graph (undirected pattern).
+
+    q_edges: list of (a, b) query edges with vertices 0..n_q-1, ordered so
+    every vertex k>0 has an edge to some earlier vertex (BFS order).
+    labels/q_labels: optional vertex labels for the filtering phase.
+    """
+    assert _bfs_order_ok(n_q, q_edges), "query must be BFS-ordered"
+    q_edges = [(int(a), int(b)) for a, b in q_edges]
+    qdeg = np.zeros(n_q, np.int32)
+    for a, b in q_edges:
+        qdeg[a] += 1
+        qdeg[b] += 1
+
+    n = graph.num_vertices
+    deg = graph.degrees
+
+    # ---- filtering phase: candidates of query vertex 0 -------------------
+    keep = deg >= int(qdeg[0])
+    if labels is not None and q_labels is not None:
+        keep = keep & (labels == int(q_labels[0]))
+    cand0, count = compact_values(jnp.arange(n, dtype=jnp.int32), keep,
+                                  cap)
+    truncated = bool(int(jnp.sum(keep.astype(jnp.int32))) > cap)
+    emb = jnp.full((cap, n_q), -1, jnp.int32)
+    emb = emb.at[:, 0].set(cand0)
+    count = jnp.minimum(count, cap)
+    # ---- joining phase: bind query vertices 1..n_q-1 ---------------------
+    for k in range(1, n_q):
+        anchors = sorted({a for a, b in q_edges if b == k} |
+                         {b for a, b in q_edges if a == k})
+        anchors = [a for a in anchors if a < k]
+        a0 = anchors[0]
+        valid_emb = jnp.arange(cap) < count
+        base = jnp.where(valid_emb, emb[:, a0], 0)
+        sizes = jnp.where(valid_emb,
+                          graph.row_offsets[base + 1]
+                          - graph.row_offsets[base], 0)
+        # the join loop runs eagerly (tiny query graphs), so the expansion
+        # buffer can be sized exactly to the round's work
+        cap_out = max(int(jnp.sum(sizes)), 1)
+        exp = ops.lb_expand(sizes, valid_emb, cap_out)
+        src_row = exp.in_pos                       # embedding index
+        eidx = graph.row_offsets[base[src_row]] + exp.rank
+        cand = graph.col_indices[jnp.where(exp.valid, eidx, 0)]
+        ok = exp.valid
+        # degree / label filter
+        ok = ok & (deg[cand] >= int(qdeg[k]))
+        if labels is not None and q_labels is not None:
+            ok = ok & (labels[cand] == int(q_labels[k]))
+        # adjacency probes against the other bound anchors
+        for a in anchors[1:]:
+            av = emb[src_row, a]
+            lo = graph.row_offsets[jnp.where(ok, av, 0)]
+            hi = graph.row_offsets[jnp.where(ok, av, 0) + 1]
+            found = ops._searchsorted_segment(graph.col_indices, lo, hi,
+                                              cand)
+            ok = ok & found
+        # distinctness: candidate must differ from all bound vertices
+        for j in range(k):
+            ok = ok & (cand != emb[src_row, j])
+        # compact surviving (embedding, candidate) pairs
+        pos = jnp.cumsum(ok.astype(jnp.int32)) - ok.astype(jnp.int32)
+        raw = jnp.sum(ok.astype(jnp.int32))
+        truncated = truncated or int(raw) > cap
+        new_count = jnp.minimum(raw, cap)
+        tgt = jnp.where(ok & (pos < cap), pos, cap)
+        new_emb = jnp.full((cap, n_q), -1, jnp.int32)
+        new_emb = new_emb.at[tgt, :].set(emb[src_row], mode="drop")
+        new_emb = new_emb.at[tgt, k].set(cand, mode="drop")
+        emb, count = new_emb, new_count
+
+    return MatchResult(embeddings=emb, count=count, truncated=truncated)
+
+
+def subgraph_match_ref(graph: Graph, n_q: int, q_edges) -> int:
+    """Brute-force oracle: count ordered embeddings (numpy)."""
+    ro = np.asarray(graph.row_offsets)
+    ci = np.asarray(graph.col_indices)
+    n = len(ro) - 1
+    adj = [set(ci[ro[u]:ro[u + 1]]) for u in range(n)]
+    q_adj = [[] for _ in range(n_q)]
+    for a, b in q_edges:
+        q_adj[b].append(a)
+        q_adj[a].append(b)
+
+    count = 0
+    stack = [(v,) for v in range(n)]
+    while stack:
+        partial = stack.pop()
+        k = len(partial)
+        if k == n_q:
+            count += 1
+            continue
+        anchors = [a for a in q_adj[k] if a < k]
+        cands = set(adj[partial[anchors[0]]]) if anchors else set(range(n))
+        for a in anchors[1:]:
+            cands &= adj[partial[a]]
+        for c in cands:
+            if c not in partial:
+                stack.append(partial + (c,))
+    return count

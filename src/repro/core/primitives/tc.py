@@ -1,0 +1,93 @@
+"""Triangle counting (paper §6.6) — forward algorithm via segmented
+intersection.
+
+Stage 1 (host, 'forming edge lists'): advance over all vertices to the full
+edge frontier, then *filter* to keep each undirected edge once, oriented
+from the higher-(degree, id) endpoint to the lower — the paper's workload
+reduction that removes ~5/6 of the intersection work. The filtered edges
+induce a DAG subgraph G'.
+
+Stage 2 (device): segmented intersection of N'(u) ∩ N'(v) for every
+remaining edge (u,v) — each triangle is counted exactly once.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import operators as ops
+from ..frontier import SparseFrontier
+from ..graph import Graph, edge_list, from_edge_list
+
+
+class TCResult(NamedTuple):
+    total: jax.Array          # () int32 global triangle count
+    per_edge: jax.Array       # (m',) per-oriented-edge counts
+    edge_src: np.ndarray      # (m',) oriented edge sources (host)
+    edge_dst: np.ndarray      # (m',) oriented edge dsts (host)
+
+
+def _orient(graph: Graph) -> tuple[Graph, np.ndarray, np.ndarray]:
+    """Filter stage: orient each undirected edge high→low (deg, id)."""
+    src, dst = edge_list(graph)
+    ro = np.asarray(graph.row_offsets)
+    deg = np.diff(ro)
+    keep = (deg[src] > deg[dst]) | ((deg[src] == deg[dst]) & (src > dst))
+    fsrc, fdst = src[keep], dst[keep]
+    sub = from_edge_list(fsrc, fdst, n=graph.num_vertices, undirected=False,
+                         build_csc=False, deduplicate=False,
+                         remove_self_loops=False)
+    ssrc, sdst = edge_list(sub)
+    return sub, ssrc, sdst
+
+
+def triangle_count(graph: Graph, use_kernel: bool = False) -> TCResult:
+    """Exact TC. The graph must be undirected (both edge directions
+    present), with sorted neighbor lists (from_edge_list guarantees)."""
+    sub, ssrc, sdst = _orient(graph)
+    mp = sub.num_edges
+    if mp == 0:
+        z = jnp.int32(0)
+        return TCResult(z, jnp.zeros((0,), jnp.int32), ssrc, sdst)
+    fa = SparseFrontier(ids=jnp.asarray(ssrc, jnp.int32),
+                        length=jnp.int32(mp))
+    fb = SparseFrontier(ids=jnp.asarray(sdst, jnp.int32),
+                        length=jnp.int32(mp))
+    # output capacity: sum of min-degree per pair, bounded by edges of G'
+    deg = np.diff(np.asarray(sub.row_offsets))
+    cap_out = int(np.minimum(deg[ssrc], deg[sdst]).sum())
+    cap_out = max(cap_out, 1)
+
+    @jax.jit
+    def run(sub, fa, fb):
+        res = ops.segmented_intersect(sub, fa, fb, cap_out,
+                                      use_kernel=use_kernel)
+        return res.total, res.counts
+
+    total, counts = run(sub, fa, fb)
+    return TCResult(total=total.astype(jnp.int32),
+                    per_edge=counts[:mp], edge_src=ssrc, edge_dst=sdst)
+
+
+def triangle_count_full(graph: Graph, use_kernel: bool = False) -> jax.Array:
+    """Unfiltered variant ('tc-intersection-full' in Fig. 25): intersect
+    both directions of every edge and divide by 6 — the baseline that
+    shows the filter's ~6x workload reduction."""
+    src, dst = edge_list(graph)
+    m = graph.num_edges
+    fa = SparseFrontier(ids=jnp.asarray(src, jnp.int32), length=jnp.int32(m))
+    fb = SparseFrontier(ids=jnp.asarray(dst, jnp.int32), length=jnp.int32(m))
+    deg = np.diff(np.asarray(graph.row_offsets))
+    cap_out = int(np.minimum(deg[src], deg[dst]).sum())
+    cap_out = max(cap_out, 1)
+
+    @jax.jit
+    def run(graph, fa, fb):
+        res = ops.segmented_intersect(graph, fa, fb, cap_out,
+                                      use_kernel=use_kernel)
+        return res.total
+
+    return (run(graph, fa, fb) // 6).astype(jnp.int32)

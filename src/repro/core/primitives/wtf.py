@@ -1,0 +1,104 @@
+"""Who-To-Follow (paper §7.5; Geil et al. [20]) — Twitter's recommendation
+pipeline on a follow graph:
+
+  1. PPR    — personalized PageRank from the query user.
+  2. CoT    — 'circle of trust': top-k PPR vertices (k=1000 in the paper).
+  3. Money  — SALSA on the bipartite graph {CoT as hubs} × {their
+              out-neighbors as authorities}; authority scores are the
+              follow recommendations, hub scores the 'similar users'.
+
+All three stages run as dense frontier sweeps on the same CSR/CSC the rest
+of the engine uses; the bipartite advance is a masked advance (live edges =
+edges whose source is a hub).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..graph import Graph
+
+
+class WTFResult(NamedTuple):
+    ppr: jax.Array          # (n,) personalized pagerank
+    cot: jax.Array          # (k,) circle-of-trust vertex ids
+    hub_scores: jax.Array   # (n,) SALSA hub scores ('similar to you')
+    auth_scores: jax.Array  # (n,) SALSA authority scores (recommendations)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "ppr_iters", "salsa_iters"))
+def _wtf_impl(graph: Graph, src: jax.Array, damping: jax.Array, k: int,
+              ppr_iters: int, salsa_iters: int) -> WTFResult:
+    n, m = graph.num_vertices, graph.num_edges
+    deg = graph.degrees.astype(jnp.float32)
+    # segment owner of each CSC slot (= the edge's destination vertex)
+    seg = jnp.searchsorted(graph.csc_offsets,
+                           jnp.arange(m, dtype=jnp.int32), side="right") - 1
+    # segment owner of each CSR slot (= the edge's source vertex)
+    src_all = jnp.searchsorted(graph.row_offsets,
+                               jnp.arange(m, dtype=jnp.int32),
+                               side="right") - 1
+    esrc_csc = graph.csc_indices
+
+    # ---- stage 1: PPR ----------------------------------------------------
+    def ppr_body(pr):
+        contrib = jnp.where(deg > 0, pr / jnp.maximum(deg, 1.0), 0.0)
+        acc = jax.ops.segment_sum(contrib[esrc_csc], seg, num_segments=n,
+                                  indices_are_sorted=True)
+        dangling = jnp.sum(jnp.where(deg == 0, pr, 0.0))
+        new = damping * acc
+        return new.at[src].add((1.0 - damping) + damping * dangling)
+
+    pr = jnp.zeros((n,)).at[src].set(1.0)
+    pr = jax.lax.fori_loop(0, ppr_iters, lambda _, p: ppr_body(p), pr)
+
+    # ---- stage 2: circle of trust (top-k PPR, excluding the source) ------
+    masked = pr.at[src].set(-jnp.inf)
+    top_vals, cot = jax.lax.top_k(masked, k)
+    cot_ok = top_vals > 0.0
+    hubs = jnp.zeros((n,), bool).at[jnp.where(cot_ok, cot, 0)].set(
+        cot_ok, mode="drop")
+
+    # ---- stage 3: SALSA on the CoT-induced bipartite graph ---------------
+    live_csr = hubs[src_all]        # per-CSR-slot: source is a hub
+    live_csc = hubs[esrc_csc]       # per-CSC-slot: source is a hub
+    hub_deg = jax.ops.segment_sum(live_csr.astype(jnp.float32), src_all,
+                                  num_segments=n, indices_are_sorted=True)
+    auth_deg = jax.ops.segment_sum(live_csc.astype(jnp.float32), seg,
+                                   num_segments=n, indices_are_sorted=True)
+    h0 = hubs.astype(jnp.float32) / jnp.maximum(jnp.sum(hubs), 1)
+
+    def salsa_body(_, carry):
+        h, a = carry
+        # hub -> authority (gather per CSC slot, reduce by destination)
+        contrib_h = jnp.where(hub_deg > 0, h / jnp.maximum(hub_deg, 1.0),
+                              0.0)
+        a_new = jax.ops.segment_sum(
+            jnp.where(live_csc, contrib_h[esrc_csc], 0.0), seg,
+            num_segments=n, indices_are_sorted=True)
+        # authority -> hub (gather per CSR slot, reduce by source)
+        contrib_a = jnp.where(auth_deg > 0, a_new / jnp.maximum(auth_deg,
+                                                                1.0), 0.0)
+        h_new = jax.ops.segment_sum(
+            jnp.where(live_csr, contrib_a[graph.col_indices], 0.0), src_all,
+            num_segments=n, indices_are_sorted=True)
+        h_new = jnp.where(hubs, h_new, 0.0)
+        return h_new, a_new
+
+    h, a = jax.lax.fori_loop(0, salsa_iters, salsa_body,
+                             (h0, jnp.zeros((n,))))
+    return WTFResult(ppr=pr.astype(jnp.float32), cot=cot,
+                     hub_scores=h.astype(jnp.float32),
+                     auth_scores=a.astype(jnp.float32))
+
+
+def who_to_follow(graph: Graph, user: int, *, k: int = 1000,
+                  damping: float = 0.85, ppr_iters: int = 30,
+                  salsa_iters: int = 10) -> WTFResult:
+    assert graph.has_csc
+    k = min(k, graph.num_vertices - 1)
+    return _wtf_impl(graph, jnp.int32(user), jnp.float32(damping), k,
+                     ppr_iters, salsa_iters)

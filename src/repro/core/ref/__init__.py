@@ -1,0 +1,5 @@
+from .ref_graph import (bfs_ref, sssp_ref, pagerank_ref, cc_ref, bc_ref,
+                        tc_ref, ppr_ref, salsa_ref)
+
+__all__ = ["bfs_ref", "sssp_ref", "pagerank_ref", "cc_ref", "bc_ref",
+           "tc_ref", "ppr_ref", "salsa_ref"]

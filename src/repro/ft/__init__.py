@@ -1,0 +1,4 @@
+from .elastic import RestartableTrainer
+from .health import StepWatchdog, check_devices
+
+__all__ = ["RestartableTrainer", "StepWatchdog", "check_devices"]

@@ -1,0 +1,85 @@
+"""Elastic, restartable training driver.
+
+`RestartableTrainer.run` executes a step function in a crash-tolerant
+loop: checkpoints every `ckpt_every` steps, and on any exception (a real
+device loss, or the injected `FailAt` used by tests/examples) it restores
+the latest checkpoint — possibly onto a *different mesh* (elastic
+scale-up/down), since checkpoints are mesh-agnostic (ckpt/checkpoint.py).
+
+This is the single-process skeleton of the multi-host control loop: on a
+cluster, the same restore path runs on every host after the scheduler
+replaces a failed node.
+"""
+from __future__ import annotations
+
+import logging
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+
+from repro.ckpt import latest_step, restore_checkpoint, save_checkpoint
+from .health import StepWatchdog
+
+log = logging.getLogger("repro.ft")
+
+
+class FailAt(Exception):
+    """Injected failure for fault-tolerance tests/examples."""
+
+
+@dataclass
+class RestartableTrainer:
+    ckpt_dir: str
+    ckpt_every: int = 50
+    max_restarts: int = 3
+
+    def run(self, *, init_state: Callable[[], tuple],
+            step_fn: Callable, data_state: Callable[[], dict],
+            restore_data: Callable[[dict], None], total_steps: int,
+            fail_at: Optional[int] = None,
+            mesh=None, spec_tree=None) -> dict:
+        """init_state() -> (params, opt_state); step_fn(state, step) ->
+        (state, metrics). Returns run report."""
+        restarts = 0
+        watchdog = StepWatchdog()
+        history = []
+
+        while True:
+            try:
+                state = init_state()
+                start = 0
+                last = latest_step(self.ckpt_dir)
+                if last is not None:
+                    state, extra = restore_checkpoint(
+                        self.ckpt_dir, last, state, mesh=mesh,
+                        spec_tree=spec_tree)
+                    restore_data(extra.get("data", {"step": last,
+                                                    "seed": 0}))
+                    start = last
+                    log.info("resumed from step %d", last)
+                for step in range(start, total_steps):
+                    if fail_at is not None and step == fail_at \
+                            and restarts == 0:
+                        raise FailAt(f"injected failure at step {step}")
+                    watchdog.start(step)
+                    state, metrics = step_fn(state, step)
+                    dt = watchdog.stop()
+                    history.append({"step": step, "dt": dt,
+                                    **{k: float(v) for k, v
+                                       in metrics.items()}})
+                    if (step + 1) % self.ckpt_every == 0 \
+                            or step + 1 == total_steps:
+                        save_checkpoint(self.ckpt_dir, step + 1, state,
+                                        extra={"data": data_state()})
+                return {"completed": True, "restarts": restarts,
+                        "history": history,
+                        "stragglers": watchdog.stragglers}
+            except FailAt as e:
+                restarts += 1
+                log.warning("failure: %s — restart %d", e, restarts)
+                if restarts > self.max_restarts:
+                    return {"completed": False, "restarts": restarts,
+                            "history": history,
+                            "stragglers": watchdog.stragglers}
+                continue

@@ -1,0 +1,68 @@
+"""Health monitoring: device liveness probe + straggler watchdog.
+
+On a real multi-host deployment these hooks sit on every host: the device
+probe runs a tiny collective each heartbeat (a dead/hung chip fails it →
+the job controller evicts the host and the elastic restart path kicks in),
+and the watchdog flags steps whose wall time exceeds a robust multiple of
+the running median — the standard straggler-mitigation signal (redispatch
+slow hosts / exclude from the next allocation). In this single-process
+container the same code paths run and are unit-tested; the eviction action
+is a callback.
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def check_devices(timeout_s: float = 30.0) -> dict:
+    """Run a tiny reduction on every device; returns health report."""
+    report = {}
+    for dev in jax.devices():
+        t0 = time.monotonic()
+        try:
+            x = jax.device_put(jnp.ones((8,)), dev)
+            val = float(jnp.sum(x))
+            ok = val == 8.0 and (time.monotonic() - t0) < timeout_s
+        except Exception:
+            ok = False
+        report[str(dev)] = ok
+    return report
+
+
+class StepWatchdog:
+    """Flags straggler steps: wall time > threshold × running median."""
+
+    def __init__(self, window: int = 32, threshold: float = 2.0,
+                 on_straggler: Optional[Callable[[int, float, float],
+                                                 None]] = None):
+        self.times = deque(maxlen=window)
+        self.threshold = threshold
+        self.on_straggler = on_straggler
+        self.stragglers = []
+        self._t0 = None
+        self._step = 0
+
+    def start(self, step: int):
+        self._step = step
+        self._t0 = time.monotonic()
+
+    def stop(self) -> float:
+        dt = time.monotonic() - self._t0
+        med = self.median()
+        if med is not None and dt > self.threshold * med:
+            self.stragglers.append((self._step, dt, med))
+            if self.on_straggler:
+                self.on_straggler(self._step, dt, med)
+        self.times.append(dt)
+        return dt
+
+    def median(self):
+        if len(self.times) < 4:
+            return None
+        s = sorted(self.times)
+        return s[len(s) // 2]

@@ -1,0 +1,75 @@
+"""Pallas kernel: tile-local stream compaction — the filter operator's core
+(paper §4.2, Merrill's local-scan filtering strategy §5.2.1).
+
+Phase 1 (this kernel): each tile compacts its kept items to the front of
+its own output tile (tile-local scan + one-hot gather — the TPU-native
+scatter: a comparison matrix instead of per-thread scattered writes) and
+emits its count.
+Phase 2 (ops.py, jnp): exclusive-scan the tile counts and gather tiles to
+their global offsets — Merrill's 'coarse-grained global offsets' pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 256
+
+
+def _kernel(ids_ref, keep_ref, packed_ref, count_ref):
+    ids = ids_ref[...]                       # (TILE,)
+    keep = keep_ref[...] > 0                 # (TILE,)
+    pos = jnp.cumsum(keep.astype(jnp.int32)) - keep.astype(jnp.int32)
+    lane = jax.lax.iota(jnp.int32, TILE)
+    # one-hot "scatter": packed[j] = ids[i] where pos[i]==j and keep[i]
+    onehot = (pos[:, None] == lane[None, :]) & keep[:, None]
+    packed = jnp.sum(jnp.where(onehot, ids[:, None], 0), axis=0)
+    cnt = jnp.sum(keep.astype(jnp.int32))
+    packed_ref[...] = jnp.where(lane < cnt, packed, -1)
+    count_ref[...] = jnp.full((1,), cnt, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def filter_compact_kernel(ids: jax.Array, keep: jax.Array,
+                          interpret: bool = True):
+    """Compact ids[keep] (stable). Returns (packed (cap,), count ()).
+
+    cap = len(ids); tail is -1 padding.
+    """
+    cap = ids.shape[0]
+    padded = -(-cap // TILE) * TILE
+    if padded != cap:
+        pad = padded - cap
+        ids = jnp.concatenate([ids, jnp.full((pad,), -1, ids.dtype)])
+        keep = jnp.concatenate([keep.astype(jnp.int32),
+                                jnp.zeros((pad,), jnp.int32)])
+    else:
+        keep = keep.astype(jnp.int32)
+    ntile = padded // TILE
+    packed, counts = pl.pallas_call(
+        _kernel,
+        grid=(ntile,),
+        in_specs=[pl.BlockSpec((TILE,), lambda i: (i,)),
+                  pl.BlockSpec((TILE,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((TILE,), lambda i: (i,)),
+                   pl.BlockSpec((1,), lambda i: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((padded,), ids.dtype),
+                   jax.ShapeDtypeStruct((ntile,), jnp.int32)],
+        interpret=interpret,
+    )(ids, keep)
+    # phase 2: global reassembly (coarse offsets + gather)
+    offsets = jnp.cumsum(counts) - counts
+    lane = jnp.arange(padded, dtype=jnp.int32)
+    tile_of = lane // TILE
+    local = lane % TILE
+    src = tile_of * TILE + local
+    gpos = offsets[tile_of] + local
+    out = jnp.full((padded,), -1, ids.dtype)
+    valid = local < counts[tile_of]
+    out = out.at[jnp.where(valid, gpos, padded)].set(packed[src],
+                                                     mode="drop")
+    total = jnp.sum(counts)
+    return out[:cap], total

@@ -1,0 +1,106 @@
+"""Pallas kernel: FlashAttention-style fused attention (online softmax).
+
+The LM substrate's kernel-fusion showcase (the paper's fusion philosophy
+applied at the model layer): one kernel streams KV tiles through VMEM,
+keeping running max / normalizer / accumulator in scratch, so the (Sq, Sk)
+score matrix never exists in HBM — turning the memory-roofline term of
+attention from O(Sq·Sk) to O(Sq·D + Sk·D).
+
+Grid: (q_tiles, kv_tiles), kv innermost; scratch persists across the kv
+sweep of each q tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, sq: int, sk: int, bq: int, bk: int,
+            nk: int):
+    qi = pl.program_id(0)
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[...].astype(jnp.float32)
+    k = k_ref[...].astype(jnp.float32)
+    v = v_ref[...].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    kpos = ki * bk + jax.lax.iota(jnp.int32, bk)
+    mask = (kpos < sk)[None, :]
+    if causal:
+        qpos = qi * bq + jax.lax.iota(jnp.int32, bq) + (sk - sq)
+        mask = mask & (kpos[None, :] <= qpos[:, None])
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)
+    p = jnp.exp(s - m_cur[:, None])
+    p = jnp.where(mask, p, 0.0)
+    l_cur = alpha * l_prev + jnp.sum(p, axis=-1)
+    acc = acc_scr[...] * alpha[:, None] + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_cur
+    l_scr[...] = l_cur
+    acc_scr[...] = acc
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        o_ref[...] = (acc_scr[...]
+                      / jnp.maximum(l_scr[...], 1e-30)[:, None]
+                      ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk",
+                                             "interpret"))
+def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
+                           causal: bool = True, bq: int = DEFAULT_BQ,
+                           bk: int = DEFAULT_BK,
+                           interpret: bool = True) -> jax.Array:
+    """Single-head fused attention. q: (Sq, D); k, v: (Sk, D)."""
+    sq, d = q.shape
+    sk = k.shape[0]
+    scale = float(1.0 / (d ** 0.5))
+    bq = min(bq, max(8, sq))
+    bk = min(bk, max(8, sk))
+    psq = -(-sq // bq) * bq
+    psk = -(-sk // bk) * bk
+    qp = jnp.pad(q, ((0, psq - sq), (0, 0)))
+    kp = jnp.pad(k, ((0, psk - sk), (0, 0)))
+    vp = jnp.pad(v, ((0, psk - sk), (0, 0)))
+    nq, nk = psq // bq, psk // bk
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=scale, causal=causal, sq=sq,
+                          sk=sk, bq=bq, bk=bk, nk=nk),
+        grid=(nq, nk),
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bk, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((psq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:sq]

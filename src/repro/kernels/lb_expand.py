@@ -1,0 +1,69 @@
+"""Pallas kernel: merge-based load-balanced expansion (LB, paper §5.1.3).
+
+The advance operator's heart: map each output slot to its (input segment,
+rank) pair by binary-searching the degree prefix-sum. On the GPU this is
+Davidson et al.'s load-balanced search; on TPU it becomes a dense,
+perfectly regular VPU loop — every lane does ceil(log2(cap_in)) compares.
+
+Grid: one program per output tile. The offsets array stays resident in
+VMEM across the whole grid (BlockSpec maps every program to block 0);
+output tiles stream.
+"""
+from __future__ import annotations
+
+import functools
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 512
+
+
+def _kernel(offsets_ref, in_pos_ref, rank_ref, valid_ref, *, cap_in: int,
+            iters: int):
+    tile = pl.program_id(0)
+    offsets = offsets_ref[...]          # (cap_in + 1,)
+    slots = tile * TILE + jax.lax.iota(jnp.int32, TILE)
+    total = offsets[cap_in]
+
+    # upper-bound binary search over offsets[0:cap_in] (exclusive scan)
+    lo = jnp.zeros((TILE,), jnp.int32)
+    hi = jnp.full((TILE,), cap_in, jnp.int32)
+
+    def body(_, carry):
+        lo_, hi_ = carry
+        mid = (lo_ + hi_) // 2
+        go_right = offsets[jnp.clip(mid, 0, cap_in)] <= slots
+        lo_ = jnp.where(go_right & (lo_ < hi_), mid + 1, lo_)
+        hi_ = jnp.where(~go_right & (lo_ < hi_), mid, hi_)
+        return lo_, hi_
+
+    lo, _ = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    pos = jnp.clip(lo - 1, 0, max(cap_in - 1, 0))
+    in_pos_ref[...] = pos
+    rank_ref[...] = slots - offsets[pos]
+    valid_ref[...] = (slots < total).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("cap_out", "interpret"))
+def lb_expand_kernel(offsets: jax.Array, cap_out: int,
+                     interpret: bool = True):
+    """offsets: (cap_in+1,) int32 exclusive prefix sum (total in last slot).
+    Returns (in_pos, rank, valid) each (cap_out,) int32."""
+    cap_in = offsets.shape[0] - 1
+    padded = -(-cap_out // TILE) * TILE
+    iters = max(math.ceil(math.log2(max(cap_in, 2))) + 1, 1)
+    grid = (padded // TILE,)
+    out_shape = [jax.ShapeDtypeStruct((padded,), jnp.int32)] * 3
+    in_pos, rank, valid = pl.pallas_call(
+        functools.partial(_kernel, cap_in=cap_in, iters=iters),
+        grid=grid,
+        in_specs=[pl.BlockSpec((cap_in + 1,), lambda i: (0,))],
+        out_specs=[pl.BlockSpec((TILE,), lambda i: (i,))] * 3,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(offsets)
+    return in_pos[:cap_out], rank[:cap_out], valid[:cap_out]

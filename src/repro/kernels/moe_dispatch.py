@@ -1,0 +1,54 @@
+"""Pallas kernel: MoE dispatch gather — the paper's technique beyond the
+paper (DESIGN.md §4).
+
+Token→expert routing is a bipartite V→E advance: the LB machinery
+(lb_expand / sort by expert) decides which token lands in which expert
+buffer slot; this kernel performs the actual data movement — gathering
+token embedding rows into contiguous per-expert buffers so the expert
+matmuls run dense. Slot = -1 ⇒ capacity-dropped (Gunrock's inexact
+filter), producing a zero row.
+
+Grid: one program per slot tile; the token matrix stays VMEM-resident
+(fits for the per-device token counts the framework produces after
+sequence/data sharding).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_S = 128
+
+
+def _kernel(slot_ref, x_ref, out_ref):
+    slots = slot_ref[...]                   # (TILE_S,)
+    x = x_ref[...]                          # (T, D) resident
+    mask = slots >= 0
+    safe = jnp.where(mask, slots, 0)
+    rows = x[safe]                          # gather
+    out_ref[...] = jnp.where(mask[:, None], rows, 0).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def moe_gather_kernel(x: jax.Array, slot_token: jax.Array,
+                      interpret: bool = True) -> jax.Array:
+    """x: (T, D) tokens; slot_token: (S,) token id per expert slot (-1 =
+    empty). Returns (S, D) expert-buffer rows."""
+    s = slot_token.shape[0]
+    t, d = x.shape
+    padded = -(-s // TILE_S) * TILE_S
+    st = jnp.concatenate([slot_token.astype(jnp.int32),
+                          jnp.full((padded - s,), -1, jnp.int32)])
+    out = pl.pallas_call(
+        _kernel,
+        grid=(padded // TILE_S,),
+        in_specs=[pl.BlockSpec((TILE_S,), lambda i: (i,)),
+                  pl.BlockSpec((t, d), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec((TILE_S, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((padded, d), x.dtype),
+        interpret=interpret,
+    )(st, x)
+    return out[:s]

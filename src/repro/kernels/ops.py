@@ -1,0 +1,113 @@
+"""Public kernel API — jit'd wrappers that dispatch to Pallas kernels.
+
+On a TPU backend the kernels compile natively (interpret=False); on this
+CPU container they run in interpret mode, which executes the kernel body
+in Python and is the validation contract (tests compare every kernel
+against the ref.py oracle across shape/dtype sweeps).
+
+Set ``REPRO_FORCE_INTERPRET=0`` to attempt native compilation.
+"""
+from __future__ import annotations
+
+import os
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ref
+from .filter_compact import filter_compact_kernel
+from .flash_attention import flash_attention_kernel
+from .lb_expand import lb_expand_kernel
+from .moe_dispatch import moe_gather_kernel
+from .segment_search import segment_search_kernel
+from .spmv import spmv_ell_kernel
+
+
+def _interpret() -> bool:
+    env = os.environ.get("REPRO_FORCE_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+class KExpansion(NamedTuple):
+    in_pos: jax.Array
+    rank: jax.Array
+    valid: jax.Array
+    total: jax.Array
+
+
+def lb_expand(sizes: jax.Array, cap_out: int) -> KExpansion:
+    """Kernel-backed LB expansion; drop-in for operators.lb_expand."""
+    sizes = sizes.astype(jnp.int32)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(sizes)])
+    in_pos, rank, valid = lb_expand_kernel(offsets, cap_out,
+                                           interpret=_interpret())
+    return KExpansion(in_pos=in_pos, rank=rank, valid=valid > 0,
+                      total=offsets[-1])
+
+
+def segment_search(haystack: jax.Array, lo: jax.Array, hi: jax.Array,
+                   needles: jax.Array) -> jax.Array:
+    """found[i] = needles[i] in sorted haystack[lo[i]:hi[i])."""
+    return segment_search_kernel(haystack, lo, hi, needles,
+                                 interpret=_interpret()) > 0
+
+
+def csr_spmv(offsets: jax.Array, indices: jax.Array, x: jax.Array,
+             ell_width: int | None = None) -> jax.Array:
+    """Hybrid ELL+COO SpMV over a CSR structure with unit values:
+    y[i] = Σ_{e∈row i} x[indices[e]].
+
+    Rows are packed to ELL width (default: covers ≥95% of edges); overflow
+    edges of ultra-high-degree rows fall back to a segment-sum (COO part).
+    """
+    n = offsets.shape[0] - 1
+    m = indices.shape[0]
+    deg = offsets[1:] - offsets[:-1]
+    if ell_width is None:
+        host_deg = np.asarray(jax.device_get(deg))
+        ell_width = int(np.percentile(host_deg, 95)) if n else 1
+        ell_width = max(min(ell_width, 1024), 1)
+    w = ell_width
+    lanes = jnp.arange(w, dtype=jnp.int32)[None, :]
+    starts = offsets[:-1, None]
+    idx = jnp.minimum(starts + lanes, m - 1)
+    mask = lanes < deg[:, None]
+    nbrs = jnp.where(mask, indices[idx], -1)
+    vals = mask.astype(jnp.float32)
+    y = spmv_ell_kernel(nbrs, vals, x, interpret=_interpret())
+    # COO overflow: edges beyond the ELL width
+    slot = jnp.arange(m, dtype=jnp.int32)
+    row = jnp.searchsorted(offsets, slot, side="right") - 1
+    row = jnp.clip(row, 0, n - 1)
+    rank = slot - offsets[row]
+    over = rank >= w
+    y = y.at[jnp.where(over, row, n)].add(
+        jnp.where(over, x[indices], 0.0), mode="drop")
+    return y
+
+
+def filter_compact(ids: jax.Array, keep: jax.Array):
+    """Stable compaction of ids[keep] → (packed, count)."""
+    return filter_compact_kernel(ids, keep, interpret=_interpret())
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    causal: bool = True, bq: int = 128,
+                    bk: int = 128) -> jax.Array:
+    """Fused single-head attention; vmap for (batch, heads)."""
+    return flash_attention_kernel(q, k, v, causal=causal, bq=bq, bk=bk,
+                                  interpret=_interpret())
+
+
+def moe_gather(x: jax.Array, slot_token: jax.Array) -> jax.Array:
+    """Gather token rows into expert-buffer slots (-1 ⇒ zero row)."""
+    return moe_gather_kernel(x, slot_token, interpret=_interpret())
+
+
+# re-export oracles for tests/benchmarks
+oracle = ref

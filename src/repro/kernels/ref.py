@@ -1,0 +1,86 @@
+"""Pure-jnp oracles for every Pallas kernel (the ref.py contract).
+
+Each function is the semantic specification its kernel is tested against
+(tests sweep shapes/dtypes and assert_allclose kernel vs. oracle).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lb_expand_ref(offsets: jax.Array, cap_out: int):
+    """Merge-based LB expansion geometry.
+
+    offsets: (cap_in+1,) int32 exclusive prefix sum of segment sizes with
+    the total in the last slot. Returns (in_pos, rank, valid) each
+    (cap_out,) — which input segment each output slot belongs to.
+    """
+    cap_in = offsets.shape[0] - 1
+    slots = jnp.arange(cap_out, dtype=jnp.int32)
+    in_pos = jnp.searchsorted(offsets[:-1], slots,
+                              side="right").astype(jnp.int32) - 1
+    in_pos = jnp.clip(in_pos, 0, max(cap_in - 1, 0))
+    rank = slots - offsets[in_pos]
+    valid = slots < offsets[-1]
+    return in_pos, rank, valid.astype(jnp.int32)
+
+
+def spmv_ell_ref(nbrs: jax.Array, vals: jax.Array, x: jax.Array):
+    """ELL-format SpMV: y[i] = Σ_w vals[i,w] · x[nbrs[i,w]] (nbrs −1 = pad)."""
+    mask = nbrs >= 0
+    safe = jnp.where(mask, nbrs, 0)
+    return jnp.sum(jnp.where(mask, vals * x[safe], 0.0), axis=1)
+
+
+def segment_search_ref(haystack: jax.Array, lo: jax.Array, hi: jax.Array,
+                       needles: jax.Array):
+    """found[i] = needles[i] ∈ haystack[lo[i]:hi[i]) (segments sorted)."""
+    def one(l, h, v):
+        idx = jnp.searchsorted(haystack, v)
+        # walk: first position >= v within [l, h)
+        pos = jnp.clip(idx, l, haystack.shape[0] - 1)
+        # searchsorted is global; redo bounded search via where-scan
+        inside = (jnp.arange(haystack.shape[0]) >= l) & \
+                 (jnp.arange(haystack.shape[0]) < h)
+        return jnp.any(inside & (haystack == v))
+    return jax.vmap(one)(lo, hi, needles).astype(jnp.int32)
+
+
+def filter_compact_ref(ids: jax.Array, keep: jax.Array):
+    """Stable compaction: kept ids packed to the front, -1 padding.
+    Returns (packed, count)."""
+    cap = ids.shape[0]
+    keep = keep.astype(bool)
+    pos = jnp.cumsum(keep.astype(jnp.int32)) - keep.astype(jnp.int32)
+    out = jnp.full((cap,), -1, ids.dtype)
+    tgt = jnp.where(keep, pos, cap)
+    out = out.at[tgt].set(ids, mode="drop")
+    return out, jnp.sum(keep.astype(jnp.int32))
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        causal: bool = True, scale: float | None = None):
+    """Single-head attention oracle. q:(Sq,D) k,v:(Sk,D)."""
+    d = q.shape[-1]
+    scale = (1.0 / jnp.sqrt(d)) if scale is None else scale
+    logits = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * scale
+    if causal:
+        sq, sk = q.shape[0], k.shape[0]
+        # align the ends: query i attends keys j <= i + (sk - sq)
+        qpos = jnp.arange(sq)[:, None] + (sk - sq)
+        kpos = jnp.arange(sk)[None, :]
+        logits = jnp.where(kpos <= qpos, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    # fully-masked rows (sq > sk under causal alignment): define as 0,
+    # matching the kernel's zero-normalizer convention
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    return (p @ v.astype(jnp.float32)).astype(q.dtype)
+
+
+def moe_gather_ref(x: jax.Array, slot_token: jax.Array):
+    """Gather token rows into expert slots. slot_token: (S,) int32 token id
+    per expert-buffer slot, -1 = empty. Returns (S, D)."""
+    mask = slot_token >= 0
+    safe = jnp.where(mask, slot_token, 0)
+    return jnp.where(mask[:, None], x[safe], 0.0).astype(x.dtype)

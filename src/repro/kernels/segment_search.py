@@ -1,0 +1,74 @@
+"""Pallas kernel: batched bounded binary search — the SmallLarge probe of
+segmented intersection (paper §4.3).
+
+Each lane searches needles[i] within haystack[lo[i]:hi[i]). The haystack
+(the graph's column-indices array) stays VMEM-resident across the grid;
+needle/bound tiles stream. All lanes run the same ceil(log2(max_deg))
+compare steps — fully regular VPU work, replacing the GPU's per-thread
+merge-path partitioning.
+"""
+from __future__ import annotations
+
+import functools
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE = 512
+
+
+def _kernel(hay_ref, lo_ref, hi_ref, needle_ref, found_ref, *, iters: int):
+    hay = hay_ref[...]
+    lo = lo_ref[...]
+    hi = hi_ref[...]
+    needles = needle_ref[...]
+    hmax = hay.shape[0] - 1
+
+    def body(_, carry):
+        lo_, hi_ = carry
+        mid = (lo_ + hi_) // 2
+        mv = hay[jnp.clip(mid, 0, hmax)]
+        go_right = mv < needles
+        lo_ = jnp.where(go_right & (lo_ < hi_), mid + 1, lo_)
+        hi_ = jnp.where(~go_right & (lo_ < hi_), mid, hi_)
+        return lo_, hi_
+
+    lo_f, _ = jax.lax.fori_loop(0, iters, body, (lo, hi))
+    in_range = lo_f < hi
+    found = in_range & (hay[jnp.clip(lo_f, 0, hmax)] == needles)
+    found_ref[...] = found.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def segment_search_kernel(haystack: jax.Array, lo: jax.Array, hi: jax.Array,
+                          needles: jax.Array,
+                          interpret: bool = True) -> jax.Array:
+    cap = needles.shape[0]
+    padded = -(-cap // TILE) * TILE
+    if padded != cap:
+        pad = padded - cap
+        z = jnp.zeros((pad,), jnp.int32)
+        lo = jnp.concatenate([lo.astype(jnp.int32), z])
+        hi = jnp.concatenate([hi.astype(jnp.int32), z])
+        needles = jnp.concatenate([needles, z - 1])
+    else:
+        lo = lo.astype(jnp.int32)
+        hi = hi.astype(jnp.int32)
+    iters = max(math.ceil(math.log2(max(haystack.shape[0], 2))) + 1, 1)
+    found = pl.pallas_call(
+        functools.partial(_kernel, iters=iters),
+        grid=(padded // TILE,),
+        in_specs=[
+            pl.BlockSpec(haystack.shape, lambda i: (0,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((TILE,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.int32),
+        interpret=interpret,
+    )(haystack, lo, hi, needles)
+    return found[:cap]

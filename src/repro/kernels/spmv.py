@@ -1,0 +1,57 @@
+"""Pallas kernel: ELL-format SpMV (PageRank advance; paper §6.5 notes PR is
+congruent to SpMV, and nvGRAPH's semiring SpMV is a comparison point).
+
+TPU adaptation: CSR's ragged rows can't tile onto the VPU, so rows are
+packed to ELL width W (hybrid: overflow edges of ultra-high-degree
+vertices are handled by a segment-sum fallback in ops.py — the classic
+ELL+COO hybrid). The kernel streams row tiles; the dense x vector stays
+VMEM-resident across the grid.
+
+y[i] = Σ_w vals[i, w] · x[nbrs[i, w]]      (nbrs −1 ⇒ padding)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_R = 256
+
+
+def _kernel(nbrs_ref, vals_ref, x_ref, y_ref):
+    nbrs = nbrs_ref[...]                   # (TILE_R, W) int32
+    vals = vals_ref[...]                   # (TILE_R, W) f32
+    x = x_ref[...]                         # (n,) f32 — resident
+    mask = nbrs >= 0
+    safe = jnp.where(mask, nbrs, 0)
+    gathered = x[safe]                     # VPU gather (dynamic-slice loop
+    #                                        under Mosaic; exact in interpret)
+    y_ref[...] = jnp.sum(jnp.where(mask, vals * gathered, 0.0), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def spmv_ell_kernel(nbrs: jax.Array, vals: jax.Array, x: jax.Array,
+                    interpret: bool = True) -> jax.Array:
+    """nbrs/vals: (n, W); x: (nx,). Returns y: (n,) float32."""
+    n, w = nbrs.shape
+    padded = -(-n // TILE_R) * TILE_R
+    if padded != n:
+        pad = padded - n
+        nbrs = jnp.concatenate([nbrs, jnp.full((pad, w), -1, nbrs.dtype)])
+        vals = jnp.concatenate([vals, jnp.zeros((pad, w), vals.dtype)])
+    grid = (padded // TILE_R,)
+    y = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_R, w), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_R, w), lambda i: (i, 0)),
+            pl.BlockSpec(x.shape, lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_R,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((padded,), jnp.float32),
+        interpret=interpret,
+    )(nbrs, vals.astype(jnp.float32), x.astype(jnp.float32))
+    return y[:n]

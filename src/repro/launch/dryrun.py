@@ -1,0 +1,385 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture × input shape)
+on the production meshes and extract the roofline terms.
+
+Per cell:
+  1. FULL program (real n_layers, scanned): jit → lower → compile. This is
+     the deliverable: the compile must succeed on the production mesh, and
+     compiled.memory_analysis() proves the per-device footprint.
+  2. COST PROBES: XLA's cost_analysis counts a while-loop body once
+     regardless of trip count, so per-layer cost comes from two small
+     UNROLLED programs (k1 and k2 layers): marginal = c(k2)−c(k1) per
+     layer-unit, fixed = c(k1) − k1·marginal, total ≈ fixed + units·marginal.
+     The same differencing extrapolates the collective bytes parsed from
+     the probes' post-SPMD HLO.
+
+Backend caveat (recorded in EXPERIMENTS.md): the CPU float-normalization
+pass upcasts some bf16 ops to f32, so absolute byte terms are upper
+bounds; §Perf compares deltas under the identical backend.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-6b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod both \
+      --out results/dryrun.json
+"""
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, shapes_for
+from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
+from repro.models import build_model
+from repro.parallel.sharding import (fit_sharding, spec_for_mesh,
+                                     tree_shardings)
+from repro.train.optimizer import (AdamWState, adamw, make_schedule,
+                                   moment_specs)
+
+# archs that need int8 optimizer moments to fit v5e HBM (DESIGN.md §6)
+QUANT_OPT_ARCHS = {"llama3-405b", "kimi-k2-1t-a32b", "qwen3-moe-235b-a22b"}
+
+# microbatch (gradient-accumulation) factor per arch for train_4k — the
+# production memory plan: activation temps ÷ accum (DESIGN.md §6)
+GRAD_ACCUM = {
+    "llama3-405b": 16, "kimi-k2-1t-a32b": 16, "qwen3-moe-235b-a22b": 16,
+    "yi-6b": 8, "starcoder2-15b": 8, "whisper-large-v3": 4,
+    "minicpm-2b": 4, "qwen2-vl-2b": 4, "mamba2-780m": 4, "zamba2-2.7b": 4,
+}
+
+COLLECTIVE_RE = re.compile(
+    r"=\s+(\(?)([a-z0-9\[\],{}\s]*?)\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+GROUPS_RE = re.compile(r"replica_groups=(?:\{\{([0-9,]+)\}|\[(\d+),(\d+)\])")
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+               "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+               "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Sum collective output bytes (per-device shapes, post-SPMD) and a
+    bytes-over-links estimate: all-reduce → 2×out (RS+AG phases);
+    reduce-scatter → out×group (input is what moves); others → out."""
+    per_op = {}
+    total = 0.0
+    for line in hlo_text.splitlines():
+        m = COLLECTIVE_RE.search(line)
+        if not m:
+            continue
+        op = m.group(3)
+        shapes = SHAPE_RE.findall(m.group(2))
+        out_bytes = sum(_shape_bytes(dt, dims) for dt, dims in shapes)
+        g = 1
+        gm = GROUPS_RE.search(line)
+        if gm:
+            g = (len(gm.group(1).split(",")) if gm.group(1) is not None
+                 else int(gm.group(3)))
+        if op == "all-reduce":
+            link_bytes = 2.0 * out_bytes
+        elif op == "reduce-scatter":
+            link_bytes = float(out_bytes) * g
+        else:
+            link_bytes = float(out_bytes)
+        rec = per_op.setdefault(op, {"count": 0, "bytes": 0.0,
+                                     "link_bytes": 0.0})
+        rec["count"] += 1
+        rec["bytes"] += out_bytes
+        rec["link_bytes"] += link_bytes
+        total += link_bytes
+    return {"per_op": per_op, "link_bytes": total}
+
+
+def _sds_with_sharding(tree_sds, shardings):
+    """Attach shardings to ShapeDtypeStructs, refitting each spec to the
+    leaf's shape (drops non-divisible axes)."""
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(
+            s.shape, s.dtype,
+            sharding=fit_sharding(sh.mesh, s.shape, sh.spec)),
+        tree_sds, shardings)
+
+
+def _probe_layers(cfg):
+    """(k1, k2, units): probe layer counts and the full unit count."""
+    if cfg.family == "hybrid":
+        return cfg.attn_every, 2 * cfg.attn_every, \
+            cfg.n_layers // cfg.attn_every
+    return 1, 2, cfg.n_layers
+
+
+def _with_layers(cfg, k):
+    kw = dict(n_layers=k, scan_layers=False)
+    if cfg.family == "encdec":
+        kw.update(n_enc_layers=k, n_dec_layers=k)
+    return cfg.replace(**kw)
+
+
+def lower_program(cfg, shape: dict, kind: str, mesh, quant: bool,
+                  grad_accum: int = 1):
+    """Build + lower + compile one program. Returns compiled executable.
+
+    grad_accum > 1 microbatches the train step (batch leaves become
+    (accum, mb, ...) with mb sharded over pod×data): activation memory is
+    divided by accum — the production memory plan for the big archs.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    model = build_model(cfg)
+    axes = mesh_axis_sizes(mesh)
+
+    with jax.set_mesh(mesh):
+        pspecs = model.param_specs(axes)
+        pshard = tree_shardings(mesh, pspecs)
+        params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        params_sds = _sds_with_sharding(params_sds, pshard)
+
+        batch_sds = model.input_specs(shape, kind)
+        bspec = spec_for_mesh(P(("pod", "data")), mesh)
+
+        def batch_shard(s):
+            if len(s.shape) == 0:
+                sp = P()
+            elif s.shape[0] == shape["global_batch"]:
+                if grad_accum > 1 and kind == "train":
+                    mb = s.shape[0] // grad_accum
+                    nshape = (grad_accum, mb) + s.shape[1:]
+                    return jax.ShapeDtypeStruct(
+                        nshape, s.dtype,
+                        sharding=fit_sharding(mesh, nshape,
+                                              P(None, ("pod", "data"))))
+                sp = P(("pod", "data"))
+            else:   # (3, B, S) position ids
+                if grad_accum > 1 and kind == "train":
+                    mb = s.shape[1] // grad_accum
+                    nshape = (grad_accum, s.shape[0], mb) + s.shape[2:]
+                    return jax.ShapeDtypeStruct(
+                        nshape, s.dtype,
+                        sharding=fit_sharding(
+                            mesh, nshape, P(None, None, ("pod", "data"))))
+                sp = P(None, ("pod", "data"))
+            return jax.ShapeDtypeStruct(
+                s.shape, s.dtype,
+                sharding=fit_sharding(mesh, s.shape, sp))
+
+        batch_sds = jax.tree.map(batch_shard, batch_sds)
+
+        if kind == "train":
+            sched = make_schedule("cosine", 3e-4, 10000)
+            opt_init, opt_update = adamw(sched, quantize_moments=quant)
+            opt_sds = jax.eval_shape(opt_init, params_sds)
+            ospecs = moment_specs(pspecs, params_sds,
+                                  quantize_moments=quant)
+            ospec_tree = AdamWState(step=P(), m=ospecs, v=ospecs)
+            oshard = tree_shardings(mesh, ospec_tree)
+            opt_sds = _sds_with_sharding(opt_sds, oshard)
+
+            def loss_fn(p, mb):
+                l, _ = model.loss(p, mb)
+                return l
+
+            if grad_accum > 1:
+                def train_step(params, opt_state, batch):
+                    def micro(acc, mb):
+                        l, g = jax.value_and_grad(loss_fn)(params, mb)
+                        return jax.tree.map(
+                            lambda a, b: a + b.astype(jnp.float32),
+                            acc, g), l
+                    zeros = jax.tree.map(
+                        lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                    grads, losses = jax.lax.scan(micro, zeros, batch)
+                    grads = jax.tree.map(lambda g: g / grad_accum, grads)
+                    new_p, new_o, _ = opt_update(grads, opt_state, params)
+                    return new_p, new_o, jnp.mean(losses)
+            else:
+                def train_step(params, opt_state, batch):
+                    loss, grads = jax.value_and_grad(loss_fn)(params,
+                                                              batch)
+                    new_p, new_o, _ = opt_update(grads, opt_state, params)
+                    return new_p, new_o, loss
+
+            jf = jax.jit(train_step, donate_argnums=(0, 1))
+            lowered = jf.lower(params_sds, opt_sds, batch_sds)
+        elif kind == "prefill":
+            # constrain the emitted cache (it dominates prefill output
+            # bytes — flash-decode layout per cache_specs)
+            cspecs = model.cache_specs(axes)
+            b, s = shape["global_batch"], shape["seq_len"]
+            cache_sds_probe = jax.eval_shape(
+                lambda p, bb: model.prefill(p, bb)[1], params_sds,
+                batch_sds)
+            cache_out_sh = jax.tree.map(
+                lambda sd, sp: fit_sharding(mesh, sd.shape, sp),
+                cache_sds_probe, cspecs)
+            jf = jax.jit(model.prefill,
+                         out_shardings=(None, cache_out_sh))
+            lowered = jf.lower(params_sds, batch_sds)
+        else:  # decode
+            cspecs = model.cache_specs(axes)
+            b, s = shape["global_batch"], shape["seq_len"]
+            pf_sds = model.input_specs(
+                {"global_batch": b, "seq_len": s}, "prefill")
+            cache_sds = jax.eval_shape(
+                lambda p, bb: model.prefill(p, bb)[1], params_sds, pf_sds)
+            cache_sds = jax.tree.map(
+                lambda sd, sp: jax.ShapeDtypeStruct(
+                    sd.shape, sd.dtype,
+                    sharding=fit_sharding(mesh, sd.shape, sp)),
+                cache_sds, cspecs)
+            jf = jax.jit(model.decode_step, donate_argnums=(1,))
+            lowered = jf.lower(params_sds, cache_sds, batch_sds)
+
+        compiled = lowered.compile()
+    return compiled
+
+
+def _cost_triplet(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    coll = parse_collectives(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "transcendentals": float(cost.get("transcendentals", 0.0)),
+            "coll_link_bytes": float(coll["link_bytes"]),
+            "coll_per_op": coll["per_op"]}
+
+
+def dryrun_cell(arch: str, shape_name: str, shape: dict, multi_pod: bool,
+                verbose: bool = True, probes: bool = True) -> dict:
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    kind = shape["kind"]
+    quant = arch in QUANT_OPT_ARCHS
+    accum = GRAD_ACCUM.get(arch, 1) if kind == "train" else 1
+
+    # ---- 1. the real program: compile proof + memory analysis -----------
+    t0 = time.monotonic()
+    compiled = lower_program(cfg, shape, kind, mesh, quant,
+                             grad_accum=accum)
+    compile_s = time.monotonic() - t0
+    mem = compiled.memory_analysis()
+
+    # ---- 2. cost probes (unrolled k1/k2 layers; accum=1 — the per-step
+    # flops/bytes/collectives are microbatching-invariant) -----------------
+    est = None
+    if probes:
+        k1, k2, units = _probe_layers(cfg)
+        c1 = _cost_triplet(lower_program(_with_layers(cfg, k1), shape,
+                                         kind, mesh, quant))
+        c2 = _cost_triplet(lower_program(_with_layers(cfg, k2), shape,
+                                         kind, mesh, quant))
+        per_unit_k = (k2 - k1) / (1 if cfg.family != "hybrid"
+                                  else cfg.attn_every)
+        n_units_probe1 = k1 if cfg.family != "hybrid" else 1
+        est = {}
+        for key in ("flops", "bytes", "transcendentals",
+                    "coll_link_bytes"):
+            marginal = max(c2[key] - c1[key], 0.0) / per_unit_k
+            fixed = max(c1[key] - n_units_probe1 * marginal, 0.0)
+            est[key] = fixed + units * marginal
+            est[f"{key}_marginal"] = marginal
+            est[f"{key}_fixed"] = fixed
+        est["probe_k"] = (k1, k2, units)
+        est["coll_per_op_probe2"] = c2["coll_per_op"]
+
+    model = build_model(cfg)
+    n_active = model.active_param_count()
+    tokens = shape["global_batch"] * (shape["seq_len"]
+                                      if kind != "decode" else 1)
+    flops_factor = 6 if kind == "train" else 2
+    model_flops = flops_factor * n_active * tokens
+
+    row = {
+        "arch": arch, "shape": shape_name, "kind": kind,
+        "mesh": "2x16x16" if multi_pod else "16x16", "chips": chips,
+        "compile_s": round(compile_s, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device": mem.argument_size_in_bytes
+            + mem.temp_size_in_bytes + mem.output_size_in_bytes
+            - mem.alias_size_in_bytes,
+        },
+        "est": est,
+        "model_flops_global": model_flops,
+        "n_active_params": n_active,
+    }
+    if verbose:
+        msg = (f"[dryrun] {arch} × {shape_name} × {row['mesh']}: "
+               f"compile {compile_s:.1f}s, peak mem/dev "
+               f"{row['memory']['peak_per_device']/2**30:.2f} GiB")
+        if est:
+            msg += (f", est flops/dev {est['flops']:.3e}, bytes/dev "
+                    f"{est['bytes']:.3e}, coll link-bytes/dev "
+                    f"{est['coll_link_bytes']:.3e}")
+        print(msg, flush=True)
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=("off", "on", "both"),
+                    default="off")
+    ap.add_argument("--no-probes", action="store_true",
+                    help="compile proof only (skip cost probes)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    archs = list(ARCH_IDS) if (args.all or args.arch is None) \
+        else [args.arch]
+    pods = {"off": [False], "on": [True], "both": [False, True]}[
+        args.multi_pod]
+
+    rows, failures = [], []
+    for arch in archs:
+        cfg = get_config(arch)
+        shp = shapes_for(cfg)
+        names = list(shp) if (args.all or args.shape is None) \
+            else [args.shape]
+        for name in names:
+            if name not in shp:
+                print(f"[dryrun] skip {arch} × {name} "
+                      f"(inapplicable for family {cfg.family})")
+                continue
+            for mp in pods:
+                try:
+                    rows.append(dryrun_cell(arch, name, shp[name], mp,
+                                            probes=not args.no_probes))
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((arch, name, mp, repr(e)))
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump({"rows": rows, "failures": failures}, f, indent=1)
+        print(f"[dryrun] wrote {len(rows)} rows to {args.out}")
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for f_ in failures:
+            print("   ", f_)
+        sys.exit(1)
+    print(f"[dryrun] all {len(rows)} cells compiled OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,132 @@
+"""Graph-analytics driver — the paper's own application kind.
+
+Generates (or loads) a graph, runs the requested primitives, validates
+against the numpy oracles, and reports runtime + MTEPS exactly as the
+paper's evaluation does (§7: runtime is GPU-kernel time; MTEPS = edges
+visited / runtime).
+
+  PYTHONPATH=src python -m repro.launch.graph_run --graph rmat --scale 14 \
+      --primitives bfs,sssp,pagerank,cc,bc,tc --validate
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.core import graph as G
+from repro.core import ref as R
+from repro.core.primitives import (bc, bfs, connected_components, pagerank,
+                                   sssp, triangle_count, who_to_follow)
+
+
+def make_graph(kind: str, scale: int, edge_factor: int, seed: int):
+    if kind == "rmat":
+        return G.rmat(scale, edge_factor, seed=seed, weighted=True)
+    if kind == "rgg":
+        n = 1 << scale
+        import math
+        radius = math.sqrt(8.0 / n)   # ~avg degree 8·π/4
+        return G.random_geometric(n, radius, seed=seed, weighted=True)
+    if kind == "grid":
+        side = int((1 << scale) ** 0.5)
+        return G.grid2d(side, weighted=True, seed=seed)
+    raise ValueError(kind)
+
+
+def run_primitive(name: str, g, src: int, validate: bool):
+    t0 = time.monotonic()
+    edges = g.num_edges
+    ok = None
+    if name == "bfs":
+        r = bfs(g, src)
+        jax.block_until_ready(r.labels)
+        dt = time.monotonic() - t0
+        edges = int(r.edges_visited)
+        if validate:
+            ok = np.array_equal(np.asarray(r.labels), R.bfs_ref(g, src))
+    elif name == "sssp":
+        r = sssp(g, src)
+        jax.block_until_ready(r.dist)
+        dt = time.monotonic() - t0
+        if validate:
+            ok = np.allclose(np.asarray(r.dist), R.sssp_ref(g, src),
+                             rtol=1e-5)
+    elif name == "pagerank":
+        r = pagerank(g, max_iter=20)
+        jax.block_until_ready(r.rank)
+        dt = time.monotonic() - t0
+        if validate:
+            ok = np.allclose(np.asarray(r.rank), R.pagerank_ref(g,
+                                                                iters=20),
+                             atol=1e-6)
+    elif name == "cc":
+        r = connected_components(g)
+        jax.block_until_ready(r.labels)
+        dt = time.monotonic() - t0
+        if validate:
+            ref = R.cc_ref(g)
+            a, b = np.asarray(r.labels), ref
+            ok = len(np.unique(a)) == len(np.unique(b)) and np.array_equal(
+                a[a == np.arange(len(a))], b[b == np.arange(len(b))])
+    elif name == "bc":
+        r = bc(g, src)
+        jax.block_until_ready(r.bc)
+        dt = time.monotonic() - t0
+        edges = 2 * g.num_edges
+        if validate:
+            ok = np.allclose(np.asarray(r.bc), R.bc_ref(g, src),
+                             rtol=1e-3, atol=1e-3)
+    elif name == "tc":
+        r = triangle_count(g)
+        jax.block_until_ready(r.total)
+        dt = time.monotonic() - t0
+        if validate:
+            ok = int(r.total) == R.tc_ref(g)
+    elif name == "wtf":
+        r = who_to_follow(g, src, k=min(1000, g.num_vertices - 1))
+        jax.block_until_ready(r.auth_scores)
+        dt = time.monotonic() - t0
+        ok = None
+    else:
+        raise ValueError(name)
+    mteps = edges / dt / 1e6
+    return dt, mteps, ok
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graph", default="rmat",
+                    choices=("rmat", "rgg", "grid"))
+    ap.add_argument("--scale", type=int, default=14)
+    ap.add_argument("--edge-factor", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--primitives",
+                    default="bfs,sssp,pagerank,cc,bc,tc")
+    ap.add_argument("--validate", action="store_true")
+    ap.add_argument("--src", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    g = make_graph(args.graph, args.scale, args.edge_factor, args.seed)
+    deg = np.diff(np.asarray(g.row_offsets))
+    src = args.src if args.src is not None else int(np.argmax(deg))
+    print(f"[graph] {args.graph} scale={args.scale}: n={g.num_vertices} "
+          f"m={g.num_edges} max_deg={deg.max()} src={src}")
+
+    failures = 0
+    for name in args.primitives.split(","):
+        dt, mteps, ok = run_primitive(name.strip(), g, src,
+                                      args.validate)
+        status = "" if ok is None else ("  PASS" if ok else "  FAIL")
+        print(f"[graph] {name:9s} {dt*1000:9.2f} ms  {mteps:9.2f} MTEPS"
+              f"{status}")
+        if ok is False:
+            failures += 1
+    if failures:
+        raise SystemExit(f"{failures} primitives failed validation")
+
+
+if __name__ == "__main__":
+    main()

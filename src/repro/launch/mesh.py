@@ -1,0 +1,33 @@
+"""Production mesh definitions.
+
+`make_production_mesh` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state — the dry-run sets
+XLA_FLAGS before calling it, and tests import freely under 1 device.
+
+Single pod:  (16, 16)    axes ("data", "model")   — 256 chips (v5e pod)
+Multi-pod:   (2, 16, 16) axes ("pod", "data", "model") — 512 chips.
+The "pod" axis is pure data parallelism: the only collective that crosses
+it is the per-step gradient all-reduce (DCN-friendly).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def mesh_axis_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.devices.shape))
+
+
+def make_test_mesh(data: int = 1, model: int = 1):
+    """Small mesh for CPU tests (requires enough local devices)."""
+    return jax.make_mesh(
+        (data, model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

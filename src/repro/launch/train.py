@@ -1,0 +1,141 @@
+"""End-to-end training driver (CPU-runnable smoke scale → pod scale).
+
+Wires every substrate together: config registry → model → sharded params
+→ AdamW(+schedule) → synthetic data pipeline → jitted train step →
+checkpoint/restore → fault-tolerant restart loop → straggler watchdog.
+
+Examples
+  PYTHONPATH=src python -m repro.launch.train --arch minicpm-2b --smoke \
+      --steps 50 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+  PYTHONPATH=src python -m repro.launch.train --arch yi-6b --smoke \
+      --steps 20 --simulate-failure 10      # injected fault + auto-resume
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config
+from repro.data import SyntheticLMDataset, make_batch_for
+from repro.ft import RestartableTrainer
+from repro.launch.mesh import make_test_mesh, mesh_axis_sizes
+from repro.models import build_model
+from repro.parallel.sharding import tree_shardings
+from repro.train import adamw, make_schedule
+from repro.train.optimizer import AdamWState, moment_specs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--schedule", default=None,
+                    help="constant|cosine|wsd (default: wsd for minicpm, "
+                         "cosine otherwise — matching the papers)")
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--data-parallel", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--simulate-failure", type=int, default=None)
+    ap.add_argument("--quantized-optimizer", action="store_true")
+    ap.add_argument("--log", default=None, help="write metrics jsonl")
+    args = ap.parse_args(argv)
+
+    cfg = (get_smoke_config(args.arch) if args.smoke
+           else get_config(args.arch))
+    model = build_model(cfg)
+    schedule_kind = args.schedule or (
+        "wsd" if args.arch == "minicpm-2b" else "cosine")
+    sched = make_schedule(schedule_kind, args.lr, args.steps)
+    opt_init, opt_update = adamw(
+        sched, quantize_moments=args.quantized_optimizer)
+
+    mesh = make_test_mesh(args.data_parallel, args.model_parallel)
+    axes = mesh_axis_sizes(mesh)
+    pspecs = model.param_specs(axes)
+    params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    ospec = AdamWState(
+        step=jax.sharding.PartitionSpec(),
+        m=moment_specs(pspecs, params_sds, args.quantized_optimizer),
+        v=moment_specs(pspecs, params_sds, args.quantized_optimizer))
+    shape = {"global_batch": args.batch, "seq_len": args.seq}
+
+    ds = SyntheticLMDataset(cfg.vocab, args.seq, args.batch, seed=0)
+
+    def make_batch():
+        b = make_batch_for(cfg, shape, "train",
+                           seed=ds.step + 1000 * ds.seed)
+        lm = ds.next_batch()
+        if "tokens" in b:
+            b["tokens"] = lm["tokens"]
+        b["labels"] = lm["labels"]
+        return b
+
+    with jax.set_mesh(mesh):
+        def init_state():
+            params = model.init(jax.random.PRNGKey(0))
+            return (params, opt_init(params))
+
+        @jax.jit
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                l, m = model.loss(p, batch)
+                return l, m
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            new_p, new_o, om = opt_update(grads, opt_state, params)
+            return new_p, new_o, {"loss": loss, **metrics, **om}
+
+        def step_fn(state, step):
+            params, opt_state = state
+            batch = make_batch()
+            params, opt_state, metrics = train_step(params, opt_state,
+                                                    batch)
+            return (params, opt_state), metrics
+
+        if args.ckpt_dir:
+            trainer = RestartableTrainer(args.ckpt_dir,
+                                         ckpt_every=args.ckpt_every)
+            report = trainer.run(
+                init_state=init_state, step_fn=step_fn,
+                data_state=ds.state, restore_data=ds.restore,
+                total_steps=args.steps, fail_at=args.simulate_failure,
+                mesh=mesh,
+                spec_tree=(pspecs, ospec))
+        else:
+            state = init_state()
+            history = []
+            for step in range(args.steps):
+                t0 = time.monotonic()
+                state, metrics = step_fn(state, step)
+                history.append({"step": step,
+                                "dt": time.monotonic() - t0,
+                                **{k: float(v) for k, v
+                                   in metrics.items()}})
+            report = {"completed": True, "restarts": 0,
+                      "history": history, "stragglers": []}
+
+    first = report["history"][0]["loss"] if report["history"] else None
+    last = report["history"][-1]["loss"] if report["history"] else None
+    print(f"[train] arch={args.arch} completed={report['completed']} "
+          f"restarts={report['restarts']} steps={len(report['history'])} "
+          f"loss {first:.4f} -> {last:.4f}")
+    if args.log:
+        with open(args.log, "w") as f:
+            for row in report["history"]:
+                f.write(json.dumps(row) + "\n")
+    return report
+
+
+if __name__ == "__main__":
+    main()

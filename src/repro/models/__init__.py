@@ -1,0 +1,9 @@
+"""LM model zoo: dense / MoE / SSM / hybrid / enc-dec / VLM backbones.
+
+Built bottom-up from layers.py; every architecture family exposes the same
+Model protocol (api.py): init / loss / prefill / decode_step / param_specs
+/ input_specs, so the launcher, dry-run, and trainer are family-agnostic.
+"""
+from .api import Model, build_model
+
+__all__ = ["Model", "build_model"]

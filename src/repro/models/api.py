@@ -1,0 +1,144 @@
+"""Architecture config + the family-agnostic Model protocol.
+
+Every architecture (dense / MoE / SSM / hybrid / enc-dec / VLM) builds to a
+`Model` with the same six entry points, so launch/dryrun/train/serve are
+family-blind:
+
+    init(key) -> params
+    loss(params, batch) -> (scalar, metrics)        # train step core
+    prefill(params, batch) -> (logits, cache)       # inference prefill
+    decode_step(params, cache, batch) -> (logits, cache)
+    param_specs(mesh_axes) -> pytree of PartitionSpec
+    input_specs(shape, mesh_axes, kind) -> dict of ShapeDtypeStruct
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    rope_theta: float = 10000.0
+    norm: str = "rmsnorm"            # rmsnorm | layernorm
+    mlp: str = "swiglu"              # swiglu | gelu
+    tie_embeddings: bool = False
+    attn_bias: bool = False
+    norm_eps: float = 1e-5
+    # MoE
+    n_experts: int = 0
+    top_k: int = 0
+    d_expert: int = 0                # per-expert FFN hidden
+    capacity_factor: float = 1.25
+    n_shared_experts: int = 0
+    # SSM (Mamba2 / SSD)
+    ssm_state: int = 0
+    ssm_conv: int = 4
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_chunk: int = 128
+    # hybrid (zamba2): shared attention block applied every k ssm layers
+    attn_every: int = 0
+    # enc-dec (whisper)
+    n_enc_layers: int = 0
+    n_dec_layers: int = 0
+    max_source_len: int = 1500       # whisper: 30 s → 1500 frames
+    # VLM (qwen2-vl)
+    mrope_sections: Optional[tuple] = None
+    # dtypes / optimization
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.float32
+    remat: str = "none"              # none | dots | full
+    seq_shard_acts: bool = False     # shard saved carries' S over "model"
+    scan_layers: bool = True         # False: unroll (dry-run cost probes)
+    use_flash: bool = False
+    # serving
+    max_cache_len: int = 32768
+    kv_quant: bool = False           # int8 KV cache (beyond-paper, §Perf)
+    weight_quant: bool = False       # int8 MoE expert weights (serving)
+    # notes for DESIGN/EXPERIMENTS
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts > 0
+
+    def replace(self, **kw) -> "ArchConfig":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclass
+class Model:
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable                  # (params, batch) -> (loss, metrics)
+    prefill: Callable               # (params, batch) -> (logits, cache)
+    decode_step: Callable           # (params, cache, batch) -> (logits, cache)
+    param_specs: Callable           # (mesh_axes: dict) -> spec pytree
+    cache_specs: Callable           # (mesh_axes, batch, seq) -> spec pytree
+    input_specs: Callable           # (shape, kind) -> dict[str, SDS]
+    param_count: Callable           # (params) -> int
+    active_param_count: Callable    # () -> analytic active params
+
+
+def count_params(params) -> int:
+    return int(sum(x.size for x in jax.tree.leaves(params)))
+
+
+def maybe_scan(body, carry, xs, use_scan: bool):
+    """jax.lax.scan or an unrolled python loop (identical semantics).
+
+    Unrolling exists for the dry-run's cost probes: XLA's cost_analysis
+    counts a while-loop body ONCE regardless of trip count, so per-layer
+    costs are measured on small unrolled programs and extrapolated
+    (launch/dryrun.py). Production programs always scan.
+    """
+    if use_scan:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    if ys and ys[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys)
+    else:
+        ys = None
+    return carry, ys
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family in ("dense", "vlm"):
+        from .transformer import make_dense_model
+        return make_dense_model(cfg)
+    if cfg.family == "moe":
+        from .transformer import make_dense_model
+        return make_dense_model(cfg)     # MoE FFN plugs into the same skeleton
+    if cfg.family == "ssm":
+        from .mamba2 import make_mamba2_model
+        return make_mamba2_model(cfg)
+    if cfg.family == "hybrid":
+        from .hybrid import make_hybrid_model
+        return make_hybrid_model(cfg)
+    if cfg.family == "encdec":
+        from .encdec import make_encdec_model
+        return make_encdec_model(cfg)
+    raise ValueError(f"unknown family {cfg.family}")

@@ -1,0 +1,265 @@
+"""Zamba2-style hybrid: Mamba2 backbone + a *shared* attention block
+(single parameter set) applied after every `attn_every` SSM layers
+(arXiv:2411.15242).
+
+Structure: G = n_layers / attn_every groups; outer scan over groups
+(carrying hidden state + that group's KV cache), inner scan over the
+group's Mamba2 layers. The shared block's params are closed over — the
+same weights execute at every application, exactly the paper's weight
+sharing. Simplification vs. the released model: the shared block consumes
+the hidden state only (no concat with the original embedding); noted in
+DESIGN.md.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import constrain
+
+from . import layers as L
+from .api import ArchConfig, Model, count_params, maybe_scan
+from .mamba2 import _dims, mamba2_block, mamba2_layer_init
+from .transformer import _norm, _norm_init, _remat, _vocab_padded, \
+    logits_fn, xent_loss
+
+BATCH = ("pod", "data")
+
+
+def _groups(cfg: ArchConfig) -> int:
+    assert cfg.attn_every > 0 and cfg.n_layers % cfg.attn_every == 0
+    return cfg.n_layers // cfg.attn_every
+
+
+def init_hybrid(cfg: ArchConfig, key):
+    vp = _vocab_padded(cfg)
+    keys = jax.random.split(key, 6)
+    dt = cfg.param_dtype
+    g = _groups(cfg)
+    k = cfg.attn_every
+
+    ks = jax.random.split(keys[1], cfg.n_layers)
+    stacked = jax.vmap(lambda kk: mamba2_layer_init(kk, cfg, dt))(ks)
+    # regroup leading axis L -> (G, k)
+    grouped = jax.tree.map(
+        lambda a: a.reshape((g, k) + a.shape[1:]), stacked)
+
+    ka, kf = jax.random.split(keys[2])
+    shared = {
+        "attn_norm": _norm_init(cfg),
+        "attn": L.attention_init(ka, cfg.d_model, cfg.n_heads,
+                                 cfg.n_kv_heads, cfg.hd, dt),
+        "mlp_norm": _norm_init(cfg),
+        "mlp": L.swiglu_init(kf, cfg.d_model, cfg.d_ff, dt),
+    }
+    params = {
+        "embed": L.embedding_init(keys[0], vp, cfg.d_model, dt),
+        "mamba": grouped,
+        "shared": shared,
+        "final_norm": _norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.truncated_normal_init(
+            keys[3], (cfg.d_model, vp), 1.0 / math.sqrt(cfg.d_model), dt)
+    return params
+
+
+def _shared_block(cfg, sp, x, positions, kv_cache, cache_index):
+    h = _norm(cfg, sp["attn_norm"], x)
+    attn_out, new_cache = L.attention(
+        sp["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd, positions=positions, rope_theta=cfg.rope_theta,
+        causal=True, kv_cache=kv_cache, cache_index=cache_index)
+    x = x + attn_out
+    h = _norm(cfg, sp["mlp_norm"], x)
+    x = x + L.swiglu(sp["mlp"], h)
+    return constrain(x, BATCH, None, None), new_cache
+
+
+def make_hybrid_model(cfg: ArchConfig) -> Model:
+    d_inner, nh, ds, conv_dim = _dims(cfg)
+    g = _groups(cfg)
+
+    def init(key):
+        return init_hybrid(cfg, key)
+
+    def _run(params, tokens, ssm0=None, conv0=None, kv0=None, pos0=None,
+             decode=False, collect=False, cache_len=None):
+        """Shared trunk for forward/prefill/decode.
+
+        ssm0/conv0: (G,k,...) states; kv0: {k,v} (G,B,Smax,KV,hd);
+        pos0: () cache write index. Returns (hidden, states)."""
+        bsz, s = tokens.shape
+        x = L.embed(params["embed"], tokens, cfg.compute_dtype)
+        x = constrain(x, BATCH, None, None)
+        if pos0 is None:
+            positions = jnp.broadcast_to(
+                jnp.arange(s, dtype=jnp.int32)[None, :], (bsz, s))
+            cache_index = 0
+        else:
+            positions = jnp.broadcast_to(pos0[None, None],
+                                         (bsz, s)).astype(jnp.int32)
+            cache_index = pos0
+
+        def inner(carry, xs):
+            x = carry
+            if decode or collect:
+                lp, hs, cs = xs
+                x, nh_, nc_ = mamba2_block(cfg, lp, x, ssm_state=hs,
+                                           conv_state=cs, decode=decode)
+                return x, (nh_, nc_)
+            lp = xs
+            x, _, _ = mamba2_block(cfg, lp, x)
+            return x, None
+
+        def outer(carry, xs):
+            x = carry
+            if decode or collect:
+                mp, hs, cs, ck, cv = xs
+                x, states = maybe_scan(inner, x, (mp, hs, cs),
+                                       cfg.scan_layers)
+                x, ncache = _shared_block(cfg, params["shared"], x,
+                                          positions, {"k": ck, "v": cv},
+                                          cache_index)
+                return x, (states[0], states[1], ncache["k"], ncache["v"])
+            mp = xs
+            x, _ = maybe_scan(inner, x, mp, cfg.scan_layers)
+            x, _ = _shared_block(cfg, params["shared"], x, positions,
+                                 None, None)
+            return x, None
+
+        if decode or collect:
+            if kv0 is None:  # prefill: fresh caches (s or cache_len)
+                kvshape = (g, bsz, cache_len or s, cfg.n_kv_heads, cfg.hd)
+                kv0 = {"k": jnp.zeros(kvshape, cfg.compute_dtype),
+                       "v": jnp.zeros(kvshape, cfg.compute_dtype)}
+                ssm0 = jnp.zeros((g, cfg.attn_every, bsz, nh, ds,
+                                  cfg.ssm_head_dim), jnp.float32)
+                conv0 = jnp.zeros((g, cfg.attn_every, bsz, cfg.ssm_conv - 1,
+                                   conv_dim), cfg.compute_dtype)
+                # prefill must not pass ssm0 as h0 in chunked mode... zeros ok
+            x, states = maybe_scan(outer, x, (params["mamba"], ssm0,
+                                              conv0, kv0["k"], kv0["v"]),
+                                   cfg.scan_layers)
+            x = _norm(cfg, params["final_norm"], x)
+            return x, states
+        x, _ = maybe_scan(_remat(cfg, outer), x, params["mamba"],
+                          cfg.scan_layers)
+        x = _norm(cfg, params["final_norm"], x)
+        return x, None
+
+    def loss(params, batch):
+        hidden, _ = _run(params, batch["tokens"])
+        lg = logits_fn(cfg, params, hidden)
+        l = xent_loss(cfg, lg, batch["labels"])
+        return l, {"xent": l}
+
+    def prefill(params, batch, cache_len=None):
+        tokens = batch["tokens"]
+        s = tokens.shape[1]
+        hidden, states = _run(params, tokens, collect=True,
+                              cache_len=cache_len)
+        hs, cs, ck, cv = states
+        lg = logits_fn(cfg, params, hidden[:, -1:, :])
+        return lg, {"ssm": hs, "conv": cs, "kv_k": ck, "kv_v": cv,
+                    "len": jnp.full((), s, jnp.int32)}
+
+    def decode_step(params, cache, batch):
+        hidden, states = _run(params, batch["tokens"], ssm0=cache["ssm"],
+                              conv0=cache["conv"],
+                              kv0={"k": cache["kv_k"], "v": cache["kv_v"]},
+                              pos0=cache["len"], decode=True)
+        hs, cs, ck, cv = states
+        lg = logits_fn(cfg, params, hidden)
+        return lg, {"ssm": hs, "conv": cs, "kv_k": ck, "kv_v": cv,
+                    "len": cache["len"] + 1}
+
+    def param_specs(axes: dict):
+        model = axes.get("model", 1)
+        vp = _vocab_padded(cfg)
+        h_ok = nh % model == 0
+        a_ok = cfg.n_heads % model == 0
+        kv_ok = cfg.n_kv_heads % model == 0
+        ff_ok = cfg.d_ff % model == 0
+        v_ok = vp % model == 0
+        mamba = {
+            "norm": {"scale": P(None, None, None)},
+            "in_proj": P(None, None, "data", "model" if h_ok else None),
+            "conv_w": P(None, None, None, None),
+            "conv_b": P(None, None, None),
+            "A_log": P(None, None, "model" if h_ok else None),
+            "D": P(None, None, "model" if h_ok else None),
+            "dt_bias": P(None, None, "model" if h_ok else None),
+            "gate_norm": {"scale": P(None, None,
+                                     "model" if h_ok else None)},
+            "out_proj": P(None, None, "model" if h_ok else None, "data"),
+        }
+        shared = {
+            "attn_norm": {"scale": P(None)},
+            "attn": {
+                "wq": P("data", "model" if a_ok else None),
+                "wk": P("data", "model" if kv_ok else None),
+                "wv": P("data", "model" if kv_ok else None),
+                "wo": P("model" if a_ok else None, "data"),
+            },
+            "mlp_norm": {"scale": P(None)},
+            "mlp": {
+                "w1": P("data", "model" if ff_ok else None),
+                "w3": P("data", "model" if ff_ok else None),
+                "w2": P("model" if ff_ok else None, "data"),
+            },
+        }
+        specs = {
+            "embed": {"table": P("model" if v_ok else None, "data")},
+            "mamba": mamba,
+            "shared": shared,
+            "final_norm": {"scale": P(None)},
+        }
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = P("data", "model" if v_ok else None)
+        return specs
+
+    def cache_specs(axes: dict):
+        model = axes.get("model", 1)
+        h_ok = nh % model == 0
+        kv_ok = cfg.n_kv_heads % model == 0
+        return {"ssm": P(None, None, BATCH, "model" if h_ok else None,
+                         None, None),
+                "conv": P(None, None, BATCH, None, None),
+                "kv_k": (P(None, BATCH, None, "model", None) if kv_ok
+                         else P(None, BATCH, "model", None, None)),
+                "kv_v": (P(None, BATCH, None, "model", None) if kv_ok
+                         else P(None, BATCH, "model", None, None)),
+                "len": P()}
+
+    def input_specs(shape, kind: str):
+        b, s = shape["global_batch"], shape["seq_len"]
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if kind == "train":
+            return {"tokens": tok, "labels": tok}
+        if kind == "prefill":
+            return {"tokens": tok}
+        if kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        raise ValueError(kind)
+
+    def active_param_count() -> int:
+        vp = _vocab_padded(cfg)
+        per_mamba = (cfg.d_model * (2 * d_inner + 2 * ds + nh)
+                     + cfg.ssm_conv * conv_dim + d_inner * cfg.d_model)
+        shared = (2 * cfg.d_model * cfg.n_heads * cfg.hd
+                  + 2 * cfg.d_model * cfg.n_kv_heads * cfg.hd
+                  + 3 * cfg.d_model * cfg.d_ff)
+        emb = vp * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+        # shared block executes G times but its params count once;
+        # *active* compute counts every application
+        return cfg.n_layers * per_mamba + g * shared + emb
+
+    return Model(cfg=cfg, init=init, loss=loss, prefill=prefill,
+                 decode_step=decode_step, param_specs=param_specs,
+                 cache_specs=cache_specs, input_specs=input_specs,
+                 param_count=count_params,
+                 active_param_count=active_param_count)

@@ -1,0 +1,399 @@
+"""Shared neural layers: norms, rotary embeddings (RoPE / M-RoPE), GQA
+attention (with KV cache), SwiGLU/GeLU MLPs, embeddings.
+
+Pure-function style: each layer is `f(params, x, ...)` with params a dict;
+`*_init` builds params. All layers take a `dtype` for compute precision and
+keep params in their stored dtype (mixed-precision policy handled by the
+caller). Sharding is applied by the caller through param-spec trees
+(parallel/sharding.py) — layers are sharding-agnostic GSPMD code.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain, mesh_axis_size
+
+BATCH = ("pod", "data")
+
+
+def truncated_normal_init(key, shape, scale, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    """Inverse frequencies for the even/odd rotary pairs: (head_dim//2,)."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0):
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., :, None, None].astype(jnp.float32) * inv  # (...,S,1,hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, sections,
+                theta: float = 10000.0):
+    """Multimodal RoPE (Qwen2-VL): 3 position streams (temporal, height,
+    width) drive disjoint frequency bands.
+
+    x: (B, S, H, hd); positions: (3, B, S); sections: 3 ints summing to
+    hd//2 — how many frequency pairs each stream owns.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, "mrope sections must cover hd/2"
+    inv = rope_freqs(hd, theta)                        # (hd/2,)
+    # per-frequency stream selector
+    stream = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=hd // 2)   # (hd/2,)
+    # pos_per_freq: (B, S, hd/2)
+    pos = jnp.take_along_axis(
+        positions.transpose(1, 2, 0),                  # (B, S, 3)
+        stream[None, None, :], axis=2)
+    ang = pos[..., None, :].astype(jnp.float32) * inv  # (B,S,1,hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    x1 = x[..., 0::2].astype(jnp.float32)
+    x2 = x[..., 1::2].astype(jnp.float32)
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(s: int, d: int):
+    """Whisper-style fixed sinusoidal embeddings: (s, d)."""
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    div = jnp.exp(-math.log(10000.0)
+                  * jnp.arange(0, d, 2, dtype=jnp.float32) / d)
+    pe = jnp.zeros((s, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(pos * div))
+    pe = pe.at[:, 1::2].set(jnp.cos(pos * div))
+    return pe
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, optional KV cache, optional M-RoPE / no-RoPE)
+# ---------------------------------------------------------------------------
+
+def attention_init(key, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, dtype=jnp.float32, with_bias=False):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(d_model)
+    p = {
+        "wq": truncated_normal_init(k1, (d_model, n_heads * head_dim),
+                                    scale, dtype),
+        "wk": truncated_normal_init(k2, (d_model, n_kv_heads * head_dim),
+                                    scale, dtype),
+        "wv": truncated_normal_init(k3, (d_model, n_kv_heads * head_dim),
+                                    scale, dtype),
+        "wo": truncated_normal_init(k4, (n_heads * head_dim, d_model),
+                                    scale, dtype),
+    }
+    if with_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    return p
+
+
+ATTN_CHUNK = 1024  # query-block size for the memory-bounded attention path
+
+
+def _kv_quantize(x):
+    """Per-(token, head) int8 quantization of K/V rows over head_dim.
+
+    Halves decode's dominant HBM term (cache reads) — the beyond-paper
+    optimization P7 in EXPERIMENTS.md §Perf. Returns (int8 codes,
+    f32 scales (..., KV))."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    codes = jnp.round(x.astype(jnp.float32)
+                      / jnp.maximum(scale[..., None], 1e-12))
+    return codes.astype(jnp.int8), scale
+
+
+def _kv_dequantize(codes, scale, dtype):
+    return (codes.astype(jnp.float32)
+            * scale[..., None]).astype(dtype)
+
+
+def _sdpa_block(q, k, v, scale, qpos, kpos, kmask=None,
+                logits_spec=None):
+    """One query block vs all keys. q: (B,cq,H,hd); k/v: (B,Sk,H,hd).
+
+    logits_spec: optional PartitionSpec entries for (B,H,q,Sk) logits —
+    used by the cached-decode path to force the flash-decode schedule
+    (keep the key/sequence dim sharded through softmax instead of letting
+    the partitioner all-gather the KV cache)."""
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if logits_spec is not None:
+        logits = constrain(logits, *logits_spec)
+    mask = kpos[None, :] <= qpos[:, None]
+    if kmask is not None:
+        mask = mask & kmask[None, :]
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    p = jax.nn.softmax(logits, axis=-1)
+    if logits_spec is not None:
+        p = constrain(p, *logits_spec)
+    return jnp.einsum("bhqk,bkhd->bqhd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)
+
+
+def _sdpa(q, k, v, causal: bool, q_offset=None, kmask_len=None,
+          logits_spec=None):
+    """q: (B,Sq,H,hd), k/v: (B,Sk,H,hd) — softmax attention.
+
+    Long sequences are processed in query blocks of ATTN_CHUNK via
+    lax.map, so the live score tensor is (B,H,chunk,Sk) instead of
+    (B,H,Sq,Sk) — the jnp shape of what the Pallas flash kernel does
+    natively on TPU (kernels/flash_attention.py).
+
+    q_offset: scalar position of q[0] within the key sequence (cached
+    decode: q_offset = cache_len; default aligns the ends).
+    kmask_len: keys at positions >= kmask_len are masked (partially
+    filled caches).
+    """
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    scale = 1.0 / math.sqrt(hd)
+    off = (sk - sq) if q_offset is None else q_offset
+    kpos = jnp.arange(sk, dtype=jnp.int32)
+    kmask = (kpos < kmask_len) if kmask_len is not None else None
+    if not causal:
+        qpos = jnp.full((sq,), sk, jnp.int32)  # attend everything
+    else:
+        qpos = jnp.arange(sq, dtype=jnp.int32) + off
+
+    if sq <= ATTN_CHUNK:
+        return _sdpa_block(q, k, v, scale, qpos, kpos, kmask,
+                           logits_spec)
+
+    nq = -(-sq // ATTN_CHUNK)
+    pad = nq * ATTN_CHUNK - sq
+    qp = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qpp = jnp.pad(qpos, (0, pad))
+    qc = qp.reshape(b, nq, ATTN_CHUNK, h, hd).transpose(1, 0, 2, 3, 4)
+    qposc = qpp.reshape(nq, ATTN_CHUNK)
+
+    def one(args):
+        qi, qpi = args
+        return _sdpa_block(qi, k, v, scale, qpi, kpos, kmask,
+                           logits_spec)
+
+    out = jax.lax.map(one, (qc, qposc))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, nq * ATTN_CHUNK, h, hd)
+    return out[:, :sq]
+
+
+def attention(params, x, *, n_heads: int, n_kv_heads: int, head_dim: int,
+              positions=None, rope_theta: float = 10000.0,
+              mrope_sections=None, causal: bool = True,
+              kv_cache=None, cache_index=None, use_rope: bool = True,
+              kv_override=None):
+    """GQA attention.
+
+    x: (B, S, d). kv_cache: optional dict {k, v}: (B, Smax, KV, hd) +
+    cache_index () — decode appends at cache_index and attends to the
+    prefix. kv_override: (k, v) tuple for cross-attention (ignores x for
+    keys/values). Returns (out, new_kv_cache).
+    """
+    b, s, d = x.shape
+    q = x @ params["wq"].astype(x.dtype)
+    if "bq" in params:
+        q = q + params["bq"].astype(x.dtype)
+    q = q.reshape(b, s, n_heads, head_dim)
+    if kv_override is None:
+        k = x @ params["wk"].astype(x.dtype)
+        v = x @ params["wv"].astype(x.dtype)
+        if "bk" in params:
+            k = k + params["bk"].astype(x.dtype)
+            v = v + params["bv"].astype(x.dtype)
+        k = k.reshape(b, s, n_kv_heads, head_dim)
+        v = v.reshape(b, s, n_kv_heads, head_dim)
+        if use_rope and positions is not None:
+            if mrope_sections is not None:
+                q = apply_mrope(q, positions, mrope_sections, rope_theta)
+                k = apply_mrope(k, positions, mrope_sections, rope_theta)
+            else:
+                q = apply_rope(q, positions, rope_theta)
+                k = apply_rope(k, positions, rope_theta)
+    else:
+        k, v = kv_override
+        if use_rope and positions is not None and mrope_sections is None:
+            q = apply_rope(q, positions, rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        quant = "k_scale" in kv_cache
+        if quant:
+            k_store, k_scale = _kv_quantize(k)
+            v_store, v_scale = _kv_quantize(v)
+        else:
+            k_store, v_store = k, v
+        if k.shape[1] == 1:
+            # single-token decode: masked select instead of a dynamic-
+            # index update — a DUS at a traced index into the S-sharded
+            # cache makes GSPMD all-gather the whole cache (measured in
+            # EXPERIMENTS.md §Perf); the select is sharding-preserving.
+            spos = jnp.arange(kv_cache["k"].shape[1],
+                              dtype=jnp.int32)[None, :, None, None]
+            hit = spos == cache_index
+            ck = jnp.where(hit, k_store.astype(kv_cache["k"].dtype),
+                           kv_cache["k"])
+            cv = jnp.where(hit, v_store.astype(kv_cache["v"].dtype),
+                           kv_cache["v"])
+            if quant:
+                cks = jnp.where(hit[..., 0], k_scale,
+                                kv_cache["k_scale"])
+                cvs = jnp.where(hit[..., 0], v_scale,
+                                kv_cache["v_scale"])
+        else:
+            ck = jax.lax.dynamic_update_slice(kv_cache["k"], k_store.astype(
+                kv_cache["k"].dtype), (0, cache_index, 0, 0))
+            cv = jax.lax.dynamic_update_slice(kv_cache["v"], v_store.astype(
+                kv_cache["v"].dtype), (0, cache_index, 0, 0))
+            if quant:
+                cks = jax.lax.dynamic_update_slice(
+                    kv_cache["k_scale"], k_scale, (0, cache_index, 0))
+                cvs = jax.lax.dynamic_update_slice(
+                    kv_cache["v_scale"], v_scale, (0, cache_index, 0))
+        if quant:
+            new_cache = {"k": ck, "v": cv, "k_scale": cks,
+                         "v_scale": cvs}
+            k = _kv_dequantize(ck, cks, x.dtype)
+            v = _kv_dequantize(cv, cvs, x.dtype)
+        else:
+            new_cache = {"k": ck, "v": cv}
+            k, v = ck, cv
+        # mask out cache slots beyond cache_index + s
+        valid_len = cache_index + s
+    else:
+        valid_len = None
+
+    groups = n_heads // n_kv_heads
+    if groups > 1:
+        k = jnp.repeat(k, groups, axis=2)
+        v = jnp.repeat(v, groups, axis=2)
+
+    if kv_cache is not None:
+        # decode/cached path: causal against absolute positions, with the
+        # unwritten cache tail masked. Logits sharding follows the cache
+        # layout: KV heads over "model" when divisible, else the sequence
+        # dim (flash-decode; see cache_specs).
+        tp = mesh_axis_size("model")
+        if n_kv_heads % tp == 0:
+            lspec = (BATCH, "model", None, None)
+        else:
+            lspec = (BATCH, None, None, "model")
+        out = _sdpa(q, k, v, causal=True, q_offset=cache_index,
+                    kmask_len=valid_len, logits_spec=lspec)
+    else:
+        out = _sdpa(q, k, v, causal)
+
+    out = out.reshape(b, s, n_heads * head_dim)
+    return out @ params["wo"].astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    s1 = 1.0 / math.sqrt(d_model)
+    s2 = 1.0 / math.sqrt(d_ff)
+    return {
+        "w1": truncated_normal_init(k1, (d_model, d_ff), s1, dtype),  # gate
+        "w3": truncated_normal_init(k2, (d_model, d_ff), s1, dtype),  # up
+        "w2": truncated_normal_init(k3, (d_ff, d_model), s2, dtype),  # down
+    }
+
+
+def swiglu(params, x):
+    g = jax.nn.silu(x @ params["w1"].astype(x.dtype))
+    u = x @ params["w3"].astype(x.dtype)
+    return (g * u) @ params["w2"].astype(x.dtype)
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "w1": truncated_normal_init(k1, (d_model, d_ff),
+                                    1.0 / math.sqrt(d_model), dtype),
+        "b1": jnp.zeros((d_ff,), dtype),
+        "w2": truncated_normal_init(k2, (d_ff, d_model),
+                                    1.0 / math.sqrt(d_ff), dtype),
+        "b2": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(params, x):
+    h = jax.nn.gelu(x @ params["w1"].astype(x.dtype)
+                    + params["b1"].astype(x.dtype))
+    return h @ params["w2"].astype(x.dtype) + params["b2"].astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# embeddings
+# ---------------------------------------------------------------------------
+
+def embedding_init(key, vocab: int, d_model: int, dtype=jnp.float32):
+    return {"table": truncated_normal_init(key, (vocab, d_model), 0.02,
+                                           dtype)}
+
+
+def embed(params, ids, dtype):
+    return params["table"].astype(dtype)[ids]
+
+
+def unembed(params, x, table=None):
+    """Project to vocab logits; `table` for tied embeddings."""
+    w = table if table is not None else params["out"]
+    return x @ w.astype(x.dtype)

@@ -1,0 +1,336 @@
+"""Mamba2 (state-space duality / SSD) — arXiv:2405.21060.
+
+Chunked SSD algorithm: the sequence is split into chunks of Q tokens;
+within a chunk the recurrence is computed in its 'attention dual' form
+(lower-triangular decay matrix — dense MXU work), and chunk boundary
+states are propagated with a short `lax.scan` (S/Q steps). Decode is the
+O(1)-state recurrence — which is why the SSM family owns the `long_500k`
+cell (DESIGN.md §Arch-applicability).
+
+Per-layer structure follows the reference implementation: fused in_proj →
+(z, x, B, C, dt), causal depthwise conv over (x,B,C), SSD core, gated
+RMSNorm, out_proj. n_groups = 1 (B/C shared across heads).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import constrain
+
+from . import layers as L
+from .api import ArchConfig, Model, count_params, maybe_scan
+from .transformer import _norm, _norm_init, _remat, _vocab_padded, \
+    logits_fn, xent_loss
+
+BATCH = ("pod", "data")
+
+
+def _dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nh = d_inner // cfg.ssm_head_dim
+    ds = cfg.ssm_state
+    conv_dim = d_inner + 2 * ds          # x, B, C streams get the conv
+    return d_inner, nh, ds, conv_dim
+
+
+def mamba2_layer_init(key, cfg: ArchConfig, dtype):
+    d = cfg.d_model
+    d_inner, nh, ds, conv_dim = _dims(cfg)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    in_dim = 2 * d_inner + 2 * ds + nh
+    return {
+        "norm": _norm_init(cfg),
+        "in_proj": L.truncated_normal_init(k1, (d, in_dim),
+                                           1.0 / math.sqrt(d), dtype),
+        "conv_w": L.truncated_normal_init(k2, (cfg.ssm_conv, conv_dim),
+                                          0.5, dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gate_norm": {"scale": jnp.ones((d_inner,), jnp.float32)},
+        "out_proj": L.truncated_normal_init(k3, (d_inner, d),
+                                            1.0 / math.sqrt(d_inner),
+                                            dtype),
+    }
+
+
+def _causal_conv(xbc, w, b, state=None):
+    """Depthwise causal conv. xbc: (B,S,C); w: (K,C). state: (B,K-1,C)
+    prefix for decode. Returns (out, new_state)."""
+    k = w.shape[0]
+    bsz, s, c = xbc.shape
+    if state is None:
+        pad = jnp.zeros((bsz, k - 1, c), xbc.dtype)
+    else:
+        pad = state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)          # (B, S+K-1, C)
+    out = jnp.zeros((bsz, s, c), jnp.float32)
+    for i in range(k):
+        out = out + full[:, i:i + s, :].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    out = jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+    new_state = full[:, s:s + k - 1, :] if s >= k - 1 else \
+        jnp.concatenate([pad, xbc], axis=1)[:, -(k - 1):, :]
+    return out, new_state
+
+
+def _segsum(x):
+    """exp-friendly segment sums: out[..., i, j] = Σ_{j<k<=i} x[..., k]."""
+    q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), 0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, Bm, Cm, chunk: int, h0=None):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P) inputs; dt: (B,S,H) softplus'd steps; A: (H,) negative;
+    Bm/Cm: (B,S,N) shared across heads (n_groups=1).
+    Returns (y: (B,S,H,P), final_state: (B,H,N,P)).
+    """
+    bsz, s, h, p = x.shape
+    n = Bm.shape[-1]
+    q = min(chunk, s)
+    s_pad = -(-s // q) * q
+    if s_pad != s:
+        # ragged tail: pad with dt=0 steps (decay 1, zero input — identity
+        # on the state); padded outputs are sliced off below.
+        pad = s_pad - s
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    nc = s_pad // q
+
+    xc = x.reshape(bsz, nc, q, h, p)
+    dtc = dt.reshape(bsz, nc, q, h)
+    bc = Bm.reshape(bsz, nc, q, n)
+    cc = Cm.reshape(bsz, nc, q, n)
+
+    dA = dtc * A[None, None, None, :]                  # (B,nc,Q,H) ≤ 0
+    cum = jnp.cumsum(dA, axis=2)                       # (B,nc,Q,H)
+
+    # intra-chunk (attention dual): scores shared across heads, decay per
+    # head. Lmat[b,c,h,i,j] = exp(cum_i - cum_j + dA_j ... ) via segsum.
+    seg = _segsum(dA.transpose(0, 1, 3, 2))            # (B,nc,H,Q,Q)
+    lmat = jnp.exp(seg)
+    scores = jnp.einsum("bcqn,bckn->bcqk", cc, bc)     # (B,nc,Q,Q)
+    m = scores[:, :, None] * lmat                      # (B,nc,H,Q,Q)
+    dx = dtc[..., None] * xc                           # dt ⊙ x
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", m, dx)
+
+    # chunk states: S_c = Σ_j exp(cum_end - cum_j) dt_j B_j x_j^T
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)       # (B,nc,Q,H)
+    sc = jnp.einsum("bckn,bckh,bckhp->bchnp", bc, decay_end * dtc, xc)
+
+    # inter-chunk recurrence over nc steps
+    chunk_decay = jnp.exp(cum[:, :, -1, :])            # (B,nc,H)
+
+    def scan_body(hprev, inputs):
+        sc_c, dec_c = inputs                           # (B,H,N,P), (B,H)
+        hnew = hprev * dec_c[..., None, None] + sc_c
+        return hnew, hprev
+
+    hinit = (jnp.zeros((bsz, h, n, p), jnp.float32) if h0 is None
+             else h0.astype(jnp.float32))
+    hlast, hprevs = jax.lax.scan(
+        scan_body, hinit,
+        (sc.transpose(1, 0, 2, 3, 4).astype(jnp.float32),
+         chunk_decay.transpose(1, 0, 2).astype(jnp.float32)))
+    hprevs = hprevs.transpose(1, 0, 2, 3, 4)           # (B,nc,H,N,P)
+
+    y_inter = jnp.einsum("bcqn,bchnp,bcqh->bcqhp", cc, hprevs,
+                         jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(bsz, s_pad, h, p)[:, :s]
+    return y.astype(x.dtype), hlast
+
+
+def ssd_decode(x, dt, A, Bm, Cm, hprev):
+    """Single-token recurrence. x: (B,1,H,P); hprev: (B,H,N,P)."""
+    dA = jnp.exp(dt[:, 0, :, None, None] * A[None, :, None, None])
+    dBx = jnp.einsum("bn,bh,bhp->bhnp", Bm[:, 0], dt[:, 0], x[:, 0])
+    hnew = hprev * dA + dBx
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0], hnew)
+    return y[:, None].astype(x.dtype), hnew
+
+
+def mamba2_block(cfg, lp, x, ssm_state=None, conv_state=None,
+                 decode: bool = False):
+    """x: (B,S,d). Returns (out, new_ssm_state, new_conv_state)."""
+    d_inner, nh, ds, conv_dim = _dims(cfg)
+    bsz, s, d = x.shape
+    h = _norm(cfg, lp["norm"], x)
+    zxbcdt = h @ lp["in_proj"].astype(h.dtype)
+    z, xs, bm, cm, dt = jnp.split(
+        zxbcdt, [d_inner, 2 * d_inner, 2 * d_inner + ds,
+                 2 * d_inner + 2 * ds], axis=-1)
+    xbc = jnp.concatenate([xs, bm, cm], axis=-1)
+    xbc, new_conv = _causal_conv(xbc, lp["conv_w"], lp["conv_b"],
+                                 conv_state)
+    xs, bm, cm = jnp.split(xbc, [d_inner, d_inner + ds], axis=-1)
+    xs = xs.reshape(bsz, s, nh, cfg.ssm_head_dim)
+    xs = constrain(xs, BATCH, None, "model", None)
+    a = -jnp.exp(lp["A_log"])
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + lp["dt_bias"][None, None, :])
+    if decode:
+        y, new_ssm = ssd_decode(xs, dt, a, bm, cm, ssm_state)
+    else:
+        y, new_ssm = ssd_chunked(xs, dt, a, bm, cm, cfg.ssm_chunk,
+                                 h0=ssm_state)
+    y = y + lp["D"][None, None, :, None].astype(y.dtype) * xs
+    y = y.reshape(bsz, s, d_inner)
+    # gated RMSNorm (mamba2's norm-before-out)
+    y = L.rmsnorm(lp["gate_norm"], y * jax.nn.silu(z.astype(jnp.float32)
+                                                   ).astype(y.dtype),
+                  cfg.norm_eps)
+    out = y @ lp["out_proj"].astype(y.dtype)
+    return x + out, new_ssm, new_conv
+
+
+def init_mamba2(cfg: ArchConfig, key):
+    vp = _vocab_padded(cfg)
+    keys = jax.random.split(key, 4)
+    dt = cfg.param_dtype
+
+    def layer_init(k):
+        return mamba2_layer_init(k, cfg, dt)
+
+    ks = jax.random.split(keys[1], cfg.n_layers)
+    params = {
+        "embed": L.embedding_init(keys[0], vp, cfg.d_model, dt),
+        "layers": jax.vmap(layer_init)(ks),
+        "final_norm": _norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.truncated_normal_init(
+            keys[2], (cfg.d_model, vp), 1.0 / math.sqrt(cfg.d_model), dt)
+    return params
+
+
+def make_mamba2_model(cfg: ArchConfig) -> Model:
+    d_inner, nh, ds, conv_dim = _dims(cfg)
+
+    def init(key):
+        return init_mamba2(cfg, key)
+
+    def forward(params, tokens):
+        x = L.embed(params["embed"], tokens, cfg.compute_dtype)
+        x = constrain(x, BATCH, None, None)
+
+        def body(carry, lp):
+            x = carry
+            x, _, _ = mamba2_block(cfg, lp, x)
+            return x, None
+
+        x, _ = maybe_scan(_remat(cfg, body), x, params["layers"],
+                          cfg.scan_layers)
+        return _norm(cfg, params["final_norm"], x)
+
+    def loss(params, batch):
+        hidden = forward(params, batch["tokens"])
+        lg = logits_fn(cfg, params, hidden)
+        l = xent_loss(cfg, lg, batch["labels"])
+        return l, {"xent": l}
+
+    def prefill(params, batch, cache_len=None):
+        # cache_len accepted for API uniformity; SSM state is O(1) in
+        # sequence length so there is nothing to size.
+        tokens = batch["tokens"]
+        bsz, s = tokens.shape
+        x = L.embed(params["embed"], tokens, cfg.compute_dtype)
+
+        def body(carry, lp):
+            x = carry
+            x, hs, cs = mamba2_block(cfg, lp, x)
+            return x, (hs, cs)
+
+        x, (hs, cs) = maybe_scan(body, x, params["layers"],
+                                 cfg.scan_layers)
+        x = _norm(cfg, params["final_norm"], x)
+        lg = logits_fn(cfg, params, x[:, -1:, :])
+        return lg, {"ssm": hs, "conv": cs,
+                    "len": jnp.full((), s, jnp.int32)}
+
+    def decode_step(params, cache, batch):
+        tokens = batch["tokens"]
+        x = L.embed(params["embed"], tokens, cfg.compute_dtype)
+
+        def body(carry, xs):
+            x = carry
+            lp, hs, cs = xs
+            x, nh_, nc_ = mamba2_block(cfg, lp, x, ssm_state=hs,
+                                       conv_state=cs, decode=True)
+            return x, (nh_, nc_)
+
+        x, (hs, cs) = maybe_scan(body, x,
+                                 (params["layers"], cache["ssm"],
+                                  cache["conv"]), cfg.scan_layers)
+        x = _norm(cfg, params["final_norm"], x)
+        lg = logits_fn(cfg, params, x)
+        return lg, {"ssm": hs, "conv": cs, "len": cache["len"] + 1}
+
+    def param_specs(axes: dict):
+        model = axes.get("model", 1)
+        vp = _vocab_padded(cfg)
+        h_ok = nh % model == 0
+        v_ok = vp % model == 0
+        layer = {
+            "norm": {"scale": P(None, None)},
+            "in_proj": P(None, "data", "model" if h_ok else None),
+            "conv_w": P(None, None, None),
+            "conv_b": P(None, None),
+            "A_log": P(None, "model" if h_ok else None),
+            "D": P(None, "model" if h_ok else None),
+            "dt_bias": P(None, "model" if h_ok else None),
+            "gate_norm": {"scale": P(None, "model" if h_ok else None)},
+            "out_proj": P(None, "model" if h_ok else None, "data"),
+        }
+        specs = {
+            "embed": {"table": P("model" if v_ok else None, "data")},
+            "layers": layer,
+            "final_norm": {"scale": P(None)},
+        }
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = P("data", "model" if v_ok else None)
+        return specs
+
+    def cache_specs(axes: dict):
+        model = axes.get("model", 1)
+        h_ok = nh % model == 0
+        return {"ssm": P(None, BATCH, "model" if h_ok else None, None,
+                         None),
+                "conv": P(None, BATCH, None, None),
+                "len": P()}
+
+    def input_specs(shape, kind: str):
+        b, s = shape["global_batch"], shape["seq_len"]
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if kind == "train":
+            return {"tokens": tok, "labels": tok}
+        if kind == "prefill":
+            return {"tokens": tok}
+        if kind == "decode":
+            return {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        raise ValueError(kind)
+
+    def active_param_count() -> int:
+        vp = _vocab_padded(cfg)
+        per_layer = (cfg.d_model * (2 * d_inner + 2 * ds + nh)
+                     + cfg.ssm_conv * conv_dim + d_inner * cfg.d_model)
+        emb = vp * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+        return cfg.n_layers * per_layer + emb
+
+    return Model(cfg=cfg, init=init, loss=loss, prefill=prefill,
+                 decode_step=decode_step, param_specs=param_specs,
+                 cache_specs=cache_specs, input_specs=input_specs,
+                 param_count=count_params,
+                 active_param_count=active_param_count)

@@ -1,0 +1,197 @@
+"""Mixture-of-Experts FFN with Gunrock frontier-style dispatch.
+
+Token→expert routing is a bipartite V→E *advance*: each token expands to
+its top-k expert edges; capacity enforcement is Gunrock's *inexact filter*
+(over-capacity items culled); the gather into per-expert buffers is the
+LB-balanced data movement (kernels/moe_dispatch.py); the weighted combine
+is a *neighborhood reduction* (segment-sum back onto tokens). See
+DESIGN.md §4 — this is the paper's machinery applied beyond the paper.
+
+Distribution (mirrors Gunrock's multi-GPU frontier exchange [56]): the
+token stream is viewed as (D, t_local) where D = pod×data shards; ALL
+routing/sort/compaction math is shard-local (vmapped over the sharded
+leading axis — zero cross-shard traffic), and the only communication is
+the expert-parallel reshard of the (D, E, C_local, d) buffers onto the
+"model" axis around the expert einsums — the EP all-to-all. A global
+dispatch (flat argsort over all tokens) forces GSPMD to all-gather the
+whole token matrix per layer; measured in EXPERIMENTS.md §Dry-run.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+from . import layers as L
+
+BATCH = ("pod", "data")
+
+
+def moe_init(key, cfg, dtype):
+    d, e, f = cfg.d_model, cfg.n_experts, cfg.d_expert
+    k1, k2, k3, k4, k5 = jax.random.split(key, 5)
+    s1 = 1.0 / math.sqrt(d)
+    s2 = 1.0 / math.sqrt(f)
+    p = {
+        "router": L.truncated_normal_init(k1, (d, e), s1, jnp.float32),
+        "w1": L.truncated_normal_init(k2, (e, d, f), s1, dtype),
+        "w3": L.truncated_normal_init(k3, (e, d, f), s1, dtype),
+        "w2": L.truncated_normal_init(k4, (e, f, d), s2, dtype),
+    }
+    if cfg.weight_quant:
+        # int8 weight-only serving (beyond-paper §Perf): per-(expert, out-
+        # column) absmax scales; FSDP gathers then move int8, not bf16
+        for w in ("w1", "w3", "w2"):
+            full = p[w].astype(jnp.float32)
+            scale = jnp.max(jnp.abs(full), axis=1) / 127.0       # (e, out)
+            p[w] = jnp.round(full / jnp.maximum(scale[:, None, :],
+                                                1e-12)).astype(jnp.int8)
+            p[f"{w}_scale"] = scale
+    if cfg.n_shared_experts:
+        p["shared"] = L.swiglu_init(k5, d,
+                                    cfg.d_expert * cfg.n_shared_experts,
+                                    dtype)
+    return p
+
+
+def _wq(params, name, dtype):
+    """Fetch an expert weight, dequantizing int8 storage if present.
+
+    The int8 codes are explicitly re-constrained to an expert-sharded /
+    data-replicated layout BEFORE dequantization so the FSDP all-gather
+    moves int8 bytes — without the constraint GSPMD hoists the f32
+    dequant above the gather and the collective moves 4× the bytes
+    (measured in EXPERIMENTS.md §Perf Q1)."""
+    w = params[name]
+    if w.dtype == jnp.int8:
+        w = constrain(w, "model", None, None)        # gather int8 here
+        scale = constrain(params[f"{name}_scale"], "model", None)
+        return (w.astype(jnp.float32)
+                * scale[:, None, :]).astype(dtype)
+    return w.astype(dtype)
+
+
+def _num_data_shards() -> int:
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    d = 1
+    for a in BATCH:
+        d *= sizes.get(a, 1)
+    return d
+
+
+def _capacity(t_local: int, cfg) -> int:
+    c = math.ceil(t_local * cfg.top_k / cfg.n_experts
+                  * cfg.capacity_factor)
+    return max(8 * math.ceil(c / 8), 8)
+
+
+def moe_ffn(params, x, cfg, use_kernel: bool = False):
+    """x: (B, S, d) → (B, S, d) plus aux metrics dict."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    dsh = _num_data_shards()
+    if t % dsh != 0:
+        dsh = 1
+    tl = t // dsh                                   # tokens per shard
+    cap = _capacity(tl, cfg)
+    # (D, t_local, d): dim0 carries the batch sharding; everything until
+    # the expert einsum is shard-local (vmapped over dim0)
+    x3 = constrain(x.reshape(dsh, tl, d), BATCH, None, None)
+
+    # --- route (the frontier: each token expands to k expert edges) ------
+    logits = x3.astype(jnp.float32) @ params["router"]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert = jax.lax.top_k(probs, k)          # (D, tl, k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    flat_e = expert.reshape(dsh, tl * k).astype(jnp.int32)
+    flat_g = gate.reshape(dsh, tl * k)
+    flat_tok = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(tl, dtype=jnp.int32), k)[None],
+        (dsh, tl * k))
+
+    # --- LB dispatch: per-shard sort by expert (frontier compaction) -----
+    order = jnp.argsort(flat_e, axis=-1, stable=True)
+    sorted_e = jnp.take_along_axis(flat_e, order, axis=-1)
+    sorted_tok = jnp.take_along_axis(flat_tok, order, axis=-1)
+    sorted_g = jnp.take_along_axis(flat_g, order, axis=-1)
+    seg_start = jax.vmap(
+        lambda se: jnp.searchsorted(se, jnp.arange(e, dtype=jnp.int32)))(
+        sorted_e)                                    # (D, E)
+    rank = jnp.arange(tl * k, dtype=jnp.int32)[None] \
+        - jnp.take_along_axis(seg_start, sorted_e, axis=-1)
+    keep = rank < cap                                # inexact filter
+    slot = jnp.where(keep, sorted_e * cap + rank, e * cap)
+
+    def scatter_slots(slot_row, tok_row, gate_row, keep_row):
+        st = jnp.full((e * cap,), -1, jnp.int32)
+        st = st.at[slot_row].set(jnp.where(keep_row, tok_row, -1),
+                                 mode="drop")
+        sg = jnp.zeros((e * cap,), jnp.float32)
+        sg = sg.at[slot_row].set(jnp.where(keep_row, gate_row, 0.0),
+                                 mode="drop")
+        return st, sg
+
+    slot_tok, slot_gate = jax.vmap(scatter_slots)(slot, sorted_tok,
+                                                  sorted_g, keep)
+    # E over "model" from birth: the token gather below then produces only
+    # each device's expert slice (x3 is model-replicated, so the gather is
+    # local) — without this, a (D, E_full, C, d) buffer materializes
+    # per-device and the EP reshard becomes a 10 GiB/layer all-gather
+    # (EXPERIMENTS.md §Perf Q1)
+    slot_tok = constrain(slot_tok.reshape(dsh, e, cap),
+                         BATCH, "model", None)
+    slot_gate = constrain(
+        slot_gate.reshape(dsh, e, cap).astype(x.dtype),
+        BATCH, "model", None)
+    mask2 = slot_tok >= 0
+
+    # --- gather tokens into expert buffers (shard-local) ------------------
+    zero = jnp.zeros((), x3.dtype)
+
+    def gather_tokens(xl, stl, ml):
+        return jnp.where(ml[..., None], xl[jnp.where(ml, stl, 0)], zero)
+
+    xin = jax.vmap(gather_tokens)(x3, slot_tok, mask2)   # (D, E, C, d)
+    xin = constrain(xin, BATCH, "model", None, None)
+
+    # --- expert SwiGLU (dense per-expert einsums; MXU work) ---------------
+    w1 = _wq(params, "w1", x.dtype)
+    w3 = _wq(params, "w3", x.dtype)
+    w2 = _wq(params, "w2", x.dtype)
+    g = jax.nn.silu(jnp.einsum("xecd,edf->xecf", xin, w1))
+    u = jnp.einsum("xecd,edf->xecf", xin, w3)
+    eo = jnp.einsum("xecf,efd->xecd", g * u, w2)
+    eo = constrain(eo, BATCH, "model", None, None)
+    eo = eo * slot_gate[..., None]
+    # NOTE: eo stays E-sharded; the combine scatter produces per-model-rank
+    # partial sums and XLA inserts the (B, tl, d) all-reduce — cheaper than
+    # gathering the (E, C, d) buffer back (§Perf Q1)
+
+    # --- combine (neighborhood reduction back onto tokens) ----------------
+    def combine(eol, stl, ml):
+        y = jnp.zeros((tl, d), x.dtype)
+        idx = jnp.where(ml, stl, tl).reshape(-1)
+        return y.at[idx].add(eol.reshape(e * cap, d), mode="drop")
+
+    y3 = jax.vmap(combine)(eo, slot_tok, mask2)
+    y2 = y3.reshape(t, d)
+
+    if cfg.n_shared_experts:
+        y2 = y2 + L.swiglu(params["shared"], x.reshape(t, d))
+
+    # load-balance aux loss (Switch-style) + drop-rate metric
+    me = jnp.mean(probs, axis=(0, 1))                # (e,)
+    ce = jnp.zeros((e,), jnp.float32).at[flat_e.reshape(-1)].add(
+        1.0 / (t * k))
+    aux = {"moe_aux_loss": e * jnp.sum(me * ce),
+           "moe_drop_frac": 1.0 - jnp.sum(keep) / (t * k)}
+    return y2.reshape(b, s, d), aux

@@ -1,0 +1,399 @@
+"""Decoder-only transformer skeleton covering the dense, MoE, and VLM
+families (GQA + RoPE / M-RoPE; SwiGLU or MoE FFN; scanned layers).
+
+Layers are stacked (leading L axis) and executed with `jax.lax.scan` so
+the HLO (and compile time) is depth-independent; remat policy is applied
+to the scanned block. KV caches are stacked (L, B, Smax, KV, hd).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import constrain
+
+from . import layers as L
+from .api import ArchConfig, Model, count_params, maybe_scan
+from .moe import moe_ffn, moe_init
+
+BATCH = ("pod", "data")
+
+
+def _vocab_padded(cfg: ArchConfig) -> int:
+    return -(-cfg.vocab // 256) * 256
+
+
+def _norm_init(cfg):
+    return (L.rmsnorm_init(cfg.d_model, jnp.float32) if cfg.norm == "rmsnorm"
+            else L.layernorm_init(cfg.d_model, jnp.float32))
+
+
+def _norm(cfg, p, x):
+    return (L.rmsnorm(p, x, cfg.norm_eps) if cfg.norm == "rmsnorm"
+            else L.layernorm(p, x, cfg.norm_eps))
+
+
+def init_dense(cfg: ArchConfig, key) -> dict:
+    vp = _vocab_padded(cfg)
+    keys = jax.random.split(key, 8)
+    dt = cfg.param_dtype
+
+    def stack(fn, k):
+        ks = jax.random.split(k, cfg.n_layers)
+        return jax.vmap(fn)(ks)
+
+    def layer_init(k):
+        ka, kf = jax.random.split(k)
+        p = {
+            "attn_norm": _norm_init(cfg),
+            "attn": L.attention_init(ka, cfg.d_model, cfg.n_heads,
+                                     cfg.n_kv_heads, cfg.hd, dt,
+                                     with_bias=cfg.attn_bias),
+            "mlp_norm": _norm_init(cfg),
+        }
+        if cfg.is_moe:
+            p["moe"] = moe_init(kf, cfg, dt)
+        elif cfg.mlp == "swiglu":
+            p["mlp"] = L.swiglu_init(kf, cfg.d_model, cfg.d_ff, dt)
+        else:
+            p["mlp"] = L.gelu_mlp_init(kf, cfg.d_model, cfg.d_ff, dt)
+        return p
+
+    params = {
+        "embed": L.embedding_init(keys[0], vp, cfg.d_model, dt),
+        "layers": stack(layer_init, keys[1]),
+        "final_norm": _norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.truncated_normal_init(
+            keys[2], (cfg.d_model, vp), 1.0 / math.sqrt(cfg.d_model), dt)
+    return params
+
+
+def _block(cfg: ArchConfig, lp, x, positions, mrope_pos, kv_cache,
+           cache_index):
+    """One transformer block. Returns (x, aux, new_cache)."""
+    if cfg.seq_shard_acts:
+        # activation-ZeRO (beyond-paper, §Perf): the layer carry arrives
+        # sequence-sharded over "model" (16x smaller checkpoint); gather
+        # it here for compute
+        x = constrain(x, BATCH, None, None)
+    h = _norm(cfg, lp["attn_norm"], x)
+    h = constrain(h, BATCH, None, None)
+    attn_out, new_cache = L.attention(
+        lp["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+        head_dim=cfg.hd, positions=positions, rope_theta=cfg.rope_theta,
+        mrope_sections=(tuple(cfg.mrope_sections)
+                        if cfg.mrope_sections else None),
+        causal=True, kv_cache=kv_cache, cache_index=cache_index)
+    x = x + attn_out
+    h = _norm(cfg, lp["mlp_norm"], x)
+    if cfg.is_moe:
+        f, aux = moe_ffn(lp["moe"], h, cfg)
+    else:
+        f = (L.swiglu(lp["mlp"], h) if cfg.mlp == "swiglu"
+             else L.gelu_mlp(lp["mlp"], h))
+        aux = {"moe_aux_loss": jnp.float32(0.0),
+               "moe_drop_frac": jnp.float32(0.0)}
+    x = x + f
+    if cfg.seq_shard_acts:
+        x = constrain(x, BATCH, "model", None)
+    else:
+        x = constrain(x, BATCH, None, None)
+    return x, aux, new_cache
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+def forward(cfg: ArchConfig, params, tokens, positions=None,
+            input_embeds=None):
+    """tokens: (B,S) int32 (or input_embeds (B,S,d)); positions: (B,S) or
+    (3,B,S) for M-RoPE. Returns final hidden states (B,S,d)."""
+    dt = cfg.compute_dtype
+    if input_embeds is not None:
+        x = input_embeds.astype(dt)
+        b, s = x.shape[:2]
+    else:
+        b, s = tokens.shape
+        x = L.embed(params["embed"], tokens, dt)
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions[None], (3, b, s))
+        else:
+            positions = jnp.broadcast_to(positions, (b, s))
+    x = constrain(x, BATCH, None, None)
+
+    def body(carry, lp):
+        x = carry
+        x, aux, _ = _block(cfg, lp, x, positions, None, None, None)
+        return x, aux
+
+    x, auxs = maybe_scan(_remat(cfg, body), x, params["layers"],
+                         cfg.scan_layers)
+    x = _norm(cfg, params["final_norm"], x)
+    aux = jax.tree.map(jnp.mean, auxs)
+    return x, aux
+
+
+def logits_fn(cfg, params, hidden):
+    table = (params["embed"]["table"] if cfg.tie_embeddings
+             else params["lm_head"])
+    if cfg.tie_embeddings:
+        lg = hidden @ table.astype(hidden.dtype).T
+    else:
+        lg = hidden @ table.astype(hidden.dtype)
+    return constrain(lg, BATCH, None, "model")
+
+
+def xent_loss(cfg, logits, labels, mask=None):
+    """Cross-entropy in fp32 with optional z-loss; labels -100 ignored."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ignore = labels < 0
+    safe = jnp.where(ignore, 0, labels)
+    gold = jnp.take_along_axis(lf, safe[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    zloss = 1e-4 * lse ** 2
+    w = jnp.where(ignore, 0.0, 1.0)
+    if mask is not None:
+        w = w * mask
+    denom = jnp.maximum(jnp.sum(w), 1.0)
+    return jnp.sum((nll + zloss) * w) / denom
+
+
+def make_dense_model(cfg: ArchConfig) -> Model:
+    vp = _vocab_padded(cfg)
+
+    def init(key):
+        return init_dense(cfg, key)
+
+    def loss(params, batch):
+        positions = batch.get("positions")
+        embeds = batch.get("input_embeds")
+        hidden, aux = forward(cfg, params, batch.get("tokens"), positions,
+                              input_embeds=embeds)
+        lg = logits_fn(cfg, params, hidden)
+        l = xent_loss(cfg, lg, batch["labels"])
+        total = l + 0.01 * aux["moe_aux_loss"]
+        return total, {"xent": l, **aux}
+
+    # ---- serving ---------------------------------------------------------
+    def _empty_cache(b, smax):
+        shp = (cfg.n_layers, b, smax, cfg.n_kv_heads, cfg.hd)
+        if cfg.kv_quant:
+            sshp = (cfg.n_layers, b, smax, cfg.n_kv_heads)
+            return {"k": jnp.zeros(shp, jnp.int8),
+                    "v": jnp.zeros(shp, jnp.int8),
+                    "k_scale": jnp.zeros(sshp, jnp.float32),
+                    "v_scale": jnp.zeros(sshp, jnp.float32)}
+        return {"k": jnp.zeros(shp, cfg.compute_dtype),
+                "v": jnp.zeros(shp, cfg.compute_dtype)}
+
+    def prefill(params, batch, cache_len: Optional[int] = None):
+        """Full-sequence forward that also emits the KV cache.
+
+        cache_len (static): cache capacity; defaults to the prompt length
+        (dry-run cells). Pass prompt+headroom for prefill→decode flows.
+        """
+        tokens = batch.get("tokens")
+        embeds = batch.get("input_embeds")
+        positions = batch.get("positions")
+        dt = cfg.compute_dtype
+        if embeds is not None:
+            x = embeds.astype(dt)
+            b, s = x.shape[:2]
+        else:
+            b, s = tokens.shape
+            x = L.embed(params["embed"], tokens, dt)
+        if positions is None:
+            positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+            positions = (jnp.broadcast_to(positions[None], (3, b, s))
+                         if cfg.mrope_sections
+                         else jnp.broadcast_to(positions, (b, s)))
+        x = constrain(x, BATCH, None, None)
+        cache0 = _empty_cache(b, cache_len or s)
+
+        def body(carry, xs):
+            x = carry
+            lp, cache_l = xs
+            x, aux, nc = _block(cfg, lp, x, positions, None, cache_l, 0)
+            return x, nc
+
+        cache_xs = {k_: v_ for k_, v_ in cache0.items()}
+        x, caches = maybe_scan(_remat(cfg, body), x,
+                               (params["layers"], cache_xs),
+                               cfg.scan_layers)
+        x = _norm(cfg, params["final_norm"], x)
+        lg = logits_fn(cfg, params, x[:, -1:, :])
+        return lg, {**caches,
+                    "len": jnp.full((), x.shape[1], jnp.int32)}
+
+    def decode_step(params, cache, batch):
+        """One-token decode against a static-size cache."""
+        tokens = batch["tokens"]                     # (B, 1)
+        b = tokens.shape[0]
+        pos = cache["len"]                           # () int32
+        dt = cfg.compute_dtype
+        x = L.embed(params["embed"], tokens, dt)
+        positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(
+            jnp.int32)
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(positions[None], (3, b, 1))
+        x = constrain(x, BATCH, None, None)
+
+        def body(carry, xs):
+            x = carry
+            lp, cache_l = xs
+            x, aux, nc = _block(cfg, lp, x, positions, None, cache_l,
+                                pos)
+            return x, nc
+
+        cache_xs = {k_: v_ for k_, v_ in cache.items() if k_ != "len"}
+        x, caches = maybe_scan(body, x, (params["layers"], cache_xs),
+                               cfg.scan_layers)
+        x = _norm(cfg, params["final_norm"], x)
+        lg = logits_fn(cfg, params, x)
+        return lg, {**caches, "len": pos + 1}
+
+    # ---- sharding --------------------------------------------------------
+    def param_specs(axes: dict):
+        model = axes.get("model", 1)
+        h_ok = cfg.n_heads % model == 0
+        kv_ok = cfg.n_kv_heads % model == 0
+        ff_ok = (cfg.d_expert if cfg.is_moe else cfg.d_ff) % model == 0
+        e_ok = cfg.is_moe and cfg.n_experts % model == 0
+        v_ok = vp % model == 0
+
+        attn = {
+            "wq": P(None, "data", "model" if h_ok else None),
+            "wk": P(None, "data", "model" if kv_ok else None),
+            "wv": P(None, "data", "model" if kv_ok else None),
+            "wo": P(None, "model" if h_ok else None, "data"),
+        }
+        if cfg.attn_bias:
+            attn["bq"] = P(None, "model" if h_ok else None)
+            attn["bk"] = P(None, "model" if kv_ok else None)
+            attn["bv"] = P(None, "model" if kv_ok else None)
+        layer = {
+            "attn_norm": {"scale": P(None, None)},
+            "attn": attn,
+            "mlp_norm": {"scale": P(None, None)},
+        }
+        if cfg.norm == "layernorm":
+            layer["attn_norm"]["bias"] = P(None, None)
+            layer["mlp_norm"]["bias"] = P(None, None)
+        if cfg.is_moe:
+            layer["moe"] = {
+                "router": P(None, None, None),
+                "w1": P(None, "model" if e_ok else None, "data", None),
+                "w3": P(None, "model" if e_ok else None, "data", None),
+                "w2": P(None, "model" if e_ok else None, None, "data"),
+            }
+            if cfg.weight_quant:
+                sc = P(None, "model" if e_ok else None, None)
+                layer["moe"].update({"w1_scale": sc, "w3_scale": sc,
+                                     "w2_scale": sc})
+            if cfg.n_shared_experts:
+                layer["moe"]["shared"] = {
+                    "w1": P(None, "data", "model" if ff_ok else None),
+                    "w3": P(None, "data", "model" if ff_ok else None),
+                    "w2": P(None, "model" if ff_ok else None, "data"),
+                }
+        elif cfg.mlp == "swiglu":
+            layer["mlp"] = {
+                "w1": P(None, "data", "model" if ff_ok else None),
+                "w3": P(None, "data", "model" if ff_ok else None),
+                "w2": P(None, "model" if ff_ok else None, "data"),
+            }
+        else:
+            layer["mlp"] = {
+                "w1": P(None, "data", "model" if ff_ok else None),
+                "b1": P(None, "model" if ff_ok else None),
+                "w2": P(None, "model" if ff_ok else None, "data"),
+                "b2": P(None, None),
+            }
+        specs = {
+            "embed": {"table": P("model" if v_ok else None, "data")},
+            "layers": layer,
+            "final_norm": {"scale": P(None)},
+        }
+        if cfg.norm == "layernorm":
+            specs["final_norm"]["bias"] = P(None)
+        if not cfg.tie_embeddings:
+            specs["lm_head"] = P("data", "model" if v_ok else None)
+        return specs
+
+    def cache_specs(axes: dict):
+        model = axes.get("model", 1)
+        kv_ok = cfg.n_kv_heads % model == 0
+        # prefer sharding KV heads over "model"; when head count doesn't
+        # divide, shard the SEQUENCE dim instead (flash-decode layout:
+        # big cache split 16x, tiny softmax-stat collectives)
+        if kv_ok:
+            kv = P(None, BATCH, None, "model", None)
+            sc = P(None, BATCH, None, "model")
+        else:
+            kv = P(None, BATCH, "model", None, None)
+            sc = P(None, BATCH, "model", None)
+        out = {"k": kv, "v": kv, "len": P()}
+        if cfg.kv_quant:
+            out.update({"k_scale": sc, "v_scale": sc})
+        return out
+
+    def input_specs(shape, kind: str):
+        b, s = shape["global_batch"], shape["seq_len"]
+        tok = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        if kind == "train":
+            d = {"tokens": tok, "labels": tok}
+        elif kind == "prefill":
+            d = {"tokens": tok}
+        elif kind == "decode":
+            d = {"tokens": jax.ShapeDtypeStruct((b, 1), jnp.int32)}
+        else:
+            raise ValueError(kind)
+        if cfg.family == "vlm":
+            # stub frontend: precomputed patch/frame embeddings + M-RoPE ids
+            st = 1 if kind == "decode" else s
+            d["positions"] = jax.ShapeDtypeStruct(
+                (3, b, st), jnp.int32)
+            if kind != "decode":
+                d.pop("tokens")
+                d["input_embeds"] = jax.ShapeDtypeStruct(
+                    (b, s, cfg.d_model), cfg.compute_dtype)
+                if kind == "train":
+                    d["labels"] = tok
+        return d
+
+    def active_param_count() -> int:
+        """Analytic active params (per-token) for MODEL_FLOPS = 6·N·D."""
+        d, l = cfg.d_model, cfg.n_layers
+        attn = d * cfg.n_heads * cfg.hd + 2 * d * cfg.n_kv_heads * cfg.hd \
+            + cfg.n_heads * cfg.hd * d
+        if cfg.is_moe:
+            ffn = 3 * d * cfg.d_expert * (cfg.top_k + cfg.n_shared_experts)
+            ffn += d * cfg.n_experts  # router
+        elif cfg.mlp == "swiglu":
+            ffn = 3 * d * cfg.d_ff
+        else:
+            ffn = 2 * d * cfg.d_ff
+        emb = vp * d * (1 if cfg.tie_embeddings else 2)
+        return l * (attn + ffn) + emb
+
+    return Model(cfg=cfg, init=init, loss=loss, prefill=prefill,
+                 decode_step=decode_step, param_specs=param_specs,
+                 cache_specs=cache_specs, input_specs=input_specs,
+                 param_count=count_params,
+                 active_param_count=active_param_count)

@@ -1,0 +1,3 @@
+from .sharding import constrain, make_sharding, spec_for_mesh
+
+__all__ = ["constrain", "make_sharding", "spec_for_mesh"]

@@ -1,0 +1,104 @@
+"""Sharding vocabulary and helpers.
+
+The framework uses a fixed logical-axis vocabulary:
+  "pod"   — inter-pod data parallelism (DCN-crossing; gradients only)
+  "data"  — intra-pod data parallelism + FSDP (ZeRO-3) param sharding
+  "model" — tensor parallelism (attention heads / FFN hidden / experts /
+            vocab)
+
+Model code writes PartitionSpecs in this vocabulary; `spec_for_mesh`
+projects a spec onto whatever mesh is active (axes absent from the mesh
+are dropped), so the same model runs on a single device, a 16×16 pod, or
+the 2×16×16 multi-pod mesh unchanged.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+BATCH_AXES = ("pod", "data")      # batch dim shards over both when present
+FSDP_AXIS = "data"
+TENSOR_AXIS = "model"
+POD_AXIS = "pod"
+
+
+def _filter_entry(entry, axis_names):
+    if entry is None:
+        return None
+    if isinstance(entry, str):
+        return entry if entry in axis_names else None
+    # tuple of axes: keep the present ones
+    kept = tuple(a for a in entry if a in axis_names)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def spec_for_mesh(spec: P, mesh=None) -> P:
+    """Drop axes not present in ``mesh`` (or the active abstract mesh)."""
+    if mesh is None:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty:
+            return P()
+    names = mesh.axis_names
+    return P(*[_filter_entry(e, names) for e in spec])
+
+
+def mesh_axis_size(name: str) -> int:
+    """Size of a mesh axis in the active abstract mesh (1 if absent)."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return 1
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    return sizes.get(name, 1)
+
+
+def constrain(x, *spec_entries):
+    """with_sharding_constraint against the active mesh; no-op when no mesh
+    is active (single-device tests) or in eager mode."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    spec = spec_for_mesh(P(*spec_entries), mesh)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, TypeError):
+        return x
+
+
+def make_sharding(mesh: Mesh, spec: P) -> NamedSharding:
+    return NamedSharding(mesh, spec_for_mesh(spec, mesh))
+
+
+def fit_sharding(mesh, shape, spec: P) -> NamedSharding:
+    """NamedSharding with axes dropped wherever the dim isn't divisible by
+    the mesh-axis product (e.g. batch=1 long-context cells, odd block
+    counts of quantized optimizer moments)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    spec = spec_for_mesh(spec, mesh)
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        if entry is None:
+            out.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept, prod = [], 1
+        for a in axes:
+            if dim % (prod * sizes[a]) == 0:
+                kept.append(a)
+                prod *= sizes[a]
+        out.append(tuple(kept) if len(kept) > 1
+                   else (kept[0] if kept else None))
+    return NamedSharding(mesh, P(*out))
+
+
+def tree_shardings(mesh: Mesh, spec_tree):
+    """Map a pytree of PartitionSpecs to NamedShardings on ``mesh``."""
+    return jax.tree.map(
+        lambda s: make_sharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,4 @@
+from .optimizer import adamw, make_schedule
+from .trainstep import make_train_step, make_serve_step
+
+__all__ = ["adamw", "make_schedule", "make_train_step", "make_serve_step"]

@@ -1,0 +1,195 @@
+"""Optimizers + LR schedules, built from scratch (no optax in the image).
+
+- `adamw`: AdamW with decoupled weight decay and global-norm clipping.
+  Moment states can be stored in **blockwise-quantized int8** (the
+  gradient/optimizer-compression trick from DESIGN.md §5/§6 — 8-bit Adam à
+  la Dettmers): each 256-value block keeps an fp32 absmax scale; this cuts
+  optimizer state from 8 B/param to ~2 B/param and is what lets the 405B/1T
+  archs fit their meshes.
+- schedules: constant / cosine / WSD (warmup-stable-decay — the MiniCPM
+  training schedule, so that arch's config trains as published).
+
+State layout mirrors the param tree (same shardings apply), making the
+optimizer fully ZeRO-compatible: moments inherit each param's
+PartitionSpec.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+QBLOCK = 256
+
+
+# ---------------------------------------------------------------------------
+# blockwise int8 quantization for moment tensors
+#
+# Codes keep the PARAM'S SHAPE (blocks run along the last axis), so the
+# moments inherit the param's PartitionSpec verbatim — dequantization is
+# purely elementwise and GSPMD never reshards (a flat-block layout forces
+# catastrophic replication copies; measured in EXPERIMENTS.md §Dry-run).
+# ---------------------------------------------------------------------------
+
+def quantizable(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] % QBLOCK == 0
+
+
+def quantize_blockwise(x: jax.Array):
+    """x: (..., D) with D % QBLOCK == 0 → codes int8 same shape,
+    scale f32 (..., D // QBLOCK)."""
+    shape = x.shape
+    xb = x.astype(jnp.float32).reshape(shape[:-1]
+                                       + (shape[-1] // QBLOCK, QBLOCK))
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    codes = jnp.round(xb / jnp.maximum(scale[..., None], 1e-12))
+    return codes.reshape(shape).astype(jnp.int8), scale
+
+
+def dequantize_blockwise(codes: jax.Array, scale: jax.Array, shape, dtype):
+    shape = tuple(shape)
+    xb = codes.astype(jnp.float32).reshape(
+        shape[:-1] + (shape[-1] // QBLOCK, QBLOCK))
+    return (xb * scale[..., None]).reshape(shape).astype(dtype)
+
+
+class QTensor(NamedTuple):
+    codes: jax.Array     # int8, same shape as the param
+    scale: jax.Array     # f32, param.shape[:-1] + (D // QBLOCK,)
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def make_schedule(kind: str, base_lr: float, total_steps: int,
+                  warmup_steps: int = 100, stable_frac: float = 0.9,
+                  min_ratio: float = 0.1):
+    """Returns lr(step). kinds: constant | cosine | wsd."""
+    warmup = max(warmup_steps, 1)
+
+    def constant(step):
+        w = jnp.minimum(step / warmup, 1.0)
+        return base_lr * w
+
+    def cosine(step):
+        w = jnp.minimum(step / warmup, 1.0)
+        t = jnp.clip((step - warmup) / max(total_steps - warmup, 1), 0., 1.)
+        c = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return base_lr * w * c
+
+    def wsd(step):
+        """Warmup-Stable-Decay (MiniCPM): flat LR for stable_frac of the
+        run, then a fast exponential-ish decay tail."""
+        w = jnp.minimum(step / warmup, 1.0)
+        stable_end = warmup + stable_frac * max(total_steps - warmup, 1)
+        t = jnp.clip((step - stable_end)
+                     / jnp.maximum(total_steps - stable_end, 1.0), 0., 1.)
+        decay = min_ratio ** t          # exp decay to min_ratio
+        return base_lr * w * decay
+
+    return {"constant": constant, "cosine": cosine, "wsd": wsd}[kind]
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: object         # tree of f32 arrays or QTensor
+    v: object
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw(schedule, b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1, clip_norm: Optional[float] = 1.0,
+          quantize_moments: bool = False):
+    """Returns (init_fn, update_fn).
+
+    update_fn(grads, state, params) -> (new_params, new_state, metrics)
+    """
+
+    def _q(x):
+        if quantize_moments and quantizable(x.shape):
+            return QTensor(*quantize_blockwise(x))
+        return x.astype(jnp.float32)
+
+    def _dq(q, like):
+        if isinstance(q, QTensor):
+            return dequantize_blockwise(q.codes, q.scale, like.shape,
+                                        jnp.float32)
+        return q
+
+    def init_fn(params):
+        zeros = jax.tree.map(lambda p: _q(jnp.zeros(p.shape, jnp.float32)),
+                             params)
+        zeros2 = jax.tree.map(lambda p: _q(jnp.zeros(p.shape, jnp.float32)),
+                              params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=zeros2)
+
+    def update_fn(grads, state, params):
+        step = state.step + 1
+        lr = schedule(step)
+        gnorm = global_norm(grads)
+        if clip_norm is not None:
+            scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        def is_q(x):
+            return isinstance(x, QTensor)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            mf = _dq(m, p)
+            vf = _dq(v, p)
+            mf = b1 * mf + (1 - b1) * g
+            vf = b2 * vf + (1 - b2) * g * g
+            mhat = mf / (1 - b1 ** step.astype(jnp.float32))
+            vhat = vf / (1 - b2 ** step.astype(jnp.float32))
+            upd = mhat / (jnp.sqrt(vhat) + eps)
+            # decoupled weight decay on matrices only (ndim >= 2)
+            if p.ndim >= 2:
+                upd = upd + weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+            return new_p, _q(mf), _q(vf)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_m = jax.tree.flatten(state.m, is_leaf=is_q)[0]
+        flat_v = jax.tree.flatten(state.v, is_leaf=is_q)[0]
+        out = [upd(p, g, m, v) for p, g, m, v
+               in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = tdef.unflatten([o[0] for o in out])
+        new_m = tdef.unflatten([o[1] for o in out])
+        new_v = tdef.unflatten([o[2] for o in out])
+        metrics = {"lr": lr, "grad_norm": gnorm}
+        return new_p, AdamWState(step=step, m=new_m, v=new_v), metrics
+
+    return init_fn, update_fn
+
+
+def moment_specs(param_specs, params_sds=None, quantize_moments: bool
+                 = False):
+    """Optimizer-state PartitionSpecs matching the param tree.
+
+    Quantized moments keep the param's shape (codes) / the param's shape
+    minus the blocked last axis (scale), so BOTH reuse the param's spec —
+    fit_sharding trims any non-divisible trailing entry on the scale.
+    """
+    from jax.sharding import PartitionSpec as P
+    if not quantize_moments:
+        return param_specs
+    assert params_sds is not None, \
+        "quantized moment_specs needs param shapes"
+    return jax.tree.map(
+        lambda s, sd: (QTensor(codes=s, scale=s)
+                       if quantizable(sd.shape) else s),
+        param_specs, params_sds,
+        is_leaf=lambda s: isinstance(s, P))

@@ -1,0 +1,73 @@
+"""Train / serve step factories — the jitted programs the launcher,
+dry-run, and roofline all consume.
+
+make_train_step: loss → grad → (optional microbatch accumulation) →
+AdamW update, with donated params/optimizer buffers and sharded in/out.
+Gradient reduction across data/pod axes is implicit in GSPMD (batch is
+sharded; XLA emits the reduce-scatter/all-reduce schedule — the
+compute/comm overlap is XLA's latency-hiding scheduler's job, and the
+§Perf pass verifies the collectives it emits).
+
+make_serve_step: prefill or single-token decode against a static cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.api import Model
+
+
+def make_train_step(model: Model, opt_update, *, grad_accum: int = 1,
+                    donate: bool = True):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). ``grad_accum`` splits the batch on axis 0 into microbatches
+    accumulated with a lax.scan (activation memory ÷ grad_accum)."""
+
+    def loss_fn(params, batch):
+        loss, metrics = model.loss(params, batch)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if grad_accum <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            def micro(carry, mb):
+                acc = carry
+                (l, met), g = grad_fn(params, mb)
+                acc = jax.tree.map(jnp.add, acc, g)
+                return acc, (l, met)
+
+            micro_batch = jax.tree.map(
+                lambda x: x.reshape((grad_accum, x.shape[0] // grad_accum)
+                                    + x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, (losses, metricss) = jax.lax.scan(micro, zeros,
+                                                     micro_batch)
+            grads = jax.tree.map(lambda g: g / grad_accum, grads)
+            loss = jnp.mean(losses)
+            metrics = jax.tree.map(jnp.mean, metricss)
+        new_params, new_opt, opt_metrics = opt_update(grads, opt_state,
+                                                      params)
+        return new_params, new_opt, {"loss": loss, **metrics,
+                                     **opt_metrics}
+
+    if donate:
+        return jax.jit(train_step, donate_argnums=(0, 1))
+    return jax.jit(train_step)
+
+
+def make_serve_step(model: Model, kind: str):
+    """kind='prefill' → serve_step(params, batch) -> (logits, cache);
+    kind='decode'  → serve_step(params, cache, batch) -> (logits, cache)."""
+    if kind == "prefill":
+        return jax.jit(model.prefill)
+    if kind == "decode":
+        return jax.jit(model.decode_step, donate_argnums=(1,))
+    raise ValueError(kind)

@@ -1,0 +1,30 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on 1 device;
+distributed tests spawn subprocesses that set their own device count."""
+import numpy as np
+import pytest
+
+from hypothesis import HealthCheck, settings
+
+settings.register_profile(
+    "repro", max_examples=15, deadline=None,
+    suppress_health_check=[HealthCheck.too_slow,
+                           HealthCheck.data_too_large])
+settings.load_profile("repro")
+
+
+@pytest.fixture(scope="session")
+def rmat_graph():
+    from repro.core import graph as G
+    return G.rmat(9, 8, seed=7, weighted=True)
+
+
+@pytest.fixture(scope="session")
+def grid_graph():
+    from repro.core import graph as G
+    return G.grid2d(20, weighted=True, seed=3)
+
+
+@pytest.fixture(scope="session")
+def high_degree_src(rmat_graph):
+    deg = np.diff(np.asarray(rmat_graph.row_offsets))
+    return int(np.argmax(deg))

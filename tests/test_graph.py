@@ -1,0 +1,103 @@
+"""Graph container + generator invariants (unit + property)."""
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import graph as G
+
+
+def _check_csr(g):
+    ro = np.asarray(g.row_offsets)
+    ci = np.asarray(g.col_indices)
+    n = g.num_vertices
+    assert ro[0] == 0 and ro[-1] == len(ci)
+    assert np.all(np.diff(ro) >= 0)
+    if len(ci):
+        assert ci.min() >= 0 and ci.max() < n
+
+
+def test_demo_graph_matches_paper():
+    g = G.demo_graph()
+    assert g.num_vertices == 7
+    assert g.num_edges == 15
+    _check_csr(g)
+
+
+@pytest.mark.parametrize("scale,ef", [(6, 4), (8, 8), (10, 16)])
+def test_rmat_wellformed(scale, ef):
+    g = G.rmat(scale, ef, seed=1, weighted=True)
+    _check_csr(g)
+    assert g.num_vertices == 1 << scale
+    # undirected symmetrization: every edge has its reverse
+    src, dst = G.edge_list(g)
+    fwd = set(zip(src.tolist(), dst.tolist()))
+    assert all((d, s) in fwd for s, d in list(fwd)[:500])
+    # weights in [1, 64) like the paper's datasets
+    w = np.asarray(g.edge_values)
+    assert w.min() >= 1 and w.max() < 64
+
+
+def test_sorted_neighbor_lists():
+    g = G.rmat(8, 8, seed=2)
+    ro = np.asarray(g.row_offsets)
+    ci = np.asarray(g.col_indices)
+    for u in range(0, g.num_vertices, 7):
+        nb = ci[ro[u]:ro[u + 1]]
+        assert np.all(np.diff(nb) > 0), "neighbors must be sorted+unique"
+
+
+def test_csc_is_transpose():
+    g = G.rmat(7, 6, seed=3)
+    src, dst = G.edge_list(g)
+    fwd = sorted(zip(src.tolist(), dst.tolist()))
+    co = np.asarray(g.csc_offsets)
+    ci2 = np.asarray(g.csc_indices)
+    rev_dst = np.repeat(np.arange(g.num_vertices), np.diff(co))
+    rev = sorted(zip(ci2.tolist(), rev_dst.tolist()))
+    assert fwd == rev
+
+
+def test_grid2d_structure():
+    g = G.grid2d(5)
+    _check_csr(g)
+    assert g.num_vertices == 25
+    deg = np.diff(np.asarray(g.row_offsets))
+    assert deg.max() == 4 and deg.min() == 2
+
+
+def test_rgg_degrees_bounded():
+    g = G.random_geometric(512, 0.08, seed=1)
+    _check_csr(g)
+    src, dst = G.edge_list(g)
+    assert np.all(src != dst)
+
+
+def test_bipartite_direction():
+    g = G.bipartite_random(50, 30, 4, seed=0)
+    src, dst = G.edge_list(g)
+    assert src.max() < 50 and dst.min() >= 50
+
+
+@given(st.lists(st.tuples(st.integers(0, 19), st.integers(0, 19)),
+                min_size=0, max_size=60))
+def test_from_edge_list_properties(edges):
+    src = [e[0] for e in edges]
+    dst = [e[1] for e in edges]
+    g = G.from_edge_list(src, dst, n=20, undirected=False)
+    _check_csr(g)
+    # dedup + self-loop removal
+    s2, d2 = G.edge_list(g)
+    pairs = list(zip(s2.tolist(), d2.tolist()))
+    assert len(pairs) == len(set(pairs))
+    assert all(s != d for s, d in pairs)
+    expect = {(s, d) for s, d in edges if s != d}
+    assert set(pairs) == expect
+
+
+def test_neighbors_padded():
+    g = G.demo_graph()
+    nbrs, mask = g.neighbors_padded(4)
+    deg = np.diff(np.asarray(g.row_offsets))
+    assert np.array_equal(np.asarray(mask).sum(1),
+                          np.minimum(deg, 4))
+    assert np.all(np.asarray(nbrs)[~np.asarray(mask)] == -1)

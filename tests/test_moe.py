@@ -1,0 +1,76 @@
+"""MoE frontier-dispatch: exactness, capacity culling, aux metrics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models.moe import _capacity, moe_ffn, moe_init
+
+rng = np.random.default_rng(0)
+
+
+def _setup(cf=8.0, b=2, s=8):
+    cfg = get_smoke_config("qwen3-moe-235b-a22b").replace(
+        capacity_factor=cf)
+    params = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    x = jnp.asarray(rng.standard_normal((b, s, cfg.d_model)), jnp.float32)
+    return cfg, params, x
+
+
+def test_moe_exact_vs_dense_reference():
+    cfg, params, x = _setup()
+    y, aux = moe_ffn(params, x, cfg)
+    assert float(aux["moe_drop_frac"]) == 0.0
+    t = x.shape[0] * x.shape[1]
+    x2 = x.reshape(t, cfg.d_model)
+    probs = jax.nn.softmax(x2 @ params["router"], -1)
+    gate, expert = jax.lax.top_k(probs, cfg.top_k)
+    gate = gate / gate.sum(-1, keepdims=True)
+    yref = np.zeros((t, cfg.d_model), np.float32)
+    for i in range(t):
+        for j in range(cfg.top_k):
+            e = int(expert[i, j])
+            v = x2[i]
+            h = jax.nn.silu(v @ params["w1"][e]) * (v @ params["w3"][e])
+            yref[i] += float(gate[i, j]) * np.asarray(h @ params["w2"][e])
+    np.testing.assert_allclose(np.asarray(y.reshape(t, -1)), yref,
+                               atol=1e-5)
+
+
+def test_moe_capacity_drops():
+    cfg, params, x = _setup(cf=0.1, b=4, s=32)  # tiny capacity => drops
+    y, aux = moe_ffn(params, x, cfg)
+    assert float(aux["moe_drop_frac"]) > 0.0
+    assert np.all(np.isfinite(np.asarray(y)))
+
+
+def test_moe_kernel_gather_path():
+    cfg, params, x = _setup()
+    y1, _ = moe_ffn(params, x, cfg, use_kernel=False)
+    # kernel path only valid for the single-shard layout
+    import repro.models.moe as M
+    y2, _ = moe_ffn(params, x, cfg, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2))
+
+
+def test_capacity_rounding():
+    cfg = get_smoke_config("kimi-k2-1t-a32b")
+    c = _capacity(1024, cfg)
+    assert c % 8 == 0 and c >= 1024 * cfg.top_k / cfg.n_experts
+
+
+def test_moe_aux_loss_balanced_vs_skewed():
+    cfg, params, x = _setup()
+    _, aux = moe_ffn(params, x, cfg)
+    base = float(aux["moe_aux_loss"])
+    # aux loss is >= 1 (perfectly balanced == 1 for switch-style loss)
+    assert base >= 0.99
+
+
+def test_moe_shared_expert():
+    cfg, params, x = _setup()
+    cfg2 = cfg.replace(n_shared_experts=1)
+    params2 = moe_init(jax.random.PRNGKey(0), cfg2, jnp.float32)
+    y, _ = moe_ffn(params2, x, cfg2)
+    assert y.shape == x.shape
+    assert np.all(np.isfinite(np.asarray(y)))

@@ -1,0 +1,160 @@
+"""Operator semantics: advance / filter / segmented intersect /
+neighborhood reduce — unit + property tests vs. brute force."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core import frontier as F
+from repro.core import graph as G
+from repro.core import operators as ops
+
+
+def brute_advance(g, ids):
+    ro = np.asarray(g.row_offsets)
+    ci = np.asarray(g.col_indices)
+    out = []
+    for i in ids:
+        out.extend(ci[ro[i]:ro[i + 1]].tolist())
+    return out
+
+
+@pytest.mark.parametrize("strategy", ["LB", "TWC", "THREAD"])
+def test_advance_matches_bruteforce(strategy):
+    g = G.rmat(7, 6, seed=5)
+    ids = [0, 3, 9, 77, 101]
+    fr = F.from_ids(ids, 128)
+    res, _ = ops.advance(g, fr, 4096, strategy=strategy)
+    got = np.asarray(res.dst)[np.asarray(res.valid)]
+    # THREAD/TWC may produce a different (but stable) order; compare
+    # multisets of produced destinations
+    assert sorted(got.tolist()) == sorted(brute_advance(g, ids))
+
+
+def test_advance_kernel_path():
+    g = G.rmat(7, 6, seed=5)
+    fr = F.from_ids([1, 2, 3], 16)
+    res, _ = ops.advance(g, fr, 1024, use_kernel=True)
+    got = np.asarray(res.dst)[np.asarray(res.valid)]
+    assert sorted(got.tolist()) == sorted(brute_advance(g, [1, 2, 3]))
+
+
+def test_advance_edge_input_kind():
+    g = G.demo_graph()
+    # edge 0 points 0->1; expanding it visits N(1) = {2, 4}
+    fr = F.from_ids([0], 8)
+    res, _ = ops.advance(g, fr, 64, input_kind="edge")
+    got = sorted(np.asarray(res.dst)[np.asarray(res.valid)].tolist())
+    assert got == [2, 4]
+
+
+def test_advance_functor_filtering():
+    g = G.demo_graph()
+    fr = F.from_ids([0], 8)
+
+    def functor(src, dst, eid, rank, valid, data):
+        return valid & (dst >= 2), data
+
+    res, _ = ops.advance(g, fr, 64, functor=functor)
+    got = sorted(np.asarray(res.dst)[np.asarray(res.valid)].tolist())
+    assert got == [2, 3]
+
+
+def test_advance_pull_equals_push():
+    g = G.rmat(7, 6, seed=6)
+    n = g.num_vertices
+    cur = np.zeros(n, bool)
+    cur[[3, 5, 8]] = True
+    visited = cur.copy()
+    pull = ops.advance_pull(g, F.DenseFrontier(jnp.asarray(~visited)),
+                            F.DenseFrontier(jnp.asarray(cur)))
+    push = set(brute_advance(g, [3, 5, 8])) - {3, 5, 8}
+    got = set(np.nonzero(np.asarray(pull.flags))[0].tolist())
+    assert got == push
+
+
+def test_filter_exact_unique():
+    fr = F.from_ids([5, 3, 5, 5, 2, 3, 9], 16)
+    out, _ = ops.filter_frontier(fr, n=10, uniquify="exact")
+    ids = np.asarray(out.ids)[:int(out.length)]
+    assert sorted(ids.tolist()) == [2, 3, 5, 9]
+
+
+@given(st.lists(st.integers(0, 30), min_size=0, max_size=50))
+def test_filter_hash_never_drops_uniques(ids):
+    fr = F.from_ids(ids, 64)
+    out, _ = ops.filter_frontier(fr, n=32, uniquify="hash", hash_size=8)
+    kept = np.asarray(out.ids)[:int(out.length)].tolist()
+    # heuristic culling may leave duplicates but must keep >= 1 copy of
+    # every distinct id and never invent ids
+    assert set(kept) == set(ids)
+
+
+def test_filter_functor_predicate():
+    fr = F.from_ids(list(range(10)), 16)
+
+    def functor(ids, valid, data):
+        return (ids % 2 == 0), data
+
+    out, _ = ops.filter_frontier(fr, functor=functor)
+    assert np.asarray(out.ids)[:int(out.length)].tolist() == [0, 2, 4, 6, 8]
+
+
+def test_partition_frontier_near_far():
+    fr = F.from_ids([1, 2, 3, 4, 5], 8)
+    near, far = ops.partition_frontier(fr, jnp.asarray(
+        [True, False, True, False, True, False, False, False]))
+    assert np.asarray(near.ids)[:int(near.length)].tolist() == [1, 3, 5]
+    assert np.asarray(far.ids)[:int(far.length)].tolist() == [2, 4]
+
+
+def test_neighborhood_reduce_degrees():
+    g = G.demo_graph()
+    fr = F.from_ids([0, 2, 6], 4)
+    out = ops.neighborhood_reduce(
+        g, fr, 64, edge_map=lambda s, d, e, v, data: jnp.ones_like(
+            s, jnp.float32), reduce_op="add")
+    deg = np.diff(np.asarray(g.row_offsets))
+    assert np.asarray(out)[:3].tolist() == [deg[0], deg[2], deg[6]]
+
+
+def test_segmented_intersect_counts():
+    g = G.demo_graph()
+    # N(0)={1,2,3}, N(2)={3,5} -> intersection {3}
+    fa = F.from_ids([0], 4)
+    fb = F.from_ids([2], 4)
+    res = ops.segmented_intersect(g, fa, fb, 32)
+    assert int(res.total) == 1
+    assert np.asarray(res.items)[0] == 3
+
+
+@given(st.integers(0, 6), st.integers(0, 6))
+def test_segmented_intersect_vs_numpy(u, v):
+    g = G.demo_graph()
+    ro = np.asarray(g.row_offsets)
+    ci = np.asarray(g.col_indices)
+    expect = set(ci[ro[u]:ro[u + 1]]) & set(ci[ro[v]:ro[v + 1]])
+    res = ops.segmented_intersect(g, F.from_ids([u], 2),
+                                  F.from_ids([v], 2), 32)
+    assert int(res.total) == len(expect)
+
+
+def test_compact_values_property():
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.integers(0, 100, 40), jnp.int32)
+    mask = jnp.asarray(rng.random(40) < 0.4)
+    buf, length = F.compact_values(vals, mask, 40)
+    expect = np.asarray(vals)[np.asarray(mask)]
+    assert np.array_equal(np.asarray(buf)[:int(length)], expect)
+
+
+def test_scatter_helpers():
+    tgt = jnp.full((5,), 10.0)
+    out = ops.scatter_min(jnp.asarray([3.0, 7.0, 1.0]),
+                          jnp.asarray([1, 1, 4]),
+                          jnp.asarray([True, True, True]), tgt)
+    assert np.asarray(out).tolist() == [10., 3., 10., 10., 1.]
+    out = ops.scatter_add(jnp.asarray([2.0, 5.0]), jnp.asarray([0, 0]),
+                          jnp.asarray([True, False]),
+                          jnp.zeros((2,)))
+    assert np.asarray(out).tolist() == [2.0, 0.0]

@@ -1,0 +1,102 @@
+"""Optimizer + schedules: convergence, clipping, int8 moment quantization."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.train.optimizer import (QBLOCK, QTensor, adamw,
+                                   dequantize_blockwise, global_norm,
+                                   make_schedule, moment_specs,
+                                   quantizable, quantize_blockwise)
+
+
+def test_quantize_roundtrip_error_bound():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((8, 512)), jnp.float32)
+    codes, scale = quantize_blockwise(x)
+    assert codes.shape == x.shape and codes.dtype == jnp.int8
+    assert scale.shape == (8, 2)
+    back = dequantize_blockwise(codes, scale, x.shape, jnp.float32)
+    err = np.abs(np.asarray(back - x))
+    bound = np.abs(np.asarray(x)).reshape(8, 2, QBLOCK).max(-1) / 127.0
+    assert np.all(err.reshape(8, 2, QBLOCK)
+                  <= bound[..., None] * 0.5 + 1e-7)
+
+
+@given(st.integers(1, 4), st.integers(1, 3))
+@settings(max_examples=10)
+def test_quantize_shapes(rows, blocks):
+    x = jnp.ones((rows, blocks * QBLOCK))
+    codes, scale = quantize_blockwise(x)
+    assert codes.shape == x.shape
+    assert scale.shape == (rows, blocks)
+
+
+def test_quantizable_predicate():
+    assert quantizable((4, 512))
+    assert not quantizable((512,))       # 1-D
+    assert not quantizable((4, 100))     # last dim not divisible
+
+
+def test_adamw_converges_quadratic():
+    for q in (False, True):
+        init, upd = adamw(make_schedule("constant", 0.05, 100,
+                                        warmup_steps=1),
+                          quantize_moments=q, weight_decay=0.0)
+        params = {"w": jnp.full((2, 512), 3.0)}
+        st_ = init(params)
+        for _ in range(80):
+            g = jax.grad(lambda p: jnp.sum((p["w"] - 1.0) ** 2))(params)
+            params, st_, m = upd(g, st_, params)
+        assert float(jnp.max(jnp.abs(params["w"] - 1.0))) < 0.1, q
+
+
+def test_quantized_state_structure():
+    init, _ = adamw(make_schedule("constant", 0.1, 10),
+                    quantize_moments=True)
+    params = {"big": jnp.zeros((4, 512)), "small": jnp.zeros((7,))}
+    st_ = init(params)
+    assert isinstance(st_.m["big"], QTensor)
+    assert not isinstance(st_.m["small"], QTensor)   # fallback fp32
+
+
+def test_grad_clipping():
+    init, upd = adamw(make_schedule("constant", 0.1, 10), clip_norm=1.0)
+    params = {"w": jnp.zeros((3,))}
+    st_ = init(params)
+    g = {"w": jnp.full((3,), 100.0)}
+    _, _, m = upd(g, st_, params)
+    assert float(m["grad_norm"]) > 1.0   # reported pre-clip
+
+
+def test_global_norm():
+    t = {"a": jnp.asarray([3.0]), "b": jnp.asarray([4.0])}
+    assert np.isclose(float(global_norm(t)), 5.0)
+
+
+def test_schedules_shapes():
+    total = 1000
+    for kind in ("constant", "cosine", "wsd"):
+        s = make_schedule(kind, 1e-3, total, warmup_steps=100)
+        assert float(s(jnp.asarray(0))) < 1e-3 * 0.02     # warmup start
+        assert np.isclose(float(s(jnp.asarray(100))), 1e-3, rtol=1e-2)
+    wsd = make_schedule("wsd", 1e-3, total, warmup_steps=100,
+                        stable_frac=0.9)
+    # stable until 90%: flat
+    assert np.isclose(float(wsd(jnp.asarray(500))), 1e-3)
+    assert np.isclose(float(wsd(jnp.asarray(880))), 1e-3)
+    # decay tail
+    assert float(wsd(jnp.asarray(total))) < 1.2e-4
+    cos = make_schedule("cosine", 1e-3, total, warmup_steps=100)
+    assert float(cos(jnp.asarray(total))) < 1.2e-4
+
+
+def test_moment_specs_structure():
+    from jax.sharding import PartitionSpec as P
+    pspecs = {"big": P("data", "model"), "small": P(None)}
+    sds = {"big": jax.ShapeDtypeStruct((4, 512), jnp.float32),
+           "small": jax.ShapeDtypeStruct((7,), jnp.float32)}
+    ms = moment_specs(pspecs, sds, quantize_moments=True)
+    assert isinstance(ms["big"], QTensor)
+    assert ms["big"].codes == P("data", "model")
+    assert ms["small"] == P(None)

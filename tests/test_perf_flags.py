@@ -1,0 +1,84 @@
+"""Opt-in performance flags: int8 KV cache, int8 MoE weights,
+sequence-sharded activation checkpoints — correctness contracts."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import build_model
+from repro.models.moe import moe_ffn, moe_init
+
+rng = np.random.default_rng(0)
+
+
+def test_kv_quant_decode_consistency():
+    cfg = get_smoke_config("yi-6b").replace(kv_quant=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    b, s = 2, 16
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (b, s + 1)), jnp.int32)
+    pf = jax.jit(functools.partial(model.prefill, cache_len=s + 4))
+    _, cache = pf(params, {"tokens": toks[:, :s]})
+    assert cache["k"].dtype == jnp.int8
+    lg2, _ = jax.jit(model.decode_step)(params, cache,
+                                        {"tokens": toks[:, s:s + 1]})
+    lgd, _ = jax.jit(model.prefill)(params, {"tokens": toks})
+    # both paths quantize identically => tight match
+    assert float(jnp.max(jnp.abs(lg2 - lgd))) < 2e-3
+
+
+def test_kv_quant_close_to_bf16_model():
+    cfg = get_smoke_config("yi-6b")
+    model = build_model(cfg)
+    model_q = build_model(cfg.replace(kv_quant=True))
+    params = model.init(jax.random.PRNGKey(1))
+    toks = jnp.asarray(rng.integers(0, cfg.vocab, (2, 16)), jnp.int32)
+    lg, _ = jax.jit(model.prefill)(params, {"tokens": toks})
+    lgq, _ = jax.jit(model_q.prefill)(params, {"tokens": toks})
+    rel = float(jnp.linalg.norm(lg - lgq) / jnp.linalg.norm(lg))
+    assert rel < 0.05, rel
+
+
+def test_weight_quant_moe_close():
+    cfg = get_smoke_config("qwen3-moe-235b-a22b").replace(
+        capacity_factor=8.0)
+    cfg_q = cfg.replace(weight_quant=True)
+    p = moe_init(jax.random.PRNGKey(0), cfg, jnp.float32)
+    p_q = moe_init(jax.random.PRNGKey(0), cfg_q, jnp.float32)
+    assert p_q["w1"].dtype == jnp.int8
+    x = jnp.asarray(rng.standard_normal((2, 8, cfg.d_model)), jnp.float32)
+    y, _ = moe_ffn(p, x, cfg)
+    yq, _ = moe_ffn(p_q, x, cfg_q)
+    rel = float(jnp.linalg.norm(y - yq) / jnp.linalg.norm(y))
+    assert rel < 0.05, rel
+
+
+def test_weight_quant_param_specs_cover_scales():
+    cfg = get_smoke_config("qwen3-moe-235b-a22b").replace(
+        weight_quant=True)
+    model = build_model(cfg)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    specs = model.param_specs({"data": 2, "model": 4})
+    # spec tree must match the quantized param tree structure
+    jax.tree.map(lambda a, b: None, params, specs)
+
+
+def test_seq_shard_acts_semantics_unchanged():
+    cfg = get_smoke_config("yi-6b")
+    model = build_model(cfg)
+    model_s = build_model(cfg.replace(seq_shard_acts=True, remat="full"))
+    params = model.init(jax.random.PRNGKey(2))
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)),
+                                   jnp.int32),
+             "labels": jnp.asarray(rng.integers(0, cfg.vocab, (2, 32)),
+                                   jnp.int32)}
+    l1, _ = jax.jit(model.loss)(params, batch)
+    l2, _ = jax.jit(model_s.loss)(params, batch)
+    assert np.isclose(float(l1), float(l2), rtol=1e-5)
+    g1 = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    g2 = jax.grad(lambda p: model_s.loss(p, batch)[0])(params)
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)

@@ -1,0 +1,193 @@
+"""Graph primitives vs. numpy oracles (unit + property)."""
+import collections
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph as G
+from repro.core import ref as R
+from repro.core.primitives import (bc, bfs, connected_components, pagerank,
+                                   sssp, triangle_count, who_to_follow)
+from repro.core.primitives.sssp import sssp_bellman_ford
+from repro.core.primitives.tc import triangle_count_full
+
+
+@pytest.mark.parametrize("direction,idem,strategy", [
+    (False, False, "LB"), (False, True, "LB"), (True, True, "LB"),
+    (True, False, "LB"), (False, False, "TWC"), (False, False, "THREAD"),
+])
+def test_bfs_all_modes(rmat_graph, high_degree_src, direction, idem,
+                       strategy):
+    r = bfs(rmat_graph, high_degree_src, direction=direction,
+            idempotence=idem, strategy=strategy)
+    ref = R.bfs_ref(rmat_graph, high_degree_src)
+    assert np.array_equal(np.asarray(r.labels), ref)
+
+
+def test_bfs_direction_actually_pulls(rmat_graph, high_degree_src):
+    r = bfs(rmat_graph, high_degree_src, direction=True, do_a=0.001,
+            do_b=0.2)
+    assert int(r.pull_iters) > 0, "scale-free graph should trigger pull"
+
+
+def test_bfs_preds_form_tree(rmat_graph, high_degree_src):
+    r = bfs(rmat_graph, high_degree_src, direction=False,
+            record_preds=True)
+    lab = np.asarray(r.labels)
+    pre = np.asarray(r.preds)
+    for v in range(rmat_graph.num_vertices):
+        if lab[v] > 0:
+            assert lab[pre[v]] == lab[v] - 1
+
+
+def test_bfs_mesh_graph(grid_graph):
+    r = bfs(grid_graph, 0, direction=True)
+    assert np.array_equal(np.asarray(r.labels), R.bfs_ref(grid_graph, 0))
+
+
+def test_sssp_delta_and_bf(rmat_graph, high_degree_src):
+    ref = R.sssp_ref(rmat_graph, high_degree_src)
+    for fn, kw in [(sssp, {}), (sssp, {"delta": 16.0}),
+                   (sssp_bellman_ford, {})]:
+        r = fn(rmat_graph, high_degree_src, **kw)
+        assert np.allclose(np.asarray(r.dist), ref, rtol=1e-5), kw
+
+
+def test_sssp_preds_valid(rmat_graph, high_degree_src):
+    r = sssp(rmat_graph, high_degree_src)
+    dist = np.asarray(r.dist)
+    preds = np.asarray(r.preds)
+    ro = np.asarray(rmat_graph.row_offsets)
+    ci = np.asarray(rmat_graph.col_indices)
+    w = np.asarray(rmat_graph.edge_values)
+    for v in range(rmat_graph.num_vertices):
+        if np.isfinite(dist[v]) and v != high_degree_src:
+            p = preds[v]
+            assert p >= 0
+            edges = {ci[e]: w[e] for e in range(ro[p], ro[p + 1])}
+            assert v in edges
+            assert np.isclose(dist[p] + edges[v], dist[v], rtol=1e-5)
+
+
+def test_sssp_delta_stepping_fewer_relaxations(grid_graph):
+    # delta-stepping should do no more relaxation work than Bellman-Ford
+    # on a large-diameter graph (the paper's motivation for the PQ)
+    r_d = sssp(grid_graph, 0, delta=32.0)
+    r_bf = sssp_bellman_ford(grid_graph, 0)
+    assert np.allclose(np.asarray(r_d.dist), np.asarray(r_bf.dist))
+    assert int(r_d.relaxations) <= int(r_bf.relaxations)
+
+
+def test_pagerank(rmat_graph):
+    r = pagerank(rmat_graph, max_iter=15)
+    ref = R.pagerank_ref(rmat_graph, iters=15)
+    assert np.allclose(np.asarray(r.rank), ref, atol=1e-6)
+    assert abs(float(jnp.sum(r.rank)) - 1.0) < 1e-3
+
+
+def test_pagerank_convergence_filter(rmat_graph):
+    r = pagerank(rmat_graph, tol=1e-7, max_iter=200)
+    assert int(r.iterations) < 200
+
+
+def _same_partition(a, b):
+    pa = collections.defaultdict(set)
+    pb = collections.defaultdict(set)
+    for i, (x, y) in enumerate(zip(a, b)):
+        pa[x].add(i)
+        pb[y].add(i)
+    return sorted(map(frozenset, pa.values())) == \
+        sorted(map(frozenset, pb.values()))
+
+
+def test_cc(rmat_graph):
+    r = connected_components(rmat_graph)
+    ref = R.cc_ref(rmat_graph)
+    assert _same_partition(np.asarray(r.labels).tolist(), ref.tolist())
+    assert int(r.num_components) == len(set(ref.tolist()))
+
+
+def test_bc(rmat_graph, high_degree_src):
+    r = bc(rmat_graph, high_degree_src)
+    ref = R.bc_ref(rmat_graph, high_degree_src)
+    assert np.allclose(np.asarray(r.bc), ref, rtol=1e-3, atol=1e-3)
+
+
+def test_tc_filtered_and_full(rmat_graph):
+    ref = R.tc_ref(rmat_graph)
+    assert int(triangle_count(rmat_graph).total) == ref
+    assert int(triangle_count_full(rmat_graph)) == ref
+
+
+def test_tc_kernel(rmat_graph):
+    assert int(triangle_count(rmat_graph, use_kernel=True).total) == \
+        R.tc_ref(rmat_graph)
+
+
+def test_wtf_pipeline(rmat_graph, high_degree_src):
+    r = who_to_follow(rmat_graph, high_degree_src, k=32, ppr_iters=15,
+                      salsa_iters=4)
+    assert np.allclose(np.asarray(r.ppr),
+                       R.ppr_ref(rmat_graph, high_degree_src, iters=15),
+                       atol=1e-5)
+    cot = np.asarray(r.cot)
+    vals = np.asarray(r.ppr)[cot]
+    hubs = np.zeros(rmat_graph.num_vertices, bool)
+    hubs[cot[vals > 0]] = True
+    h_ref, a_ref = R.salsa_ref(rmat_graph, hubs, iters=4)
+    assert np.allclose(np.asarray(r.hub_scores), h_ref, atol=1e-5)
+    assert np.allclose(np.asarray(r.auth_scores), a_ref, atol=1e-5)
+    # the query user must not recommend itself
+    assert high_degree_src not in cot.tolist()
+
+
+# ---------------------------------------------------------------------------
+# property-based: random graphs, random sources
+# ---------------------------------------------------------------------------
+
+@st.composite
+def random_graph(draw):
+    n = draw(st.integers(4, 24))
+    m = draw(st.integers(0, 60))
+    edges = draw(st.lists(st.tuples(st.integers(0, n - 1),
+                                    st.integers(0, n - 1)),
+                          min_size=m, max_size=m))
+    src = [e[0] for e in edges]
+    dst = [e[1] for e in edges]
+    w = [float(draw(st.integers(1, 9))) for _ in edges]
+    g = G.from_edge_list(src, dst, n=n, values=w, undirected=True)
+    return g
+
+
+@given(random_graph(), st.integers(0, 3))
+@settings(max_examples=12)
+def test_bfs_property(g, src_seed):
+    src = src_seed % g.num_vertices
+    r = bfs(g, src, direction=False, idempotence=False)
+    assert np.array_equal(np.asarray(r.labels), R.bfs_ref(g, src))
+
+
+@given(random_graph(), st.integers(0, 3))
+@settings(max_examples=12)
+def test_sssp_property(g, src_seed):
+    if not g.weighted or g.num_edges == 0:
+        return
+    src = src_seed % g.num_vertices
+    r = sssp(g, src)
+    assert np.allclose(np.asarray(r.dist), R.sssp_ref(g, src), rtol=1e-5)
+
+
+@given(random_graph())
+@settings(max_examples=12)
+def test_cc_property(g):
+    r = connected_components(g)
+    assert _same_partition(np.asarray(r.labels).tolist(),
+                           R.cc_ref(g).tolist())
+
+
+@given(random_graph())
+@settings(max_examples=12)
+def test_tc_property(g):
+    assert int(triangle_count(g).total) == R.tc_ref(g)

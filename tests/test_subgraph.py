@@ -1,0 +1,69 @@
+"""Subgraph matching vs brute-force oracle."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import graph as G
+from repro.core.primitives.subgraph import subgraph_match, \
+    subgraph_match_ref
+
+TRIANGLE = (3, [(0, 1), (0, 2), (1, 2)])
+PATH3 = (3, [(0, 1), (1, 2)])
+STAR3 = (4, [(0, 1), (0, 2), (0, 3)])
+SQUARE = (4, [(0, 1), (1, 2), (2, 3), (0, 3)])
+
+
+@pytest.mark.parametrize("query", [TRIANGLE, PATH3, STAR3, SQUARE])
+def test_match_vs_oracle(query):
+    g = G.rmat(7, 4, seed=11)
+    n_q, q_edges = query
+    r = subgraph_match(g, n_q, q_edges, cap=500000)
+    ref = subgraph_match_ref(g, n_q, q_edges)
+    assert not r.truncated
+    assert int(r.count) == ref, (query, int(r.count), ref)
+
+
+def test_truncation_flag():
+    g = G.rmat(7, 4, seed=11)
+    r = subgraph_match(g, *STAR3, cap=1000)
+    assert r.truncated and int(r.count) == 1000
+
+
+def test_triangle_query_equals_tc_times_automorphisms():
+    from repro.core import ref as R
+    g = G.rmat(7, 4, seed=3)
+    r = subgraph_match(g, TRIANGLE[0], TRIANGLE[1], cap=200000)
+    # ordered embeddings = 6 per undirected triangle (|Aut(K3)| = 6)
+    assert int(r.count) == 6 * R.tc_ref(g)
+
+
+def test_labels_filter():
+    # path a-b-c with labels [0,1,0]: only even->odd->even paths
+    src = [0, 1, 2, 3]
+    dst = [1, 2, 3, 4]
+    g = G.from_edge_list(src, dst, n=5, undirected=True)
+    import jax.numpy as jnp
+    labels = jnp.asarray([0, 1, 0, 1, 0])
+    r = subgraph_match(g, 3, [(0, 1), (1, 2)], cap=64, labels=labels,
+                       q_labels=[0, 1, 0])
+    # paths: 0-1-2, 2-1-0, 2-3-4, 4-3-2
+    assert int(r.count) == 4
+    emb = np.asarray(r.embeddings)[:int(r.count)]
+    assert {tuple(e) for e in emb} == {(0, 1, 2), (2, 1, 0), (2, 3, 4),
+                                       (4, 3, 2)}
+
+
+@given(st.integers(0, 5))
+@settings(max_examples=6, deadline=None)
+def test_match_property_random(seed):
+    g = G.rmat(6, 3, seed=seed)
+    r = subgraph_match(g, 3, [(0, 1), (1, 2)], cap=200000)
+    assert int(r.count) == subgraph_match_ref(g, 3, [(0, 1), (1, 2)])
+    # every returned embedding is a real match
+    emb = np.asarray(r.embeddings)[:min(int(r.count), 50)]
+    ro = np.asarray(g.row_offsets)
+    ci = np.asarray(g.col_indices)
+    adj = [set(ci[ro[u]:ro[u + 1]]) for u in range(g.num_vertices)]
+    for e in emb:
+        assert e[1] in adj[e[0]] and e[2] in adj[e[1]]
+        assert len(set(e.tolist())) == 3

@@ -1,0 +1,97 @@
+"""End-to-end system tests: the paper's graph-analytics application, the
+LM train/serve drivers, and the dry-run analysis machinery."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+def test_graph_run_end_to_end(capsys):
+    """The paper's kind of end-to-end driver: generate graph, run all six
+    primitives, validate each against its oracle."""
+    from repro.launch.graph_run import main
+    main(["--graph", "rmat", "--scale", "9", "--edge-factor", "8",
+          "--primitives", "bfs,sssp,pagerank,cc,bc,tc,wtf",
+          "--validate"])
+    out = capsys.readouterr().out
+    assert out.count("PASS") == 6     # wtf has no PASS/FAIL oracle line
+    assert "FAIL" not in out
+
+
+def test_train_driver_with_failure_injection(tmp_path):
+    from repro.launch.train import main
+    report = main(["--arch", "minicpm-2b", "--smoke", "--steps", "12",
+                   "--batch", "4", "--seq", "64",
+                   "--ckpt-dir", str(tmp_path), "--ckpt-every", "5",
+                   "--simulate-failure", "7"])
+    assert report["completed"]
+    assert report["restarts"] == 1
+    losses = [h["loss"] for h in report["history"]]
+    assert losses[-1] < losses[0]
+
+
+def test_train_driver_quantized_optimizer(tmp_path):
+    from repro.launch.train import main
+    report = main(["--arch", "yi-6b", "--smoke", "--steps", "6",
+                   "--batch", "4", "--seq", "64",
+                   "--quantized-optimizer"])
+    assert report["completed"]
+    assert all(np.isfinite(h["loss"]) for h in report["history"])
+
+
+def test_serve_driver(capsys):
+    from repro.launch.serve import main
+    main(["--arch", "minicpm-2b", "--smoke", "--requests", "4",
+          "--batch", "2", "--prompt-len", "16", "--gen-len", "8"])
+    out = capsys.readouterr().out
+    assert "4 requests" in out
+
+
+def test_wsd_schedule_used_for_minicpm():
+    """The MiniCPM arch trains with its published WSD schedule."""
+    from repro.launch.train import main
+    report = main(["--arch", "minicpm-2b", "--smoke", "--steps", "10",
+                   "--batch", "2", "--seq", "32"])
+    lrs = [h["lr"] for h in report["history"]]
+    # warmup then flat(ish) stable phase — strictly nondecreasing early
+    assert lrs[1] >= lrs[0]
+
+
+def test_parse_collectives():
+    from repro.launch.dryrun import parse_collectives
+    hlo = """
+  %all-gather.67 = f32[4096,128]{1,0} all-gather(%x), replica_groups=[16,16]<=[16,16]T(1,0), dimensions={0}
+  %all-reduce.1 = f32[8,128]{1,0} all-reduce(%dot), channel_id=1, replica_groups={{0,1,2,3},{4,5,6,7}}, to_apply=%add
+  %rs = bf16[128]{0} reduce-scatter(%y), replica_groups=[4,2]<=[2,4]T(1,0), dimensions={0}
+  %cp = f32[64]{0} collective-permute(%z), source_target_pairs={{0,1}}
+    """
+    got = parse_collectives(hlo)
+    per = got["per_op"]
+    assert per["all-gather"]["count"] == 1
+    assert per["all-gather"]["bytes"] == 4096 * 128 * 4
+    assert per["all-reduce"]["link_bytes"] == 2 * 8 * 128 * 4
+    assert per["reduce-scatter"]["link_bytes"] == 128 * 2 * 2
+    assert per["collective-permute"]["bytes"] == 64 * 4
+
+
+def test_probe_extrapolation_arithmetic():
+    """fixed + units×marginal reconstruction used by the dry-run."""
+    c1, c2, k1, k2, units = 110.0, 210.0, 1, 2, 32
+    marginal = (c2 - c1) / (k2 - k1)
+    fixed = c1 - k1 * marginal
+    assert fixed == 10.0
+    assert fixed + units * marginal == 10.0 + 3200.0
+
+
+def test_input_specs_cover_all_cells():
+    """Every (arch × applicable shape) produces well-formed input specs."""
+    from repro.configs import ARCH_IDS, get_config, shapes_for
+    from repro.models import build_model
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        model = build_model(cfg)
+        for name, shp in shapes_for(cfg).items():
+            sds = model.input_specs(shp, shp["kind"])
+            assert sds, (arch, name)
+            for k, v in sds.items():
+                assert all(int(d) > 0 for d in v.shape), (arch, name, k)
