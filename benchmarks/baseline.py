@@ -1,0 +1,100 @@
+"""PR-1 perf baseline: bfs/sssp/pagerank/tc on both operator backends.
+
+Emits one JSON file so the perf trajectory of later PRs starts from a
+recorded point instead of an asserted one. Off-TPU the pallas backend
+runs in interpret mode — those numbers measure the *dispatch path*, not
+kernel speed (expect pallas ≫ xla wall time on CPU; the comparison
+becomes meaningful on a real TPU backend).
+
+  PYTHONPATH=src python -m benchmarks.baseline --scale 14 \
+      --out BENCH_pr1.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+
+from repro.core import backend as B
+from repro.core import graph as G
+from repro.core.primitives import bfs, pagerank, sssp, triangle_count
+
+from .common import best_source, timed
+
+PRIMS = ("bfs", "sssp", "pagerank", "tc")
+
+
+def _run_one(name: str, g, src: int, backend: str, repeats: int):
+    if name == "bfs":
+        r, t = timed(lambda: bfs(g, src, backend=backend), repeats=repeats)
+        edges = int(r.edges_visited)
+    elif name == "sssp":
+        r, t = timed(lambda: sssp(g, src, backend=backend),
+                     repeats=repeats)
+        edges = g.num_edges
+    elif name == "pagerank":
+        r, t = timed(lambda: pagerank(g, max_iter=20, backend=backend),
+                     repeats=repeats)
+        edges = 20 * g.num_edges
+    elif name == "tc":
+        r, t = timed(lambda: triangle_count(g, backend=backend),
+                     repeats=repeats)
+        edges = g.num_edges
+    else:
+        raise ValueError(name)
+    return {"primitive": name, "backend": backend,
+            "ms": round(t * 1e3, 2),
+            "mteps": round(edges / t / 1e6, 2)}
+
+
+def run(scale: int = 14, edge_factor: int = 16, repeats: int = 1,
+        out: str = "BENCH_pr1.json",
+        backends=(B.XLA, B.PALLAS), prims=PRIMS):
+    g = G.rmat(scale, edge_factor, seed=0, weighted=True)
+    src = best_source(g)
+    rows = []
+    for backend in backends:
+        for name in prims:
+            t0 = time.monotonic()
+            row = _run_one(name, g, src, backend, repeats)
+            rows.append(row)
+            print(f"[baseline] {name:9s} backend={backend:6s} "
+                  f"{row['ms']:10.2f} ms  {row['mteps']:9.2f} MTEPS "
+                  f"(wall {time.monotonic()-t0:.1f}s)", flush=True)
+    doc = {
+        "pr": 1,
+        "graph": {"kind": "rmat", "scale": scale,
+                  "edge_factor": edge_factor, "n": g.num_vertices,
+                  "m": g.num_edges, "src": src},
+        "repeats": repeats,
+        "jax_backend": jax.default_backend(),
+        "interpret_pallas": jax.default_backend() != "tpu",
+        "platform": platform.platform(),
+        "results": rows,
+    }
+    with open(out, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# wrote {out}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=14)
+    ap.add_argument("--edge-factor", type=int, default=16)
+    ap.add_argument("--repeats", type=int, default=1)
+    ap.add_argument("--out", default="BENCH_pr1.json")
+    ap.add_argument("--backends", default="xla,pallas")
+    ap.add_argument("--primitives", default=",".join(PRIMS))
+    args = ap.parse_args()
+    run(scale=args.scale, edge_factor=args.edge_factor,
+        repeats=args.repeats, out=args.out,
+        backends=tuple(args.backends.split(",")),
+        prims=tuple(args.primitives.split(",")))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,19 +1,30 @@
-"""Shared benchmark utilities: timed runs, CSV emit, graph zoo.
+"""Shared benchmark utilities: timed runs, CSV/JSON emit, graph zoo.
 
 Measurement methodology mirrors the paper (§7): runtime excludes graph
 build/transfer; each primitive runs once to compile then `repeats` times
 for the average; MTEPS = edges visited / runtime.
+
+Every emitted row carries the operator backend that was active when the
+row was produced (resolved from the ambient context / REPRO_BACKEND), so
+fused-vs-unfused deltas are measured, not asserted. ``emit`` also
+accumulates rows into ``RESULTS`` for JSON output (benchmarks.run
+--json).
 """
 from __future__ import annotations
 
+import json
 import time
 
 import jax
 import numpy as np
 
+from repro.core import backend as B
 from repro.core import graph as G
 
 REPEATS = 3
+
+# accumulated row dicts (one per emitted CSV row, backend column included)
+RESULTS: list[dict] = []
 
 # CPU-scaled dataset zoo (paper Table 4 families: scale-free rmat ×3
 # sizes, web-ish low-ef rmat, mesh-like grid + rgg)
@@ -55,8 +66,18 @@ def timed(fn, *args, repeats: int = REPEATS, **kw):
     return out, float(np.median(times))
 
 
-def emit(rows, header):
-    print(",".join(header))
+def emit(rows, header, table: str | None = None):
+    backend = B.resolve()
+    print(",".join(list(header) + ["backend"]))
     for r in rows:
-        print(",".join(str(x) for x in r))
+        print(",".join(str(x) for x in list(r) + [backend]))
+        RESULTS.append({"table": table, "backend": backend,
+                        **dict(zip(header, r))})
     return rows
+
+
+def write_json(path: str) -> None:
+    """Dump every row emitted so far (with its backend column) to JSON."""
+    with open(path, "w") as f:
+        json.dump({"results": RESULTS}, f, indent=1, default=str)
+    print(f"# wrote {len(RESULTS)} rows to {path}")

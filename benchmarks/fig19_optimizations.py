@@ -25,4 +25,5 @@ def run():
                              round(int(r.edges_visited) / t / 1e6, 1),
                              int(r.pull_iters)])
     return emit(rows, ["dataset", "direction_opt", "idempotence", "ms",
-                       "mteps", "pull_iters"])
+                       "mteps", "pull_iters"],
+                table="fig19_optimizations")

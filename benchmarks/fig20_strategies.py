@@ -23,4 +23,5 @@ def run():
             rows.append([name, "bfs", strategy, round(t * 1e3, 2)])
             r, t = timed(lambda: sssp(g, src, strategy=strategy))
             rows.append([name, "sssp", strategy, round(t * 1e3, 2)])
-    return emit(rows, ["dataset", "primitive", "strategy", "ms"])
+    return emit(rows, ["dataset", "primitive", "strategy", "ms"],
+                table="fig20_strategies")

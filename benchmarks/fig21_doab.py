@@ -29,4 +29,5 @@ def run():
                              round(int(r.edges_visited) / t / 1e6, 1),
                              int(r.pull_iters), ok])
     return emit(rows, ["dataset", "do_a", "do_b", "ms", "mteps",
-                       "pull_iters", "ok"])
+                       "pull_iters", "ok"],
+                table="fig21_doab")

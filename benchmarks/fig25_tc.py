@@ -30,4 +30,5 @@ def run():
                      round(t_u / max(t_f, 1e-9), 2)])
     return emit(rows, ["dataset", "triangles", "tc_filtered", "tc_full",
                        "cpu_baseline_ms", "filtered_ms", "full_ms",
-                       "full/filtered"])
+                       "full/filtered"],
+                table="fig25_tc")

@@ -12,11 +12,14 @@
 
 Run all:  PYTHONPATH=src python -m benchmarks.run
 One:      PYTHONPATH=src python -m benchmarks.run --only fig25_tc
+Backend:  PYTHONPATH=src python -m benchmarks.run --backend pallas \
+              --json bench_pallas.json
 """
 from __future__ import annotations
 
 import argparse
 import importlib
+import os
 import time
 import traceback
 
@@ -36,7 +39,16 @@ MODULES = [
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--backend", default=None,
+                    choices=("xla", "pallas", "auto"),
+                    help="operator backend for every module (emitted as a "
+                         "column in the CSV/JSON output)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write all emitted rows (backend column included) "
+                         "as JSON")
     args = ap.parse_args()
+    if args.backend:
+        os.environ["REPRO_BACKEND"] = args.backend
     mods = [args.only] if args.only else MODULES
     failures = []
     for name in mods:
@@ -50,6 +62,9 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             failures.append(name)
+    if args.json:
+        from benchmarks.common import write_json
+        write_json(args.json)
     if failures:
         raise SystemExit(f"benchmark failures: {failures}")
 

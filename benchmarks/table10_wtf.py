@@ -24,4 +24,5 @@ def run():
                      round(t * 1e3, 2),
                      int(np.sum(np.asarray(r.auth_scores) > 0))])
     return emit(rows, ["dataset", "n", "m", "total_ms",
-                       "nonzero_recommendations"])
+                       "nonzero_recommendations"],
+                table="table10_wtf")

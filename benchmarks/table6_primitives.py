@@ -46,4 +46,5 @@ def run():
         r, t = timed(lambda: triangle_count(g))
         rows.append([name, "tc", round(t * 1e3, 2), "",
                      int(int(r.total) == R.tc_ref(g))])
-    return emit(rows, ["dataset", "primitive", "ms", "mteps", "valid"])
+    return emit(rows, ["dataset", "primitive", "ms", "mteps", "valid"],
+                table="table6_primitives")

@@ -33,4 +33,5 @@ def run():
             mteps = round(ev / t / 1e6, 1) if ev else ""
             rows.append([f"kron_s{scale}", g.num_vertices, m, pname,
                          round(t * 1e3, 2), mteps])
-    return emit(rows, ["dataset", "n", "m", "primitive", "ms", "mteps"])
+    return emit(rows, ["dataset", "n", "m", "primitive", "ms", "mteps"],
+                table="table7_scaling")

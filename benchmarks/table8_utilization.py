@@ -42,4 +42,5 @@ def run():
             rows.append([name, strategy, work, slots,
                          round(100.0 * valid / slots, 2)])
     return emit(rows, ["dataset", "strategy", "frontier_edges",
-                       "slots", "utilization_pct"])
+                       "slots", "utilization_pct"],
+                table="table8_utilization")

@@ -5,15 +5,18 @@ Public surface:
   frontier   — Sparse/Dense frontier reps + compaction
   operators  — advance / filter / segmented_intersect / neighborhood_reduce
                / compute + LB/TWC/THREAD workload-mapping strategies
+  backend    — operator backend registry + selection ("xla" | "pallas" |
+               "auto"; context manager / REPRO_BACKEND env / per-call)
   direction  — push/pull direction-optimization heuristics
   enactor    — BSP convergence-loop driver
   primitives — bfs, sssp, pagerank, connected_components, bc,
                triangle_count, who_to_follow
 """
-from . import direction, enactor, frontier, graph, operators
+from . import backend, direction, enactor, frontier, graph, operators
+from .backend import use_backend
 from .primitives import (bc, bfs, connected_components, pagerank, sssp,
                          triangle_count, who_to_follow)
 
-__all__ = ["graph", "frontier", "operators", "direction", "enactor",
-           "bfs", "sssp", "pagerank", "connected_components", "bc",
-           "triangle_count", "who_to_follow"]
+__all__ = ["graph", "frontier", "operators", "backend", "use_backend",
+           "direction", "enactor", "bfs", "sssp", "pagerank",
+           "connected_components", "bc", "triangle_count", "who_to_follow"]

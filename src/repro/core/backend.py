@@ -1,0 +1,144 @@
+"""Backend registry + selection context for the operator layer.
+
+Gunrock reaches its performance by fusing functors into a small set of
+optimized operator kernels at compile time (paper §5.3); GraphBLAST gets
+the same effect by routing every primitive through one backend layer.
+This module is that layer for the JAX reproduction: every operator hot
+path (advance expansion+gather, filter compaction, intersection probe,
+SpMV sweep) is registered here once per backend, and primitives select a
+backend instead of hand-threading ``use_kernel`` booleans.
+
+Backends:
+  "xla"    — pure jnp formulations (gather/scatter/segment ops). The
+             portable default; XLA fuses the functor into the sweep.
+  "pallas" — hand-written Pallas TPU kernels from ``repro.kernels``
+             (interpret mode off-TPU, which is the correctness contract).
+  "auto"   — resolves to "pallas" on a TPU backend, "xla" elsewhere.
+
+Selection precedence (first hit wins):
+  1. per-call override          advance(..., backend="pallas")
+  2. deprecated use_kernel=     True -> "pallas", False -> "xla"
+  3. context manager            with backend.use_backend("pallas"): ...
+  4. environment variable       REPRO_BACKEND=pallas
+  5. the default                "xla"
+
+Resolution happens at *trace* time: jitted primitives resolve in their
+Python wrapper and pass the concrete name down as a static argument, so
+a cached trace can never observe a stale context/env value.
+"""
+from __future__ import annotations
+
+import importlib
+import os
+import threading
+import warnings
+from contextlib import contextmanager
+from typing import Callable, Optional
+
+XLA = "xla"
+PALLAS = "pallas"
+AUTO = "auto"
+BACKENDS = (XLA, PALLAS, AUTO)
+
+ENV_VAR = "REPRO_BACKEND"
+
+_tls = threading.local()
+
+# (op_name, backend) -> implementation. Populated by @register decorators
+# in core.operators / core.frontier (xla) and kernels.ops (pallas).
+_REGISTRY: dict[tuple[str, str], Callable] = {}
+
+# Backends whose implementations live in a module that registers itself on
+# import — imported lazily so `import repro.core` never pulls in Pallas.
+_LAZY_PROVIDERS = {PALLAS: "repro.kernels.ops"}
+_loaded: set[str] = set()
+
+
+def _stack() -> list:
+    if not hasattr(_tls, "stack"):
+        _tls.stack = []
+    return _tls.stack
+
+
+def _check(name: str) -> str:
+    if name not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {name!r}; expected one of {BACKENDS}")
+    return name
+
+
+def _auto() -> str:
+    import jax
+    return PALLAS if jax.default_backend() == "tpu" else XLA
+
+
+def resolve(backend: Optional[str] = None,
+            use_kernel: Optional[bool] = None) -> str:
+    """Resolve a concrete backend name ("xla" | "pallas").
+
+    ``backend`` is the per-call override; ``use_kernel`` is the deprecated
+    boolean alias kept for one release (True -> pallas, False -> xla).
+    """
+    if backend is None and use_kernel is not None:
+        warnings.warn(
+            "use_kernel= is deprecated; pass backend='pallas'/'xla' or use "
+            "repro.core.backend.use_backend(...)", DeprecationWarning,
+            stacklevel=3)
+        backend = PALLAS if use_kernel else XLA
+    if backend is None:
+        stack = _stack()
+        backend = stack[-1] if stack else None
+    if backend is None:
+        backend = os.environ.get(ENV_VAR) or XLA
+    _check(backend)
+    return _auto() if backend == AUTO else backend
+
+
+@contextmanager
+def use_backend(name: str):
+    """Context manager: route operator dispatch through ``name``."""
+    _check(name)
+    _stack().append(name)
+    try:
+        yield
+    finally:
+        _stack().pop()
+
+
+def register(op: str, backend: str):
+    """Decorator: register ``fn`` as the ``backend`` implementation of
+    operator hot path ``op``."""
+    _check(backend)
+
+    def deco(fn: Callable) -> Callable:
+        _REGISTRY[(op, backend)] = fn
+        return fn
+
+    return deco
+
+
+def dispatch(op: str, backend: Optional[str] = None,
+             use_kernel: Optional[bool] = None) -> Callable:
+    """Look up the implementation of ``op`` for the resolved backend.
+
+    Falls back to the "xla" implementation when the backend has none
+    registered (e.g. ops with no Pallas kernel yet).
+    """
+    bk = resolve(backend, use_kernel)
+    if bk in _LAZY_PROVIDERS and bk not in _loaded:
+        importlib.import_module(_LAZY_PROVIDERS[bk])
+        _loaded.add(bk)
+    impl = _REGISTRY.get((op, bk))
+    if impl is None:
+        impl = _REGISTRY.get((op, XLA))
+    if impl is None:
+        raise KeyError(f"no implementation registered for operator {op!r}")
+    return impl
+
+
+def registered(op: str, backend: str) -> bool:
+    """True if ``op`` has a native (non-fallback) impl for ``backend``."""
+    if backend in _LAZY_PROVIDERS and backend not in _loaded:
+        importlib.import_module(_LAZY_PROVIDERS[backend])
+        _loaded.add(backend)
+    return (op, backend) in _REGISTRY

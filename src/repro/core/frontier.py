@@ -16,9 +16,12 @@ direction-optimized traversal is precisely a representation switch.
 from __future__ import annotations
 
 from dataclasses import dataclass
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
+
+from . import backend as B
 
 INVALID = jnp.int32(-1)
 
@@ -77,9 +80,10 @@ class DenseFrontier:
     def length(self) -> jax.Array:
         return jnp.sum(self.flags.astype(jnp.int32))
 
-    def to_sparse(self, capacity: int | None = None) -> SparseFrontier:
+    def to_sparse(self, capacity: int | None = None,
+                  backend: Optional[str] = None) -> SparseFrontier:
         capacity = self.n if capacity is None else capacity
-        return compact_indices(self.flags, capacity)
+        return compact_indices(self.flags, capacity, backend=backend)
 
 
 def from_ids(ids, capacity: int) -> SparseFrontier:
@@ -96,31 +100,55 @@ def empty(capacity: int) -> SparseFrontier:
                           length=jnp.int32(0))
 
 
-def compact_indices(mask: jax.Array, capacity: int) -> SparseFrontier:
-    """Stream-compact ``nonzero(mask)`` into a fixed-size buffer.
+@B.register("compact", B.XLA)
+def _compact_xla(values: jax.Array, mask: jax.Array
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Full-length stable compaction of ``values[mask]`` → (packed, count).
 
     Prefix-sum + scatter — the standard GPU compaction the paper builds
-    filter on (§4.2), expressed as XLA ops.
+    filter on (§4.2), expressed as XLA ops. The ``"pallas"`` counterpart
+    is ``repro.kernels.ops.filter_compact`` (Merrill's local-scan
+    filtering strategy, §5.2.1); both share this (values, mask) contract
+    in the backend registry.
     """
     n = mask.shape[0]
     mask_i = mask.astype(jnp.int32)
     pos = jnp.cumsum(mask_i) - mask_i            # exclusive scan
-    length = jnp.minimum(pos[-1] + mask_i[-1] if n else jnp.int32(0),
-                         jnp.int32(capacity))
-    buf = jnp.full((capacity,), INVALID, jnp.int32)
-    tgt = jnp.where(mask & (pos < capacity), pos, capacity)  # drop overflow
-    buf = buf.at[tgt].set(jnp.arange(n, dtype=jnp.int32), mode="drop")
-    return SparseFrontier(ids=buf, length=length.astype(jnp.int32))
+    buf = jnp.full((n,), INVALID, values.dtype)
+    tgt = jnp.where(mask, pos, n)                # invalid lanes fall off
+    buf = buf.at[tgt].set(values, mode="drop")
+    return buf, jnp.sum(mask_i).astype(jnp.int32)
+
+
+def compact_indices(mask: jax.Array, capacity: int,
+                    backend: Optional[str] = None) -> SparseFrontier:
+    """Stream-compact ``nonzero(mask)`` into a fixed-size buffer."""
+    n = mask.shape[0]
+    buf, length = compact_values(jnp.arange(n, dtype=jnp.int32), mask,
+                                 capacity, backend=backend)
+    return SparseFrontier(ids=buf, length=length)
 
 
 def compact_values(values: jax.Array, mask: jax.Array,
-                   capacity: int, fill=INVALID) -> tuple[jax.Array, jax.Array]:
-    """Compact ``values[mask]`` into a fixed-size buffer. Returns (buf, len)."""
-    n = mask.shape[0]
-    mask_i = mask.astype(jnp.int32)
-    pos = jnp.cumsum(mask_i) - mask_i
-    length = jnp.minimum(jnp.sum(mask_i), capacity)
-    buf = jnp.full((capacity,), fill, values.dtype)
-    tgt = jnp.where(mask & (pos < capacity), pos, capacity)
-    buf = buf.at[tgt].set(values, mode="drop")
-    return buf, length.astype(jnp.int32)
+                   capacity: int, fill=INVALID,
+                   backend: Optional[str] = None
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Compact ``values[mask]`` into a fixed-size buffer. Returns (buf, len).
+
+    Dispatches through the backend registry ("xla" scatter compaction or
+    the Pallas ``filter_compact`` kernel); overflow past ``capacity`` is
+    dropped, the tail is ``fill``. Backend resolution happens at trace
+    time — inside jitted code pass ``backend`` explicitly.
+    """
+    impl = B.dispatch("compact", backend)
+    packed, total = impl(values, mask)
+    n = packed.shape[0]
+    length = jnp.minimum(total, capacity).astype(jnp.int32)
+    if capacity <= n:
+        out = packed[:capacity]
+    else:
+        out = jnp.concatenate(
+            [packed, jnp.full((capacity - n,), INVALID, packed.dtype)])
+    lane = jnp.arange(capacity, dtype=jnp.int32)
+    return jnp.where(lane < length, out,
+                     jnp.asarray(fill, values.dtype)), length

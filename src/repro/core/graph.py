@@ -39,17 +39,23 @@ class Graph:
     csc_edge_values: Optional[jax.Array] = None
     # mapping from CSC slot -> original edge id (for edge-centric pulls)
     csc_edge_ids: Optional[jax.Array] = None
+    # Host-side (static) kernel metadata, computed at build time so jitted
+    # code never synchronizes to pick kernel shapes: ELL pack width for the
+    # hybrid SpMV kernel, out-degree (CSR) and in-degree (CSC) flavours.
+    ell_width: Optional[int] = None
+    csc_ell_width: Optional[int] = None
 
     # --- pytree plumbing -------------------------------------------------
     def tree_flatten(self):
         children = (self.row_offsets, self.col_indices, self.edge_values,
                     self.csc_offsets, self.csc_indices, self.csc_edge_values,
                     self.csc_edge_ids)
-        return children, None
+        return children, (self.ell_width, self.csc_ell_width)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children)
+        ell, csc_ell = aux if aux is not None else (None, None)
+        return cls(*children, ell_width=ell, csc_ell_width=csc_ell)
 
     # --- basic properties -------------------------------------------------
     @property
@@ -82,6 +88,16 @@ class Graph:
         nbrs = self.col_indices[idx]
         mask = lanes < deg
         return jnp.where(mask, nbrs, -1), mask
+
+
+def ell_width_for(degrees: np.ndarray) -> int:
+    """Default ELL pack width for the hybrid SpMV kernel: covers ≥95% of
+    edges, clamped to [1, 1024]. Host-side, run once at Graph build time —
+    the old on-demand jax.device_get default broke under jit."""
+    if len(degrees) == 0:
+        return 1
+    w = int(np.percentile(np.asarray(degrees), 95))
+    return max(min(w, 1024), 1)
 
 
 def _build_csc(n: int, src: np.ndarray, dst: np.ndarray,
@@ -143,8 +159,10 @@ def from_edge_list(src, dst, n: Optional[int] = None, values=None,
     np.cumsum(counts, out=row_offsets[1:])
     col_indices = dst.astype(np.int32)
     csc = (None, None, None, None)
+    csc_ell = None
     if build_csc:
         csc = _build_csc(n, src.astype(np.int32), dst.astype(np.int64), values)
+        csc_ell = ell_width_for(np.diff(csc[0]))
     return Graph(
         row_offsets=jnp.asarray(row_offsets),
         col_indices=jnp.asarray(col_indices),
@@ -153,6 +171,8 @@ def from_edge_list(src, dst, n: Optional[int] = None, values=None,
         csc_indices=jnp.asarray(csc[1]) if csc[1] is not None else None,
         csc_edge_values=jnp.asarray(csc[2]) if csc[2] is not None else None,
         csc_edge_ids=jnp.asarray(csc[3]) if csc[3] is not None else None,
+        ell_width=ell_width_for(counts),
+        csc_ell_width=csc_ell,
     )
 
 

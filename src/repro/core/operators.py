@@ -27,6 +27,26 @@ Conventions:
     compile time (§5.3).
   * Load-balancing strategy is selectable (LB | TWC | THREAD) to support the
     paper's Fig.-20 ablation; LB is the default (the paper's LB_CULL).
+
+Backends:
+  Every operator takes ``backend=`` ("xla" | "pallas" | "auto" | None) and
+  dispatches its hot path through the registry in ``core.backend``:
+
+    advance               — "advance": XLA sorted-search + gathers below, or
+                            the fused Pallas kernel (kernels/advance_fused.py)
+                            that does search + CSR gathers in one pass.
+    filter / compaction   — "compact": XLA scatter compaction or the Pallas
+                            filter_compact kernel (tile-local scan).
+    segmented_intersect   — "segment_search" for the binary probe, plus
+                            "advance" for its expansion and "compact" for
+                            its output.
+
+  ``backend=None`` defers to the ambient selection (context manager /
+  REPRO_BACKEND env var; see core/backend.py). THREAD has no Pallas
+  implementation — it is the deliberately-unbalanced ablation baseline —
+  and silently runs the XLA path on every backend. ``use_kernel=`` is
+  kept as a deprecated alias (True→"pallas", False→"xla") for one
+  release. Design notes: DESIGN.md.
 """
 from __future__ import annotations
 
@@ -36,6 +56,7 @@ from typing import Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from . import backend as B
 from .frontier import (INVALID, DenseFrontier, SparseFrontier, compact_values,
                        from_ids)
 from .graph import Graph
@@ -72,25 +93,36 @@ def lb_expand(sizes: jax.Array, valid_in: jax.Array, cap_out: int) -> Expansion:
                      total=total.astype(jnp.int32))
 
 
-def twc_expand(sizes: jax.Array, valid_in: jax.Array, cap_out: int) -> Expansion:
-    """Dynamic-grouping (TWC) emulation (paper §5.1.2).
-
-    GPU TWC arbitrates threads/warps/CTAs; that mechanism has no TPU
-    analogue (documented in DESIGN.md). We keep its *grouping* idea:
-    segments are stably reordered by size class (small ≤ 32 "thread",
-    ≤ 256 "warp", else "block") so each class is processed together, then
-    expanded with the LB machinery — identical output multiset, distinct
-    scheduling order (the Fig.-20 ablation contrast)."""
-    sizes = jnp.where(valid_in, sizes, 0).astype(jnp.int32)
+def twc_order(sizes: jax.Array) -> jax.Array:
+    """TWC size-class grouping permutation — the dynamic-grouping (TWC)
+    emulation of paper §5.1.2. GPU TWC arbitrates threads/warps/CTAs;
+    that mechanism has no TPU analogue (documented in DESIGN.md). We keep
+    its *grouping* idea: a stable sort of segments into small ≤ 32
+    "thread", ≤ 256 "warp", else "block" classes, so each class is
+    processed together by the LB machinery — identical output multiset,
+    distinct scheduling order (the Fig.-20 ablation contrast). Consumed
+    by the TWC path of ``advance``."""
     cls = jnp.where(sizes <= 32, 0, jnp.where(sizes <= 256, 1, 2))
-    order = jnp.argsort(cls, stable=True)
-    exp = lb_expand(sizes[order], valid_in[order], cap_out)
-    in_pos = order[exp.in_pos]
-    return Expansion(in_pos=in_pos, rank=exp.rank, valid=exp.valid,
-                     total=exp.total)
+    return jnp.argsort(cls, stable=True)
 
 
-_EXPANDERS = {"LB": lb_expand, "TWC": twc_expand}
+@B.register("advance", B.XLA)
+def _advance_xla(row_offsets: jax.Array, col_indices: jax.Array,
+                 base: jax.Array, sizes: jax.Array, cap_out: int):
+    """XLA advance hot path: LB sorted search + CSR gathers as separate
+    (XLA-fused) passes. Shares the registry contract with the fused Pallas
+    kernel: (src, dst, edge_id, in_pos, rank, valid, total), with
+    src/dst/edge_id masked to INVALID and rank to 0 on dead lanes."""
+    exp = lb_expand(sizes, jnp.ones(sizes.shape, bool), cap_out)
+    src = base[exp.in_pos]
+    edge_id = row_offsets[src] + exp.rank
+    edge_id = jnp.where(exp.valid, edge_id, 0)
+    dst = col_indices[edge_id]
+    return (jnp.where(exp.valid, src, INVALID),
+            jnp.where(exp.valid, dst, INVALID),
+            jnp.where(exp.valid, edge_id, INVALID), exp.in_pos,
+            jnp.where(exp.valid, exp.rank, 0), exp.valid, exp.total)
+
 
 # ---------------------------------------------------------------------------
 # advance
@@ -120,14 +152,19 @@ def _frontier_base_vertices(graph: Graph, frontier: SparseFrontier,
 
 def advance(graph: Graph, frontier: SparseFrontier, cap_out: int,
             functor: Optional[Callable] = None, data=None,
-            input_kind: str = "vertex", strategy: str = "LB",
-            use_kernel: bool = False) -> tuple[AdvanceResult, object]:
+            input_kind: str = "vertex", strategy: str = "LB", *,
+            backend: Optional[str] = None,
+            use_kernel: Optional[bool] = None
+            ) -> tuple[AdvanceResult, object]:
     """Gunrock advance (push): expand neighbor lists of the input frontier.
 
     functor(src, dst, edge_id, rank, valid, data) -> (keep_mask, data')
     applied in the same pass (kernel fusion). Returns the raw expansion (so
     callers can build V or E output frontiers) plus updated problem data.
+    The expansion+gather hot path dispatches through the "advance" backend
+    registry entry (see module docstring).
     """
+    bk = B.resolve(backend, use_kernel)
     if strategy == "THREAD":
         # Static per-vertex mapping (ThreadExpand, §5.1.1) — the
         # Harish-Narayanan quadratic mapping the paper cites [32]: sweep
@@ -160,48 +197,55 @@ def advance(graph: Graph, frontier: SparseFrontier, cap_out: int,
                              in_pos=res.in_pos, valid=keep,
                              total=res.total), data
 
+    if strategy not in ("LB", "TWC"):
+        raise ValueError(f"unknown strategy {strategy}")
+    if graph.num_edges == 0:
+        bk = B.XLA          # nothing to gather; skip the kernel path
     base, valid_in = _frontier_base_vertices(graph, frontier, input_kind)
     deg = graph.row_offsets[base + 1] - graph.row_offsets[base]
-    if use_kernel and strategy == "LB":
-        from repro.kernels import ops as kops
-        exp = kops.lb_expand(jnp.where(valid_in, deg, 0), cap_out)
-    else:
-        exp = _EXPANDERS[strategy](deg, valid_in, cap_out)
-    src = base[exp.in_pos]
-    edge_id = graph.row_offsets[src] + exp.rank
-    edge_id = jnp.where(exp.valid, edge_id, 0)
-    dst = graph.col_indices[edge_id]
-    res = AdvanceResult(
-        src=jnp.where(exp.valid, src, INVALID),
-        dst=jnp.where(exp.valid, dst, INVALID),
-        edge_id=jnp.where(exp.valid, edge_id, INVALID),
-        in_pos=exp.in_pos,
-        valid=exp.valid, total=exp.total)
+    sizes = jnp.where(valid_in, deg, 0).astype(jnp.int32)
+    order = None
+    if strategy == "TWC":
+        # dynamic-grouping emulation (§5.1.2): stably reorder segments by
+        # size class, expand with the LB machinery, map lanes back
+        order = twc_order(sizes)
+        base, sizes = base[order], sizes[order]
+    expand = B.dispatch("advance", bk)
+    src, dst, edge_id, in_pos, rank, valid, total = expand(
+        graph.row_offsets, graph.col_indices, base, sizes, cap_out)
+    if order is not None:
+        in_pos = order[in_pos]
+    res = AdvanceResult(src=src, dst=dst, edge_id=edge_id, in_pos=in_pos,
+                        valid=valid, total=total)
     if functor is None:
         return res, data
-    keep, data = functor(res.src, res.dst, res.edge_id, exp.rank, res.valid,
+    keep, data = functor(res.src, res.dst, res.edge_id, rank, res.valid,
                          data)
     keep = keep & res.valid
     res = AdvanceResult(src=jnp.where(keep, res.src, INVALID),
                         dst=jnp.where(keep, res.dst, INVALID),
                         edge_id=jnp.where(keep, res.edge_id, INVALID),
-                        in_pos=exp.in_pos,
+                        in_pos=res.in_pos,
                         valid=keep, total=res.total)
     return res, data
 
 
 def advance_to_vertex_frontier(res: AdvanceResult,
-                               cap: Optional[int] = None) -> SparseFrontier:
+                               cap: Optional[int] = None,
+                               backend: Optional[str] = None
+                               ) -> SparseFrontier:
     """Compact an advance result's destinations into a vertex frontier."""
     cap = int(res.dst.shape[0]) if cap is None else cap
-    buf, length = compact_values(res.dst, res.valid, cap)
+    buf, length = compact_values(res.dst, res.valid, cap, backend=backend)
     return SparseFrontier(ids=buf, length=length)
 
 
 def advance_to_edge_frontier(res: AdvanceResult,
-                             cap: Optional[int] = None) -> SparseFrontier:
+                             cap: Optional[int] = None,
+                             backend: Optional[str] = None) -> SparseFrontier:
     cap = int(res.edge_id.shape[0]) if cap is None else cap
-    buf, length = compact_values(res.edge_id, res.valid, cap)
+    buf, length = compact_values(res.edge_id, res.valid, cap,
+                                 backend=backend)
     return SparseFrontier(ids=buf, length=length)
 
 
@@ -242,14 +286,20 @@ def filter_frontier(frontier: SparseFrontier,
                     functor: Optional[Callable] = None, data=None,
                     n: Optional[int] = None, uniquify: str = "none",
                     cap: Optional[int] = None,
-                    hash_size: int = 1024) -> tuple[SparseFrontier, object]:
+                    hash_size: int = 1024,
+                    backend: Optional[str] = None,
+                    use_kernel: Optional[bool] = None
+                    ) -> tuple[SparseFrontier, object]:
     """Gunrock filter: predicate + compaction (+ optional uniquification).
 
     functor(ids, valid, data) -> (keep_mask, data')
     uniquify: 'none' | 'exact' (global scatter winner test) |
               'hash' (heuristic history-hashtable culling, §5.2.1 — removes
               only some duplicates, never valid items).
+    The compaction dispatches through the "compact" registry entry (the
+    Pallas filter_compact kernel under backend="pallas").
     """
+    bk = B.resolve(backend, use_kernel)
     ids, valid = frontier.ids, frontier.valid_mask
     keep = valid
     if functor is not None:
@@ -273,13 +323,14 @@ def filter_frontier(frontier: SparseFrontier,
         dup = (h_id[slot] == ids) & (h_ln[slot] != lane)
         keep = keep & ~dup
     cap = frontier.capacity if cap is None else cap
-    buf, length = compact_values(ids, keep, cap)
+    buf, length = compact_values(ids, keep, cap, backend=bk)
     return SparseFrontier(ids=buf, length=length), data
 
 
 def partition_frontier(frontier: SparseFrontier, predicate: jax.Array,
                        cap_near: Optional[int] = None,
-                       cap_far: Optional[int] = None
+                       cap_far: Optional[int] = None,
+                       backend: Optional[str] = None
                        ) -> tuple[SparseFrontier, SparseFrontier]:
     """Two-way split of a frontier (the 2-level priority queue, §5.1.5):
     items with predicate=True go to the near pile, others to the far pile."""
@@ -288,8 +339,10 @@ def partition_frontier(frontier: SparseFrontier, predicate: jax.Array,
     far_mask = valid & ~predicate
     cap_near = frontier.capacity if cap_near is None else cap_near
     cap_far = frontier.capacity if cap_far is None else cap_far
-    nbuf, nlen = compact_values(frontier.ids, near_mask, cap_near)
-    fbuf, flen = compact_values(frontier.ids, far_mask, cap_far)
+    nbuf, nlen = compact_values(frontier.ids, near_mask, cap_near,
+                                backend=backend)
+    fbuf, flen = compact_values(frontier.ids, far_mask, cap_far,
+                                backend=backend)
     return (SparseFrontier(nbuf, nlen), SparseFrontier(fbuf, flen))
 
 
@@ -300,21 +353,25 @@ def partition_frontier(frontier: SparseFrontier, predicate: jax.Array,
 
 def neighborhood_reduce(graph: Graph, frontier: SparseFrontier, cap_out: int,
                         edge_map: Callable, reduce_op: str = "add",
-                        init=None, data=None,
-                        strategy: str = "LB") -> jax.Array:
+                        init=None, data=None, strategy: str = "LB",
+                        backend: Optional[str] = None) -> jax.Array:
     """Advance + per-source segmented reduction (paper §8.2.3).
 
     edge_map(src, dst, edge_id, valid, data) -> values (cap_out,)
     Returns (cap_in,) reduced values aligned with the input frontier lanes.
     """
-    res, _ = advance(graph, frontier, cap_out, strategy=strategy)
+    res, _ = advance(graph, frontier, cap_out, strategy=strategy,
+                     backend=backend)
     vals = edge_map(res.src, res.dst, res.edge_id, res.valid, data)
     seg_fn = {"add": jax.ops.segment_sum, "max": jax.ops.segment_max,
               "min": jax.ops.segment_min}[reduce_op]
     neutral = {"add": 0.0, "max": -jnp.inf, "min": jnp.inf}[reduce_op]
     vals = jnp.where(res.valid, vals, jnp.asarray(neutral, vals.dtype))
+    # in_pos is monotone for LB (slot order) and THREAD (CSR order) but
+    # TWC returns order[in_pos] (grouped by size class), where the
+    # sorted-indices fast path would be unsound
     out = seg_fn(vals, res.in_pos, num_segments=frontier.capacity,
-                 indices_are_sorted=True)
+                 indices_are_sorted=(strategy != "TWC"))
     if init is not None:
         out = jnp.where(frontier.valid_mask, out, init)
     return out
@@ -355,16 +412,29 @@ class IntersectResult(NamedTuple):
     total: jax.Array      # () int32 global intersection count
 
 
+@B.register("segment_search", B.XLA)
+def _segment_search_xla(haystack: jax.Array, lo: jax.Array, hi: jax.Array,
+                        needles: jax.Array) -> jax.Array:
+    return _searchsorted_segment(haystack, lo, hi, needles)
+
+
 def segmented_intersect(graph: Graph, fa: SparseFrontier, fb: SparseFrontier,
-                        cap_out: int, use_kernel: bool = False
+                        cap_out: int, *, backend: Optional[str] = None,
+                        use_kernel: Optional[bool] = None
                         ) -> IntersectResult:
     """Intersect neighbor lists of paired items from two frontiers.
 
     Adjacency lists must be sorted (graph.from_edge_list guarantees it).
     Strategy: expand the *smaller* list of each pair (LB), binary-search each
     element in the larger list (SmallLarge scheme; TwoSmall is subsumed since
-    a binary probe of a tiny list is equally cheap on the VPU).
+    a binary probe of a tiny list is equally cheap on the VPU). The
+    expansion runs through the "advance" registry entry (so the fused
+    Pallas kernel also serves intersection), the probe through
+    "segment_search", the output compaction through "compact".
     """
+    bk = B.resolve(backend, use_kernel)
+    if graph.num_edges == 0:
+        bk = B.XLA
     valid_pair = fa.valid_mask & fb.valid_mask
     a = jnp.where(valid_pair, fa.ids, 0)
     b = jnp.where(valid_pair, fb.ids, 0)
@@ -373,29 +443,22 @@ def segmented_intersect(graph: Graph, fa: SparseFrontier, fb: SparseFrontier,
     a_small = deg_a <= deg_b
     small = jnp.where(a_small, a, b)
     large = jnp.where(a_small, b, a)
-    deg_small = jnp.where(a_small, deg_a, deg_b)
-    exp = lb_expand(deg_small, valid_pair, cap_out)
-    pair = exp.in_pos
-    s_vert = small[pair]
+    sizes = jnp.where(valid_pair,
+                      jnp.where(a_small, deg_a, deg_b), 0).astype(jnp.int32)
+    # fused expansion: dst of the small-side advance IS the probe needle
+    expand = B.dispatch("advance", bk)
+    _, needles, _, pair, _, exp_valid, _ = expand(
+        graph.row_offsets, graph.col_indices, small, sizes, cap_out)
     l_vert = large[pair]
-    probe_idx = graph.row_offsets[s_vert] + exp.rank
-    probe_idx = jnp.where(exp.valid, probe_idx, 0)
-    needles = graph.col_indices[probe_idx]
-    if use_kernel:
-        from repro.kernels import ops as kops
-        found = kops.segment_search(graph.col_indices,
-                                    graph.row_offsets[l_vert],
-                                    graph.row_offsets[l_vert + 1], needles)
-    else:
-        found = _searchsorted_segment(graph.col_indices,
-                                      graph.row_offsets[l_vert],
-                                      graph.row_offsets[l_vert + 1], needles)
-    found = found & exp.valid
+    search = B.dispatch("segment_search", bk)
+    found = search(graph.col_indices, graph.row_offsets[l_vert],
+                   graph.row_offsets[l_vert + 1], needles)
+    found = found & exp_valid
     counts = jax.ops.segment_sum(found.astype(jnp.int32), pair,
                                  num_segments=fa.capacity,
                                  indices_are_sorted=True)
-    items, length = compact_values(needles, found, cap_out)
-    pair_c, _ = compact_values(pair, found, cap_out)
+    items, length = compact_values(needles, found, cap_out, backend=bk)
+    pair_c, _ = compact_values(pair, found, cap_out, backend=bk)
     return IntersectResult(items=items, pair_of=pair_c, length=length,
                            counts=counts, total=jnp.sum(counts))
 

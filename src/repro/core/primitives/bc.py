@@ -13,11 +13,12 @@ BSP/TPU translation of the edge-parallel hardwired kernels.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from .. import backend as B
 from ..enactor import run_until
 from ..graph import Graph, edge_list
 
@@ -90,7 +91,12 @@ def _bc_impl(graph: Graph, esrc: jax.Array, src: jax.Array) -> BCResult:
                     depth=fwd.depth, max_level=max_level)
 
 
-def bc(graph: Graph, src: int) -> BCResult:
+def bc(graph: Graph, src: int, *, backend: Optional[str] = None) -> BCResult:
+    """Brandes BC. ``backend`` is accepted for a uniform primitive
+    interface; both phases are whole-edge-list sweeps (scatter/segment
+    algebra) with no dedicated Pallas kernel yet, so the registry resolves
+    both backends to the same XLA sweep."""
+    B.resolve(backend)
     esrc, _ = edge_list(graph)
     return _bc_impl(graph, jnp.asarray(esrc, dtype=jnp.int32),
                     jnp.int32(src))

@@ -16,6 +16,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from .. import backend as B
 from .. import operators as ops
 from ..direction import PULL, PUSH, DirectionParams, decide_direction
 from ..enactor import run_until
@@ -45,10 +46,10 @@ class BFSResult(NamedTuple):
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "direction", "idempotence", "strategy", "record_preds", "use_kernel"))
+    "direction", "idempotence", "strategy", "record_preds", "backend"))
 def _bfs_impl(graph: Graph, src: jax.Array, do_a: float, do_b: float,
               direction: bool, idempotence: bool, strategy: str,
-              record_preds: bool, use_kernel: bool) -> BFSResult:
+              record_preds: bool, backend: str) -> BFSResult:
     n, m = graph.num_vertices, graph.num_edges
     # frontier buffers are edge-capacity: pre-uniquify frontiers hold
     # duplicates (idempotent mode keeps them on purpose), so a vertex-
@@ -78,7 +79,7 @@ def _bfs_impl(graph: Graph, src: jax.Array, do_a: float, do_b: float,
 
         res, _ = ops.advance(graph, st.frontier, cap_e, functor=functor,
                              data={"visited": st.visited}, strategy=strategy,
-                             use_kernel=use_kernel)
+                             backend=backend)
         # apply: set depth (idempotent write — same value for all dups,
         # so no atomics are needed; paper §5.2.1)
         tgt = jnp.where(res.valid, res.dst, n)   # n = out of bounds → drop
@@ -88,12 +89,14 @@ def _bfs_impl(graph: Graph, src: jax.Array, do_a: float, do_b: float,
         else:
             preds = st.preds
         visited = ops.scatter_or(res.dst, res.valid, st.visited)
-        new_frontier = ops.advance_to_vertex_frontier(res, cap_v)
+        new_frontier = ops.advance_to_vertex_frontier(res, cap_v,
+                                                      backend=backend)
         # contract: uniquify (exact unless idempotent mode; idempotent mode
         # uses the cheap hash-culling heuristic and tolerates leftover dups)
         uniq = "hash" if idempotence else "exact"
         new_frontier, _ = ops.filter_frontier(new_frontier, n=n,
-                                              uniquify=uniq, cap=cap_v)
+                                              uniquify=uniq, cap=cap_v,
+                                              backend=backend)
         return st._replace(labels=labels, preds=preds, frontier=new_frontier,
                            dense=visited, visited=visited,
                            n_f=new_frontier.length,
@@ -110,7 +113,7 @@ def _bfs_impl(graph: Graph, src: jax.Array, do_a: float, do_b: float,
                  if record_preds else st.preds)
         visited = st.visited | new_dense.flags
         n_new = new_dense.length.astype(jnp.int32)
-        sparse = new_dense.to_sparse(cap_v)
+        sparse = new_dense.to_sparse(cap_v, backend=backend)
         return st._replace(labels=labels, preds=preds, frontier=sparse,
                            dense=new_dense.flags, visited=visited,
                            n_f=n_new, n_u=st.n_u - n_new, depth=depth1,
@@ -139,9 +142,15 @@ def _bfs_impl(graph: Graph, src: jax.Array, do_a: float, do_b: float,
 def bfs(graph: Graph, src: int, *, direction: bool = True,
         do_a: float = 0.001, do_b: float = 0.2, idempotence: bool = True,
         strategy: str = "LB", record_preds: bool = True,
-        use_kernel: bool = False) -> BFSResult:
-    """Run BFS from ``src``. See module docstring for options."""
+        backend: Optional[str] = None,
+        use_kernel: Optional[bool] = None) -> BFSResult:
+    """Run BFS from ``src``. See module docstring for options.
+
+    ``backend`` selects the operator backend ("xla" | "pallas" | "auto";
+    None defers to the ambient context / REPRO_BACKEND). Resolved here,
+    outside jit, and passed down as a static argument."""
     if direction and not graph.has_csc:
         direction = False
     return _bfs_impl(graph, jnp.int32(src), do_a, do_b, direction,
-                     idempotence, strategy, record_preds, use_kernel)
+                     idempotence, strategy, record_preds,
+                     B.resolve(backend, use_kernel))

@@ -15,11 +15,12 @@ Converges when the edge frontier is empty.
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from .. import backend as B
 from ..enactor import run_until
 from ..graph import Graph, edge_list
 
@@ -75,6 +76,12 @@ def _cc_impl(graph: Graph, src: jax.Array) -> CCResult:
     return CCResult(labels=final.cid, num_components=ncomp, iterations=iters)
 
 
-def connected_components(graph: Graph) -> CCResult:
+def connected_components(graph: Graph, *, backend: Optional[str] = None
+                         ) -> CCResult:
+    """Hooking + pointer-jumping CC. ``backend`` is accepted for a uniform
+    primitive interface; CC is pure scatter/segment algebra with no
+    dedicated Pallas kernel yet, so the registry resolves both backends to
+    the same XLA sweep."""
+    B.resolve(backend)
     src, _ = edge_list(graph)
     return _cc_impl(graph, jnp.asarray(src, dtype=jnp.int32))

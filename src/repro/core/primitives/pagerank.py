@@ -7,19 +7,23 @@ dense sweep) plus a filter that retires converged vertices from the
 frontier. Iteration stops when every vertex has converged (empty frontier)
 or at max_iter.
 
-``use_kernel=True`` routes the contribution sweep through the Pallas CSR
+``backend="pallas"`` routes the contribution sweep through the Pallas CSR
 SpMV kernel (the computation is congruent to SpMV, as the paper notes).
+The ELL pack width is static graph metadata computed at build time
+(``Graph.csc_ell_width``), so the pallas path is jit-clean end to end —
+no host synchronization inside the iteration loop.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from .. import backend as B
 from ..enactor import run_until
-from ..graph import Graph
+from ..graph import Graph, ell_width_for
 
 
 class PRState(NamedTuple):
@@ -34,10 +38,10 @@ class PRResult(NamedTuple):
     iterations: jax.Array
 
 
-@functools.partial(jax.jit, static_argnames=("max_iter", "use_kernel",
+@functools.partial(jax.jit, static_argnames=("max_iter", "backend",
                                              "ell_width"))
 def _pagerank_impl(graph: Graph, damping: jax.Array, tol: jax.Array,
-                   max_iter: int, use_kernel: bool,
+                   max_iter: int, backend: str,
                    ell_width: int) -> PRResult:
     n, m = graph.num_vertices, graph.num_edges
     deg = graph.degrees.astype(jnp.float32)
@@ -45,10 +49,10 @@ def _pagerank_impl(graph: Graph, damping: jax.Array, tol: jax.Array,
                            jnp.arange(m, dtype=jnp.int32), side="right") - 1
 
     def spmv(contrib):
-        if use_kernel:
-            from repro.kernels import ops as kops
-            return kops.csr_spmv(graph.csc_offsets, graph.csc_indices,
-                                 contrib, ell_width=ell_width)
+        if backend == B.PALLAS:
+            kernel_spmv = B.dispatch("spmv", backend)
+            return kernel_spmv(graph.csc_offsets, graph.csc_indices,
+                               contrib, ell_width)
         vals = contrib[graph.csc_indices]
         return jax.ops.segment_sum(vals, seg, num_segments=n,
                                    indices_are_sorted=True)
@@ -72,13 +76,23 @@ def _pagerank_impl(graph: Graph, damping: jax.Array, tol: jax.Array,
 
 
 def pagerank(graph: Graph, *, damping: float = 0.85, tol: float = 0.0,
-             max_iter: int = 20, use_kernel: bool = False) -> PRResult:
+             max_iter: int = 20, backend: Optional[str] = None,
+             use_kernel: Optional[bool] = None,
+             ell_width: Optional[int] = None) -> PRResult:
     assert graph.has_csc, "pagerank uses the CSC transpose"
-    ell_width = 1
-    if use_kernel:
-        import numpy as np
-        in_deg = np.diff(np.asarray(graph.csc_offsets))
-        ell_width = int(np.percentile(in_deg, 95)) if len(in_deg) else 1
-        ell_width = max(min(ell_width, 1024), 1)
+    bk = B.resolve(backend, use_kernel)
+    if ell_width is None:
+        # static graph metadata (computed at build time). Only the pallas
+        # spmv consumes the width, so only that path pays the host-side
+        # fallback for hand-constructed Graphs — still outside jit, so the
+        # impl stays synchronization-free.
+        ell_width = graph.csc_ell_width
+        if ell_width is None:
+            if bk == B.PALLAS:
+                import numpy as np
+                ell_width = ell_width_for(np.diff(np.asarray(
+                    graph.csc_offsets)))
+            else:
+                ell_width = 1
     return _pagerank_impl(graph, jnp.float32(damping), jnp.float32(tol),
-                          max_iter, use_kernel, ell_width)
+                          max_iter, bk, int(ell_width))

@@ -18,6 +18,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from .. import backend as B
 from .. import operators as ops
 from ..enactor import run_until
 from ..frontier import DenseFrontier, SparseFrontier, from_ids
@@ -44,10 +45,10 @@ class SSSPResult(NamedTuple):
 
 
 @functools.partial(jax.jit, static_argnames=("use_delta", "strategy",
-                                             "use_kernel"))
+                                             "backend"))
 def _sssp_impl(graph: Graph, src: jax.Array, delta: jax.Array,
                use_delta: bool, strategy: str,
-               use_kernel: bool) -> SSSPResult:
+               backend: str) -> SSSPResult:
     n, m = graph.num_vertices, graph.num_edges
     dist = jnp.full((n,), INF).at[src].set(0.0)
     preds = jnp.full((n,), -1, jnp.int32)
@@ -57,13 +58,13 @@ def _sssp_impl(graph: Graph, src: jax.Array, delta: jax.Array,
                       n_near=jnp.int32(1), relaxations=jnp.int32(0))
 
     def relax_step(st: SSSPState):
-        frontier = DenseFrontier(st.near).to_sparse(n)
+        frontier = DenseFrontier(st.near).to_sparse(n, backend=backend)
 
         def functor(s, d, e, rank, valid, data):
             return valid, data
 
         res, _ = ops.advance(graph, frontier, m, functor=functor,
-                             strategy=strategy, use_kernel=use_kernel)
+                             strategy=strategy, backend=backend)
         w = graph.edge_values[jnp.where(res.valid, res.edge_id, 0)]
         cand = st.dist[jnp.where(res.valid, res.src, 0)] + w
         # atomicMin replacement: segment-min into dist (paper Update_Label)
@@ -113,7 +114,8 @@ def _sssp_impl(graph: Graph, src: jax.Array, delta: jax.Array,
 
 
 def sssp(graph: Graph, src: int, *, delta: Optional[float] = None,
-         strategy: str = "LB", use_kernel: bool = False) -> SSSPResult:
+         strategy: str = "LB", backend: Optional[str] = None,
+         use_kernel: Optional[bool] = None) -> SSSPResult:
     """Delta-stepping SSSP; ``delta=None`` = auto (avg weight × avg degree
     heuristic from Davidson et al.), ``delta=inf``-like big → Bellman-Ford."""
     assert graph.weighted, "SSSP needs edge weights"
@@ -123,11 +125,12 @@ def sssp(graph: Graph, src: int, *, delta: Optional[float] = None,
         delta = mean_w * avg_deg / 2.0
     use_delta = bool(jnp.isfinite(delta)) and delta > 0
     return _sssp_impl(graph, jnp.int32(src), jnp.float32(delta), use_delta,
-                      strategy, use_kernel)
+                      strategy, B.resolve(backend, use_kernel))
 
 
 def sssp_bellman_ford(graph: Graph, src: int, **kw) -> SSSPResult:
     """Bellman-Ford-style full relaxation (the Ligra comparison baseline)."""
     big = 1e30
     return _sssp_impl(graph, jnp.int32(src), jnp.float32(big), False,
-                      kw.get("strategy", "LB"), kw.get("use_kernel", False))
+                      kw.get("strategy", "LB"),
+                      B.resolve(kw.get("backend"), kw.get("use_kernel")))

@@ -12,12 +12,13 @@ remaining edge (u,v) — each triangle is counted exactly once.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .. import backend as B
 from .. import operators as ops
 from ..frontier import SparseFrontier
 from ..graph import Graph, edge_list, from_edge_list
@@ -44,9 +45,11 @@ def _orient(graph: Graph) -> tuple[Graph, np.ndarray, np.ndarray]:
     return sub, ssrc, sdst
 
 
-def triangle_count(graph: Graph, use_kernel: bool = False) -> TCResult:
+def triangle_count(graph: Graph, *, backend: Optional[str] = None,
+                   use_kernel: Optional[bool] = None) -> TCResult:
     """Exact TC. The graph must be undirected (both edge directions
     present), with sorted neighbor lists (from_edge_list guarantees)."""
+    bk = B.resolve(backend, use_kernel)
     sub, ssrc, sdst = _orient(graph)
     mp = sub.num_edges
     if mp == 0:
@@ -63,8 +66,7 @@ def triangle_count(graph: Graph, use_kernel: bool = False) -> TCResult:
 
     @jax.jit
     def run(sub, fa, fb):
-        res = ops.segmented_intersect(sub, fa, fb, cap_out,
-                                      use_kernel=use_kernel)
+        res = ops.segmented_intersect(sub, fa, fb, cap_out, backend=bk)
         return res.total, res.counts
 
     total, counts = run(sub, fa, fb)
@@ -72,10 +74,12 @@ def triangle_count(graph: Graph, use_kernel: bool = False) -> TCResult:
                     per_edge=counts[:mp], edge_src=ssrc, edge_dst=sdst)
 
 
-def triangle_count_full(graph: Graph, use_kernel: bool = False) -> jax.Array:
+def triangle_count_full(graph: Graph, *, backend: Optional[str] = None,
+                        use_kernel: Optional[bool] = None) -> jax.Array:
     """Unfiltered variant ('tc-intersection-full' in Fig. 25): intersect
     both directions of every edge and divide by 6 — the baseline that
     shows the filter's ~6x workload reduction."""
+    bk = B.resolve(backend, use_kernel)
     src, dst = edge_list(graph)
     m = graph.num_edges
     fa = SparseFrontier(ids=jnp.asarray(src, jnp.int32), length=jnp.int32(m))
@@ -86,8 +90,7 @@ def triangle_count_full(graph: Graph, use_kernel: bool = False) -> jax.Array:
 
     @jax.jit
     def run(graph, fa, fb):
-        res = ops.segmented_intersect(graph, fa, fb, cap_out,
-                                      use_kernel=use_kernel)
+        res = ops.segmented_intersect(graph, fa, fb, cap_out, backend=bk)
         return res.total
 
     return (run(graph, fa, fb) // 6).astype(jnp.int32)

@@ -14,11 +14,12 @@ edges whose source is a hub).
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
+from .. import backend as B
 from ..graph import Graph
 
 
@@ -97,7 +98,13 @@ def _wtf_impl(graph: Graph, src: jax.Array, damping: jax.Array, k: int,
 
 def who_to_follow(graph: Graph, user: int, *, k: int = 1000,
                   damping: float = 0.85, ppr_iters: int = 30,
-                  salsa_iters: int = 10) -> WTFResult:
+                  salsa_iters: int = 10,
+                  backend: Optional[str] = None) -> WTFResult:
+    """WTF pipeline. ``backend`` is accepted for a uniform primitive
+    interface; all three stages are dense segment-sum sweeps with no
+    dedicated Pallas kernel yet, so the registry resolves both backends to
+    the same XLA sweep."""
+    B.resolve(backend)
     assert graph.has_csc
     k = min(k, graph.num_vertices - 1)
     return _wtf_impl(graph, jnp.int32(user), jnp.float32(damping), k,

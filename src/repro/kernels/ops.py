@@ -5,6 +5,12 @@ CPU container they run in interpret mode, which executes the kernel body
 in Python and is the validation contract (tests compare every kernel
 against the ref.py oracle across shape/dtype sweeps).
 
+Every wrapper here registers itself as the ``"pallas"`` implementation of
+its operator hot path in ``repro.core.backend``; the operator layer in
+``repro.core`` dispatches through that registry instead of threading
+``use_kernel`` booleans by hand. This module is imported lazily by the
+registry on the first pallas dispatch.
+
 Set ``REPRO_FORCE_INTERPRET=0`` to attempt native compilation.
 """
 from __future__ import annotations
@@ -14,9 +20,11 @@ from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
+
+from repro.core import backend as B
 
 from . import ref
+from .advance_fused import advance_fused_kernel
 from .filter_compact import filter_compact_kernel
 from .flash_attention import flash_attention_kernel
 from .lb_expand import lb_expand_kernel
@@ -50,6 +58,24 @@ def lb_expand(sizes: jax.Array, cap_out: int) -> KExpansion:
                       total=offsets[-1])
 
 
+@B.register("advance", B.PALLAS)
+def advance_fused(row_offsets: jax.Array, col_indices: jax.Array,
+                  base: jax.Array, sizes: jax.Array, cap_out: int):
+    """Fused LB advance: one pallas_call does the sorted search over the
+    degree prefix sum *and* the CSR gathers (paper §5.1.3 + the §5.3
+    fusion philosophy). Returns (src, dst, edge_id, in_pos, rank, valid,
+    total) — the backend-registry contract shared with the XLA
+    implementation in ``core.operators``."""
+    sizes = sizes.astype(jnp.int32)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(sizes)])
+    src, dst, eid, in_pos, rank, valid, total = advance_fused_kernel(
+        offsets, base.astype(jnp.int32), row_offsets, col_indices, cap_out,
+        interpret=_interpret())
+    return src, dst, eid, in_pos, rank, valid > 0, total
+
+
+@B.register("segment_search", B.PALLAS)
 def segment_search(haystack: jax.Array, lo: jax.Array, hi: jax.Array,
                    needles: jax.Array) -> jax.Array:
     """found[i] = needles[i] in sorted haystack[lo[i]:hi[i])."""
@@ -57,22 +83,27 @@ def segment_search(haystack: jax.Array, lo: jax.Array, hi: jax.Array,
                                  interpret=_interpret()) > 0
 
 
+@B.register("spmv", B.PALLAS)
 def csr_spmv(offsets: jax.Array, indices: jax.Array, x: jax.Array,
-             ell_width: int | None = None) -> jax.Array:
+             ell_width: int) -> jax.Array:
     """Hybrid ELL+COO SpMV over a CSR structure with unit values:
     y[i] = Σ_{e∈row i} x[indices[e]].
 
-    Rows are packed to ELL width (default: covers ≥95% of edges); overflow
-    edges of ultra-high-degree rows fall back to a segment-sum (COO part).
+    Rows are packed to ELL width; overflow edges of ultra-high-degree rows
+    fall back to a segment-sum (COO part). ``ell_width`` is static and must
+    be chosen host-side (``Graph`` computes a 95th-percentile default at
+    build time — see ``Graph.ell_width`` / ``Graph.csc_ell_width``); this
+    function performs no host synchronization and is jit-clean.
     """
+    if ell_width is None:
+        raise ValueError(
+            "csr_spmv requires a static ell_width; use Graph.ell_width / "
+            "Graph.csc_ell_width (computed at build time) or pass one "
+            "explicitly — the old device_get default broke under jit")
     n = offsets.shape[0] - 1
     m = indices.shape[0]
     deg = offsets[1:] - offsets[:-1]
-    if ell_width is None:
-        host_deg = np.asarray(jax.device_get(deg))
-        ell_width = int(np.percentile(host_deg, 95)) if n else 1
-        ell_width = max(min(ell_width, 1024), 1)
-    w = ell_width
+    w = int(ell_width)
     lanes = jnp.arange(w, dtype=jnp.int32)[None, :]
     starts = offsets[:-1, None]
     idx = jnp.minimum(starts + lanes, m - 1)
@@ -91,6 +122,7 @@ def csr_spmv(offsets: jax.Array, indices: jax.Array, x: jax.Array,
     return y
 
 
+@B.register("compact", B.PALLAS)
 def filter_compact(ids: jax.Array, keep: jax.Array):
     """Stable compaction of ids[keep] → (packed, count)."""
     return filter_compact_kernel(ids, keep, interpret=_interpret())

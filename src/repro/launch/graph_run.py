@@ -6,7 +6,7 @@ paper's evaluation does (§7: runtime is GPU-kernel time; MTEPS = edges
 visited / runtime).
 
   PYTHONPATH=src python -m repro.launch.graph_run --graph rmat --scale 14 \
-      --primitives bfs,sssp,pagerank,cc,bc,tc --validate
+      --primitives bfs,sssp,pagerank,cc,bc,tc --validate --backend pallas
 """
 from __future__ import annotations
 
@@ -16,6 +16,7 @@ import time
 import jax
 import numpy as np
 
+from repro.core import backend as B
 from repro.core import graph as G
 from repro.core import ref as R
 from repro.core.primitives import (bc, bfs, connected_components, pagerank,
@@ -36,26 +37,28 @@ def make_graph(kind: str, scale: int, edge_factor: int, seed: int):
     raise ValueError(kind)
 
 
-def run_primitive(name: str, g, src: int, validate: bool):
+def run_primitive(name: str, g, src: int, validate: bool,
+                  backend: str | None = None):
+    bk = B.resolve(backend)
     t0 = time.monotonic()
     edges = g.num_edges
     ok = None
     if name == "bfs":
-        r = bfs(g, src)
+        r = bfs(g, src, backend=bk)
         jax.block_until_ready(r.labels)
         dt = time.monotonic() - t0
         edges = int(r.edges_visited)
         if validate:
             ok = np.array_equal(np.asarray(r.labels), R.bfs_ref(g, src))
     elif name == "sssp":
-        r = sssp(g, src)
+        r = sssp(g, src, backend=bk)
         jax.block_until_ready(r.dist)
         dt = time.monotonic() - t0
         if validate:
             ok = np.allclose(np.asarray(r.dist), R.sssp_ref(g, src),
                              rtol=1e-5)
     elif name == "pagerank":
-        r = pagerank(g, max_iter=20)
+        r = pagerank(g, max_iter=20, backend=bk)
         jax.block_until_ready(r.rank)
         dt = time.monotonic() - t0
         if validate:
@@ -63,7 +66,7 @@ def run_primitive(name: str, g, src: int, validate: bool):
                                                                 iters=20),
                              atol=1e-6)
     elif name == "cc":
-        r = connected_components(g)
+        r = connected_components(g, backend=bk)
         jax.block_until_ready(r.labels)
         dt = time.monotonic() - t0
         if validate:
@@ -72,7 +75,7 @@ def run_primitive(name: str, g, src: int, validate: bool):
             ok = len(np.unique(a)) == len(np.unique(b)) and np.array_equal(
                 a[a == np.arange(len(a))], b[b == np.arange(len(b))])
     elif name == "bc":
-        r = bc(g, src)
+        r = bc(g, src, backend=bk)
         jax.block_until_ready(r.bc)
         dt = time.monotonic() - t0
         edges = 2 * g.num_edges
@@ -80,20 +83,21 @@ def run_primitive(name: str, g, src: int, validate: bool):
             ok = np.allclose(np.asarray(r.bc), R.bc_ref(g, src),
                              rtol=1e-3, atol=1e-3)
     elif name == "tc":
-        r = triangle_count(g)
+        r = triangle_count(g, backend=bk)
         jax.block_until_ready(r.total)
         dt = time.monotonic() - t0
         if validate:
             ok = int(r.total) == R.tc_ref(g)
     elif name == "wtf":
-        r = who_to_follow(g, src, k=min(1000, g.num_vertices - 1))
+        r = who_to_follow(g, src, k=min(1000, g.num_vertices - 1),
+                          backend=bk)
         jax.block_until_ready(r.auth_scores)
         dt = time.monotonic() - t0
         ok = None
     else:
         raise ValueError(name)
     mteps = edges / dt / 1e6
-    return dt, mteps, ok
+    return dt, mteps, ok, bk
 
 
 def main(argv=None):
@@ -107,21 +111,26 @@ def main(argv=None):
                     default="bfs,sssp,pagerank,cc,bc,tc")
     ap.add_argument("--validate", action="store_true")
     ap.add_argument("--src", type=int, default=None)
+    ap.add_argument("--backend", default=None,
+                    choices=(B.XLA, B.PALLAS, B.AUTO),
+                    help="operator backend (default: ambient context / "
+                         "REPRO_BACKEND env / xla)")
     args = ap.parse_args(argv)
 
     g = make_graph(args.graph, args.scale, args.edge_factor, args.seed)
     deg = np.diff(np.asarray(g.row_offsets))
     src = args.src if args.src is not None else int(np.argmax(deg))
     print(f"[graph] {args.graph} scale={args.scale}: n={g.num_vertices} "
-          f"m={g.num_edges} max_deg={deg.max()} src={src}")
+          f"m={g.num_edges} max_deg={deg.max()} src={src} "
+          f"backend={B.resolve(args.backend)}")
 
     failures = 0
     for name in args.primitives.split(","):
-        dt, mteps, ok = run_primitive(name.strip(), g, src,
-                                      args.validate)
+        dt, mteps, ok, bk = run_primitive(name.strip(), g, src,
+                                          args.validate, args.backend)
         status = "" if ok is None else ("  PASS" if ok else "  FAIL")
         print(f"[graph] {name:9s} {dt*1000:9.2f} ms  {mteps:9.2f} MTEPS"
-              f"{status}")
+              f"  backend={bk}{status}")
         if ok is False:
             failures += 1
     if failures:

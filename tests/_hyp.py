@@ -1,0 +1,39 @@
+"""Optional-hypothesis shim for the test suite.
+
+``from _hyp import given, settings, st`` behaves exactly like importing
+from hypothesis when it is installed (requirements-dev.txt). When it is
+missing, only the property-based tests skip — the plain unit tests in the
+same module still collect and run, instead of the whole module being
+skipped at import time.
+"""
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+    HealthCheck = None
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_a, **_k):
+        def deco(fn):
+            return fn
+        return deco
+
+    class _AnyStrategy:
+        """Absorbs any strategy-construction expression at decoration
+        time (st.lists(st.integers(0, 5)), @st.composite, ...)."""
+
+        def __call__(self, *a, **k):
+            return self
+
+        def __getattr__(self, name):
+            return self
+
+    st = _AnyStrategy()
+
+strategies = st

@@ -3,13 +3,16 @@ distributed tests spawn subprocesses that set their own device count."""
 import numpy as np
 import pytest
 
-from hypothesis import HealthCheck, settings
-
-settings.register_profile(
-    "repro", max_examples=15, deadline=None,
-    suppress_health_check=[HealthCheck.too_slow,
-                           HealthCheck.data_too_large])
-settings.load_profile("repro")
+try:
+    from hypothesis import HealthCheck, settings
+except ImportError:          # optional dev dependency (requirements-dev.txt)
+    settings = None
+else:
+    settings.register_profile(
+        "repro", max_examples=15, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow,
+                               HealthCheck.data_too_large])
+    settings.load_profile("repro")
 
 
 @pytest.fixture(scope="session")

@@ -1,0 +1,308 @@
+"""Backend dispatch + xla/pallas parity matrix.
+
+The pallas backend runs in interpret mode off-TPU (the correctness
+contract). Every combination of advance strategy × input kind, every
+filter uniquify mode, and segmented intersection must produce *identical*
+results on both backends, on both graph fixtures, including empty
+frontiers and cap overflow.
+"""
+import os
+import subprocess
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import backend as B
+from repro.core import frontier as F
+from repro.core import graph as G
+from repro.core import operators as ops
+from repro.core.primitives import bfs, pagerank, sssp, triangle_count
+
+GRAPHS = ["rmat", "grid"]
+
+
+@pytest.fixture(params=GRAPHS)
+def any_graph(request, rmat_graph, grid_graph):
+    return {"rmat": rmat_graph, "grid": grid_graph}[request.param]
+
+
+def _assert_advance_equal(rx, rp):
+    for name in ("src", "dst", "edge_id", "in_pos", "valid"):
+        a = np.asarray(getattr(rx, name))
+        b = np.asarray(getattr(rp, name))
+        assert np.array_equal(a, b), name
+    assert int(rx.total) == int(rp.total)
+
+
+# ---------------------------------------------------------------------------
+# selection mechanics
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_precedence(monkeypatch):
+    monkeypatch.delenv(B.ENV_VAR, raising=False)
+    assert B.resolve() == B.XLA                      # default
+    monkeypatch.setenv(B.ENV_VAR, "pallas")
+    assert B.resolve() == B.PALLAS                   # env var
+    with B.use_backend("xla"):
+        assert B.resolve() == B.XLA                  # context beats env
+        with B.use_backend("pallas"):
+            assert B.resolve() == B.PALLAS           # innermost wins
+        assert B.resolve(backend="pallas") == B.PALLAS   # per-call beats all
+    assert B.resolve() == B.PALLAS
+
+
+def test_resolve_auto_off_tpu(monkeypatch):
+    monkeypatch.delenv(B.ENV_VAR, raising=False)
+    want = B.PALLAS if jax.default_backend() == "tpu" else B.XLA
+    assert B.resolve("auto") == want
+    monkeypatch.setenv(B.ENV_VAR, "auto")
+    assert B.resolve() == want
+
+
+def test_resolve_rejects_unknown():
+    with pytest.raises(ValueError):
+        B.resolve("cuda")
+    with pytest.raises(ValueError):
+        with B.use_backend("nope"):
+            pass
+
+
+def test_use_kernel_alias_deprecated():
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        assert B.resolve(use_kernel=True) == B.PALLAS
+        assert B.resolve(use_kernel=False) == B.XLA
+    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+
+
+def test_registry_has_both_backends():
+    for op in ("advance", "compact", "segment_search"):
+        assert B.registered(op, B.XLA), op
+        assert B.registered(op, B.PALLAS), op
+    # ops without a pallas impl fall back to xla instead of raising
+    assert B.dispatch("compact", B.PALLAS) is not B.dispatch("compact",
+                                                            B.XLA)
+
+
+def test_env_var_reaches_operators(monkeypatch, rmat_graph):
+    monkeypatch.setenv(B.ENV_VAR, "pallas")
+    fr = F.from_ids([0, 1], 8)
+    res, _ = ops.advance(rmat_graph, fr, 256)
+    monkeypatch.setenv(B.ENV_VAR, "xla")
+    ref, _ = ops.advance(rmat_graph, fr, 256)
+    _assert_advance_equal(ref, res)
+
+
+# ---------------------------------------------------------------------------
+# advance parity: all strategies × input kinds
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("strategy", ["LB", "TWC", "THREAD"])
+@pytest.mark.parametrize("input_kind", ["vertex", "edge"])
+def test_advance_parity(any_graph, strategy, input_kind):
+    if strategy == "THREAD" and input_kind == "edge":
+        pytest.skip("THREAD supports vertex frontiers only")
+    g = any_graph
+    n, m = g.num_vertices, g.num_edges
+    if input_kind == "vertex":
+        ids = [0, 1, 5, n // 2, n - 1]
+    else:
+        ids = [0, 1, m // 3, m - 1]
+    fr = F.from_ids(ids, 64)
+    rx, _ = ops.advance(g, fr, 4096, input_kind=input_kind,
+                        strategy=strategy, backend="xla")
+    rp, _ = ops.advance(g, fr, 4096, input_kind=input_kind,
+                        strategy=strategy, backend="pallas")
+    _assert_advance_equal(rx, rp)
+    assert int(rx.total) > 0
+
+
+@pytest.mark.parametrize("strategy", ["LB", "TWC", "THREAD"])
+def test_advance_parity_empty_frontier(any_graph, strategy):
+    fr = F.empty(32)
+    rx, _ = ops.advance(any_graph, fr, 512, strategy=strategy,
+                        backend="xla")
+    rp, _ = ops.advance(any_graph, fr, 512, strategy=strategy,
+                        backend="pallas")
+    _assert_advance_equal(rx, rp)
+    assert int(rp.total) == 0
+    assert not np.asarray(rp.valid).any()
+
+
+@pytest.mark.parametrize("strategy", ["LB", "TWC"])
+def test_advance_parity_cap_overflow(any_graph, strategy):
+    """cap_out smaller than the true expansion: both backends keep the
+    same leading slots and report the same (larger) total."""
+    g = any_graph
+    n = g.num_vertices
+    fr = F.from_ids(list(range(0, n, 2))[:48], 64)
+    cap = 8          # guaranteed overflow
+    rx, _ = ops.advance(g, fr, cap, strategy=strategy, backend="xla")
+    rp, _ = ops.advance(g, fr, cap, strategy=strategy, backend="pallas")
+    _assert_advance_equal(rx, rp)
+    assert int(rx.total) > cap
+
+
+def test_advance_parity_with_functor(any_graph):
+    def functor(s, d, e, rank, valid, data):
+        return valid & (d % 2 == 0), data + 1
+
+    rx, dx = ops.advance(any_graph, F.from_ids([0, 3, 7], 16), 1024,
+                         functor=functor, data=jnp.int32(0), backend="xla")
+    rp, dp = ops.advance(any_graph, F.from_ids([0, 3, 7], 16), 1024,
+                         functor=functor, data=jnp.int32(0),
+                         backend="pallas")
+    _assert_advance_equal(rx, rp)
+    assert int(dx) == int(dp) == 1
+
+
+# ---------------------------------------------------------------------------
+# filter parity: all uniquify modes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("uniquify", ["none", "exact", "hash"])
+def test_filter_parity(any_graph, uniquify):
+    n = any_graph.num_vertices
+    rng = np.random.default_rng(11)
+    ids = rng.integers(0, n, size=200).tolist()
+    fr = F.from_ids(ids, 256)
+    ox, _ = ops.filter_frontier(fr, n=n, uniquify=uniquify, backend="xla")
+    op_, _ = ops.filter_frontier(fr, n=n, uniquify=uniquify,
+                                 backend="pallas")
+    assert np.array_equal(np.asarray(ox.ids), np.asarray(op_.ids))
+    assert int(ox.length) == int(op_.length)
+
+
+@pytest.mark.parametrize("uniquify", ["none", "exact", "hash"])
+def test_filter_parity_empty(uniquify):
+    fr = F.empty(64)
+    ox, _ = ops.filter_frontier(fr, n=16, uniquify=uniquify, backend="xla")
+    op_, _ = ops.filter_frontier(fr, n=16, uniquify=uniquify,
+                                 backend="pallas")
+    assert int(ox.length) == int(op_.length) == 0
+    assert np.array_equal(np.asarray(ox.ids), np.asarray(op_.ids))
+
+
+def test_filter_parity_cap_overflow():
+    fr = F.from_ids(list(range(100)), 128)
+    ox, _ = ops.filter_frontier(fr, cap=16, backend="xla")
+    op_, _ = ops.filter_frontier(fr, cap=16, backend="pallas")
+    assert np.array_equal(np.asarray(ox.ids), np.asarray(op_.ids))
+    assert int(ox.length) == int(op_.length) == 16
+
+
+def test_filter_parity_functor_predicate(any_graph):
+    def functor(ids, valid, data):
+        return ids % 3 == 0, data
+
+    fr = F.from_ids(list(range(60)), 64)
+    ox, _ = ops.filter_frontier(fr, functor=functor, backend="xla")
+    op_, _ = ops.filter_frontier(fr, functor=functor, backend="pallas")
+    assert np.array_equal(np.asarray(ox.ids), np.asarray(op_.ids))
+
+
+# ---------------------------------------------------------------------------
+# segmented intersection parity
+# ---------------------------------------------------------------------------
+
+
+def test_segmented_intersect_parity(any_graph):
+    g = any_graph
+    n = g.num_vertices
+    rng = np.random.default_rng(5)
+    a = rng.integers(0, n, size=32)
+    b = rng.integers(0, n, size=32)
+    fa, fb = F.from_ids(a, 64), F.from_ids(b, 64)
+    rx = ops.segmented_intersect(g, fa, fb, 2048, backend="xla")
+    rp = ops.segmented_intersect(g, fa, fb, 2048, backend="pallas")
+    assert int(rx.total) == int(rp.total)
+    assert int(rx.length) == int(rp.length)
+    assert np.array_equal(np.asarray(rx.items), np.asarray(rp.items))
+    assert np.array_equal(np.asarray(rx.pair_of), np.asarray(rp.pair_of))
+    assert np.array_equal(np.asarray(rx.counts), np.asarray(rp.counts))
+
+
+def test_segmented_intersect_parity_empty(any_graph):
+    fa, fb = F.empty(16), F.empty(16)
+    rx = ops.segmented_intersect(any_graph, fa, fb, 128, backend="xla")
+    rp = ops.segmented_intersect(any_graph, fa, fb, 128, backend="pallas")
+    assert int(rx.total) == int(rp.total) == 0
+    assert np.array_equal(np.asarray(rx.items), np.asarray(rp.items))
+
+
+def test_segmented_intersect_parity_cap_overflow(rmat_graph):
+    g = rmat_graph
+    deg = np.diff(np.asarray(g.row_offsets))
+    hubs = np.argsort(deg)[-16:]          # high-degree pairs → big output
+    fa = F.from_ids(hubs[:8], 8)
+    fb = F.from_ids(hubs[8:], 8)
+    rx = ops.segmented_intersect(g, fa, fb, 4, backend="xla")
+    rp = ops.segmented_intersect(g, fa, fb, 4, backend="pallas")
+    assert int(rx.total) == int(rp.total)
+    assert np.array_equal(np.asarray(rx.items), np.asarray(rp.items))
+
+
+# ---------------------------------------------------------------------------
+# primitive-level parity (the whole enactor loop under REPRO_BACKEND)
+# ---------------------------------------------------------------------------
+
+
+def test_bfs_parity_env(monkeypatch, rmat_graph, high_degree_src):
+    monkeypatch.setenv(B.ENV_VAR, "pallas")
+    rp = bfs(rmat_graph, high_degree_src)
+    monkeypatch.setenv(B.ENV_VAR, "xla")
+    rx = bfs(rmat_graph, high_degree_src)
+    assert np.array_equal(np.asarray(rx.labels), np.asarray(rp.labels))
+
+
+def test_sssp_parity(rmat_graph, high_degree_src):
+    rx = sssp(rmat_graph, high_degree_src, backend="xla")
+    rp = sssp(rmat_graph, high_degree_src, backend="pallas")
+    np.testing.assert_allclose(np.asarray(rx.dist), np.asarray(rp.dist))
+
+
+def test_pagerank_parity_and_jit_clean(rmat_graph):
+    rx = pagerank(rmat_graph, backend="xla")
+    rp = pagerank(rmat_graph, backend="pallas")
+    np.testing.assert_allclose(np.asarray(rx.rank), np.asarray(rp.rank),
+                               atol=1e-6)
+    # jit-clean: the pallas impl must trace with abstract values only (a
+    # hidden device_get would raise a ConcretizationTypeError here)
+    from repro.core.primitives.pagerank import _pagerank_impl
+    jax.eval_shape(
+        lambda g: _pagerank_impl(g, jnp.float32(0.85), jnp.float32(0.0),
+                                 max_iter=2, backend="pallas",
+                                 ell_width=rmat_graph.csc_ell_width),
+        rmat_graph)
+
+
+def test_tc_parity(grid_graph):
+    rx = triangle_count(grid_graph, backend="xla")
+    rp = triangle_count(grid_graph, backend="pallas")
+    assert int(rx.total) == int(rp.total)
+
+
+def test_graph_ell_width_metadata(rmat_graph):
+    assert isinstance(rmat_graph.ell_width, int)
+    assert isinstance(rmat_graph.csc_ell_width, int)
+    assert 1 <= rmat_graph.ell_width <= 1024
+    # metadata survives pytree round trips (jit boundaries)
+    leaves, treedef = jax.tree_util.tree_flatten(rmat_graph)
+    g2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert g2.ell_width == rmat_graph.ell_width
+    assert g2.csc_ell_width == rmat_graph.csc_ell_width
+
+
+def test_use_kernel_alias_still_routes(rmat_graph):
+    fr = F.from_ids([1, 2, 3], 16)
+    with pytest.deprecated_call():
+        rp, _ = ops.advance(rmat_graph, fr, 1024, use_kernel=True)
+    rx, _ = ops.advance(rmat_graph, fr, 1024, backend="xla")
+    _assert_advance_equal(rx, rp)

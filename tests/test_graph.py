@@ -1,7 +1,7 @@
 """Graph container + generator invariants (unit + property)."""
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hyp import given, st
 
 from repro.core import graph as G
 

@@ -2,7 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+from _hyp import given, settings, st
 
 from repro.models.mamba2 import (_causal_conv, ssd_chunked, ssd_decode)
 

@@ -3,7 +3,7 @@ neighborhood reduce — unit + property tests vs. brute force."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, strategies as st
+from _hyp import given, st
 
 from repro.core import frontier as F
 from repro.core import graph as G

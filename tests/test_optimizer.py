@@ -2,7 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+from _hyp import given, settings, st
 
 from repro.train.optimizer import (QBLOCK, QTensor, adamw,
                                    dequantize_blockwise, global_norm,

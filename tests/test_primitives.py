@@ -4,7 +4,7 @@ import collections
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import graph as G
 from repro.core import ref as R

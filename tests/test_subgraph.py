@@ -1,7 +1,7 @@
 """Subgraph matching vs brute-force oracle."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import graph as G
 from repro.core.primitives.subgraph import subgraph_match, \
