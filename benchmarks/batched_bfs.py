@@ -1,0 +1,77 @@
+"""Batched-BFS serving throughput — the PR 2 headline measurement.
+
+Serves a fixed query stream through ``launch.graph_serve.serve`` at
+batch sizes B ∈ {1, 8, 32} on both backends and writes BENCH_pr2.json
+next to the PR 1 single-source baseline (BENCH_pr1.json). The xla rows
+use the same rmat scale-14 graph as PR 1; the pallas rows use a smaller
+graph because interpret mode executes the kernel grid on the host
+(documented in the row — it is a correctness backend off-TPU, not a
+fast path).
+
+  PYTHONPATH=src python -m benchmarks.batched_bfs --json BENCH_pr2.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+
+import jax
+import numpy as np
+
+from repro.core import graph as G
+from repro.core.primitives import bfs_batch
+from repro.launch.graph_serve import serve
+
+BATCHES = (1, 8, 32)
+REQUESTS = 32
+
+
+def bench_backend(backend: str, scale: int, edge_factor: int = 16,
+                  seed: int = 0):
+    g = G.rmat(scale, edge_factor, seed=seed, weighted=True)
+    rng = np.random.default_rng(seed)
+    rows = []
+    for b in BATCHES:
+        # pay the trace outside the timed run
+        w = bfs_batch(g, rng.integers(0, g.num_vertices, b),
+                      backend=backend)
+        jax.block_until_ready(w.labels)
+        sources = rng.integers(0, g.num_vertices, REQUESTS)
+        stats = serve(g, "bfs", sources, b, backend)
+        stats["scale"] = scale
+        rows.append(stats)
+        print(f"[batched_bfs] backend={backend} scale={scale} B={b}: "
+              f"{stats['qps']} q/s (p50 {stats['lat_ms_p50']} ms)")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_pr2.json")
+    ap.add_argument("--xla-scale", type=int, default=14)
+    ap.add_argument("--pallas-scale", type=int, default=10)
+    args = ap.parse_args(argv)
+    out = {
+        "pr": 2,
+        "note": "batched multi-source BFS serving throughput; compare "
+                "the B=1 rows against the single-source bfs rows in "
+                "BENCH_pr1.json",
+        "requests": REQUESTS,
+        "jax_backend": jax.default_backend(),
+        "interpret_pallas": jax.default_backend() != "tpu",
+        "platform": platform.platform(),
+        "results": (bench_backend("xla", args.xla_scale)
+                    + bench_backend("pallas", args.pallas_scale)),
+    }
+    with open(args.json, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"[batched_bfs] wrote {args.json}")
+
+
+def run():
+    main([])
+
+
+if __name__ == "__main__":
+    main()

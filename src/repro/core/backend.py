@@ -78,13 +78,16 @@ def resolve(backend: Optional[str] = None,
 
     ``backend`` is the per-call override; ``use_kernel`` is the deprecated
     boolean alias kept for one release (True -> pallas, False -> xla).
+    Passing ``use_kernel`` always warns, even alongside an explicit
+    ``backend`` (which wins).
     """
-    if backend is None and use_kernel is not None:
+    if use_kernel is not None:
         warnings.warn(
             "use_kernel= is deprecated; pass backend='pallas'/'xla' or use "
             "repro.core.backend.use_backend(...)", DeprecationWarning,
             stacklevel=3)
-        backend = PALLAS if use_kernel else XLA
+        if backend is None:
+            backend = PALLAS if use_kernel else XLA
     if backend is None:
         stack = _stack()
         backend = stack[-1] if stack else None
@@ -117,14 +120,16 @@ def register(op: str, backend: str):
     return deco
 
 
-def dispatch(op: str, backend: Optional[str] = None,
-             use_kernel: Optional[bool] = None) -> Callable:
+def dispatch(op: str, backend: Optional[str] = None) -> Callable:
     """Look up the implementation of ``op`` for the resolved backend.
 
     Falls back to the "xla" implementation when the backend has none
-    registered (e.g. ops with no Pallas kernel yet).
+    registered (e.g. ops with no Pallas kernel yet). Internal call sites
+    pass ``backend`` only — the deprecated ``use_kernel`` alias lives
+    solely in the public wrappers, which resolve it (with a warning)
+    before anything reaches the registry.
     """
-    bk = resolve(backend, use_kernel)
+    bk = resolve(backend)
     if bk in _LAZY_PROVIDERS and bk not in _loaded:
         importlib.import_module(_LAZY_PROVIDERS[bk])
         _loaded.add(bk)

@@ -8,6 +8,15 @@ and an `Enactor` that runs bulk-synchronous operator steps until convergence
 primitive shares the same convergence contract and can be jitted end-to-end
 (one XLA program per primitive — the whole-primitive analogue of the paper's
 kernel-fusion philosophy).
+
+`run_until_any` is the batched variant: state carries a leading batch axis
+(one lane per concurrent traversal — the frontier-matrix view of
+GraphBLAST's multi-source BFS), `cond` returns a per-lane flag, and the
+loop runs while *any* lane is active. Converged lanes are frozen: the body
+still computes them (BSP lockstep — static shapes rule out early exit) but
+the driver discards their updates, so stragglers finish while finished
+lanes are bit-stable no-ops. Per-lane iteration counts come back alongside
+the wall-clock iteration count.
 """
 from __future__ import annotations
 
@@ -39,3 +48,51 @@ def run_until(cond: Callable[[S], jax.Array],
 
     (final, iters) = jax.lax.while_loop(_cond, _body, (state, jnp.int32(0)))
     return final, iters
+
+
+def select_lanes(mask: jax.Array, on_true: S, on_false: S) -> S:
+    """Per-lane pytree select: ``mask`` (B,) broadcast against every
+    leaf's leading batch axis. The one place the batched engine's
+    lane-choice contract lives (freezing, mixed-direction picks, relax
+    vs bucket-pop)."""
+
+    def pick(a, c):
+        m = mask.reshape(mask.shape + (1,) * (a.ndim - 1))
+        return jnp.where(m, a, c)
+
+    return jax.tree_util.tree_map(pick, on_true, on_false)
+
+
+def run_until_any(cond: Callable[[S], jax.Array],
+                  body: Callable[[S], S],
+                  state: S,
+                  max_iter: int) -> tuple[S, jax.Array, jax.Array]:
+    """Batched BSP loop: iterate while any lane of ``cond(state)`` holds.
+
+    Contract:
+      * every leaf of ``state`` has a leading batch axis of size B;
+      * ``cond(state)`` returns a (B,) bool of still-active lanes;
+      * ``body(state)`` computes one step for ALL lanes (lockstep).
+
+    The driver masks the update per lane: a lane whose ``cond`` was False
+    entering the step keeps its old state bit-for-bit (frozen), so a
+    converged traversal is a no-op while ragged stragglers continue.
+    Returns (final_state, per_lane_iters (B,) int32, iterations_run ()).
+    """
+
+    # the (B,) active mask rides in the carry so cond runs once per step
+    def _cond(carry):
+        _, _, it, active = carry
+        return jnp.logical_and(jnp.any(active), it < max_iter)
+
+    def _body(carry):
+        st, lane_iters, it, active = carry
+        st = select_lanes(active, body(st), st)      # freeze finished lanes
+        return (st, lane_iters + active.astype(jnp.int32), it + 1,
+                cond(st))
+
+    active0 = cond(state)
+    lanes0 = jnp.zeros(active0.shape, jnp.int32)
+    final, lane_iters, iters, _ = jax.lax.while_loop(
+        _cond, _body, (state, lanes0, jnp.int32(0), active0))
+    return final, lane_iters, iters

@@ -12,6 +12,18 @@ is a fixed-capacity buffer:
 
 Conversions between the two are first-class, because the paper's
 direction-optimized traversal is precisely a representation switch.
+
+Batched variants carry a leading batch axis — B concurrent traversals
+sharing one topology (the frontier-*matrix* view of GraphBLAST's
+multi-source BFS):
+
+  BatchedSparseFrontier: ids (B, cap) int32, lengths (B,) — one compacted
+                         work queue per lane.
+  BatchedDenseFrontier:  flags (B, n) bool — one bitmap per lane.
+
+They obey the same conversion/compaction contract as the single-lane
+classes; compaction vmaps the registered "compact" backend implementation
+(xla scatter or the Pallas filter_compact kernel) over the batch axis.
 """
 from __future__ import annotations
 
@@ -86,6 +98,81 @@ class DenseFrontier:
         return compact_indices(self.flags, capacity, backend=backend)
 
 
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class BatchedSparseFrontier:
+    """B compacted queues over one shared topology."""
+
+    ids: jax.Array       # (B, capacity) int32; entries >= lengths[b] INVALID
+    lengths: jax.Array   # (B,) int32
+
+    def tree_flatten(self):
+        return (self.ids, self.lengths), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def batch(self) -> int:
+        return int(self.ids.shape[0])
+
+    @property
+    def capacity(self) -> int:
+        return int(self.ids.shape[1])
+
+    @property
+    def valid_mask(self) -> jax.Array:
+        lane = jnp.arange(self.capacity, dtype=jnp.int32)[None, :]
+        return lane < self.lengths[:, None]
+
+    def to_dense(self, n: int) -> "BatchedDenseFrontier":
+        safe = jnp.where(self.valid_mask, self.ids, 0)
+        flags = jnp.zeros((self.batch, n), bool)
+        flags = jax.vmap(lambda f, s, v: f.at[s].max(v, mode="drop"))(
+            flags, safe, self.valid_mask)
+        return BatchedDenseFrontier(flags)
+
+    def lane(self, b) -> SparseFrontier:
+        """View one lane as a single-source frontier (squeeze)."""
+        return SparseFrontier(ids=self.ids[b], length=self.lengths[b])
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class BatchedDenseFrontier:
+    """B bitmap frontiers over all n vertices."""
+
+    flags: jax.Array    # (B, n) bool
+
+    def tree_flatten(self):
+        return (self.flags,), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def batch(self) -> int:
+        return int(self.flags.shape[0])
+
+    @property
+    def n(self) -> int:
+        return int(self.flags.shape[1])
+
+    @property
+    def lengths(self) -> jax.Array:
+        return jnp.sum(self.flags.astype(jnp.int32), axis=1)
+
+    def to_sparse(self, capacity: int | None = None,
+                  backend: Optional[str] = None) -> BatchedSparseFrontier:
+        capacity = self.n if capacity is None else capacity
+        return compact_indices_batch(self.flags, capacity, backend=backend)
+
+    def lane(self, b) -> DenseFrontier:
+        return DenseFrontier(self.flags[b])
+
+
 def from_ids(ids, capacity: int) -> SparseFrontier:
     """Build a SparseFrontier from a (short) list/array of IDs."""
     ids = jnp.asarray(ids, dtype=jnp.int32).reshape(-1)
@@ -138,17 +225,61 @@ def compact_values(values: jax.Array, mask: jax.Array,
     Dispatches through the backend registry ("xla" scatter compaction or
     the Pallas ``filter_compact`` kernel); overflow past ``capacity`` is
     dropped, the tail is ``fill``. Backend resolution happens at trace
-    time — inside jitted code pass ``backend`` explicitly.
+    time — inside jitted code pass ``backend`` explicitly. A squeezed
+    batch-of-1 call — one clamp/pad code path with the batched variant.
+    """
+    buf, lengths, _ = compact_values_batch(values[None, :], mask[None, :],
+                                           capacity, fill=fill,
+                                           backend=backend)
+    return buf[0], lengths[0]
+
+
+def from_ids_batch(srcs, capacity: int) -> BatchedSparseFrontier:
+    """One single-vertex lane per entry of ``srcs`` — the typical seed
+    frontier of a multi-source traversal (duplicates allowed: lanes are
+    independent)."""
+    srcs = jnp.asarray(srcs, dtype=jnp.int32).reshape(-1)
+    b = srcs.shape[0]
+    buf = jnp.full((b, capacity), INVALID, dtype=jnp.int32)
+    buf = buf.at[:, 0].set(srcs)
+    return BatchedSparseFrontier(ids=buf, lengths=jnp.ones((b,), jnp.int32))
+
+
+def compact_values_batch(values: jax.Array, mask: jax.Array,
+                         capacity: int, fill=INVALID,
+                         backend: Optional[str] = None
+                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-lane compaction of ``values[b][mask[b]]`` → fixed (B, capacity).
+
+    Returns (buf, lengths, totals): ``lengths`` is clamped to ``capacity``
+    while ``totals`` is the true pre-clamp count, so callers can detect
+    capacity overflow per lane instead of silently dropping work. Same
+    backend registry entry ("compact") as the single-lane path, vmapped
+    over the batch axis (for "pallas" the batching rule turns the
+    filter_compact kernel's grid into a (B, tiles) grid).
     """
     impl = B.dispatch("compact", backend)
-    packed, total = impl(values, mask)
-    n = packed.shape[0]
-    length = jnp.minimum(total, capacity).astype(jnp.int32)
+    packed, totals = jax.vmap(impl)(values, mask)
+    n = packed.shape[1]
+    lengths = jnp.minimum(totals, capacity).astype(jnp.int32)
     if capacity <= n:
-        out = packed[:capacity]
+        out = packed[:, :capacity]
     else:
-        out = jnp.concatenate(
-            [packed, jnp.full((capacity - n,), INVALID, packed.dtype)])
-    lane = jnp.arange(capacity, dtype=jnp.int32)
-    return jnp.where(lane < length, out,
-                     jnp.asarray(fill, values.dtype)), length
+        pad = jnp.full((packed.shape[0], capacity - n), INVALID,
+                       packed.dtype)
+        out = jnp.concatenate([packed, pad], axis=1)
+    lane = jnp.arange(capacity, dtype=jnp.int32)[None, :]
+    out = jnp.where(lane < lengths[:, None], out,
+                    jnp.asarray(fill, values.dtype))
+    return out, lengths, totals.astype(jnp.int32)
+
+
+def compact_indices_batch(mask: jax.Array, capacity: int,
+                          backend: Optional[str] = None
+                          ) -> BatchedSparseFrontier:
+    """Per-lane stream-compaction of ``nonzero(mask[b])``."""
+    b, n = mask.shape
+    vals = jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32)[None, :], (b, n))
+    buf, lengths, _ = compact_values_batch(vals, mask, capacity,
+                                           backend=backend)
+    return BatchedSparseFrontier(ids=buf, lengths=lengths)

@@ -46,19 +46,30 @@ Backends:
   implementation — it is the deliberately-unbalanced ablation baseline —
   and silently runs the XLA path on every backend. ``use_kernel=`` is
   kept as a deprecated alias (True→"pallas", False→"xla") for one
-  release. Design notes: DESIGN.md.
+  release on the public entry points only; it always emits a
+  DeprecationWarning. Design notes: DESIGN.md.
+
+Batched operators:
+  ``advance_batch`` / ``filter_frontier_batch`` / ``advance_pull_batch``
+  run B traversal lanes over one shared topology in a single program —
+  the frontier-matrix view (GraphBLAST's multi-source BFS). Hot paths
+  dispatch through "advance_batch" (vmapped XLA expansion, or the fused
+  Pallas kernel with an explicit (B, tiles) grid) and vmapped "compact".
+  Functors keep their single-lane signature and are vmapped over the
+  batch axis, so BFS/SSSP share one functor between the single- and
+  multi-source paths; problem-data pytrees carry a leading batch axis.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from . import backend as B
-from .frontier import (INVALID, DenseFrontier, SparseFrontier, compact_values,
-                       from_ids)
+from .frontier import (INVALID, BatchedDenseFrontier, BatchedSparseFrontier,
+                       DenseFrontier, SparseFrontier, compact_values,
+                       compact_values_batch)
 from .graph import Graph
 
 # ---------------------------------------------------------------------------
@@ -230,6 +241,86 @@ def advance(graph: Graph, frontier: SparseFrontier, cap_out: int,
     return res, data
 
 
+@B.register("advance_batch", B.XLA)
+def _advance_batch_xla(row_offsets: jax.Array, col_indices: jax.Array,
+                       base: jax.Array, sizes: jax.Array, cap_out: int):
+    """XLA batched advance: vmap the single-lane expansion over the batch
+    axis (base/sizes (B, cap_in)); the CSR is closed over and shared.
+    Contract mirrors "advance" with batched outputs and totals (B,)."""
+    return jax.vmap(
+        lambda b, s: _advance_xla(row_offsets, col_indices, b, s, cap_out)
+    )(base, sizes)
+
+
+def advance_batch(graph: Graph, frontier: BatchedSparseFrontier,
+                  cap_out: int, functor: Optional[Callable] = None,
+                  data=None, input_kind: str = "vertex",
+                  strategy: str = "LB", *,
+                  backend: Optional[str] = None
+                  ) -> tuple[AdvanceResult, object]:
+    """Multi-source push advance: expand B frontier lanes in one program.
+
+    Same semantics as ``advance`` per lane. ``functor`` keeps its
+    single-lane signature and is vmapped over the batch axis, so problem
+    data must carry a leading batch axis on every leaf. Returns an
+    ``AdvanceResult`` whose fields are (B, cap_out) with ``total`` (B,).
+    """
+    bk = B.resolve(backend)
+    if strategy == "THREAD":
+        # batched ThreadExpand: one shared O(m) sweep, per-lane masks
+        assert input_kind == "vertex", "THREAD supports vertex frontiers"
+        n, m = graph.num_vertices, graph.num_edges
+        flags = frontier.to_dense(n).flags               # (B, n)
+        slot = jnp.arange(m, dtype=jnp.int32)
+        src_of = jnp.searchsorted(graph.row_offsets, slot,
+                                  side="right").astype(jnp.int32) - 1
+        valid = flags[:, src_of] if m else jnp.zeros((frontier.batch, 0),
+                                                     bool)
+        res = AdvanceResult(
+            src=jnp.where(valid, src_of[None, :], INVALID)[:, :cap_out],
+            dst=jnp.where(valid, graph.col_indices[None, :],
+                          INVALID)[:, :cap_out],
+            edge_id=jnp.where(valid, slot[None, :], INVALID)[:, :cap_out],
+            in_pos=jnp.broadcast_to(src_of[None, :],
+                                    valid.shape)[:, :cap_out],
+            valid=valid[:, :cap_out],
+            total=jnp.sum(valid.astype(jnp.int32), axis=1))
+    else:
+        if strategy not in ("LB", "TWC"):
+            raise ValueError(f"unknown strategy {strategy}")
+        if graph.num_edges == 0:
+            bk = B.XLA
+        # the helper is pure indexing on ids/valid_mask, so it serves the
+        # batched frontier unchanged
+        base, valid_in = _frontier_base_vertices(graph, frontier,
+                                                 input_kind)
+        deg = graph.row_offsets[base + 1] - graph.row_offsets[base]
+        sizes = jnp.where(valid_in, deg, 0).astype(jnp.int32)
+        order = None
+        if strategy == "TWC":
+            order = jax.vmap(twc_order)(sizes)
+            base = jnp.take_along_axis(base, order, axis=1)
+            sizes = jnp.take_along_axis(sizes, order, axis=1)
+        expand = B.dispatch("advance_batch", bk)
+        src, dst, edge_id, in_pos, rank, valid, total = expand(
+            graph.row_offsets, graph.col_indices, base, sizes, cap_out)
+        if order is not None:
+            in_pos = jnp.take_along_axis(order, in_pos, axis=1)
+        res = AdvanceResult(src=src, dst=dst, edge_id=edge_id,
+                            in_pos=in_pos, valid=valid, total=total)
+    if functor is None:
+        return res, data
+    rank_arg = (jnp.zeros_like(res.src) if strategy == "THREAD" else rank)
+    keep, data = jax.vmap(functor)(res.src, res.dst, res.edge_id, rank_arg,
+                                   res.valid, data)
+    keep = keep & res.valid
+    return AdvanceResult(src=jnp.where(keep, res.src, INVALID),
+                         dst=jnp.where(keep, res.dst, INVALID),
+                         edge_id=jnp.where(keep, res.edge_id, INVALID),
+                         in_pos=res.in_pos, valid=keep,
+                         total=res.total), data
+
+
 def advance_to_vertex_frontier(res: AdvanceResult,
                                cap: Optional[int] = None,
                                backend: Optional[str] = None
@@ -247,6 +338,17 @@ def advance_to_edge_frontier(res: AdvanceResult,
     buf, length = compact_values(res.edge_id, res.valid, cap,
                                  backend=backend)
     return SparseFrontier(ids=buf, length=length)
+
+
+def advance_to_vertex_frontier_batch(res: AdvanceResult,
+                                     cap: Optional[int] = None,
+                                     backend: Optional[str] = None
+                                     ) -> BatchedSparseFrontier:
+    """Per-lane compaction of a batched advance's destinations."""
+    cap = int(res.dst.shape[1]) if cap is None else cap
+    buf, lengths, _ = compact_values_batch(res.dst, res.valid, cap,
+                                           backend=backend)
+    return BatchedSparseFrontier(ids=buf, lengths=lengths)
 
 
 def advance_pull(graph: Graph, unvisited: DenseFrontier,
@@ -277,9 +379,53 @@ def advance_pull(graph: Graph, unvisited: DenseFrontier,
     return DenseFrontier(new_flags), preds
 
 
+def advance_pull_batch(graph: Graph, unvisited: BatchedDenseFrontier,
+                       current: BatchedDenseFrontier,
+                       return_preds: bool = False):
+    """Per-lane pull advance: vmap the dense CSC sweep over the batch
+    axis (one shared edge-list sweep per lane, lockstep)."""
+    def fn(u, c):
+        return advance_pull(graph, DenseFrontier(u), DenseFrontier(c),
+                            return_preds=return_preds)
+
+    if return_preds:
+        out, preds = jax.vmap(fn)(unvisited.flags, current.flags)
+        return BatchedDenseFrontier(out.flags), preds
+    out = jax.vmap(fn)(unvisited.flags, current.flags)
+    return BatchedDenseFrontier(out.flags)
+
+
 # ---------------------------------------------------------------------------
 # filter
 # ---------------------------------------------------------------------------
+
+
+def _uniquify_exact(ids: jax.Array, keep: jax.Array, n: int) -> jax.Array:
+    """Global scatter winner test: exactly one surviving lane per id.
+    Single-lane; the batched filter vmaps it."""
+    capacity = ids.shape[0]
+    slot_of = jnp.full((n,), INVALID, jnp.int32)
+    lane = jnp.arange(capacity, dtype=jnp.int32)
+    safe = jnp.where(keep, ids, 0)
+    slot_of = slot_of.at[safe].max(jnp.where(keep, lane, INVALID),
+                                   mode="drop")
+    return keep & (slot_of[safe] == lane)
+
+
+def _uniquify_hash(ids: jax.Array, keep: jax.Array,
+                   hash_size: int) -> jax.Array:
+    """Heuristic history-hashtable culling (§5.2.1): removes only some
+    duplicates, never valid items. Single-lane; vmapped by the batched
+    filter."""
+    capacity = ids.shape[0]
+    lane = jnp.arange(capacity, dtype=jnp.int32)
+    slot = jnp.where(keep, ids % hash_size, hash_size)
+    h_id = jnp.full((hash_size + 1,), INVALID, jnp.int32)
+    h_ln = jnp.full((hash_size + 1,), INVALID, jnp.int32)
+    h_id = h_id.at[slot].set(ids, mode="drop")
+    h_ln = h_ln.at[slot].set(lane, mode="drop")
+    dup = (h_id[slot] == ids) & (h_ln[slot] != lane)
+    return keep & ~dup
 
 
 def filter_frontier(frontier: SparseFrontier,
@@ -307,24 +453,48 @@ def filter_frontier(frontier: SparseFrontier,
         keep = keep & fkeep
     if uniquify == "exact":
         assert n is not None, "exact uniquify needs vertex count n"
-        slot_of = jnp.full((n,), INVALID, jnp.int32)
-        lane = jnp.arange(frontier.capacity, dtype=jnp.int32)
-        safe = jnp.where(keep, ids, 0)
-        slot_of = slot_of.at[safe].max(jnp.where(keep, lane, INVALID),
-                                       mode="drop")
-        keep = keep & (slot_of[safe] == lane)
+        keep = _uniquify_exact(ids, keep, n)
     elif uniquify == "hash":
-        lane = jnp.arange(frontier.capacity, dtype=jnp.int32)
-        slot = jnp.where(keep, ids % hash_size, hash_size)
-        h_id = jnp.full((hash_size + 1,), INVALID, jnp.int32)
-        h_ln = jnp.full((hash_size + 1,), INVALID, jnp.int32)
-        h_id = h_id.at[slot].set(ids, mode="drop")
-        h_ln = h_ln.at[slot].set(lane, mode="drop")
-        dup = (h_id[slot] == ids) & (h_ln[slot] != lane)
-        keep = keep & ~dup
+        keep = _uniquify_hash(ids, keep, hash_size)
     cap = frontier.capacity if cap is None else cap
     buf, length = compact_values(ids, keep, cap, backend=bk)
     return SparseFrontier(ids=buf, length=length), data
+
+
+def filter_frontier_batch(frontier: BatchedSparseFrontier,
+                          functor: Optional[Callable] = None, data=None,
+                          n: Optional[int] = None, uniquify: str = "none",
+                          cap: Optional[int] = None,
+                          hash_size: int = 1024,
+                          backend: Optional[str] = None
+                          ) -> tuple[BatchedSparseFrontier, object,
+                                     jax.Array]:
+    """Per-lane filter: predicate + compaction (+ uniquification).
+
+    Same semantics as ``filter_frontier`` per lane; ``functor`` keeps its
+    single-lane signature and is vmapped (batched problem data). Returns
+    ``(frontier, data, overflow)`` where ``overflow`` (B,) counts the
+    surviving items dropped by the output-capacity clamp — nonzero only
+    when heuristic uniquification leaves more than ``cap`` duplicates, and
+    the signal that a capped run must not be trusted silently.
+    """
+    bk = B.resolve(backend)
+    ids, valid = frontier.ids, frontier.valid_mask
+    keep = valid
+    if functor is not None:
+        fkeep, data = jax.vmap(functor)(ids, valid, data)
+        keep = keep & fkeep
+    if uniquify == "exact":
+        assert n is not None, "exact uniquify needs vertex count n"
+        keep = jax.vmap(lambda i, k: _uniquify_exact(i, k, n))(ids, keep)
+    elif uniquify == "hash":
+        keep = jax.vmap(lambda i, k: _uniquify_hash(i, k, hash_size))(
+            ids, keep)
+    cap = frontier.capacity if cap is None else cap
+    buf, lengths, totals = compact_values_batch(ids, keep, cap, backend=bk)
+    overflow = jnp.maximum(totals - cap, 0)
+    return (BatchedSparseFrontier(ids=buf, lengths=lengths), data,
+            overflow)
 
 
 def partition_frontier(frontier: SparseFrontier, predicate: jax.Array,

@@ -1,11 +1,12 @@
-from .bfs import bfs
-from .sssp import sssp
+from .bfs import bfs, bfs_batch
+from .sssp import sssp, sssp_batch
 from .pagerank import pagerank
 from .cc import connected_components
-from .bc import bc
+from .bc import bc, bc_batch
 from .tc import triangle_count
 from .wtf import who_to_follow
 from .subgraph import subgraph_match
 
-__all__ = ["bfs", "sssp", "pagerank", "connected_components", "bc",
-           "triangle_count", "who_to_follow", "subgraph_match"]
+__all__ = ["bfs", "bfs_batch", "sssp", "sssp_batch", "pagerank",
+           "connected_components", "bc", "bc_batch", "triangle_count",
+           "who_to_follow", "subgraph_match"]

@@ -1,4 +1,5 @@
-"""Betweenness centrality (paper §6.3) — Brandes's two-phase formulation.
+"""Betweenness centrality (paper §6.3) — Brandes's two-phase formulation,
+batched over sources.
 
 Phase 1 (forward): level-synchronous BFS that also accumulates sigma
 (shortest-path counts) — an advance identical to BFS plus a compute step
@@ -8,95 +9,178 @@ dependency deltas (Jia et al. / Sariyüce et al. edge-parallel method, which
 is what Gunrock's implementation maps to).
 
 Both phases are whole-edge-list sweeps per level masked by depth — the
-BSP/TPU translation of the edge-parallel hardwired kernels.
+BSP/TPU translation of the edge-parallel hardwired kernels. The engine is
+*batched*: ``_bc_impl`` runs B Brandes passes at once with a leading batch
+axis on every array and per-lane level counters (``run_until_any`` freezes
+shallow lanes while deep ones finish — sources have ragged BFS depths).
+
+True BC is a sum over all sources (the paper's flagship multi-source
+workload). ``bc(graph)`` with no ``src`` computes it *exactly* by
+accumulating batched passes in chunks of ``chunk`` roots:
+ceil(n/chunk) invocations of one cached trace, each a (chunk, n) pass,
+padded lanes masked to weight 0. ``samples=k`` instead draws k distinct
+roots uniformly and scales by n/k (the Brandes-Pich estimator); the same
+chunking runs underneath.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .. import backend as B
-from ..enactor import run_until
+from ..enactor import run_until_any
 from ..graph import Graph, edge_list
 
 
 class FwdState(NamedTuple):
-    depth: jax.Array     # (n,) int32
-    sigma: jax.Array     # (n,) float32
-    level: jax.Array     # () int32
-    n_f: jax.Array       # () int32
+    depth: jax.Array     # (B, n) int32
+    sigma: jax.Array     # (B, n) float32
+    level: jax.Array     # (B,) int32
+    n_f: jax.Array       # (B,) int32
+
+
+class BwdState(NamedTuple):
+    delta: jax.Array     # (B, n) float32
+    lvl: jax.Array       # (B,) int32
 
 
 class BCResult(NamedTuple):
-    bc: jax.Array
+    bc: jax.Array        # per-source dependency (single) / accumulated sum
     sigma: jax.Array
     depth: jax.Array
     max_level: jax.Array
 
 
+class MultiBCResult(NamedTuple):
+    bc: jax.Array          # (n,) exact or estimated centrality
+    num_sources: jax.Array  # () int32 roots accumulated
+    chunks: int            # python int: number of batched passes run
+
+
 @jax.jit
-def _bc_impl(graph: Graph, esrc: jax.Array, src: jax.Array) -> BCResult:
+def _bc_impl(graph: Graph, esrc: jax.Array, srcs: jax.Array,
+             weights: jax.Array) -> BCResult:
+    """B Brandes passes in one program. ``weights`` (B,) scales each
+    lane's dependency contribution (0 masks a padding lane)."""
     n, m = graph.num_vertices, graph.num_edges
+    b = srcs.shape[0]
     edst = graph.col_indices
+    lane = jnp.arange(b)
 
     # ---- forward: BFS levels + sigma accumulation -----------------------
     def fwd_body(st: FwdState):
         lvl = st.level
         # edges from the current level into undiscovered territory
-        u_on = st.depth[esrc] == lvl
-        v_new = st.depth[edst] < 0
+        u_on = st.depth[:, esrc] == lvl[:, None]
+        v_new = st.depth[:, edst] < 0
         disc = u_on & v_new
-        depth = st.depth.at[jnp.where(disc, edst, n)].set(lvl + 1,
-                                                          mode="drop")
+        depth = jax.vmap(lambda dp, dc, l1: dp.at[
+            jnp.where(dc, edst, n)].set(l1, mode="drop"))(
+                st.depth, disc, lvl + 1)
         # sigma flows along all edges u(level) -> v(level+1)
-        tree = u_on & (depth[edst] == lvl + 1)
-        add = jnp.where(tree, st.sigma[esrc], 0.0)
-        sigma = st.sigma.at[jnp.where(tree, edst, n)].add(add, mode="drop")
-        n_f = jnp.sum((depth == lvl + 1).astype(jnp.int32))
+        tree = u_on & (depth[:, edst] == (lvl + 1)[:, None])
+        add = jnp.where(tree, st.sigma[:, esrc], 0.0)
+        sigma = jax.vmap(lambda sg, tr, ad: sg.at[
+            jnp.where(tr, edst, n)].add(ad, mode="drop"))(
+                st.sigma, tree, add)
+        n_f = jnp.sum(depth == (lvl + 1)[:, None], axis=1,
+                      dtype=jnp.int32)
         return FwdState(depth=depth, sigma=sigma, level=lvl + 1, n_f=n_f)
 
-    depth0 = jnp.full((n,), -1, jnp.int32).at[src].set(0)
-    sigma0 = jnp.zeros((n,)).at[src].set(1.0)
-    fwd, _ = run_until(lambda st: st.n_f > 0, fwd_body,
-                       FwdState(depth=depth0, sigma=sigma0,
-                                level=jnp.int32(0), n_f=jnp.int32(1)),
-                       max_iter=n + 1)
-    max_level = fwd.level  # one past the deepest level
+    depth0 = jnp.full((b, n), -1, jnp.int32).at[lane, srcs].set(0)
+    sigma0 = jnp.zeros((b, n)).at[lane, srcs].set(1.0)
+    fwd, _, _ = run_until_any(
+        lambda st: st.n_f > 0, fwd_body,
+        FwdState(depth=depth0, sigma=sigma0,
+                 level=jnp.zeros((b,), jnp.int32),
+                 n_f=jnp.ones((b,), jnp.int32)),
+        max_iter=n + 1)
+    max_level = fwd.level  # (B,) one past each lane's deepest level
 
     # ---- backward: dependency accumulation ------------------------------
-    def bwd_body(carry):
-        delta, lvl = carry
-        u_on = fwd.depth[esrc] == lvl
-        v_next = fwd.depth[edst] == lvl + 1
-        tree = u_on & v_next & (fwd.sigma[edst] > 0)
+    def bwd_body(st: BwdState):
+        u_on = fwd.depth[:, esrc] == st.lvl[:, None]
+        v_next = fwd.depth[:, edst] == (st.lvl + 1)[:, None]
+        tree = u_on & v_next & (fwd.sigma[:, edst] > 0)
         contrib = jnp.where(
             tree,
-            fwd.sigma[esrc] / jnp.maximum(fwd.sigma[edst], 1e-30)
-            * (1.0 + delta[edst]), 0.0)
-        delta = delta.at[jnp.where(tree, esrc, n)].add(contrib, mode="drop")
-        return delta, lvl - 1
+            fwd.sigma[:, esrc]
+            / jnp.maximum(fwd.sigma[:, edst], 1e-30)
+            * (1.0 + st.delta[:, edst]), 0.0)
+        delta = jax.vmap(lambda dl, tr, co: dl.at[
+            jnp.where(tr, esrc, n)].add(co, mode="drop"))(
+                st.delta, tree, contrib)
+        return BwdState(delta=delta, lvl=st.lvl - 1)
 
-    def bwd_cond(carry):
-        _, lvl = carry
-        return lvl >= 0
-
-    delta = jnp.zeros((n,))
-    (delta, _) = jax.lax.while_loop(bwd_cond, bwd_body,
-                                    (delta, max_level - 1))
-    bc = delta.at[src].set(0.0)
-    return BCResult(bc=bc.astype(jnp.float32), sigma=fwd.sigma,
-                    depth=fwd.depth, max_level=max_level)
+    bwd, _, _ = run_until_any(
+        lambda st: st.lvl >= 0, bwd_body,
+        BwdState(delta=jnp.zeros((b, n)), lvl=max_level - 1),
+        max_iter=n + 1)
+    bc_lanes = bwd.delta.at[lane, srcs].set(0.0)
+    return BCResult(bc=(bc_lanes * weights[:, None]).astype(jnp.float32),
+                    sigma=fwd.sigma, depth=fwd.depth, max_level=max_level)
 
 
-def bc(graph: Graph, src: int, *, backend: Optional[str] = None) -> BCResult:
-    """Brandes BC. ``backend`` is accepted for a uniform primitive
-    interface; both phases are whole-edge-list sweeps (scatter/segment
-    algebra) with no dedicated Pallas kernel yet, so the registry resolves
-    both backends to the same XLA sweep."""
+def bc_batch(graph: Graph, srcs, weights=None, *,
+             backend: Optional[str] = None) -> BCResult:
+    """One batched Brandes pass: lane i holds the per-source dependency
+    of ``srcs[i]`` (scaled by ``weights[i]`` if given). ``backend`` is
+    accepted for a uniform primitive interface; both phases are
+    whole-edge-list sweeps (scatter/segment algebra) with no dedicated
+    Pallas kernel yet, so the registry resolves both backends to the
+    same XLA sweep."""
     B.resolve(backend)
+    srcs = jnp.asarray(srcs, dtype=jnp.int32).reshape(-1)
+    if weights is None:
+        weights = jnp.ones(srcs.shape, jnp.float32)
     esrc, _ = edge_list(graph)
-    return _bc_impl(graph, jnp.asarray(esrc, dtype=jnp.int32),
-                    jnp.int32(src))
+    return _bc_impl(graph, jnp.asarray(esrc, dtype=jnp.int32), srcs,
+                    jnp.asarray(weights, jnp.float32))
+
+
+def bc(graph: Graph, src: Optional[int] = None, *, chunk: int = 32,
+       samples: Optional[int] = None, seed: int = 0,
+       backend: Optional[str] = None):
+    """Betweenness centrality.
+
+    * ``src`` given — one Brandes pass; returns the per-source dependency
+      ``BCResult`` (a squeezed batch-of-1 call, like bfs/sssp).
+    * ``src=None`` — **exact BC**: accumulate every vertex as a root, in
+      batched chunks of ``chunk`` sources (one cached trace, ceil(n/chunk)
+      invocations). Returns ``MultiBCResult``.
+    * ``samples=k`` — sampled BC: k distinct uniform roots, contributions
+      scaled by n/k (unbiased estimator). Returns ``MultiBCResult``.
+    """
+    if src is not None:
+        r = bc_batch(graph, [src], backend=backend)
+        return jax.tree_util.tree_map(lambda x: x[0], r)
+    n = graph.num_vertices
+    if samples is None:
+        roots = np.arange(n, dtype=np.int32)
+        scale = 1.0
+    else:
+        samples = min(samples, n)
+        roots = np.random.default_rng(seed).choice(
+            n, size=samples, replace=False).astype(np.int32)
+        scale = n / max(samples, 1)
+    chunk = max(1, min(chunk, len(roots))) if len(roots) else 1
+    B.resolve(backend)
+    esrc = jnp.asarray(edge_list(graph)[0], dtype=jnp.int32)  # once
+    total = jnp.zeros((n,), jnp.float32)
+    chunks = 0
+    for lo in range(0, len(roots), chunk):
+        sl = roots[lo:lo + chunk]
+        pad = chunk - len(sl)
+        # fixed (chunk,) shape so every invocation reuses one trace;
+        # padding lanes repeat root 0 with weight 0
+        srcs = np.concatenate([sl, np.zeros(pad, np.int32)])
+        w = np.concatenate([np.full(len(sl), scale, np.float32),
+                            np.zeros(pad, np.float32)])
+        r = _bc_impl(graph, esrc, jnp.asarray(srcs), jnp.asarray(w))
+        total = total + jnp.sum(r.bc, axis=0)
+        chunks += 1
+    return MultiBCResult(bc=total, num_sources=jnp.int32(len(roots)),
+                         chunks=chunks)

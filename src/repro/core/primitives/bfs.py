@@ -6,7 +6,18 @@
     hash/bitmask culling filter (Fig. 19 ablation)
   * predecessor recording
 
-The whole search is one jitted XLA while-loop (kernel-fusion philosophy).
+The engine is *multi-source*: ``bfs_batch`` runs B traversals over one
+shared topology as a single jitted batched BSP loop (the frontier-matrix
+view — GraphBLAST's multi-source BFS), with per-lane convergence masking
+in ``run_until_any`` so ragged lanes freeze as they finish. The
+single-source ``bfs`` is a squeezed batch-of-1 call — one code path.
+
+Frontier capacities: edge frontiers (the raw advance output) are sized at
+m, but vertex frontiers are *post-uniquify* and need only min(n, m) slots.
+Heuristic uniquification (idempotent mode) can leave more duplicates than
+that; the per-lane ``overflow`` counter in ``BFSResult`` records any
+discoveries dropped by the clamp so capped runs are detectable instead of
+silent (a nonzero count means rerun with ``idempotence=False``).
 """
 from __future__ import annotations
 
@@ -19,22 +30,24 @@ import jax.numpy as jnp
 from .. import backend as B
 from .. import operators as ops
 from ..direction import PULL, PUSH, DirectionParams, decide_direction
-from ..enactor import run_until
-from ..frontier import DenseFrontier, SparseFrontier, from_ids
+from ..enactor import run_until_any, select_lanes
+from ..frontier import (BatchedDenseFrontier, BatchedSparseFrontier,
+                        from_ids_batch)
 from ..graph import Graph
 
 
 class BFSState(NamedTuple):
-    labels: jax.Array        # (n,) int32 depth, -1 unvisited
-    preds: jax.Array         # (n,) int32 predecessor, -1 none
-    frontier: SparseFrontier  # sparse rep (push)
-    dense: jax.Array         # (n,) bool current frontier bitmap (pull)
-    visited: jax.Array       # (n,) bool status-check array (§5.2.1)
-    n_f: jax.Array           # () int32 current frontier size
-    n_u: jax.Array           # () int32 unvisited count
-    depth: jax.Array         # () int32
-    mode: jax.Array          # () int32 PUSH/PULL
-    pull_iters: jax.Array    # () int32 (for characterization)
+    labels: jax.Array        # (B, n) int32 depth, -1 unvisited
+    preds: jax.Array         # (B, n) int32 predecessor, -1 none
+    frontier: BatchedSparseFrontier  # sparse rep (push), (B, cap_v)
+    dense: jax.Array         # (B, n) bool current frontier bitmap (pull)
+    visited: jax.Array       # (B, n) bool status-check array (§5.2.1)
+    n_f: jax.Array           # (B,) int32 current frontier size
+    n_u: jax.Array           # (B,) int32 unvisited count
+    depth: jax.Array         # (B,) int32
+    mode: jax.Array          # (B,) int32 PUSH/PULL
+    pull_iters: jax.Array    # (B,) int32 (for characterization)
+    overflow: jax.Array      # (B,) int32 discoveries dropped by cap_v clamp
 
 
 class BFSResult(NamedTuple):
@@ -43,76 +56,87 @@ class BFSResult(NamedTuple):
     iterations: jax.Array
     pull_iters: jax.Array
     edges_visited: jax.Array
+    overflow: jax.Array
 
 
 @functools.partial(jax.jit, static_argnames=(
     "direction", "idempotence", "strategy", "record_preds", "backend"))
-def _bfs_impl(graph: Graph, src: jax.Array, do_a: float, do_b: float,
+def _bfs_impl(graph: Graph, srcs: jax.Array, do_a: float, do_b: float,
               direction: bool, idempotence: bool, strategy: str,
               record_preds: bool, backend: str) -> BFSResult:
     n, m = graph.num_vertices, graph.num_edges
-    # frontier buffers are edge-capacity: pre-uniquify frontiers hold
-    # duplicates (idempotent mode keeps them on purpose), so a vertex-
-    # capacity buffer could silently drop discoveries (paper: frontiers
-    # are sized by worst-case expansion)
-    cap_v = m
+    b = srcs.shape[0]
+    # edge frontiers are worst-case expansion (m); vertex frontiers are
+    # post-uniquify and need only min(n, m) — overflow past that is
+    # counted per lane instead of silently sized away
+    cap_v = min(n, m)
     cap_e = m
     params = DirectionParams(do_a=do_a, do_b=do_b, enabled=direction)
 
-    labels = jnp.full((n,), -1, jnp.int32).at[src].set(0)
-    preds = jnp.full((n,), -1, jnp.int32)
-    visited = jnp.zeros((n,), bool).at[src].set(True)
-    frontier = from_ids(src[None], cap_v)
+    lane = jnp.arange(b)
+    labels = jnp.full((b, n), -1, jnp.int32).at[lane, srcs].set(0)
+    preds = jnp.full((b, n), -1, jnp.int32)
+    visited = jnp.zeros((b, n), bool).at[lane, srcs].set(True)
+    frontier = from_ids_batch(srcs, cap_v)
     state = BFSState(labels=labels, preds=preds, frontier=frontier,
                      dense=visited, visited=visited,
-                     n_f=jnp.int32(1), n_u=jnp.int32(n - 1),
-                     depth=jnp.int32(0), mode=PUSH,
-                     pull_iters=jnp.int32(0))
+                     n_f=jnp.ones((b,), jnp.int32),
+                     n_u=jnp.full((b,), n - 1, jnp.int32),
+                     depth=jnp.zeros((b,), jnp.int32),
+                     mode=jnp.full((b,), PUSH),
+                     pull_iters=jnp.zeros((b,), jnp.int32),
+                     overflow=jnp.zeros((b,), jnp.int32))
 
     def push_step(st: BFSState):
         depth1 = st.depth + 1
 
         def functor(s, d, e, rank, valid, data):
-            # cond functor: discover unvisited destinations
+            # cond functor: discover unvisited destinations (single-lane
+            # signature — advance_batch vmaps it over the batch axis)
             unseen = ~data["visited"][jnp.where(valid, d, 0)]
             return valid & unseen, data
 
-        res, _ = ops.advance(graph, st.frontier, cap_e, functor=functor,
-                             data={"visited": st.visited}, strategy=strategy,
-                             backend=backend)
+        res, _ = ops.advance_batch(graph, st.frontier, cap_e,
+                                   functor=functor,
+                                   data={"visited": st.visited},
+                                   strategy=strategy, backend=backend)
         # apply: set depth (idempotent write — same value for all dups,
         # so no atomics are needed; paper §5.2.1)
         tgt = jnp.where(res.valid, res.dst, n)   # n = out of bounds → drop
-        labels = st.labels.at[tgt].set(depth1, mode="drop")
+        labels = jax.vmap(lambda l, t, d1: l.at[t].set(d1, mode="drop"))(
+            st.labels, tgt, depth1)
         if record_preds:
-            preds = st.preds.at[tgt].set(res.src, mode="drop")
+            preds = jax.vmap(lambda p, t, s: p.at[t].set(s, mode="drop"))(
+                st.preds, tgt, res.src)
         else:
             preds = st.preds
-        visited = ops.scatter_or(res.dst, res.valid, st.visited)
-        new_frontier = ops.advance_to_vertex_frontier(res, cap_v,
-                                                      backend=backend)
-        # contract: uniquify (exact unless idempotent mode; idempotent mode
-        # uses the cheap hash-culling heuristic and tolerates leftover dups)
+        visited = jax.vmap(ops.scatter_or)(res.dst, res.valid, st.visited)
+        # contract: compact the full expansion, then uniquify down into
+        # the cap_v vertex frontier (exact unless idempotent mode;
+        # idempotent mode uses the cheap hash-culling heuristic, whose
+        # leftover duplicates are the only way to overflow cap_v)
+        wide = ops.advance_to_vertex_frontier_batch(res, cap_e,
+                                                    backend=backend)
         uniq = "hash" if idempotence else "exact"
-        new_frontier, _ = ops.filter_frontier(new_frontier, n=n,
-                                              uniquify=uniq, cap=cap_v,
-                                              backend=backend)
-        return st._replace(labels=labels, preds=preds, frontier=new_frontier,
-                           dense=visited, visited=visited,
-                           n_f=new_frontier.length,
-                           n_u=st.n_u - new_frontier.length, depth=depth1)
+        new_frontier, _, ovf = ops.filter_frontier_batch(
+            wide, n=n, uniquify=uniq, cap=cap_v, backend=backend)
+        return st._replace(labels=labels, preds=preds,
+                           frontier=new_frontier, dense=visited,
+                           visited=visited, n_f=new_frontier.lengths,
+                           n_u=st.n_u - new_frontier.lengths, depth=depth1,
+                           overflow=st.overflow + ovf)
 
     def pull_step(st: BFSState):
         depth1 = st.depth + 1
-        current = DenseFrontier(st.dense)
-        unvisited = DenseFrontier(~st.visited)
-        new_dense, pull_preds = ops.advance_pull(graph, unvisited, current,
-                                                 return_preds=True)
-        labels = jnp.where(new_dense.flags, depth1, st.labels)
+        current = BatchedDenseFrontier(st.dense)
+        unvisited = BatchedDenseFrontier(~st.visited)
+        new_dense, pull_preds = ops.advance_pull_batch(
+            graph, unvisited, current, return_preds=True)
+        labels = jnp.where(new_dense.flags, depth1[:, None], st.labels)
         preds = (jnp.where(new_dense.flags, pull_preds, st.preds)
                  if record_preds else st.preds)
         visited = st.visited | new_dense.flags
-        n_new = new_dense.length.astype(jnp.int32)
+        n_new = new_dense.lengths
         sparse = new_dense.to_sparse(cap_v, backend=backend)
         return st._replace(labels=labels, preds=preds, frontier=sparse,
                            dense=new_dense.flags, visited=visited,
@@ -120,23 +144,64 @@ def _bfs_impl(graph: Graph, src: jax.Array, do_a: float, do_b: float,
                            pull_iters=st.pull_iters + 1)
 
     def body(st: BFSState):
-        mode = decide_direction(st.mode, st.n_f, st.n_u, n, m, params)
-        st = st._replace(mode=mode)
         if not direction:
             return push_step(st)
-        # dense rep of the *current* frontier is required by pull; push_step
-        # keeps `dense` = visited, so rebuild it from the sparse frontier.
+        mode = jax.vmap(
+            lambda md, nf, nu: decide_direction(md, nf, nu, n, m, params)
+        )(st.mode, st.n_f, st.n_u)
+        st = st._replace(mode=mode)
+        # dense rep of the *current* frontier is required by pull;
+        # push_step keeps `dense` = visited, so rebuild it.
         dense_cur = st.frontier.to_dense(n).flags
         st = st._replace(dense=dense_cur)
-        return jax.lax.cond(mode == PULL, pull_step, push_step, st)
+        if b == 1:
+            # batch-of-1 (the single-source path): a real branch, so the
+            # idle direction costs nothing
+            return jax.lax.cond(mode[0] == PULL, pull_step, push_step, st)
 
-    final, iters = run_until(lambda st: st.n_f > 0, body, state,
-                             max_iter=n + 1)
+        def mixed_step(st):
+            # lanes disagree: compute both directions in lockstep and
+            # select per lane
+            return select_lanes(mode == PULL, pull_step(st), push_step(st))
+
+        # direction decisions correlate strongly across lanes (shared
+        # topology), so branch on the homogeneous cases and pay the
+        # both-directions mixed step only when lanes actually disagree.
+        # Converged lanes are frozen by run_until_any whatever we compute
+        # for them, so only *active* lanes count toward homogeneity.
+        active = st.n_f > 0
+        return jax.lax.cond(
+            jnp.all(~active | (mode == PUSH)), push_step,
+            lambda s2: jax.lax.cond(jnp.all(~active | (mode == PULL)),
+                                    pull_step, mixed_step, s2),
+            st)
+
+    final, lane_iters, _ = run_until_any(lambda st: st.n_f > 0, body,
+                                         state, max_iter=n + 1)
     edges = jnp.sum(jnp.where(final.labels >= 0,
-                              graph.degrees, 0)).astype(jnp.int32)
+                              graph.degrees[None, :], 0),
+                    axis=1).astype(jnp.int32)
     return BFSResult(labels=final.labels, preds=final.preds,
-                     iterations=iters, pull_iters=final.pull_iters,
-                     edges_visited=edges)
+                     iterations=lane_iters, pull_iters=final.pull_iters,
+                     edges_visited=edges, overflow=final.overflow)
+
+
+def bfs_batch(graph: Graph, srcs, *, direction: bool = True,
+              do_a: float = 0.001, do_b: float = 0.2,
+              idempotence: bool = True, strategy: str = "LB",
+              record_preds: bool = True,
+              backend: Optional[str] = None) -> BFSResult:
+    """Multi-source BFS: one jitted batched BSP loop over ``srcs``.
+
+    Every ``BFSResult`` field carries a leading batch axis; lane i is
+    bit-identical to ``bfs(graph, srcs[i])``. All lanes share one trace —
+    batches of the same size never retrace, which is the contract the
+    query-serving driver (launch/graph_serve.py) relies on."""
+    if direction and not graph.has_csc:
+        direction = False
+    srcs = jnp.asarray(srcs, dtype=jnp.int32).reshape(-1)
+    return _bfs_impl(graph, srcs, do_a, do_b, direction, idempotence,
+                     strategy, record_preds, B.resolve(backend))
 
 
 def bfs(graph: Graph, src: int, *, direction: bool = True,
@@ -144,13 +209,13 @@ def bfs(graph: Graph, src: int, *, direction: bool = True,
         strategy: str = "LB", record_preds: bool = True,
         backend: Optional[str] = None,
         use_kernel: Optional[bool] = None) -> BFSResult:
-    """Run BFS from ``src``. See module docstring for options.
+    """Run BFS from ``src`` — a squeezed batch-of-1 ``bfs_batch`` call.
 
     ``backend`` selects the operator backend ("xla" | "pallas" | "auto";
-    None defers to the ambient context / REPRO_BACKEND). Resolved here,
-    outside jit, and passed down as a static argument."""
-    if direction and not graph.has_csc:
-        direction = False
-    return _bfs_impl(graph, jnp.int32(src), do_a, do_b, direction,
-                     idempotence, strategy, record_preds,
-                     B.resolve(backend, use_kernel))
+    None defers to the ambient context / REPRO_BACKEND). ``use_kernel``
+    is the deprecated alias (public wrapper only) and always warns."""
+    r = bfs_batch(graph, [src], direction=direction, do_a=do_a, do_b=do_b,
+                  idempotence=idempotence, strategy=strategy,
+                  record_preds=record_preds,
+                  backend=B.resolve(backend, use_kernel))
+    return jax.tree_util.tree_map(lambda x: x[0], r)

@@ -1,4 +1,4 @@
-"""Single-source shortest path (paper §6.2, Algorithm 1).
+"""Single- and multi-source shortest path (paper §6.2, Algorithm 1).
 
 Delta-stepping [Davidson et al. / Meyer-Sanders] via Gunrock's two-level
 priority queue (§5.1.5): each iteration advances the *near* frontier,
@@ -7,8 +7,15 @@ redundant discoveries, and splits the improved set into near/far piles by
 the current bucket threshold. When the near pile drains, the bucket index
 advances and the far pile is re-split.
 
-``delta=None`` selects Bellman-Ford mode (everything is near — the
-baseline the paper compares against via Ligra).
+``sssp_batch`` runs B sources as one jitted batched BSP loop: every lane
+keeps its own near/far piles and bucket counter, each step computes the
+relax and the bucket-pop for all lanes in lockstep and selects per lane
+(the pop is a cheap mask split, so idle-direction work is negligible),
+and ``run_until_any`` freezes converged lanes until the stragglers drain.
+``sssp`` is a squeezed batch-of-1 call — one code path.
+
+``delta=None`` selects the auto heuristic; a huge delta degenerates to
+Bellman-Ford mode (everything is near — the Ligra comparison baseline).
 """
 from __future__ import annotations
 
@@ -20,21 +27,21 @@ import jax.numpy as jnp
 
 from .. import backend as B
 from .. import operators as ops
-from ..enactor import run_until
-from ..frontier import DenseFrontier, SparseFrontier, from_ids
+from ..enactor import run_until_any, select_lanes
+from ..frontier import BatchedDenseFrontier
 from ..graph import Graph
 
 INF = jnp.float32(jnp.inf)
 
 
 class SSSPState(NamedTuple):
-    dist: jax.Array       # (n,) float32
-    preds: jax.Array      # (n,) int32
-    near: jax.Array       # (n,) bool  near-pile membership mask
-    far: jax.Array        # (n,) bool  far-pile membership mask
-    bucket: jax.Array     # () int32   current priority level
-    n_near: jax.Array     # () int32
-    relaxations: jax.Array  # () int32 total edge relaxations (work measure)
+    dist: jax.Array       # (B, n) float32
+    preds: jax.Array      # (B, n) int32
+    near: jax.Array       # (B, n) bool  near-pile membership mask
+    far: jax.Array        # (B, n) bool  far-pile membership mask
+    bucket: jax.Array     # (B,) int32   current priority level
+    n_near: jax.Array     # (B,) int32
+    relaxations: jax.Array  # (B,) int32 total edge relaxations per lane
 
 
 class SSSPResult(NamedTuple):
@@ -46,39 +53,49 @@ class SSSPResult(NamedTuple):
 
 @functools.partial(jax.jit, static_argnames=("use_delta", "strategy",
                                              "backend"))
-def _sssp_impl(graph: Graph, src: jax.Array, delta: jax.Array,
+def _sssp_impl(graph: Graph, srcs: jax.Array, delta: jax.Array,
                use_delta: bool, strategy: str,
                backend: str) -> SSSPResult:
     n, m = graph.num_vertices, graph.num_edges
-    dist = jnp.full((n,), INF).at[src].set(0.0)
-    preds = jnp.full((n,), -1, jnp.int32)
-    near = jnp.zeros((n,), bool).at[src].set(True)
+    b = srcs.shape[0]
+    lane = jnp.arange(b)
+    dist = jnp.full((b, n), INF).at[lane, srcs].set(0.0)
+    preds = jnp.full((b, n), -1, jnp.int32)
+    near = jnp.zeros((b, n), bool).at[lane, srcs].set(True)
     state = SSSPState(dist=dist, preds=preds, near=near,
-                      far=jnp.zeros((n,), bool), bucket=jnp.int32(0),
-                      n_near=jnp.int32(1), relaxations=jnp.int32(0))
+                      far=jnp.zeros((b, n), bool),
+                      bucket=jnp.zeros((b,), jnp.int32),
+                      n_near=jnp.ones((b,), jnp.int32),
+                      relaxations=jnp.zeros((b,), jnp.int32))
 
     def relax_step(st: SSSPState):
-        frontier = DenseFrontier(st.near).to_sparse(n, backend=backend)
+        frontier = BatchedDenseFrontier(st.near).to_sparse(
+            n, backend=backend)
 
         def functor(s, d, e, rank, valid, data):
             return valid, data
 
-        res, _ = ops.advance(graph, frontier, m, functor=functor,
-                             strategy=strategy, backend=backend)
+        res, _ = ops.advance_batch(graph, frontier, m, functor=functor,
+                                   strategy=strategy, backend=backend)
         w = graph.edge_values[jnp.where(res.valid, res.edge_id, 0)]
-        cand = st.dist[jnp.where(res.valid, res.src, 0)] + w
+        safe_src = jnp.where(res.valid, res.src, 0)
+        cand = jnp.take_along_axis(st.dist, safe_src, axis=1) + w
         # atomicMin replacement: segment-min into dist (paper Update_Label)
-        new_dist = ops.scatter_min(cand, res.dst, res.valid, st.dist)
+        new_dist = jax.vmap(ops.scatter_min)(cand, res.dst, res.valid,
+                                             st.dist)
         improved = new_dist < st.dist
         # Set_Pred: the winning edge writes the predecessor
-        winner = res.valid & (cand <= new_dist[jnp.where(res.valid, res.dst, 0)])
-        preds = st.preds.at[jnp.where(winner, res.dst, n)].set(
-            res.src, mode="drop")
+        safe_dst = jnp.where(res.valid, res.dst, 0)
+        winner = res.valid & (cand <= jnp.take_along_axis(new_dist,
+                                                          safe_dst, axis=1))
+        preds = jax.vmap(lambda p, wn, d, s: p.at[
+            jnp.where(wn, d, n)].set(s, mode="drop"))(
+                st.preds, winner, res.dst, res.src)
         # priority-queue split (near/far) on the improved vertices
         thresh = (st.bucket.astype(jnp.float32) + 1.0) * delta
         if use_delta:
-            add_near = improved & (new_dist < thresh)
-            add_far = improved & (new_dist >= thresh)
+            add_near = improved & (new_dist < thresh[:, None])
+            add_far = improved & (new_dist >= thresh[:, None])
         else:
             add_near = improved
             add_far = jnp.zeros_like(improved)
@@ -87,50 +104,87 @@ def _sssp_impl(graph: Graph, src: jax.Array, delta: jax.Array,
         far = (st.far | add_far) & ~add_near
         relax = st.relaxations + res.total
         return st._replace(dist=new_dist, preds=preds, near=add_near,
-                           far=far, n_near=jnp.sum(add_near).astype(jnp.int32),
+                           far=far,
+                           n_near=jnp.sum(add_near, axis=1,
+                                          dtype=jnp.int32),
                            relaxations=relax)
 
     def pop_far(st: SSSPState):
         # near pile empty: advance the bucket to the smallest far distance
-        far_min = jnp.min(jnp.where(st.far, st.dist, INF))
+        far_min = jnp.min(jnp.where(st.far, st.dist, INF), axis=1)
         new_bucket = jnp.where(jnp.isfinite(far_min),
                                (far_min / delta).astype(jnp.int32),
                                st.bucket + 1)
         thresh = (new_bucket.astype(jnp.float32) + 1.0) * delta
-        near = st.far & (st.dist < thresh)
+        near = st.far & (st.dist < thresh[:, None])
         far = st.far & ~near
         return st._replace(near=near, far=far, bucket=new_bucket,
-                           n_near=jnp.sum(near).astype(jnp.int32))
+                           n_near=jnp.sum(near, axis=1, dtype=jnp.int32))
 
     def body(st: SSSPState):
-        return jax.lax.cond(st.n_near > 0, relax_step, pop_far, st)
+        if b == 1:
+            # batch-of-1 (the single-source path): a real branch, so
+            # bucket-pop iterations never pay an idle relax sweep
+            return jax.lax.cond(st.n_near[0] > 0, relax_step, pop_far, st)
+
+        def mixed_step(st):
+            # lanes disagree (relax vs bucket pop); the pop is a cheap
+            # mask split, so compute both and select per lane
+            return select_lanes(st.n_near > 0, relax_step(st), pop_far(st))
+
+        # bucket advances tend to synchronize on a shared topology: when
+        # no lane has near work, skip the idle full-edge relax sweep
+        return jax.lax.cond(jnp.any(st.n_near > 0), mixed_step, pop_far,
+                            st)
 
     def cond(st: SSSPState):
-        return (st.n_near > 0) | jnp.any(st.far)
+        return (st.n_near > 0) | jnp.any(st.far, axis=1)
 
-    final, iters = run_until(cond, body, state, max_iter=4 * n + 8)
-    return SSSPResult(dist=final.dist, preds=final.preds, iterations=iters,
+    final, lane_iters, _ = run_until_any(cond, body, state,
+                                         max_iter=4 * n + 8)
+    return SSSPResult(dist=final.dist, preds=final.preds,
+                      iterations=lane_iters,
                       relaxations=final.relaxations)
+
+
+def _auto_delta(graph: Graph) -> float:
+    """Avg weight × avg degree heuristic from Davidson et al."""
+    mean_w = float(jnp.mean(graph.edge_values))
+    avg_deg = max(graph.num_edges / max(graph.num_vertices, 1), 1.0)
+    return mean_w * avg_deg / 2.0
+
+
+def sssp_batch(graph: Graph, srcs, *, delta: Optional[float] = None,
+               strategy: str = "LB",
+               backend: Optional[str] = None) -> SSSPResult:
+    """Multi-source delta-stepping: one jitted batched program over
+    ``srcs``; lane i is bit-identical to ``sssp(graph, srcs[i])``."""
+    assert graph.weighted, "SSSP needs edge weights"
+    if delta is None:
+        delta = _auto_delta(graph)
+    use_delta = bool(jnp.isfinite(delta)) and delta > 0
+    srcs = jnp.asarray(srcs, dtype=jnp.int32).reshape(-1)
+    return _sssp_impl(graph, srcs, jnp.float32(delta), use_delta,
+                      strategy, B.resolve(backend))
 
 
 def sssp(graph: Graph, src: int, *, delta: Optional[float] = None,
          strategy: str = "LB", backend: Optional[str] = None,
          use_kernel: Optional[bool] = None) -> SSSPResult:
-    """Delta-stepping SSSP; ``delta=None`` = auto (avg weight × avg degree
-    heuristic from Davidson et al.), ``delta=inf``-like big → Bellman-Ford."""
-    assert graph.weighted, "SSSP needs edge weights"
-    if delta is None:
-        mean_w = float(jnp.mean(graph.edge_values))
-        avg_deg = max(graph.num_edges / max(graph.num_vertices, 1), 1.0)
-        delta = mean_w * avg_deg / 2.0
-    use_delta = bool(jnp.isfinite(delta)) and delta > 0
-    return _sssp_impl(graph, jnp.int32(src), jnp.float32(delta), use_delta,
-                      strategy, B.resolve(backend, use_kernel))
+    """Delta-stepping SSSP — a squeezed batch-of-1 ``sssp_batch`` call.
+    ``delta=None`` = auto heuristic; ``use_kernel`` is the deprecated
+    alias (public wrapper only) and always warns."""
+    r = sssp_batch(graph, [src], delta=delta, strategy=strategy,
+                   backend=B.resolve(backend, use_kernel))
+    return jax.tree_util.tree_map(lambda x: x[0], r)
 
 
-def sssp_bellman_ford(graph: Graph, src: int, **kw) -> SSSPResult:
-    """Bellman-Ford-style full relaxation (the Ligra comparison baseline)."""
-    big = 1e30
-    return _sssp_impl(graph, jnp.int32(src), jnp.float32(big), False,
-                      kw.get("strategy", "LB"),
-                      B.resolve(kw.get("backend"), kw.get("use_kernel")))
+def sssp_bellman_ford(graph: Graph, src: int, *,
+                      strategy: str = "LB",
+                      backend: Optional[str] = None) -> SSSPResult:
+    """Bellman-Ford-style full relaxation (the Ligra comparison baseline):
+    a batch-of-1 run with the priority queue disabled."""
+    srcs = jnp.asarray([src], dtype=jnp.int32)
+    r = _sssp_impl(graph, srcs, jnp.float32(1e30), False, strategy,
+                   B.resolve(backend))
+    return jax.tree_util.tree_map(lambda x: x[0], r)

@@ -23,6 +23,13 @@ the divergence removed).
 
 The tile size adapts to cap_out so the grid stays small enough for
 interpret mode (each grid step costs a host round trip off-TPU).
+
+``advance_fused_batch_kernel`` is the multi-source variant: the grid gains
+an explicit leading batch-row dimension (B, tiles). Each program serves
+one (lane, tile) pair; the per-lane prefix sum and base vertices arrive as
+(1, cap_in±1) row blocks indexed by the batch coordinate while the CSR
+stays a broadcast block shared by every lane — B traversals expand in one
+pallas_call with zero per-lane retracing.
 """
 from __future__ import annotations
 
@@ -45,13 +52,14 @@ def _tile_for(cap_out: int) -> int:
     return tile
 
 
-def _kernel(offsets_ref, base_ref, ro_ref, ci_ref,
-            src_ref, dst_ref, eid_ref, ipos_ref, rank_ref, valid_ref,
-            *, cap_in: int, num_edges: int, iters: int, tile: int):
-    t = pl.program_id(0)
-    offsets = offsets_ref[...]                # (cap_in + 1,)
-    slots = t * tile + jax.lax.iota(jnp.int32, tile)
+def _lb_body(offsets, base, row_offsets, col_indices, slots,
+             *, cap_in: int, num_edges: int, iters: int):
+    """Shared kernel body: LB sorted search + fused CSR gathers for one
+    tile of output slots. Returns the six masked output vectors; the
+    single-lane and batched kernels differ only in how they slice their
+    refs around this."""
     total = offsets[cap_in]
+    tile = slots.shape[0]
 
     # LB sorted search: upper-bound binary search over the prefix sum.
     lo = jnp.zeros((tile,), jnp.int32)
@@ -71,17 +79,30 @@ def _kernel(offsets_ref, base_ref, ro_ref, ci_ref,
     valid = slots < total
 
     # fused CSR gathers (the formerly separate XLA passes)
-    src = base_ref[...][pos]
-    eid = ro_ref[...][src] + rank
+    src = base[pos]
+    eid = row_offsets[src] + rank
     eid = jnp.where(valid, eid, 0)
-    dst = ci_ref[...][jnp.clip(eid, 0, max(num_edges - 1, 0))]
+    dst = col_indices[jnp.clip(eid, 0, max(num_edges - 1, 0))]
 
-    src_ref[...] = jnp.where(valid, src, -1)
-    dst_ref[...] = jnp.where(valid, dst, -1)
-    eid_ref[...] = jnp.where(valid, eid, -1)
+    return (jnp.where(valid, src, -1), jnp.where(valid, dst, -1),
+            jnp.where(valid, eid, -1), pos, jnp.where(valid, rank, 0),
+            valid.astype(jnp.int32))
+
+
+def _kernel(offsets_ref, base_ref, ro_ref, ci_ref,
+            src_ref, dst_ref, eid_ref, ipos_ref, rank_ref, valid_ref,
+            *, cap_in: int, num_edges: int, iters: int, tile: int):
+    t = pl.program_id(0)
+    slots = t * tile + jax.lax.iota(jnp.int32, tile)
+    src, dst, eid, pos, rank, valid = _lb_body(
+        offsets_ref[...], base_ref[...], ro_ref[...], ci_ref[...], slots,
+        cap_in=cap_in, num_edges=num_edges, iters=iters)
+    src_ref[...] = src
+    dst_ref[...] = dst
+    eid_ref[...] = eid
     ipos_ref[...] = pos
-    rank_ref[...] = jnp.where(valid, rank, 0)
-    valid_ref[...] = valid.astype(jnp.int32)
+    rank_ref[...] = rank
+    valid_ref[...] = valid
 
 
 @functools.partial(jax.jit, static_argnames=("cap_out", "interpret"))
@@ -126,3 +147,60 @@ def advance_fused_kernel(offsets: jax.Array, base: jax.Array,
     )(offsets, base, row_offsets, col_indices)
     return (src[:cap_out], dst[:cap_out], eid[:cap_out], ipos[:cap_out],
             rank[:cap_out], valid[:cap_out], offsets[-1])
+
+
+def _batch_kernel(offsets_ref, base_ref, ro_ref, ci_ref,
+                  src_ref, dst_ref, eid_ref, ipos_ref, rank_ref, valid_ref,
+                  *, cap_in: int, num_edges: int, iters: int, tile: int):
+    """Same body as ``_kernel`` with a leading batch-row grid axis: refs
+    carry (1, ·) row blocks selected by program_id(0)."""
+    t = pl.program_id(1)
+    slots = t * tile + jax.lax.iota(jnp.int32, tile)
+    src, dst, eid, pos, rank, valid = _lb_body(
+        offsets_ref[0, :], base_ref[0, :], ro_ref[0, :], ci_ref[0, :],
+        slots, cap_in=cap_in, num_edges=num_edges, iters=iters)
+    src_ref[0, :] = src
+    dst_ref[0, :] = dst
+    eid_ref[0, :] = eid
+    ipos_ref[0, :] = pos
+    rank_ref[0, :] = rank
+    valid_ref[0, :] = valid
+
+
+@functools.partial(jax.jit, static_argnames=("cap_out", "interpret"))
+def advance_fused_batch_kernel(offsets: jax.Array, base: jax.Array,
+                               row_offsets: jax.Array,
+                               col_indices: jax.Array,
+                               cap_out: int, interpret: bool = True):
+    """Multi-source one-pass LB advance over a (B, tiles) grid.
+
+    offsets: (B, cap_in+1) int32 per-lane exclusive degree prefix sums.
+    base:    (B, cap_in)   int32 per-lane base vertices (invalid lanes 0).
+    row_offsets / col_indices: shared CSR, broadcast to every program.
+
+    Returns (src, dst, edge_id, in_pos, rank, valid) each (B, cap_out)
+    plus totals (B,) int32 — the batched registry contract.
+    """
+    b, cap_in1 = offsets.shape
+    cap_in = cap_in1 - 1
+    m = col_indices.shape[0]
+    tile = _tile_for(cap_out)
+    padded = -(-cap_out // tile) * tile
+    iters = max(math.ceil(math.log2(max(cap_in, 2))) + 1, 1)
+    grid = (b, padded // tile)
+    out_shape = [jax.ShapeDtypeStruct((b, padded), jnp.int32)] * 6
+    row = lambda shape: pl.BlockSpec((1,) + shape, lambda bi, ti: (bi, 0))
+    bcast = lambda shape: pl.BlockSpec((1,) + shape, lambda bi, ti: (0, 0))
+    src, dst, eid, ipos, rank, valid = pl.pallas_call(
+        functools.partial(_batch_kernel, cap_in=cap_in, num_edges=m,
+                          iters=iters, tile=tile),
+        grid=grid,
+        in_specs=[row((cap_in + 1,)), row((cap_in,)),
+                  bcast(row_offsets.shape), bcast(col_indices.shape)],
+        out_specs=[pl.BlockSpec((1, tile), lambda bi, ti: (bi, ti))] * 6,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(offsets, base, row_offsets[None, :], col_indices[None, :])
+    return (src[:, :cap_out], dst[:, :cap_out], eid[:, :cap_out],
+            ipos[:, :cap_out], rank[:, :cap_out], valid[:, :cap_out],
+            offsets[:, -1])

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from repro.core import backend as B
 
 from . import ref
-from .advance_fused import advance_fused_kernel
+from .advance_fused import advance_fused_batch_kernel, advance_fused_kernel
 from .filter_compact import filter_compact_kernel
 from .flash_attention import flash_attention_kernel
 from .lb_expand import lb_expand_kernel
@@ -73,6 +73,23 @@ def advance_fused(row_offsets: jax.Array, col_indices: jax.Array,
         offsets, base.astype(jnp.int32), row_offsets, col_indices, cap_out,
         interpret=_interpret())
     return src, dst, eid, in_pos, rank, valid > 0, total
+
+
+@B.register("advance_batch", B.PALLAS)
+def advance_fused_batch(row_offsets: jax.Array, col_indices: jax.Array,
+                        base: jax.Array, sizes: jax.Array, cap_out: int):
+    """Multi-source fused LB advance: base/sizes carry a leading batch
+    axis; one pallas_call with an explicit (B, tiles) grid expands all
+    lanes against the shared CSR. Contract mirrors "advance" with every
+    output batched and totals (B,)."""
+    sizes = sizes.astype(jnp.int32)
+    offsets = jnp.concatenate(
+        [jnp.zeros((sizes.shape[0], 1), jnp.int32),
+         jnp.cumsum(sizes, axis=1)], axis=1)
+    src, dst, eid, in_pos, rank, valid, totals = advance_fused_batch_kernel(
+        offsets, base.astype(jnp.int32), row_offsets, col_indices, cap_out,
+        interpret=_interpret())
+    return src, dst, eid, in_pos, rank, valid > 0, totals
 
 
 @B.register("segment_search", B.PALLAS)

@@ -7,6 +7,11 @@ visited / runtime).
 
   PYTHONPATH=src python -m repro.launch.graph_run --graph rmat --scale 14 \
       --primitives bfs,sssp,pagerank,cc,bc,tc --validate --backend pallas
+
+Multi-source: ``--sources 3,99,512`` runs bfs/sssp as ONE batched
+multi-source program over the listed roots (per-lane validation) instead
+of a single-source run; ``bc`` accumulates exactly those roots. For the
+continuous-serving version of the same idea see launch/graph_serve.py.
 """
 from __future__ import annotations
 
@@ -19,8 +24,10 @@ import numpy as np
 from repro.core import backend as B
 from repro.core import graph as G
 from repro.core import ref as R
-from repro.core.primitives import (bc, bfs, connected_components, pagerank,
-                                   sssp, triangle_count, who_to_follow)
+from repro.core.primitives import (bc, bc_batch, bfs, bfs_batch,
+                                   connected_components, pagerank, sssp,
+                                   sssp_batch, triangle_count,
+                                   who_to_follow)
 
 
 def make_graph(kind: str, scale: int, edge_factor: int, seed: int):
@@ -37,17 +44,55 @@ def make_graph(kind: str, scale: int, edge_factor: int, seed: int):
     raise ValueError(kind)
 
 
+def _warn_overflow(overflow: np.ndarray) -> None:
+    """A nonzero BFSResult.overflow means a capped frontier dropped
+    discoveries (possible only under idempotent hash culling) — the
+    labels are untrustworthy and must not pass silently."""
+    total = int(np.sum(overflow))
+    if total:
+        print(f"[graph] WARNING: bfs dropped {total} frontier entries "
+              f"(overflow); rerun with idempotence=False")
+
+
 def run_primitive(name: str, g, src: int, validate: bool,
-                  backend: str | None = None):
+                  backend: str | None = None,
+                  sources: list[int] | None = None):
     bk = B.resolve(backend)
     t0 = time.monotonic()
     edges = g.num_edges
     ok = None
-    if name == "bfs":
+    if name == "bfs" and sources:
+        r = bfs_batch(g, sources, backend=bk)
+        jax.block_until_ready(r.labels)
+        dt = time.monotonic() - t0
+        edges = int(np.sum(np.asarray(r.edges_visited)))
+        _warn_overflow(np.asarray(r.overflow))
+        if validate:
+            ok = all(np.array_equal(np.asarray(r.labels[i]),
+                                    R.bfs_ref(g, s))
+                     for i, s in enumerate(sources))
+    elif name == "sssp" and sources:
+        r = sssp_batch(g, sources, backend=bk)
+        jax.block_until_ready(r.dist)
+        dt = time.monotonic() - t0
+        if validate:
+            ok = all(np.allclose(np.asarray(r.dist[i]), R.sssp_ref(g, s),
+                                 rtol=1e-5)
+                     for i, s in enumerate(sources))
+    elif name == "bc" and sources:
+        r = bc_batch(g, sources, backend=bk)
+        total = np.asarray(r.bc).sum(axis=0)
+        dt = time.monotonic() - t0
+        edges = 2 * g.num_edges * len(sources)
+        if validate:
+            ref = sum(R.bc_ref(g, s).astype(np.float64) for s in sources)
+            ok = np.allclose(total, ref, rtol=1e-3, atol=1e-3)
+    elif name == "bfs":
         r = bfs(g, src, backend=bk)
         jax.block_until_ready(r.labels)
         dt = time.monotonic() - t0
         edges = int(r.edges_visited)
+        _warn_overflow(np.asarray(r.overflow))
         if validate:
             ok = np.array_equal(np.asarray(r.labels), R.bfs_ref(g, src))
     elif name == "sssp":
@@ -111,6 +156,11 @@ def main(argv=None):
                     default="bfs,sssp,pagerank,cc,bc,tc")
     ap.add_argument("--validate", action="store_true")
     ap.add_argument("--src", type=int, default=None)
+    ap.add_argument("--sources", default=None, metavar="S0,S1,...",
+                    help="comma-separated source vertices: bfs/sssp run "
+                         "as one batched multi-source program over these "
+                         "roots (validated per lane), bc accumulates "
+                         "exactly these roots")
     ap.add_argument("--backend", default=None,
                     choices=(B.XLA, B.PALLAS, B.AUTO),
                     help="operator backend (default: ambient context / "
@@ -120,14 +170,18 @@ def main(argv=None):
     g = make_graph(args.graph, args.scale, args.edge_factor, args.seed)
     deg = np.diff(np.asarray(g.row_offsets))
     src = args.src if args.src is not None else int(np.argmax(deg))
+    sources = ([int(s) for s in args.sources.split(",")]
+               if args.sources else None)
     print(f"[graph] {args.graph} scale={args.scale}: n={g.num_vertices} "
-          f"m={g.num_edges} max_deg={deg.max()} src={src} "
+          f"m={g.num_edges} max_deg={deg.max()} "
+          f"src={sources if sources else src} "
           f"backend={B.resolve(args.backend)}")
 
     failures = 0
     for name in args.primitives.split(","):
         dt, mteps, ok, bk = run_primitive(name.strip(), g, src,
-                                          args.validate, args.backend)
+                                          args.validate, args.backend,
+                                          sources=sources)
         status = "" if ok is None else ("  PASS" if ok else "  FAIL")
         print(f"[graph] {name:9s} {dt*1000:9.2f} ms  {mteps:9.2f} MTEPS"
               f"  backend={bk}{status}")

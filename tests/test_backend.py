@@ -306,3 +306,22 @@ def test_use_kernel_alias_still_routes(rmat_graph):
         rp, _ = ops.advance(rmat_graph, fr, 1024, use_kernel=True)
     rx, _ = ops.advance(rmat_graph, fr, 1024, backend="xla")
     _assert_advance_equal(rx, rp)
+
+
+def test_use_kernel_warns_everywhere():
+    """The alias warns on every public wrapper, even when backend= is
+    also given (backend wins); internal surfaces no longer accept it."""
+    with pytest.deprecated_call():
+        assert B.resolve(backend="xla", use_kernel=True) == B.XLA
+    with pytest.deprecated_call():
+        bfs(G.demo_graph(), 0, use_kernel=False)
+    g = G.demo_graph()
+    gw = G.from_edge_list(*G.edge_list(g), n=g.num_vertices,
+                          values=np.ones(g.num_edges, np.float32))
+    with pytest.deprecated_call():
+        sssp(gw, 0, use_kernel=False)
+    with pytest.deprecated_call():
+        triangle_count(g, use_kernel=False)
+    # dropped from internal call sites: dispatch takes backend only
+    import inspect
+    assert "use_kernel" not in inspect.signature(B.dispatch).parameters

@@ -1,0 +1,272 @@
+"""Batched multi-source engine: frontier / enactor / operators /
+primitives parity with the single-source paths, on both backends.
+
+The contract under test: lane i of a batched run is *bit-identical* to
+the corresponding single-source run (which itself is a squeezed
+batch-of-1 call), ragged convergence freezes finished lanes, duplicate
+sources are independent, and the whole batch shares one jitted trace.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import frontier as F
+from repro.core import graph as G
+from repro.core import operators as ops
+from repro.core import ref as R
+from repro.core.enactor import run_until_any
+from repro.core.primitives import bc, bc_batch, bfs, bfs_batch, sssp, \
+    sssp_batch
+from repro.core.primitives.bfs import _bfs_impl
+
+BACKENDS = ["xla", "pallas"]
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    # small enough that the pallas interpret-mode legs stay fast
+    return G.rmat(7, 8, seed=7, weighted=True)
+
+
+@pytest.fixture(scope="module")
+def tiny_grid():
+    return G.grid2d(8, weighted=True, seed=3)
+
+
+# ---------------------------------------------------------------------------
+# enactor
+# ---------------------------------------------------------------------------
+
+
+def test_run_until_any_ragged_freeze():
+    """Lanes converge at different steps; finished lanes freeze exactly."""
+    targets = jnp.asarray([0, 3, 7, 2], jnp.int32)
+
+    final, lane_iters, iters = run_until_any(
+        lambda c: c < targets,
+        lambda c: c + 1,
+        jnp.zeros((4,), jnp.int32),
+        max_iter=100)
+    assert np.array_equal(np.asarray(final), [0, 3, 7, 2])
+    assert np.array_equal(np.asarray(lane_iters), [0, 3, 7, 2])
+    assert int(iters) == 7
+
+
+def test_run_until_any_max_iter_guard():
+    final, lane_iters, iters = run_until_any(
+        lambda c: jnp.ones((2,), bool), lambda c: c + 1,
+        jnp.zeros((2,), jnp.int32), max_iter=5)
+    assert int(iters) == 5
+    assert np.array_equal(np.asarray(final), [5, 5])
+
+
+# ---------------------------------------------------------------------------
+# batched frontier
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batched_frontier_roundtrip(backend):
+    n = 40
+    bf = F.from_ids_batch([3, 0, 39], 8)
+    assert bf.batch == 3 and bf.capacity == 8
+    dense = bf.to_dense(n)
+    assert np.array_equal(np.asarray(dense.lengths), [1, 1, 1])
+    back = dense.to_sparse(8, backend=backend)
+    assert np.array_equal(np.asarray(back.ids[:, 0]), [3, 0, 39])
+    assert np.array_equal(np.asarray(back.lengths), [1, 1, 1])
+    # lane view matches the single-lane class
+    lane = bf.lane(0)
+    assert isinstance(lane, F.SparseFrontier)
+    assert int(lane.length) == 1 and int(lane.ids[0]) == 3
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_compact_values_batch_overflow_totals(backend):
+    """The clamp is reported, not silent: totals carry the true count."""
+    vals = jnp.tile(jnp.arange(10, dtype=jnp.int32)[None, :], (2, 1))
+    mask = jnp.stack([jnp.arange(10) < 7, jnp.arange(10) < 2])
+    buf, lengths, totals = F.compact_values_batch(vals, mask, 4,
+                                                  backend=backend)
+    assert buf.shape == (2, 4)
+    assert np.array_equal(np.asarray(lengths), [4, 2])
+    assert np.array_equal(np.asarray(totals), [7, 2])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_filter_frontier_batch_overflow_counter(backend):
+    fr = F.BatchedSparseFrontier(
+        ids=jnp.tile(jnp.arange(6, dtype=jnp.int32)[None, :], (2, 1)),
+        lengths=jnp.asarray([6, 1], jnp.int32))
+    out, _, overflow = ops.filter_frontier_batch(fr, cap=2,
+                                                 backend=backend)
+    assert np.array_equal(np.asarray(overflow), [4, 0])
+    assert np.array_equal(np.asarray(out.lengths), [2, 1])
+
+
+# ---------------------------------------------------------------------------
+# primitive parity matrix: every lane == the single-source run
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_bfs_batch_parity_matrix(small_graph, backend):
+    g = small_graph
+    deg = np.diff(np.asarray(g.row_offsets))
+    # mixed depths, a hub, a leaf, and a duplicate pair
+    srcs = [int(np.argmax(deg)), 0, g.num_vertices - 1, 0]
+    rb = bfs_batch(g, srcs, backend=backend)
+    for i, s in enumerate(srcs):
+        r1 = bfs(g, s, backend=backend)
+        assert np.array_equal(np.asarray(rb.labels[i]),
+                              np.asarray(r1.labels)), i
+        assert np.array_equal(np.asarray(rb.preds[i]),
+                              np.asarray(r1.preds)), i
+        assert np.array_equal(np.asarray(rb.labels[i]),
+                              R.bfs_ref(g, s)), i
+    # duplicate sources are independent identical lanes
+    assert np.array_equal(np.asarray(rb.labels[1]),
+                          np.asarray(rb.labels[3]))
+    assert int(rb.iterations[1]) == int(rb.iterations[3])
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sssp_batch_parity_matrix(small_graph, backend):
+    g = small_graph
+    deg = np.diff(np.asarray(g.row_offsets))
+    srcs = [int(np.argmax(deg)), 0, g.num_vertices - 1, 0]
+    rb = sssp_batch(g, srcs, backend=backend)
+    for i, s in enumerate(srcs):
+        r1 = sssp(g, s, backend=backend)
+        assert np.array_equal(np.asarray(rb.dist[i]),
+                              np.asarray(r1.dist)), i
+        assert np.allclose(np.asarray(rb.dist[i]), R.sssp_ref(g, s),
+                           rtol=1e-5), i
+    assert np.array_equal(np.asarray(rb.dist[1]), np.asarray(rb.dist[3]))
+
+
+def test_bfs_batch_ragged_convergence(tiny_grid):
+    """Sources at the corner and the center finish at different depths;
+    the shallow lane freezes while the deep one continues."""
+    g = tiny_grid
+    side = 8
+    corner, center = 0, side * (side // 2) + side // 2
+    rb = bfs_batch(g, [center, corner], direction=False)
+    assert int(rb.iterations[0]) < int(rb.iterations[1])
+    for i, s in enumerate([center, corner]):
+        assert np.array_equal(np.asarray(rb.labels[i]), R.bfs_ref(g, s))
+
+
+def test_sssp_batch_ragged_convergence(tiny_grid):
+    g = tiny_grid
+    rb = sssp_batch(g, [0, 27])
+    for i, s in enumerate([0, 27]):
+        assert np.allclose(np.asarray(rb.dist[i]), R.sssp_ref(g, s),
+                           rtol=1e-5)
+
+
+def test_batch_of_one_squeeze_roundtrip(small_graph):
+    """bfs() is literally a squeezed batch-of-1 bfs_batch() call."""
+    g = small_graph
+    r1 = bfs(g, 5)
+    rb = bfs_batch(g, [5])
+    assert r1.labels.ndim == 1 and rb.labels.ndim == 2
+    for name in r1._fields:
+        assert np.array_equal(np.asarray(getattr(r1, name)),
+                              np.asarray(getattr(rb, name)[0])), name
+    s1 = sssp(g, 5)
+    sb = sssp_batch(g, [5])
+    for name in s1._fields:
+        assert np.array_equal(np.asarray(getattr(s1, name)),
+                              np.asarray(getattr(sb, name)[0])), name
+
+
+def test_bfs_batch_single_trace(small_graph):
+    """32 sources run as ONE jitted program, and a second batch of the
+    same shape reuses it (no per-source or per-batch retrace)."""
+    g = small_graph
+    rng = np.random.default_rng(0)
+    before = _bfs_impl._cache_size()
+    rb = bfs_batch(g, rng.integers(0, g.num_vertices, 32))
+    after_first = _bfs_impl._cache_size()
+    assert after_first == before + 1
+    bfs_batch(g, rng.integers(0, g.num_vertices, 32))
+    assert _bfs_impl._cache_size() == after_first
+    assert rb.labels.shape == (32, g.num_vertices)
+
+
+def test_bfs_batch_overflow_counter_clean(small_graph):
+    """Exact-uniquify runs can never overflow the min(n, m) vertex
+    frontier; the counter must stay zero."""
+    rb = bfs_batch(small_graph, [0, 1, 2], idempotence=False)
+    assert np.array_equal(np.asarray(rb.overflow), [0, 0, 0])
+
+
+# ---------------------------------------------------------------------------
+# betweenness centrality: exact + sampled multi-source
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def bc_graph():
+    return G.rmat(6, 6, seed=1)
+
+
+def test_bc_single_source_unchanged(bc_graph):
+    deg = np.diff(np.asarray(bc_graph.row_offsets))
+    s = int(np.argmax(deg))
+    r = bc(bc_graph, s)
+    assert np.allclose(np.asarray(r.bc), R.bc_ref(bc_graph, s),
+                       rtol=1e-3, atol=1e-3)
+
+
+def test_bc_batch_lanes_match_single(bc_graph):
+    srcs = [0, 5, 9]
+    rb = bc_batch(bc_graph, srcs)
+    for i, s in enumerate(srcs):
+        assert np.allclose(np.asarray(rb.bc[i]), R.bc_ref(bc_graph, s),
+                           rtol=1e-3, atol=1e-3), i
+
+
+def test_bc_exact_matches_oracle_sum(bc_graph):
+    """bc(graph) with no src == sum of per-source Brandes passes
+    (the exact-BC acceptance contract), across a chunk size that does
+    not divide n (exercises the padded final chunk)."""
+    n = bc_graph.num_vertices
+    ref = sum(R.bc_ref(bc_graph, s).astype(np.float64) for s in range(n))
+    r = bc(bc_graph, chunk=24)
+    assert r.chunks == -(-n // 24)
+    assert int(r.num_sources) == n
+    assert np.allclose(np.asarray(r.bc), ref, rtol=1e-3, atol=1e-3)
+
+
+def test_bc_exact_matches_networkx(bc_graph):
+    nx = pytest.importorskip("networkx")
+    src_e, dst_e = G.edge_list(bc_graph)
+    dg = nx.DiGraph()
+    dg.add_nodes_from(range(bc_graph.num_vertices))
+    dg.add_edges_from(zip(src_e.tolist(), dst_e.tolist()))
+    ref = nx.betweenness_centrality(dg, normalized=False)
+    ref = np.array([ref[v] for v in range(bc_graph.num_vertices)])
+    r = bc(bc_graph, chunk=32)
+    assert np.allclose(np.asarray(r.bc), ref, rtol=1e-3, atol=1e-3)
+
+
+def test_bc_sampled_all_roots_equals_exact(bc_graph):
+    n = bc_graph.num_vertices
+    exact = bc(bc_graph, chunk=32)
+    sampled = bc(bc_graph, samples=n, seed=0, chunk=32)
+    assert np.allclose(np.asarray(sampled.bc), np.asarray(exact.bc),
+                       rtol=1e-4, atol=1e-4)
+
+
+def test_bc_sampled_subset_is_scaled_estimate(bc_graph):
+    n = bc_graph.num_vertices
+    r = bc(bc_graph, samples=16, seed=3, chunk=8)
+    assert int(r.num_sources) == 16
+    exact = bc(bc_graph, chunk=32)
+    # unbiased estimator: same total mass scale (loose sanity bound)
+    tot_e = float(np.asarray(exact.bc).sum())
+    tot_s = float(np.asarray(r.bc).sum())
+    assert 0.3 * tot_e < tot_s < 3.0 * tot_e
