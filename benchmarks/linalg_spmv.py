@@ -1,0 +1,122 @@
+"""Semiring-algebra benchmark — the PR 3 headline measurement.
+
+Times the masked/unmasked semiring SpMV, the linalg-routed PageRank and
+the masked-SpGEMM triangle count on both backends and writes
+BENCH_pr3.json next to the PR 1/PR 2 numbers. Comparisons to read from
+the rows:
+
+  * pagerank rows vs the pagerank rows of BENCH_pr1.json — the PR 1
+    numbers went through the standalone ``csr_spmv`` path, these go
+    through the ``"spmv"`` registry op (acceptance: pallas no slower);
+  * spmv vs spmv_masked — the mask is free on the xla path (a where)
+    and on the pallas path (same tiles, identity writes);
+  * tc rows vs the tc rows of BENCH_pr1.json (same masked-intersection
+    workload, now expressed as ``C⟨G'⟩ = G' ⊗ G'ᵀ``).
+
+The xla rows use the PR 1 rmat scale-14 graph; the pallas TC row uses a
+smaller graph because interpret mode executes the kernel grid on the
+host (the PR 2 precedent, documented in the row) — pallas pagerank/spmv
+stay at scale 14 so the PR 1 comparison is direct.
+
+  PYTHONPATH=src python -m benchmarks.linalg_spmv --json BENCH_pr3.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import linalg
+from repro.core import graph as G
+from repro.core.primitives import pagerank, triangle_count
+
+REPEATS = 3
+
+
+def _time_ms(fn, repeats: int = REPEATS) -> float:
+    jax.block_until_ready(fn())          # pay the trace outside the clock
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.monotonic()
+        jax.block_until_ready(fn())
+        best = min(best, (time.monotonic() - t0) * 1e3)
+    return round(best, 2)
+
+
+def bench_backend(backend: str, scale: int, tc_scale: int,
+                  edge_factor: int = 16, seed: int = 0):
+    g = G.rmat(scale, edge_factor, seed=seed, weighted=True)
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.random(g.num_vertices), jnp.float32)
+    mask = jnp.asarray(rng.random(g.num_vertices) < 0.5)
+    rows = []
+
+    spmv_j = jax.jit(lambda v: linalg.spmv(g, v, structural=True,
+                                           backend=backend))
+    rows.append({"op": "spmv", "backend": backend, "scale": scale,
+                 "ms": _time_ms(lambda: spmv_j(x))})
+    spmv_m = jax.jit(lambda v: linalg.spmv(g, v, mask=mask,
+                                           structural=True,
+                                           backend=backend))
+    rows.append({"op": "spmv_masked", "backend": backend, "scale": scale,
+                 "ms": _time_ms(lambda: spmv_m(x))})
+    rows.append({"op": "pagerank", "backend": backend, "scale": scale,
+                 "ms": _time_ms(
+                     lambda: pagerank(g, max_iter=20,
+                                      backend=backend).rank),
+                 "note": "compare the pagerank rows of BENCH_pr1.json "
+                         "(PR 1 csr_spmv path)"})
+    for row in rows:
+        print(f"[linalg_spmv] {row['op']:12s} backend={backend} "
+              f"scale={row['scale']}: {row['ms']} ms")
+
+    gt = g if tc_scale == scale else G.rmat(tc_scale, edge_factor,
+                                            seed=seed, weighted=True)
+    tc_row = {"op": "tc", "backend": backend, "scale": tc_scale,
+              "ms": _time_ms(
+                  lambda: triangle_count(gt, backend=backend).total,
+                  repeats=1)}
+    if tc_scale != scale:
+        tc_row["note"] = ("smaller graph: interpret mode runs the "
+                          "kernel grid on the host (PR 2 precedent)")
+    rows.append(tc_row)
+    print(f"[linalg_spmv] {'tc':12s} backend={backend} "
+          f"scale={tc_scale}: {tc_row['ms']} ms")
+    return rows
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default="BENCH_pr3.json")
+    ap.add_argument("--scale", type=int, default=14)
+    ap.add_argument("--pallas-tc-scale", type=int, default=10)
+    args = ap.parse_args(argv)
+    out = {
+        "pr": 3,
+        "note": "semiring algebra layer: masked SpMV + linalg-routed "
+                "pagerank/tc; compare pagerank and tc rows against "
+                "BENCH_pr1.json (csr_spmv / segmented-intersect paths)",
+        "repeats": REPEATS,
+        "jax_backend": jax.default_backend(),
+        "interpret_pallas": jax.default_backend() != "tpu",
+        "platform": platform.platform(),
+        "results": (bench_backend("xla", args.scale, args.scale)
+                    + bench_backend("pallas", args.scale,
+                                    args.pallas_tc_scale)),
+    }
+    with open(args.json, "w") as f:
+        json.dump(out, f, indent=1)
+    print(f"[linalg_spmv] wrote {args.json}")
+
+
+def run():
+    main([])
+
+
+if __name__ == "__main__":
+    main()

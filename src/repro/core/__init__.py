@@ -10,13 +10,16 @@ Public surface:
   direction  — push/pull direction-optimization heuristics
   enactor    — BSP convergence-loop driver
   primitives — bfs, sssp, pagerank, connected_components, bc,
-               triangle_count, who_to_follow
+               triangle_count, label_propagation, reach, who_to_follow
+               (the algebraic ones route through repro.linalg)
 """
 from . import backend, direction, enactor, frontier, graph, operators
 from .backend import use_backend
-from .primitives import (bc, bfs, connected_components, pagerank, sssp,
-                         triangle_count, who_to_follow)
+from .primitives import (bc, bfs, connected_components, label_propagation,
+                         pagerank, reach, sssp, triangle_count,
+                         who_to_follow)
 
 __all__ = ["graph", "frontier", "operators", "backend", "use_backend",
            "direction", "enactor", "bfs", "sssp", "pagerank",
-           "connected_components", "bc", "triangle_count", "who_to_follow"]
+           "connected_components", "bc", "triangle_count",
+           "label_propagation", "reach", "who_to_follow"]

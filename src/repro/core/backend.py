@@ -53,6 +53,15 @@ _REGISTRY: dict[tuple[str, str], Callable] = {}
 _LAZY_PROVIDERS = {PALLAS: "repro.kernels.ops"}
 _loaded: set[str] = set()
 
+# Ops whose xla implementations live outside repro.core (the algebra
+# layer): imported on first dispatch so `import repro.core` stays cheap
+# and repro.linalg never has to be imported explicitly before use.
+_LAZY_OPS = {
+    "spmv": "repro.linalg.ops",
+    "spmm": "repro.linalg.ops",
+    "mxm": "repro.linalg.ops",
+}
+
 
 def _stack() -> list:
     if not hasattr(_tls, "stack"):
@@ -133,6 +142,8 @@ def dispatch(op: str, backend: Optional[str] = None) -> Callable:
     if bk in _LAZY_PROVIDERS and bk not in _loaded:
         importlib.import_module(_LAZY_PROVIDERS[bk])
         _loaded.add(bk)
+    if (op, bk) not in _REGISTRY and op in _LAZY_OPS:
+        importlib.import_module(_LAZY_OPS.pop(op))
     impl = _REGISTRY.get((op, bk))
     if impl is None:
         impl = _REGISTRY.get((op, XLA))
@@ -146,4 +157,6 @@ def registered(op: str, backend: str) -> bool:
     if backend in _LAZY_PROVIDERS and backend not in _loaded:
         importlib.import_module(_LAZY_PROVIDERS[backend])
         _loaded.add(backend)
+    if (op, backend) not in _REGISTRY and op in _LAZY_OPS:
+        importlib.import_module(_LAZY_OPS.pop(op))
     return (op, backend) in _REGISTRY

@@ -89,6 +89,54 @@ class Graph:
         mask = lanes < deg
         return jnp.where(mask, nbrs, -1), mask
 
+    @classmethod
+    def from_csr(cls, row_offsets, col_indices, edge_values=None, *,
+                 build_csc: bool = True,
+                 sort_neighbors: bool = True) -> "Graph":
+        """Build a Graph from host-side CSR arrays.
+
+        ALL static kernel metadata — the CSC mirror and both ELL pack
+        widths — is computed here, exactly once, at build time. Jitted
+        code (the pallas SpMV/SpMM hot paths in particular) reads the
+        widths as static attributes and never synchronizes to the host;
+        hand-constructing ``Graph(...)`` directly skips this and leaves
+        the metadata ``None``, which the pallas backend rejects.
+
+        Neighbor lists are sorted within each row (values permuted
+        along) unless ``sort_neighbors=False`` — segmented intersection
+        and the SpGEMM probe binary-search rows and silently miscount on
+        unsorted input (paper §4.3 assumes sorted adjacency lists).
+        """
+        ro = np.asarray(row_offsets, np.int32)
+        ci = np.asarray(col_indices, np.int32)
+        vals = (None if edge_values is None
+                else np.asarray(edge_values, np.float32))
+        n = len(ro) - 1
+        counts = np.diff(ro)
+        if sort_neighbors and len(ci):
+            order = np.lexsort((ci, np.repeat(np.arange(n), counts)))
+            ci = ci[order]
+            if vals is not None:
+                vals = vals[order]
+        csc = (None, None, None, None)
+        csc_ell = None
+        if build_csc:
+            src = np.repeat(np.arange(n, dtype=np.int32), counts)
+            csc = _build_csc(n, src, ci.astype(np.int64), vals)
+            csc_ell = ell_width_for(np.diff(csc[0]))
+        return cls(
+            row_offsets=jnp.asarray(ro),
+            col_indices=jnp.asarray(ci),
+            edge_values=jnp.asarray(vals) if vals is not None else None,
+            csc_offsets=jnp.asarray(csc[0]) if csc[0] is not None else None,
+            csc_indices=jnp.asarray(csc[1]) if csc[1] is not None else None,
+            csc_edge_values=(jnp.asarray(csc[2])
+                             if csc[2] is not None else None),
+            csc_edge_ids=jnp.asarray(csc[3]) if csc[3] is not None else None,
+            ell_width=ell_width_for(counts),
+            csc_ell_width=csc_ell,
+        )
+
 
 def ell_width_for(degrees: np.ndarray) -> int:
     """Default ELL pack width for the hybrid SpMV kernel: covers ≥95% of
@@ -157,23 +205,12 @@ def from_edge_list(src, dst, n: Optional[int] = None, values=None,
     counts = np.bincount(src, minlength=n)
     row_offsets = np.zeros(n + 1, dtype=np.int32)
     np.cumsum(counts, out=row_offsets[1:])
-    col_indices = dst.astype(np.int32)
-    csc = (None, None, None, None)
-    csc_ell = None
-    if build_csc:
-        csc = _build_csc(n, src.astype(np.int32), dst.astype(np.int64), values)
-        csc_ell = ell_width_for(np.diff(csc[0]))
-    return Graph(
-        row_offsets=jnp.asarray(row_offsets),
-        col_indices=jnp.asarray(col_indices),
-        edge_values=jnp.asarray(values) if values is not None else None,
-        csc_offsets=jnp.asarray(csc[0]) if csc[0] is not None else None,
-        csc_indices=jnp.asarray(csc[1]) if csc[1] is not None else None,
-        csc_edge_values=jnp.asarray(csc[2]) if csc[2] is not None else None,
-        csc_edge_ids=jnp.asarray(csc[3]) if csc[3] is not None else None,
-        ell_width=ell_width_for(counts),
-        csc_ell_width=csc_ell,
-    )
+    # Graph.from_csr is the single build-time home of kernel metadata
+    # (CSC mirror + ELL pack widths) — computed once, never under jit.
+    # Rows are already in the order this function's flags chose, so the
+    # constructor must not re-sort them.
+    return Graph.from_csr(row_offsets, dst.astype(np.int32), values,
+                          build_csc=build_csc, sort_neighbors=False)
 
 
 def edge_list(graph: Graph) -> tuple[np.ndarray, np.ndarray]:

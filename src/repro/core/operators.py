@@ -553,9 +553,12 @@ def neighborhood_reduce(graph: Graph, frontier: SparseFrontier, cap_out: int,
 
 
 def _searchsorted_segment(haystack: jax.Array, lo: jax.Array, hi: jax.Array,
-                          needles: jax.Array, iters: int = 32) -> jax.Array:
+                          needles: jax.Array, iters: int = 32,
+                          locate: bool = False) -> jax.Array:
     """Vectorized binary search of ``needles`` within haystack[lo:hi) per
-    lane; returns True where found. The SmallLarge kernel's probe (§4.3)."""
+    lane; returns True where found — or, with ``locate=True``, the
+    matched position (−1 when absent; the value-gathering probe the
+    semiring SpGEMM needs). The SmallLarge kernel's probe (§4.3)."""
     lo = lo.astype(jnp.int32)
     hi = hi.astype(jnp.int32)
 
@@ -571,7 +574,10 @@ def _searchsorted_segment(haystack: jax.Array, lo: jax.Array, hi: jax.Array,
     lo_f, _ = jax.lax.fori_loop(0, iters, body, (lo, hi))
     in_range = lo_f < hi
     found_val = haystack[jnp.clip(lo_f, 0, haystack.shape[0] - 1)]
-    return in_range & (found_val == needles)
+    found = in_range & (found_val == needles)
+    if locate:
+        return jnp.where(found, lo_f, -1).astype(jnp.int32)
+    return found
 
 
 class IntersectResult(NamedTuple):

@@ -4,9 +4,12 @@ from .pagerank import pagerank
 from .cc import connected_components
 from .bc import bc, bc_batch
 from .tc import triangle_count
+from .label_propagation import label_propagation
+from .reach import reach, reach_batch
 from .wtf import who_to_follow
 from .subgraph import subgraph_match
 
 __all__ = ["bfs", "bfs_batch", "sssp", "sssp_batch", "pagerank",
            "connected_components", "bc", "bc_batch", "triangle_count",
+           "label_propagation", "reach", "reach_batch",
            "who_to_follow", "subgraph_match"]

@@ -1,0 +1,110 @@
+"""Label-propagation community detection — an algebraic primitive.
+
+The update rule is the classic synchronous LP: every vertex adopts the
+most frequent label among its neighbors (ties → smallest label, no
+votes → keep). Algebraically one iteration is a plus-times SpMM against
+the one-hot label matrix followed by a max-argmax row reduction over
+the ⟨max,min⟩ (max score, min label) merge — the "argmax semiring"
+formulation of CombBLAS/GraphBLAST, which is exactly the kind of
+whole-frontier primitive that is awkward to express vertex-centrically
+(the per-vertex mode needs a histogram, not a scatter).
+
+Label space is swept in blocks of ``block`` columns (row-tiled over the
+label domain): each block is one dense-accumulator SpMM through the
+``"spmm"`` registry op — the fused masked-semiring row kernel under
+``backend="pallas"`` — and blocks merge into a running
+(best_count, best_label) pair under the max-min tie-break, so memory
+stays O(n·block) while the full n-label domain is covered. Cost is
+O(m·L/block) gathers per iteration over a label domain of size L —
+the price of exact mode computation; communities collapse the active
+label set quickly in practice.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.linalg import semiring as SR
+
+from .. import backend as B
+from ..enactor import run_until
+from ..graph import Graph
+
+
+class LPResult(NamedTuple):
+    labels: jax.Array       # (n,) int32 community labels
+    iterations: jax.Array   # () int32
+
+
+@functools.partial(jax.jit, static_argnames=("max_iter", "backend",
+                                             "ell_width", "num_labels",
+                                             "block"))
+def _lp_impl(graph: Graph, labels0: jax.Array, max_iter: int, backend: str,
+             ell_width: Optional[int], num_labels: int,
+             block: int) -> LPResult:
+    n = graph.num_vertices
+    spmm_op = B.dispatch("spmm", backend)
+    nblk = -(-num_labels // block)
+
+    def body(st):
+        labels, _ = st
+
+        def blk(i, carry):
+            best, bestl = carry
+            cols = i * block + jnp.arange(block, dtype=jnp.int32)
+            onehot = (labels[:, None] == cols[None, :]).astype(jnp.float32)
+            # votes[v, j] = #neighbors of v carrying label cols[j]
+            votes = spmm_op(graph.row_offsets, graph.col_indices, None,
+                            onehot, SR.plus_times, ell_width, None)
+            bs = jnp.max(votes, axis=1)
+            bl = cols[jnp.argmax(votes, axis=1)]   # first max = min label
+            # ⟨max,min⟩ merge: higher count wins, equal count → smaller
+            # label; zero-vote candidates never displace the carry
+            take = (bs > best) | ((bs == best) & (bs > 0) & (bl < bestl))
+            return jnp.where(take, bs, best), jnp.where(take, bl, bestl)
+
+        best0 = jnp.zeros((n,), jnp.float32)
+        _, new_labels = jax.lax.fori_loop(0, nblk, blk, (best0, labels))
+        changed = jnp.sum((new_labels != labels).astype(jnp.int32))
+        return new_labels, changed
+
+    state = (labels0, jnp.int32(1))
+    (labels, _), iters = run_until(lambda st: st[1] > 0, body, state,
+                                   max_iter=max_iter)
+    return LPResult(labels=labels, iterations=iters)
+
+
+def label_propagation(graph: Graph, *, labels0=None,
+                      num_labels: Optional[int] = None,
+                      max_iter: int = 30, block: Optional[int] = None,
+                      backend: Optional[str] = None,
+                      use_kernel: Optional[bool] = None) -> LPResult:
+    """Synchronous LP until the labeling is stable (or max_iter).
+
+    ``labels0`` defaults to each vertex being its own community
+    (``arange(n)``); ``num_labels`` bounds the label domain (defaults to
+    n) and ``block`` the SpMM column-block width. Labels spread along
+    out-neighbors; pass an undirected graph for community detection.
+    """
+    bk = B.resolve(backend, use_kernel)
+    n = graph.num_vertices
+    if labels0 is None:
+        labels0 = jnp.arange(n, dtype=jnp.int32)
+    else:
+        labels0 = jnp.asarray(labels0, jnp.int32)
+    if num_labels is None:
+        num_labels = n
+    if block is None:
+        block = max(1, min(32, num_labels))
+    ell_width = graph.ell_width
+    if ell_width is None and bk == B.PALLAS:
+        raise ValueError(
+            "label_propagation on the pallas backend needs "
+            "Graph.ell_width; build the Graph via Graph.from_csr / "
+            "from_edge_list")
+    return _lp_impl(graph, labels0, max_iter, bk,
+                    None if ell_width is None else int(ell_width),
+                    int(num_labels), int(block))

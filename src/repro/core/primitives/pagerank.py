@@ -1,17 +1,18 @@
-"""PageRank (paper §6.5).
+"""PageRank (paper §6.5) — the algebra layer's flagship consumer.
 
-The frontier starts with all vertices; each iteration is one advance
-(accumulate rank contributions along edges — the paper uses atomicAdd, we
-use a segment-sum over the CSC transpose, which XLA turns into the same
-dense sweep) plus a filter that retires converged vertices from the
-frontier. Iteration stops when every vertex has converged (empty frontier)
-or at max_iter.
+Each iteration is one plus-times SpMV over the CSC transpose
+(rank mass flows along reversed edges: ``acc = Aᵀ ⊗ contrib``) plus a
+convergence filter that retires settled vertices. The paper implements
+the same sweep as an advance with atomicAdd; GraphBLAST's observation —
+PR *is* SpMV over the plus-times semiring — is taken literally here:
+the contribution sweep dispatches through the ``"spmv"`` registry op of
+``repro.linalg`` on BOTH backends (xla: gather + segment-sum, fused by
+XLA; pallas: the fused masked-semiring ELL row kernel).
 
-``backend="pallas"`` routes the contribution sweep through the Pallas CSR
-SpMV kernel (the computation is congruent to SpMV, as the paper notes).
-The ELL pack width is static graph metadata computed at build time
-(``Graph.csc_ell_width``), so the pallas path is jit-clean end to end —
-no host synchronization inside the iteration loop.
+The ELL pack width is static graph metadata computed exactly once at
+build time (``Graph.from_csr`` → ``Graph.csc_ell_width``); the impl is
+jit-clean end to end — no host synchronization inside the iteration
+loop (asserted by a one-trace test in tests/test_linalg.py).
 """
 from __future__ import annotations
 
@@ -21,9 +22,11 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.linalg import semiring as SR
+
 from .. import backend as B
 from ..enactor import run_until
-from ..graph import Graph, ell_width_for
+from ..graph import Graph
 
 
 class PRState(NamedTuple):
@@ -42,24 +45,16 @@ class PRResult(NamedTuple):
                                              "ell_width"))
 def _pagerank_impl(graph: Graph, damping: jax.Array, tol: jax.Array,
                    max_iter: int, backend: str,
-                   ell_width: int) -> PRResult:
-    n, m = graph.num_vertices, graph.num_edges
+                   ell_width: Optional[int]) -> PRResult:
+    n = graph.num_vertices
     deg = graph.degrees.astype(jnp.float32)
-    seg = jnp.searchsorted(graph.csc_offsets,
-                           jnp.arange(m, dtype=jnp.int32), side="right") - 1
-
-    def spmv(contrib):
-        if backend == B.PALLAS:
-            kernel_spmv = B.dispatch("spmv", backend)
-            return kernel_spmv(graph.csc_offsets, graph.csc_indices,
-                               contrib, ell_width)
-        vals = contrib[graph.csc_indices]
-        return jax.ops.segment_sum(vals, seg, num_segments=n,
-                                   indices_are_sorted=True)
+    spmv_op = B.dispatch("spmv", backend)
 
     def body(st: PRState):
         contrib = jnp.where(deg > 0, st.rank / jnp.maximum(deg, 1.0), 0.0)
-        acc = spmv(contrib)
+        # acc = Aᵀ ⊗ contrib over plus-times (structural adjacency)
+        acc = spmv_op(graph.csc_offsets, graph.csc_indices, None, contrib,
+                      SR.plus_times, ell_width, None)
         dangling = jnp.sum(jnp.where(deg == 0, st.rank, 0.0)) / n
         new_rank = (1.0 - damping) / n + damping * (acc + dangling)
         # convergence filter: retire vertices whose rank has settled
@@ -82,17 +77,15 @@ def pagerank(graph: Graph, *, damping: float = 0.85, tol: float = 0.0,
     assert graph.has_csc, "pagerank uses the CSC transpose"
     bk = B.resolve(backend, use_kernel)
     if ell_width is None:
-        # static graph metadata (computed at build time). Only the pallas
-        # spmv consumes the width, so only that path pays the host-side
-        # fallback for hand-constructed Graphs — still outside jit, so the
-        # impl stays synchronization-free.
+        # static kernel metadata, computed exactly once at Graph build
+        # time (Graph.from_csr) — never recomputed here, so the impl
+        # stays synchronization-free on every path
         ell_width = graph.csc_ell_width
-        if ell_width is None:
-            if bk == B.PALLAS:
-                import numpy as np
-                ell_width = ell_width_for(np.diff(np.asarray(
-                    graph.csc_offsets)))
-            else:
-                ell_width = 1
+    if ell_width is None and bk == B.PALLAS:
+        raise ValueError(
+            "pagerank on the pallas backend needs Graph.csc_ell_width; "
+            "build the Graph via Graph.from_csr / from_edge_list (the "
+            "width is computed once at build time) or pass ell_width=")
     return _pagerank_impl(graph, jnp.float32(damping), jnp.float32(tol),
-                          max_iter, bk, int(ell_width))
+                          max_iter, bk,
+                          None if ell_width is None else int(ell_width))

@@ -1,5 +1,7 @@
 from .ref_graph import (bfs_ref, sssp_ref, pagerank_ref, cc_ref, bc_ref,
-                        tc_ref, ppr_ref, salsa_ref)
+                        tc_ref, reach_ref, label_propagation_ref, ppr_ref,
+                        salsa_ref)
 
 __all__ = ["bfs_ref", "sssp_ref", "pagerank_ref", "cc_ref", "bc_ref",
-           "tc_ref", "ppr_ref", "salsa_ref"]
+           "tc_ref", "reach_ref", "label_propagation_ref", "ppr_ref",
+           "salsa_ref"]

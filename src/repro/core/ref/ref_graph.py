@@ -158,6 +158,37 @@ def tc_ref(graph) -> int:
     return count // 3
 
 
+def reach_ref(graph, src: int, k: int) -> np.ndarray:
+    """k-hop reachability oracle: bfs depth within [0, k]."""
+    depth = bfs_ref(graph, src)
+    return (depth >= 0) & (depth <= k)
+
+
+def label_propagation_ref(graph, max_iter: int = 30,
+                          labels: np.ndarray | None = None) -> np.ndarray:
+    """Synchronous label propagation — the exact mirror of the device
+    rule: every vertex adopts the most frequent neighbor label (ties →
+    smallest label; no neighbors / no votes → keep), all vertices
+    updating simultaneously, until stable or max_iter."""
+    ro, ci, _ = _csr(graph)
+    n = len(ro) - 1
+    lab = (np.arange(n, dtype=np.int64) if labels is None
+           else np.asarray(labels, np.int64).copy())
+    for _ in range(max_iter):
+        new = lab.copy()
+        for u in range(n):
+            nbr = ci[ro[u]:ro[u + 1]]
+            if len(nbr) == 0:
+                continue
+            cnt = np.bincount(lab[nbr], minlength=n)
+            if cnt.max() > 0:
+                new[u] = int(np.argmax(cnt))    # first max = smallest label
+        if np.array_equal(new, lab):
+            break
+        lab = new
+    return lab.astype(np.int32)
+
+
 def ppr_ref(graph, src: int, damping: float = 0.85,
             iters: int = 30) -> np.ndarray:
     """Personalized PageRank with teleport to ``src``."""

@@ -30,7 +30,7 @@ from .flash_attention import flash_attention_kernel
 from .lb_expand import lb_expand_kernel
 from .moe_dispatch import moe_gather_kernel
 from .segment_search import segment_search_kernel
-from .spmv import spmv_ell_kernel
+from .semiring_spmv import semiring_ell_kernel
 
 
 def _interpret() -> bool:
@@ -100,23 +100,26 @@ def segment_search(haystack: jax.Array, lo: jax.Array, hi: jax.Array,
                                  interpret=_interpret()) > 0
 
 
-@B.register("spmv", B.PALLAS)
-def csr_spmv(offsets: jax.Array, indices: jax.Array, x: jax.Array,
-             ell_width: int) -> jax.Array:
-    """Hybrid ELL+COO SpMV over a CSR structure with unit values:
-    y[i] = Σ_{e∈row i} x[indices[e]].
+@B.register("spmm", B.PALLAS)
+def semiring_spmm(offsets: jax.Array, indices: jax.Array, values, x,
+                  sr, ell_width, mask) -> jax.Array:
+    """Hybrid ELL+COO masked-semiring SpMM over a CSR structure —
+    ``Y⟨mask⟩ = A ⊗ X`` with X (nx, k) dense. Registry contract shared
+    with ``linalg.ops._spmm_xla``.
 
-    Rows are packed to ELL width; overflow edges of ultra-high-degree rows
-    fall back to a segment-sum (COO part). ``ell_width`` is static and must
-    be chosen host-side (``Graph`` computes a 95th-percentile default at
-    build time — see ``Graph.ell_width`` / ``Graph.csc_ell_width``); this
-    function performs no host synchronization and is jit-clean.
+    Rows are packed to ELL width and swept by the fused masked-semiring
+    row kernel ((k, tiles) grid); overflow edges of ultra-high-degree
+    rows fall back to a semiring segment-reduce (the COO part).
+    ``ell_width`` is static graph metadata chosen at build time
+    (``Graph.ell_width`` / ``Graph.csc_ell_width`` via ``Graph.from_csr``)
+    so this path performs no host synchronization and is jit-clean.
     """
     if ell_width is None:
         raise ValueError(
-            "csr_spmv requires a static ell_width; use Graph.ell_width / "
-            "Graph.csc_ell_width (computed at build time) or pass one "
-            "explicitly — the old device_get default broke under jit")
+            "the pallas spmm/spmv needs a static ell_width; use "
+            "Graph.ell_width / Graph.csc_ell_width (computed at build "
+            "time by Graph.from_csr / from_edge_list) or pass one "
+            "explicitly")
     n = offsets.shape[0] - 1
     m = indices.shape[0]
     deg = offsets[1:] - offsets[:-1]
@@ -124,19 +127,74 @@ def csr_spmv(offsets: jax.Array, indices: jax.Array, x: jax.Array,
     lanes = jnp.arange(w, dtype=jnp.int32)[None, :]
     starts = offsets[:-1, None]
     idx = jnp.minimum(starts + lanes, m - 1)
-    mask = lanes < deg[:, None]
-    nbrs = jnp.where(mask, indices[idx], -1)
-    vals = mask.astype(jnp.float32)
-    y = spmv_ell_kernel(nbrs, vals, x, interpret=_interpret())
-    # COO overflow: edges beyond the ELL width
+    lane_ok = lanes < deg[:, None]
+    nbrs = jnp.where(lane_ok, indices[idx], -1)
+    vals = (jnp.where(lane_ok, jnp.float32(sr.one), 0.0)
+            if values is None else values[idx].astype(jnp.float32))
+    rowm = (jnp.ones((n,), jnp.int32) if mask is None
+            else mask.astype(jnp.int32))
+    y = semiring_ell_kernel(nbrs, vals, x, rowm, sr,
+                            interpret=_interpret())
+    # COO overflow: edges beyond the ELL width, ⊕-merged into the kernel
+    # output (sound because masked-out rows are forced to the ⊕-identity
+    # on both parts before the merge).
     slot = jnp.arange(m, dtype=jnp.int32)
     row = jnp.searchsorted(offsets, slot, side="right") - 1
     row = jnp.clip(row, 0, n - 1)
     rank = slot - offsets[row]
     over = rank >= w
-    y = y.at[jnp.where(over, row, n)].add(
-        jnp.where(over, x[indices], 0.0), mode="drop")
-    return y
+    xv = x[indices]                                       # (m, k)
+    prod = xv if values is None else sr.mul_op(values[:, None], xv)
+    prod = jnp.where(over[:, None], prod, sr.zero)
+    y_over = sr.segment_reduce(prod.astype(jnp.float32), row, n,
+                               indices_are_sorted=True)
+    if mask is not None:
+        y_over = jnp.where(mask[:, None], y_over, sr.zero)
+    return sr.add_op(y, y_over).astype(jnp.float32)
+
+
+@B.register("spmv", B.PALLAS)
+def semiring_spmv(offsets: jax.Array, indices: jax.Array, values, x,
+                  sr, ell_width, mask) -> jax.Array:
+    """Masked-semiring SpMV — the k=1 column of the SpMM kernel."""
+    return semiring_spmm(offsets, indices, values, x[:, None], sr,
+                         ell_width, mask)[:, 0]
+
+
+def _locate_pallas(haystack, lo, hi, needles):
+    return segment_search_kernel(haystack, lo, hi, needles,
+                                 interpret=_interpret(), locate=True)
+
+
+def _register_mxm():
+    # the shared dot-formulation machinery lives in linalg.ops; the
+    # pallas flavour plugs in the fused LB expansion and the
+    # position-returning probe kernel
+    from repro.linalg.ops import make_mxm_impl
+    B.register("mxm", B.PALLAS)(
+        make_mxm_impl(advance_fused, _locate_pallas))
+
+
+_register_mxm()
+
+
+def csr_spmv(offsets: jax.Array, indices: jax.Array, x: jax.Array,
+             ell_width: int) -> jax.Array:
+    """Deprecated alias (one release): unit-value plus-times SpMV.
+
+    The standalone SpMV path was absorbed into the semiring algebra
+    layer — call ``repro.linalg.spmv`` (which also handles masks,
+    values, CSC transpose and backend selection).
+    """
+    import warnings
+    warnings.warn(
+        "kernels.ops.csr_spmv is deprecated; use repro.linalg.spmv "
+        "(semiring algebra layer) instead", DeprecationWarning,
+        stacklevel=2)
+    from repro.linalg.semiring import plus_times
+    return semiring_spmv(offsets, indices, None,
+                         x.astype(jnp.float32), plus_times,
+                         ell_width, None)
 
 
 @B.register("compact", B.PALLAS)

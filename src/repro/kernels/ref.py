@@ -33,6 +33,19 @@ def spmv_ell_ref(nbrs: jax.Array, vals: jax.Array, x: jax.Array):
     return jnp.sum(jnp.where(mask, vals * x[safe], 0.0), axis=1)
 
 
+def semiring_ell_ref(nbrs: jax.Array, vals: jax.Array, x: jax.Array,
+                     mask: jax.Array, sr):
+    """Masked-semiring ELL SpMM oracle: y[i,b] = ⊕_w vals[i,w] ⊗
+    x[nbrs[i,w], b]; masked-out rows hold the ⊕-identity."""
+    ok = nbrs >= 0
+    safe = jnp.where(ok, nbrs, 0)
+    g = x[safe]                                    # (n, W, k)
+    prod = sr.mul_op(vals[..., None], g)
+    prod = jnp.where(ok[..., None], prod, sr.zero)
+    red = sr.add_reduce(prod, axis=1)              # (n, k)
+    return jnp.where((mask > 0)[:, None], red, sr.zero)
+
+
 def segment_search_ref(haystack: jax.Array, lo: jax.Array, hi: jax.Array,
                        needles: jax.Array):
     """found[i] = needles[i] ∈ haystack[lo[i]:hi[i]) (segments sorted)."""

@@ -20,7 +20,8 @@ from jax.experimental import pallas as pl
 TILE = 512
 
 
-def _kernel(hay_ref, lo_ref, hi_ref, needle_ref, found_ref, *, iters: int):
+def _kernel(hay_ref, lo_ref, hi_ref, needle_ref, found_ref, *, iters: int,
+            locate: bool = False):
     hay = hay_ref[...]
     lo = lo_ref[...]
     hi = hi_ref[...]
@@ -39,13 +40,24 @@ def _kernel(hay_ref, lo_ref, hi_ref, needle_ref, found_ref, *, iters: int):
     lo_f, _ = jax.lax.fori_loop(0, iters, body, (lo, hi))
     in_range = lo_f < hi
     found = in_range & (hay[jnp.clip(lo_f, 0, hmax)] == needles)
-    found_ref[...] = found.astype(jnp.int32)
+    if locate:
+        found_ref[...] = jnp.where(found, lo_f, -1).astype(jnp.int32)
+    else:
+        found_ref[...] = found.astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "locate"))
 def segment_search_kernel(haystack: jax.Array, lo: jax.Array, hi: jax.Array,
                           needles: jax.Array,
-                          interpret: bool = True) -> jax.Array:
+                          interpret: bool = True,
+                          locate: bool = False) -> jax.Array:
+    """found[i] ∈ {0,1} for needles[i] in haystack[lo[i]:hi[i]).
+
+    With ``locate=True`` returns the matched *position* instead (int32
+    index into ``haystack``, −1 when absent) — the value-gathering probe
+    the semiring SpGEMM needs (B's stored value at the match feeds the
+    ⊗ combine).
+    """
     cap = needles.shape[0]
     padded = -(-cap // TILE) * TILE
     if padded != cap:
@@ -59,7 +71,7 @@ def segment_search_kernel(haystack: jax.Array, lo: jax.Array, hi: jax.Array,
         hi = hi.astype(jnp.int32)
     iters = max(math.ceil(math.log2(max(haystack.shape[0], 2))) + 1, 1)
     found = pl.pallas_call(
-        functools.partial(_kernel, iters=iters),
+        functools.partial(_kernel, iters=iters, locate=locate),
         grid=(padded // TILE,),
         in_specs=[
             pl.BlockSpec(haystack.shape, lambda i: (0,)),

@@ -1,0 +1,97 @@
+"""Pallas kernel: fused masked-semiring SpMV/SpMM row sweep.
+
+This absorbs the old ``kernels/spmv.py`` ELL kernel (plus-times only,
+unmasked, single dense vector) and generalizes it into the algebra
+layer's one row kernel:
+
+  * any named semiring (``repro.linalg.semiring``) — the ⊗ combine and
+    ⊕ row-reduction are selected at trace time (the semiring is a static,
+    hashable argument), so each algebra compiles to a straight-line VPU
+    kernel with zero runtime branching: Gunrock's compile-time functor
+    fusion (§5.3) applied to the algebraic operator set;
+  * a row mask (GraphBLAS's output mask): masked-out rows write the
+    semiring's ⊕-identity and skip nothing structurally (dense VPU tiles
+    can't skip lanes) but cost no extra memory traffic;
+  * a dense multi-column operand X (nx, k): the grid gains an explicit
+    leading column axis — the same (B, tiles) grid discipline as
+    ``advance_fused.advance_fused_batch_kernel``, with B = dense columns
+    (one batched reachability lane / label block per column).
+
+TPU adaptation (unchanged from the absorbed kernel): CSR's ragged rows
+are packed to ELL width W chosen at Graph build time; overflow edges of
+ultra-high-degree rows are handled by a segment-reduce fallback in
+``kernels/ops.py`` (the classic ELL+COO hybrid, now semiring-generic).
+
+  y[i, b] = ⊕_w  vals[i, w] ⊗ x[nbrs[i, w], b]     (nbrs −1 ⇒ padding)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_R = 256
+MAX_GRID = 256
+
+
+def _tile_for(n: int, k: int) -> int:
+    """Row-tile size: grows from TILE_R so the (k, tiles) grid stays under
+    MAX_GRID programs (interpret-mode grid steps cost a host round trip
+    each; on TPU larger tiles amortize the VMEM-resident operand)."""
+    tile = TILE_R
+    while k * (-(-n // tile)) > MAX_GRID and tile < max(n, 1):
+        tile *= 2
+    return tile
+
+
+def _row_kernel(nbrs_ref, vals_ref, mask_ref, x_ref, y_ref, *, sr):
+    nbrs = nbrs_ref[...]                   # (TILE, W) int32
+    vals = vals_ref[...]                   # (TILE, W) f32
+    rowm = mask_ref[...]                   # (TILE,) int32 (1 = compute)
+    x = x_ref[...]                         # (nx, 1) f32 — column-resident
+    ok = nbrs >= 0
+    g = x[jnp.where(ok, nbrs, 0), 0]       # VPU gather
+    prod = sr.mul_op(vals, g)              # ⊗, selected at trace time
+    prod = jnp.where(ok, prod, sr.zero)
+    red = sr.add_reduce(prod, axis=1)      # ⊕ row reduction
+    y_ref[...] = jnp.where(rowm > 0, red, sr.zero)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("semiring", "interpret"))
+def semiring_ell_kernel(nbrs: jax.Array, vals: jax.Array, x: jax.Array,
+                        mask: jax.Array, semiring,
+                        interpret: bool = True) -> jax.Array:
+    """nbrs/vals: (n, W); x: (nx, k); mask: (n,) int32. Returns (n, k) f32.
+
+    One program per (column, row-tile) — grid (k, tiles). The dense
+    column block and the CSR-derived ELL tiles are VMEM-resident per
+    program; the semiring is static so the combine/reduce lower to fixed
+    VPU ops.
+    """
+    n, w = nbrs.shape
+    nx, k = x.shape
+    tile = _tile_for(n, k)
+    padded = -(-n // tile) * tile
+    if padded != n:
+        pad = padded - n
+        nbrs = jnp.concatenate([nbrs, jnp.full((pad, w), -1, nbrs.dtype)])
+        vals = jnp.concatenate([vals, jnp.zeros((pad, w), vals.dtype)])
+        mask = jnp.concatenate([mask, jnp.zeros((pad,), mask.dtype)])
+    grid = (k, padded // tile)
+    y = pl.pallas_call(
+        functools.partial(_row_kernel, sr=semiring),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, w), lambda b, t: (t, 0)),
+            pl.BlockSpec((tile, w), lambda b, t: (t, 0)),
+            pl.BlockSpec((tile,), lambda b, t: (t,)),
+            pl.BlockSpec((nx, 1), lambda b, t: (0, b)),
+        ],
+        out_specs=pl.BlockSpec((tile, 1), lambda b, t: (t, b)),
+        out_shape=jax.ShapeDtypeStruct((padded, k), jnp.float32),
+        interpret=interpret,
+    )(nbrs, vals.astype(jnp.float32), mask.astype(jnp.int32),
+      x.astype(jnp.float32))
+    return y[:n]

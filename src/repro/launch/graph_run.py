@@ -25,7 +25,8 @@ from repro.core import backend as B
 from repro.core import graph as G
 from repro.core import ref as R
 from repro.core.primitives import (bc, bc_batch, bfs, bfs_batch,
-                                   connected_components, pagerank, sssp,
+                                   connected_components, label_propagation,
+                                   pagerank, reach, reach_batch, sssp,
                                    sssp_batch, triangle_count,
                                    who_to_follow)
 
@@ -56,7 +57,8 @@ def _warn_overflow(overflow: np.ndarray) -> None:
 
 def run_primitive(name: str, g, src: int, validate: bool,
                   backend: str | None = None,
-                  sources: list[int] | None = None):
+                  sources: list[int] | None = None,
+                  hops: int = 3):
     bk = B.resolve(backend)
     t0 = time.monotonic()
     edges = g.num_edges
@@ -133,6 +135,31 @@ def run_primitive(name: str, g, src: int, validate: bool,
         dt = time.monotonic() - t0
         if validate:
             ok = int(r.total) == R.tc_ref(g)
+    elif name == "label_propagation":
+        r = label_propagation(g, backend=bk)
+        jax.block_until_ready(r.labels)
+        dt = time.monotonic() - t0
+        edges = g.num_edges * int(r.iterations)
+        if validate:
+            ok = np.array_equal(np.asarray(r.labels),
+                                R.label_propagation_ref(g))
+    elif name == "reach" and sources:
+        r = reach_batch(g, sources, hops, backend=bk)
+        jax.block_until_ready(r.reached)
+        dt = time.monotonic() - t0
+        edges = g.num_edges * hops * len(sources)
+        if validate:
+            ok = all(np.array_equal(np.asarray(r.reached[i]),
+                                    R.reach_ref(g, s, hops))
+                     for i, s in enumerate(sources))
+    elif name == "reach":
+        r = reach(g, src, hops, backend=bk)
+        jax.block_until_ready(r.reached)
+        dt = time.monotonic() - t0
+        edges = g.num_edges * hops
+        if validate:
+            ok = np.array_equal(np.asarray(r.reached),
+                                R.reach_ref(g, src, hops))
     elif name == "wtf":
         r = who_to_follow(g, src, k=min(1000, g.num_vertices - 1),
                           backend=bk)
@@ -155,6 +182,8 @@ def main(argv=None):
     ap.add_argument("--primitives",
                     default="bfs,sssp,pagerank,cc,bc,tc")
     ap.add_argument("--validate", action="store_true")
+    ap.add_argument("--hops", type=int, default=3,
+                    help="k for the reach primitive (k-hop reachability)")
     ap.add_argument("--src", type=int, default=None)
     ap.add_argument("--sources", default=None, metavar="S0,S1,...",
                     help="comma-separated source vertices: bfs/sssp run "
@@ -181,7 +210,7 @@ def main(argv=None):
     for name in args.primitives.split(","):
         dt, mteps, ok, bk = run_primitive(name.strip(), g, src,
                                           args.validate, args.backend,
-                                          sources=sources)
+                                          sources=sources, hops=args.hops)
         status = "" if ok is None else ("  PASS" if ok else "  FAIL")
         print(f"[graph] {name:9s} {dt*1000:9.2f} ms  {mteps:9.2f} MTEPS"
               f"  backend={bk}{status}")

@@ -1,17 +1,28 @@
-"""Graph query-serving driver — batched multi-source traversal serving.
+"""Graph query-serving driver — batched mixed-kind query serving.
 
 The inference-side drivers (launch/serve.py) pack token requests into
 fixed-shape batch slots; this driver applies the same slot discipline to
-*traversal queries*, the ROADMAP's heavy-traffic scenario. A stream of
-queries (source vertices, e.g. one personalization root per user) is
-packed into batches of ``--batch`` fixed slots and each batch runs as ONE
-jitted multi-source program (``bfs_batch`` / ``sssp_batch``): the first
-batch pays the trace, every later batch of the same shape reuses it, and
-a ragged final batch is padded with repeated sources on dead-weight slots
+*graph queries*, the ROADMAP's heavy-traffic scenario. A stream of
+queries is packed into batches of ``--batch`` fixed slots and each batch
+runs as ONE jitted multi-source program: the first batch of a kind pays
+the trace, every later batch of the same (kind, shape) reuses it, and a
+ragged final batch is padded with repeated sources on dead-weight slots
 rather than retracing at a new shape.
+
+The stream is no longer traversal-only: ``--kinds bfs,sssp,pagerank,reach``
+serves MIXED query kinds from one stream — each kind keeps its own slot
+queue (one compiled program per kind) and flushes when full, so
+traversal queries (``bfs_batch`` / ``sssp_batch``), algebraic queries
+(``reach_batch`` — or-and k-hop reachability) and global analytics
+queries (``pagerank`` — one run answers its whole batch) interleave on
+one engine. Per-kind latency is reported alongside the aggregate, and
+lands in ``--json``.
 
 Reports per-query latency (enqueue → batch completion, so queuing delay
 from batch formation is included) and aggregate queries/sec.
+
+  PYTHONPATH=src python -m repro.launch.graph_serve --graph rmat \
+      --scale 10 --kinds bfs,pagerank,reach --requests 64 --batch 8
 
   PYTHONPATH=src python -m repro.launch.graph_serve --graph rmat \
       --scale 10 --primitive bfs --requests 64 --batch 8 --backend xla
@@ -27,9 +38,12 @@ import numpy as np
 
 from repro.core import backend as B
 from repro.core import ref as R
-from repro.core.primitives import bfs_batch, sssp_batch
+from repro.core.primitives import bfs_batch, pagerank, reach_batch, \
+    sssp_batch
 
 from .graph_run import make_graph
+
+KINDS = ("bfs", "sssp", "pagerank", "reach")
 
 
 def serve(g, primitive: str, sources: np.ndarray, batch: int,
@@ -89,19 +103,147 @@ def serve(g, primitive: str, sources: np.ndarray, batch: int,
     }
 
 
+def _run_kind(g, kind: str, srcs: np.ndarray, backend: str, hops: int):
+    """Execute one flushed batch of ``kind``; returns the ready field
+    plus per-lane BFS overflow counts (zeros for other kinds — callers
+    trim the ragged-tail padding lanes before summing)."""
+    zeros = np.zeros(len(srcs), np.int64)
+    if kind == "bfs":
+        r = bfs_batch(g, srcs, backend=backend)
+        jax.block_until_ready(r.labels)
+        return r.labels, np.asarray(r.overflow)
+    if kind == "sssp":
+        r = sssp_batch(g, srcs, backend=backend)
+        jax.block_until_ready(r.dist)
+        return r.dist, zeros
+    if kind == "reach":
+        r = reach_batch(g, srcs, hops, backend=backend)
+        jax.block_until_ready(r.reached)
+        return r.reached, zeros
+    if kind == "pagerank":
+        # a global analytics query: one run answers every slot of the
+        # batch (sources are ignored; the slot discipline still bounds
+        # how many queries ride one execution)
+        r = pagerank(g, backend=backend)
+        jax.block_until_ready(r.rank)
+        return r.rank, zeros
+    raise ValueError(kind)
+
+
+def _validate_kind(g, kind: str, srcs, field, hops: int) -> int:
+    fails = 0
+    if kind == "pagerank":
+        return int(not np.allclose(np.asarray(field),
+                                   R.pagerank_ref(g, iters=20), atol=1e-6))
+    for i, s in enumerate(srcs):
+        a = np.asarray(field[i])
+        if kind == "bfs":
+            ok = np.array_equal(a, R.bfs_ref(g, int(s)))
+        elif kind == "sssp":
+            ok = np.allclose(a, R.sssp_ref(g, int(s)), rtol=1e-5)
+        else:
+            ok = np.array_equal(a, R.reach_ref(g, int(s), hops))
+        fails += not ok
+    return fails
+
+
+def serve_mixed(g, queries, batch: int, backend: str, hops: int = 3,
+                validate: bool = False) -> dict:
+    """Serve a mixed-kind query stream through per-kind fixed batch slots.
+
+    ``queries`` is a sequence of ``(kind, source)`` pairs, kinds drawn
+    from ``KINDS``. Each kind owns a slot queue: queries accumulate in
+    arrival order and a queue flushes as ONE jitted batched program the
+    moment it fills (ragged tails flush padded at end-of-stream). Returns
+    aggregate stats plus a ``per_kind`` latency/qps breakdown.
+    """
+    n_q = len(queries)
+    if n_q == 0:
+        raise ValueError("empty query stream (requests must be > 0)")
+    lat_ms = {k: [] for k in KINDS}
+    pending: dict = {k: [] for k in KINDS}
+    failures = 0
+    overflow = 0
+    answers = []
+    batches = 0
+    t_start = time.monotonic()
+
+    def flush(kind):
+        nonlocal batches, overflow
+        q = pending[kind]
+        if not q:
+            return
+        sl = np.asarray(q, np.int64)
+        srcs = np.concatenate([sl, np.full(batch - len(sl), sl[-1],
+                                           sl.dtype)])
+        field, ovf = _run_kind(g, kind, srcs, backend, hops)
+        t_done = time.monotonic()
+        # padding lanes repeat the last real query; don't double-count
+        # their overflow (same trim as serve())
+        overflow += int(ovf[:len(sl)].sum())
+        if validate:
+            answers.append((kind, sl, np.asarray(field)))
+        lat_ms[kind].extend([(t_done - t_start) * 1e3] * len(sl))
+        pending[kind] = []
+        batches += 1
+
+    for kind, src in queries:            # closed loop: all queued at t0
+        pending[kind].append(src)
+        if len(pending[kind]) == batch:
+            flush(kind)
+    for kind in KINDS:                   # ragged tails, padded
+        flush(kind)
+    total_s = time.monotonic() - t_start
+
+    if validate:                         # oracles off the serving clock
+        for kind, sl, field in answers:
+            failures += _validate_kind(g, kind, sl, field, hops)
+
+    all_lat = np.asarray(sum(lat_ms.values(), []))
+    per_kind = {}
+    for kind in KINDS:
+        lk = np.asarray(lat_ms[kind])
+        if not len(lk):
+            continue
+        per_kind[kind] = {
+            "requests": int(len(lk)),
+            "lat_ms_mean": round(float(lk.mean()), 2),
+            "lat_ms_p50": round(float(np.percentile(lk, 50)), 2),
+            "lat_ms_p95": round(float(np.percentile(lk, 95)), 2),
+        }
+    return {
+        "kinds": sorted(per_kind), "backend": backend, "batch": batch,
+        "hops": hops, "requests": n_q, "batches": batches,
+        "total_s": round(total_s, 4), "qps": round(n_q / total_s, 2),
+        "lat_ms_mean": round(float(all_lat.mean()), 2),
+        "lat_ms_p50": round(float(np.percentile(all_lat, 50)), 2),
+        "lat_ms_p95": round(float(np.percentile(all_lat, 95)), 2),
+        "per_kind": per_kind,
+        "overflow": overflow,
+        "validation_failures": failures if validate else None,
+    }
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(
-        description="Serve a stream of traversal queries in fixed-shape "
+        description="Serve a stream of graph queries in fixed-shape "
                     "batch slots (one jitted multi-source program per "
-                    "batch shape).")
+                    "(kind, batch shape); --kinds mixes query kinds in "
+                    "one stream).")
     ap.add_argument("--graph", default="rmat",
                     choices=("rmat", "rgg", "grid"))
     ap.add_argument("--scale", type=int, default=12)
     ap.add_argument("--edge-factor", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--primitive", default="bfs", choices=("bfs", "sssp"))
+    ap.add_argument("--kinds", default=None, metavar="K0,K1,...",
+                    help=f"serve a MIXED stream over these query kinds "
+                         f"(subset of {','.join(KINDS)}); overrides "
+                         f"--primitive")
+    ap.add_argument("--hops", type=int, default=3,
+                    help="k for reach queries (k-hop reachability)")
     ap.add_argument("--requests", type=int, default=64,
-                    help="number of traversal queries to serve")
+                    help="number of queries to serve")
     ap.add_argument("--batch", type=int, default=8,
                     help="fixed batch-slot count (B traversal lanes)")
     ap.add_argument("--warmup", type=int, default=1,
@@ -117,23 +259,47 @@ def main(argv=None):
     bk = B.resolve(args.backend)
     g = make_graph(args.graph, args.scale, args.edge_factor, args.seed)
     rng = np.random.default_rng(args.seed)
+    kinds = None
+    if args.kinds:
+        kinds = [k.strip() for k in args.kinds.split(",")]
+        for k in kinds:
+            if k not in KINDS:
+                raise SystemExit(f"unknown query kind {k!r}; pick from "
+                                 f"{KINDS}")
+    what = ",".join(kinds) if kinds else args.primitive
     print(f"[graph_serve] {args.graph} scale={args.scale}: "
-          f"n={g.num_vertices} m={g.num_edges} primitive={args.primitive} "
+          f"n={g.num_vertices} m={g.num_edges} kinds={what} "
           f"batch={args.batch} backend={bk}")
 
-    run = {"bfs": bfs_batch, "sssp": sssp_batch}[args.primitive]
-    for _ in range(args.warmup):
-        w = run(g, rng.integers(0, g.num_vertices, args.batch), backend=bk)
-        jax.block_until_ready(
-            w.dist if args.primitive == "sssp" else w.labels)
-
-    sources = rng.integers(0, g.num_vertices, args.requests)
-    stats = serve(g, args.primitive, sources, args.batch, bk,
-                  validate=args.validate)
+    if kinds:
+        for _ in range(args.warmup):        # one trace per kind
+            for k in kinds:
+                _run_kind(g, k,
+                          rng.integers(0, g.num_vertices, args.batch),
+                          bk, args.hops)
+        queries = [(kinds[i % len(kinds)],
+                    int(rng.integers(0, g.num_vertices)))
+                   for i in range(args.requests)]
+        stats = serve_mixed(g, queries, args.batch, bk, hops=args.hops,
+                            validate=args.validate)
+    else:
+        run = {"bfs": bfs_batch, "sssp": sssp_batch}[args.primitive]
+        for _ in range(args.warmup):
+            w = run(g, rng.integers(0, g.num_vertices, args.batch),
+                    backend=bk)
+            jax.block_until_ready(
+                w.dist if args.primitive == "sssp" else w.labels)
+        sources = rng.integers(0, g.num_vertices, args.requests)
+        stats = serve(g, args.primitive, sources, args.batch, bk,
+                      validate=args.validate)
     print(f"[graph_serve] {stats['requests']} queries in "
           f"{stats['total_s']:.2f}s = {stats['qps']:.1f} q/s  "
           f"(lat ms mean {stats['lat_ms_mean']} p50 {stats['lat_ms_p50']} "
           f"p95 {stats['lat_ms_p95']})")
+    for k, row in stats.get("per_kind", {}).items():
+        print(f"[graph_serve]   {k:9s} {row['requests']:4d} queries  "
+              f"lat ms mean {row['lat_ms_mean']} p50 {row['lat_ms_p50']} "
+              f"p95 {row['lat_ms_p95']}")
     if stats["overflow"]:
         print(f"[graph_serve] WARNING: {stats['overflow']} BFS "
               f"discoveries dropped by capped frontiers — rerun the "

@@ -1,0 +1,27 @@
+"""repro.linalg — semiring sparse linear algebra over graph CSR/CSC.
+
+The algebraic twin of the frontier engine (GraphBLAST's view of
+Gunrock): whole-frontier primitives are one masked semiring product per
+iteration instead of advance+filter chains.
+
+  semirings  — plus_times, min_plus, or_and, max_min, plus_and
+               (named, hashable, jit-closable; ``semiring.get`` by name)
+  spmv       — masked/complemented semiring SpMV (dense x, CSR or CSC)
+  spmsv      — sparse-input-vector product (push direction, via the
+               "advance" registry hot path)
+  spmm       — dense-accumulator SpMM (the batched / label-block form)
+  mxm        — row-tiled masked SpGEMM (dot formulation over a mask
+               pattern — triangle counting, sparse overlap queries)
+
+All four dispatch through the ``repro.core.backend`` registry
+("spmv" | "spmm" | "mxm" ops; spmsv rides "advance"), so
+``backend="pallas"`` routes them through the fused masked-semiring
+kernels in ``repro.kernels``. See DESIGN.md §4.
+"""
+from . import semiring
+from .semiring import (SEMIRINGS, Semiring, max_min, min_plus, or_and,
+                       plus_and, plus_times)
+from .ops import mxm, spmm, spmsv, spmv
+
+__all__ = ["semiring", "Semiring", "SEMIRINGS", "plus_times", "min_plus",
+           "or_and", "max_min", "plus_and", "spmv", "spmsv", "spmm", "mxm"]

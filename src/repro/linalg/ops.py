@@ -1,0 +1,345 @@
+"""Semiring sparse-linear-algebra operators (the GraphBLAST view).
+
+Every frontier-engine hot path has an algebraic twin:
+
+  advance + segment reduce      ↔  SpMV  y⟨m⟩ = A ⊗ x      (dense x)
+  advance from a sparse frontier ↔ SpMSpV y⟨m⟩ = A ⊗ x     (sparse x)
+  B batched advances             ↔  SpMM  Y⟨m⟩ = A ⊗ X     (dense n×k X)
+  segmented intersection         ↔  masked SpGEMM  C⟨M⟩ = A ⊗ B
+
+The three dense-output products are first-class backend-registry ops
+(``"spmv"``, ``"spmm"``, ``"mxm"`` in ``repro.core.backend``): this
+module registers the XLA implementations (gather + semiring segment
+reduce — XLA fuses the ⊗ functor into the sweep) and
+``repro.kernels.ops`` registers the Pallas ones (the fused
+masked-semiring ELL row kernel + LB-expansion probe). The public
+wrappers below resolve Graph vs raw-CSR inputs, masks/complement, and
+static ELL metadata, then dispatch.
+
+Registry contracts (shared by both backends):
+
+  "spmv" (offsets, indices, values|None, x (nx,), sr, ell_width, mask|None)
+         → y (n,)  f32
+  "spmm" (offsets, indices, values|None, x (nx,k), sr, ell_width, mask|None)
+         → y (n,k) f32
+  "mxm"  (a_off, a_idx, a_vals|None, bt_off, bt_idx, bt_vals|None,
+          base (E,), probe_rows (E,), sr, cap_out)
+         → c (E,) f32   — the dot formulation over a mask pattern;
+           ``base`` rows of the expansion structure are LB-expanded
+           (row-tiled by the advance kernels), each emitted column id is
+           probed in ``probe_rows`` of the B-transpose structure, and
+           matches are ⊗-combined and ⊕-reduced per mask edge.
+
+Masked-out rows carry the semiring's ⊕-identity. ``values=None`` means a
+structural (pattern-only) matrix: every stored entry is the ⊗-identity.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import backend as B
+from repro.core import operators as _ops
+from repro.core.graph import Graph
+
+from . import semiring as S
+from .semiring import Semiring, plus_times
+
+# ---------------------------------------------------------------------------
+# XLA implementations
+# ---------------------------------------------------------------------------
+
+
+def _row_segments(offsets: jax.Array, m: int) -> jax.Array:
+    return (jnp.searchsorted(offsets, jnp.arange(m, dtype=jnp.int32),
+                             side="right").astype(jnp.int32) - 1)
+
+
+def _apply_mask(y: jax.Array, mask: Optional[jax.Array], zero: float):
+    if mask is None:
+        return y
+    m = mask if y.ndim == 1 else mask[:, None]
+    return jnp.where(m, y, zero)
+
+
+@B.register("spmv", B.XLA)
+def _spmv_xla(offsets, indices, values, x, sr: Semiring, ell_width, mask):
+    """Gather + semiring segment reduce. With values=None and plus_times
+    this is bit-identical to the pre-refactor pagerank sweep."""
+    del ell_width                       # pallas-only metadata
+    n = int(offsets.shape[0]) - 1
+    m = int(indices.shape[0])
+    seg = _row_segments(offsets, m)
+    xv = x[indices]
+    prod = xv if values is None else sr.mul_op(values, xv)
+    y = sr.segment_reduce(prod, seg, n, indices_are_sorted=True)
+    deg = offsets[1:] - offsets[:-1]
+    y = jnp.where(deg > 0, y, sr.zero)  # empty rows ⇒ ⊕-identity
+    return _apply_mask(y, mask, sr.zero).astype(jnp.float32)
+
+
+@B.register("spmm", B.XLA)
+def _spmm_xla(offsets, indices, values, x, sr: Semiring, ell_width, mask):
+    del ell_width
+    n = int(offsets.shape[0]) - 1
+    m = int(indices.shape[0])
+    seg = _row_segments(offsets, m)
+    xv = x[indices]                                   # (m, k)
+    prod = xv if values is None else sr.mul_op(values[:, None], xv)
+    y = sr.segment_reduce(prod, seg, n, indices_are_sorted=True)
+    deg = offsets[1:] - offsets[:-1]
+    y = jnp.where((deg > 0)[:, None], y, sr.zero)
+    return _apply_mask(y, mask, sr.zero).astype(jnp.float32)
+
+
+def _locate_xla(haystack: jax.Array, lo: jax.Array, hi: jax.Array,
+                needles: jax.Array) -> jax.Array:
+    """Position-returning probe (−1 when absent): the ``locate`` flavour
+    of the shared SmallLarge binary search in core.operators."""
+    return _ops._searchsorted_segment(haystack, lo, hi, needles,
+                                      locate=True)
+
+
+def make_mxm_impl(expand, locate):
+    """Build a masked-SpGEMM registry impl from an LB-expansion hot path
+    (the "advance" contract) and a position-returning probe. The same
+    machinery serves both backends: xla passes the jnp expansion and
+    search, kernels.ops passes the fused Pallas kernels."""
+
+    def impl(a_off, a_idx, a_vals, bt_off, bt_idx, bt_vals,
+             base, probe_rows, sr: Semiring, cap_out: int):
+        e = int(base.shape[0])
+        sizes = (a_off[base + 1] - a_off[base]).astype(jnp.int32)
+        # row-tiled expansion of the mask edges' expansion-side rows: the
+        # emitted column id IS the probe needle, in_pos the mask edge.
+        _, needles, eid, pair, _, valid, _ = expand(
+            a_off, a_idx, base, sizes, cap_out)
+        rows = probe_rows[pair]
+        pos = locate(bt_idx, bt_off[rows], bt_off[rows + 1], needles)
+        found = (pos >= 0) & valid
+        sv = (jnp.float32(sr.one) if a_vals is None
+              else a_vals[jnp.clip(eid, 0, int(a_idx.shape[0]) - 1)])
+        lv = (jnp.float32(sr.one) if bt_vals is None
+              else bt_vals[jnp.clip(pos, 0, int(bt_idx.shape[0]) - 1)])
+        prod = jnp.where(found, sr.mul_op(sv, lv), sr.zero)
+        c = sr.segment_reduce(prod.astype(jnp.float32), pair, e,
+                              indices_are_sorted=True)
+        return jnp.where(sizes > 0, c, sr.zero).astype(jnp.float32)
+
+    return impl
+
+
+_mxm_xla = B.register("mxm", B.XLA)(
+    make_mxm_impl(_ops._advance_xla, _locate_xla))
+
+
+# ---------------------------------------------------------------------------
+# public wrappers
+# ---------------------------------------------------------------------------
+
+
+def _csr_side(a, transpose: bool):
+    """Resolve (offsets, indices, values, ell_width) from a Graph (CSR or
+    its CSC mirror) or a raw (offsets, indices, values) triple."""
+    if isinstance(a, Graph):
+        if transpose:
+            if not a.has_csc:
+                raise ValueError("transpose=True needs the CSC mirror "
+                                 "(build_csc=True)")
+            return (a.csc_offsets, a.csc_indices, a.csc_edge_values,
+                    a.csc_ell_width)
+        return a.row_offsets, a.col_indices, a.edge_values, a.ell_width
+    if transpose:
+        raise ValueError(
+            "a raw (offsets, indices, values) triple carries no CSC "
+            "mirror to transpose through; pass a Graph, or pass the "
+            "transposed structure explicitly (for mxm: b_transpose=True "
+            "with bᵀ's CSR)")
+    offsets, indices, values = a
+    return offsets, indices, values, None
+
+
+def _resolve_mask(mask, complement: bool):
+    if mask is None:
+        if complement:
+            raise ValueError("complement=True requires a mask")
+        return None
+    mask = jnp.asarray(mask)
+    if mask.dtype != jnp.bool_:
+        mask = mask.astype(bool)
+    return ~mask if complement else mask
+
+
+def _ell_or_raise(ell_width, meta, bk: str):
+    if ell_width is None:
+        ell_width = meta
+    if ell_width is None and bk == B.PALLAS:
+        raise ValueError(
+            "the pallas backend needs a static ELL width; build the Graph "
+            "via Graph.from_csr / from_edge_list (width is computed once "
+            "at build time) or pass ell_width= explicitly")
+    return None if ell_width is None else int(ell_width)
+
+
+def spmv(a, x, *, semiring=plus_times, mask=None, complement: bool = False,
+         transpose: bool = False, structural: bool = False,
+         ell_width: Optional[int] = None, backend: Optional[str] = None,
+         use_kernel: Optional[bool] = None) -> jax.Array:
+    """Masked semiring SpMV: ``y⟨mask⟩ = A ⊗ x`` (y (n,), x dense).
+
+    ``transpose=True`` multiplies by Aᵀ via the CSC mirror (the pull /
+    PageRank direction). ``structural=True`` ignores stored edge values
+    (every entry is the ⊗-identity). ``mask`` is a (n,) output row mask;
+    ``complement=True`` flips it. Masked-out rows hold the ⊕-identity.
+    """
+    sr = S.get(semiring)
+    bk = B.resolve(backend, use_kernel)
+    off, idx, vals, meta_w = _csr_side(a, transpose)
+    if structural:
+        vals = None
+    w = _ell_or_raise(ell_width, meta_w, bk)
+    m = _resolve_mask(mask, complement)
+    x = jnp.asarray(x, jnp.float32)
+    return B.dispatch("spmv", bk)(off, idx, vals, x, sr, w, m)
+
+
+def spmm(a, x, *, semiring=plus_times, mask=None, complement: bool = False,
+         transpose: bool = False, structural: bool = False,
+         ell_width: Optional[int] = None, backend: Optional[str] = None,
+         use_kernel: Optional[bool] = None) -> jax.Array:
+    """Dense-accumulator semiring SpMM: ``Y⟨mask⟩ = A ⊗ X`` (X (nx, k)).
+
+    The whole-frontier batched product: each column of X is one lane
+    (a reachability source, a label block). Same mask/transpose/
+    structural semantics as ``spmv``.
+    """
+    sr = S.get(semiring)
+    bk = B.resolve(backend, use_kernel)
+    off, idx, vals, meta_w = _csr_side(a, transpose)
+    if structural:
+        vals = None
+    w = _ell_or_raise(ell_width, meta_w, bk)
+    m = _resolve_mask(mask, complement)
+    x = jnp.asarray(x, jnp.float32)
+    if x.ndim != 2:
+        raise ValueError(f"spmm needs a dense (n, k) operand, got {x.shape}")
+    return B.dispatch("spmm", bk)(off, idx, vals, x, sr, w, m)
+
+
+def spmsv(a, ids, xvals=None, *, semiring=plus_times, mask=None,
+          complement: bool = False, structural: bool = False,
+          cap_out: Optional[int] = None, backend: Optional[str] = None,
+          use_kernel: Optional[bool] = None) -> jax.Array:
+    """Sparse-vector semiring product (SpMSpV, push direction):
+    ``y⟨mask⟩[v] = ⊕_{u active} x[u] ⊗ A[u, v]`` with x given sparsely as
+    frontier ``ids`` (−1 ⇒ dead lane) and per-lane ``xvals`` (None ⇒
+    ⊗-identity). This is exactly an advance whose functor is ⊗ and whose
+    scatter is ⊕ — it dispatches the expansion through the "advance"
+    registry entry, so the fused Pallas kernel serves the algebra too.
+    Output is dense (n,) — the direction-optimization contract: callers
+    pick spmsv (push) for small frontiers and spmv (pull) for large ones.
+    """
+    sr = S.get(semiring)
+    bk = B.resolve(backend, use_kernel)
+    off, idx, vals, _ = _csr_side(a, transpose=False)
+    if structural:
+        vals = None
+    n = int(off.shape[0]) - 1
+    m = int(idx.shape[0])
+    ids = jnp.asarray(ids, jnp.int32)
+    valid_in = ids >= 0
+    base = jnp.where(valid_in, ids, 0)
+    deg = off[base + 1] - off[base]
+    sizes = jnp.where(valid_in, deg, 0).astype(jnp.int32)
+    if cap_out is None:
+        # duplicate frontier ids expand their row once PER lane, so a
+        # plain m default under-counts; outside jit (the wrapper's
+        # normal life) size the expansion exactly — host-side capacity
+        # planning, like every frontier cap. Under jit nothing concrete
+        # is available and a guessed cap would truncate silently, so
+        # demand an explicit static one.
+        if isinstance(ids, jax.core.Tracer) or \
+                isinstance(off, jax.core.Tracer):
+            raise ValueError(
+                "spmsv under jit needs an explicit static cap_out "
+                "(the exact default sizing is host-side; a guessed "
+                "capacity would silently truncate duplicate-id "
+                "expansions)")
+        ro = np.asarray(off)
+        live = np.asarray(ids)
+        live = live[live >= 0]
+        cap = int((ro[live + 1] - ro[live]).sum()) if len(live) else 1
+    else:
+        cap = int(cap_out)
+    expand = B.dispatch("advance", bk)
+    _, dst, eid, in_pos, _, exp_valid, _ = expand(off, idx, base, sizes,
+                                                  max(cap, 1))
+    sv = (jnp.float32(sr.one) if xvals is None
+          else jnp.asarray(xvals, jnp.float32)[in_pos])
+    av = (jnp.float32(sr.one) if vals is None
+          else vals[jnp.clip(eid, 0, max(m - 1, 0))])
+    prod = jnp.where(exp_valid, sr.mul_op(sv, av), sr.zero)
+    tgt = jnp.where(exp_valid, dst, n)            # n ⇒ dropped
+    y = jnp.full((n,), sr.zero, jnp.float32)
+    y = sr.scatter_accum(y, tgt, prod.astype(jnp.float32))
+    return _apply_mask(y, _resolve_mask(mask, complement), sr.zero)
+
+
+def mxm(a, b, mask, *, semiring=plus_times, b_transpose: bool = False,
+        structural: bool = False, cap_out: Optional[int] = None,
+        backend: Optional[str] = None,
+        use_kernel: Optional[bool] = None) -> jax.Array:
+    """Row-tiled masked semiring SpGEMM (dot formulation):
+    ``C⟨M⟩ = A ⊗ B`` computed only at the mask pattern.
+
+    ``mask`` is the nnz pattern of M as ``(src_ids, dst_ids)`` int
+    arrays; the result is ``c (E,)`` with
+    ``c[e] = ⊕_w A[src_e, w] ⊗ B[w, dst_e]``.
+
+    ``b_transpose=True`` computes ``A ⊗ bᵀ`` — column ``dst_e`` of B is
+    then row ``dst_e`` of b's CSR (the triangle-counting case
+    ``C = A ⊗ Aᵀ``); otherwise b's CSC mirror provides column access.
+
+    When both operands share one structure (``C = A ⊗ Aᵀ``), each mask
+    edge expands its *smaller* endpoint row and probes the larger — the
+    SmallLarge workload reduction of paper §4.3, sound here because the
+    dot is symmetric in the two rows and every supported ⊗ commutes.
+    Capacity planning (``cap_out``) is host-side, like every frontier
+    capacity in this engine; call the wrapper outside jit.
+    """
+    sr = S.get(semiring)
+    bk = B.resolve(backend, use_kernel)
+    a_off, a_idx, a_vals, _ = _csr_side(a, transpose=False)
+    bt_off, bt_idx, bt_vals, _ = _csr_side(b, transpose=not b_transpose)
+    if structural:
+        a_vals = bt_vals = None
+    msrc = np.asarray(mask[0], np.int32)
+    mdst = np.asarray(mask[1], np.int32)
+    deg_a = np.diff(np.asarray(a_off))[msrc]
+    deg_b = np.diff(np.asarray(bt_off))[mdst]
+    shared = (a_off is bt_off) and (a_idx is bt_idx)
+    if shared:
+        a_small = deg_a <= deg_b
+        base = np.where(a_small, msrc, mdst)
+        probe_rows = np.where(a_small, mdst, msrc)
+        cap = int(np.minimum(deg_a, deg_b).sum())
+    else:
+        base, probe_rows = msrc, mdst
+        cap = int(deg_a.sum())
+    cap = max(cap, 1) if cap_out is None else int(cap_out)
+    impl = B.dispatch("mxm", bk)
+    run = _jit_mxm(impl, sr, cap)
+    return run(a_off, a_idx, a_vals, bt_off, bt_idx, bt_vals,
+               jnp.asarray(base, jnp.int32),
+               jnp.asarray(probe_rows, jnp.int32))
+
+
+@functools.lru_cache(maxsize=64)
+def _jit_mxm(impl, sr: Semiring, cap: int):
+    """One cached jit wrapper per (impl, semiring, capacity) — repeated
+    mxm calls of the same shape reuse one trace."""
+    return jax.jit(lambda *args: impl(*args, sr, cap))

@@ -1,0 +1,124 @@
+"""Semirings for the sparse-linear-algebra layer (GraphBLAST's view of
+Gunrock's operators: traversal is a masked matrix product over a semiring).
+
+A ``Semiring`` bundles an additive monoid (the reduction that merges
+incoming edge contributions — Gunrock's scatter/segment step) and a
+multiplicative combinator (the per-edge functor). The named instances
+cover the classic graph-algorithm algebra:
+
+  plus_times — PageRank / SpMV proper (rank mass flows along edges)
+  min_plus   — shortest paths (relaxation as matrix product)
+  or_and     — reachability / BFS levels (boolean closure)
+  max_min    — bottleneck paths / label spread (widest-path algebra)
+  plus_and   — intersection counting (triangle counting: the or_and
+               product with the plus accumulator exposed, so each
+               and-match contributes 1 to the count)
+
+Instances are frozen (hashable) dataclasses of str/float fields only, so
+they are *jit-closable*: primitives pass them through
+``jax.jit(static_argnames=...)`` and kernels select their combine ops at
+trace time with zero runtime branching.
+
+All values are float32 on device; boolean semirings operate on {0.0, 1.0}
+(``and`` is ``minimum``, ``or`` is ``maximum`` on that domain).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+_ADD = ("plus", "min", "max", "or")
+_MUL = ("times", "plus", "min", "max", "and")
+
+
+@dataclass(frozen=True)
+class Semiring:
+    """A (⊕, ⊗) pair with identities. ``zero`` is the ⊕-identity (the
+    value of an empty reduction / a masked-out output); ``one`` is the
+    ⊗-identity (the value structural — valueless — matrices multiply
+    by)."""
+
+    name: str
+    add: str     # ⊕: "plus" | "min" | "max" | "or"
+    mul: str     # ⊗: "times" | "plus" | "min" | "max" | "and"
+    zero: float  # ⊕ identity
+    one: float   # ⊗ identity
+
+    def __post_init__(self):
+        if self.add not in _ADD:
+            raise ValueError(f"unknown add monoid {self.add!r}")
+        if self.mul not in _MUL:
+            raise ValueError(f"unknown mul op {self.mul!r}")
+
+    # --- combinators (all shapes, broadcasting) ---------------------------
+    def mul_op(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        """⊗ of two arrays (commutative for every supported op)."""
+        if self.mul == "times":
+            return a * b
+        if self.mul == "plus":
+            return a + b
+        if self.mul in ("min", "and"):
+            return jnp.minimum(a, b)
+        return jnp.maximum(a, b)
+
+    def add_op(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        """⊕ of two partial reductions (merging ELL and overflow parts)."""
+        if self.add == "plus":
+            return a + b
+        if self.add == "min":
+            return jnp.minimum(a, b)
+        return jnp.maximum(a, b)          # max | or
+
+    def add_reduce(self, x: jax.Array, axis: int) -> jax.Array:
+        """⊕-reduction along ``axis`` (invalid lanes must hold zero)."""
+        if self.add == "plus":
+            return jnp.sum(x, axis=axis)
+        if self.add == "min":
+            return jnp.min(x, axis=axis)
+        return jnp.max(x, axis=axis)
+
+    def segment_reduce(self, vals: jax.Array, seg: jax.Array,
+                       num_segments: int,
+                       indices_are_sorted: bool = False) -> jax.Array:
+        """⊕-reduction of ``vals`` by segment id. Empty segments come back
+        as the segment op's neutral element, NOT necessarily ``zero`` —
+        callers clamp empty rows (see ops._finish_rows)."""
+        fn = {"plus": jax.ops.segment_sum, "min": jax.ops.segment_min,
+              "max": jax.ops.segment_max, "or": jax.ops.segment_max}[self.add]
+        return fn(vals, seg, num_segments=num_segments,
+                  indices_are_sorted=indices_are_sorted)
+
+    def scatter_accum(self, target: jax.Array, index: jax.Array,
+                      vals: jax.Array) -> jax.Array:
+        """⊕-accumulate ``vals`` into ``target`` at ``index`` (the
+        atomic-free scatter of operators.py, semiring-generalized)."""
+        at = target.at[index]
+        if self.add == "plus":
+            return at.add(vals, mode="drop")
+        if self.add == "min":
+            return at.min(vals, mode="drop")
+        return at.max(vals, mode="drop")
+
+
+plus_times = Semiring("plus_times", "plus", "times", 0.0, 1.0)
+min_plus = Semiring("min_plus", "min", "plus", float("inf"), 0.0)
+or_and = Semiring("or_and", "or", "and", 0.0, 1.0)
+max_min = Semiring("max_min", "max", "min", float("-inf"), float("inf"))
+plus_and = Semiring("plus_and", "plus", "and", 0.0, 1.0)
+
+SEMIRINGS = {s.name: s for s in
+             (plus_times, min_plus, or_and, max_min, plus_and)}
+
+
+def get(semiring) -> Semiring:
+    """Coerce a name or Semiring instance to a Semiring."""
+    if isinstance(semiring, Semiring):
+        return semiring
+    try:
+        return SEMIRINGS[semiring]
+    except KeyError:
+        raise ValueError(
+            f"unknown semiring {semiring!r}; named semirings: "
+            f"{sorted(SEMIRINGS)}") from None

@@ -81,7 +81,8 @@ def test_use_kernel_alias_deprecated():
 
 
 def test_registry_has_both_backends():
-    for op in ("advance", "compact", "segment_search"):
+    for op in ("advance", "compact", "segment_search",
+               "spmv", "spmm", "mxm"):
         assert B.registered(op, B.XLA), op
         assert B.registered(op, B.PALLAS), op
     # ops without a pallas impl fall back to xla instead of raising

@@ -57,26 +57,52 @@ def test_segment_search_shapes(hs, ns):
 # ---- spmv ----------------------------------------------------------------
 
 @pytest.mark.parametrize("n,w", [(8, 3), (300, 7), (1000, 16)])
-def test_spmv_ell(n, w):
+def test_semiring_ell_plus_times(n, w):
+    """The fused masked-semiring row kernel at plus_times with an
+    all-ones mask must equal the classic ELL SpMV oracle (the absorbed
+    kernels/spmv.py contract)."""
+    from repro.kernels.semiring_spmv import semiring_ell_kernel
+    from repro.linalg.semiring import plus_times
     nbrs = rng.integers(-1, n, (n, w)).astype(np.int32)
     vals = rng.random((n, w)).astype(np.float32)
     x = jnp.asarray(rng.random(n), jnp.float32)
-    from repro.kernels.spmv import spmv_ell_kernel
-    got = spmv_ell_kernel(jnp.asarray(nbrs), jnp.asarray(vals), x)
+    mask = jnp.ones((n,), jnp.int32)
+    got = semiring_ell_kernel(jnp.asarray(nbrs), jnp.asarray(vals),
+                              x[:, None], mask, plus_times)[:, 0]
     want = R.spmv_ell_ref(jnp.asarray(nbrs), jnp.asarray(vals), x)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                rtol=1e-5, atol=1e-5)
 
 
-def test_csr_spmv_hybrid_overflow():
-    # one ultra-high-degree row exercises the COO overflow path
+@pytest.mark.parametrize("name", ["min_plus", "or_and", "max_min"])
+def test_semiring_ell_vs_oracle(name):
+    from repro.kernels.semiring_spmv import semiring_ell_kernel
+    from repro.linalg import semiring as S
+    sr = S.get(name)
+    n, w, k = 130, 5, 3
+    nbrs = rng.integers(-1, n, (n, w)).astype(np.int32)
+    vals = rng.random((n, w)).astype(np.float32)
+    x = jnp.asarray(rng.random((n, k)), jnp.float32)
+    mask = jnp.asarray(rng.integers(0, 2, n), jnp.int32)
+    got = semiring_ell_kernel(jnp.asarray(nbrs), jnp.asarray(vals), x,
+                              mask, sr)
+    want = R.semiring_ell_ref(jnp.asarray(nbrs), jnp.asarray(vals), x,
+                              mask, sr)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_semiring_spmv_hybrid_overflow():
+    # one ultra-high-degree row exercises the COO overflow path of the
+    # registered pallas "spmv" impl (ELL width forced below max degree)
     from repro.core import graph as G
+    from repro.linalg import spmv
     n = 200
     src = [0] * 150 + list(range(1, 50))
     dst = list(range(1, 151)) + [0] * 49
     g = G.from_edge_list(src, dst, n=n, undirected=False)
     x = jnp.asarray(rng.random(n), jnp.float32)
-    got = K.csr_spmv(g.row_offsets, g.col_indices, x, ell_width=4)
+    got = spmv(g, x, structural=True, ell_width=4, backend="pallas")
     ro = np.asarray(g.row_offsets)
     ci = np.asarray(g.col_indices)
     want = np.zeros(n, np.float32)
