@@ -1,0 +1,104 @@
+"""Sharded-placement scaling benchmark → BENCH_pr4.json.
+
+Runs bfs / sssp / cc / pagerank single-device (the PR 2/3 engine — the
+baseline) and through the sharded placement at 1/2/4-way partitions on
+fake host-platform devices. On CPU the mesh is simulated, so the point
+is the partitioning/exchange OVERHEAD trajectory (and trace-cache reuse
+across queries), not speedup — the speedup story needs real devices.
+Numbers land next to the PR1–PR3 baselines in the repo root.
+
+    python benchmarks/distributed_scale.py --scale 12 --json BENCH_pr4.json
+"""
+import argparse
+import json
+import os
+import time
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=4")
+
+import sys                                                   # noqa: E402
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                                                   # noqa: E402
+import numpy as np                                           # noqa: E402
+from jax.sharding import Mesh                                # noqa: E402
+
+from repro.core import graph as G                            # noqa: E402
+from repro.core.distributed import (distributed_bfs,         # noqa: E402
+                                    distributed_cc,
+                                    distributed_pagerank,
+                                    distributed_sssp)
+from repro.core.partition import partition_1d                # noqa: E402
+from repro.core.primitives import (bfs, connected_components,  # noqa: E402
+                                   pagerank, sssp)
+
+
+def timeit(fn, reps=3):
+    fn()                                    # warmup (pays the trace)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.monotonic()
+        jax.block_until_ready(fn())
+        best = min(best, time.monotonic() - t0)
+    return best * 1e3
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--edge-factor", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default="BENCH_pr4.json")
+    args = ap.parse_args()
+
+    g = G.rmat(args.scale, args.edge_factor, seed=args.seed, weighted=True)
+    deg = np.diff(np.asarray(g.row_offsets))
+    src = int(np.argmax(deg))
+    print(f"[bench] rmat scale={args.scale}: n={g.num_vertices} "
+          f"m={g.num_edges} devices={len(jax.devices())}")
+
+    rows = []
+
+    def emit(primitive, parts, ms, extra=None):
+        row = {"bench": "distributed_scale", "primitive": primitive,
+               "parts": parts, "ms": round(ms, 2),
+               "n": g.num_vertices, "m": g.num_edges,
+               "scale": args.scale}
+        row.update(extra or {})
+        rows.append(row)
+        tag = "single" if parts == 1 else f"{parts}-way"
+        print(f"[bench] {primitive:9s} {tag:7s} {ms:9.2f} ms")
+
+    # single-device baselines (the PR 2/3 engine)
+    emit("bfs", 1, timeit(lambda: bfs(g, src).labels))
+    emit("sssp", 1, timeit(lambda: sssp(g, src).dist))
+    emit("cc", 1, timeit(lambda: connected_components(g).labels))
+    emit("pagerank", 1, timeit(lambda: pagerank(g, max_iter=20).rank))
+
+    for p in (2, 4):
+        if len(jax.devices()) < p:
+            print(f"[bench] skipping {p}-way (only "
+                  f"{len(jax.devices())} devices)")
+            continue
+        pg = partition_1d(g, p)
+        mesh = Mesh(np.array(jax.devices()[:p]), ("graph",))
+        bal = pg.balance()
+        extra = {"edge_imbalance": bal["edge_imbalance"]}
+        emit("bfs", p,
+             timeit(lambda: distributed_bfs(pg, src, mesh).labels), extra)
+        emit("sssp", p,
+             timeit(lambda: distributed_sssp(pg, src, mesh).dist), extra)
+        emit("cc", p,
+             timeit(lambda: distributed_cc(pg, mesh).labels), extra)
+        emit("pagerank", p,
+             timeit(lambda: distributed_pagerank(pg, mesh, iters=20)),
+             extra)
+
+    with open(args.json, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"[bench] wrote {args.json}")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,11 +18,11 @@ from repro.core import ref as R               # noqa: E402
 from repro.core.distributed import (distributed_bfs,      # noqa: E402
                                     distributed_pagerank)
 from repro.core.partition import partition_1d  # noqa: E402
+from repro.jax_compat import make_mesh        # noqa: E402
 
 g = G.rmat(12, 8, seed=4)
 pg = partition_1d(g, 8)
-mesh = jax.make_mesh((8,), ("graph",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((8,), ("graph",))
 deg = np.diff(np.asarray(g.row_offsets))
 src = int(np.argmax(deg))
 

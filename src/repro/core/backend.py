@@ -15,16 +15,38 @@ Backends:
              (interpret mode off-TPU, which is the correctness contract).
   "auto"   — resolves to "pallas" on a TPU backend, "xla" elsewhere.
 
-Selection precedence (first hit wins):
+Placements (the second registry dimension, paper §8.2.1 scale-out):
+  "single"  — one device holds the whole graph (the default).
+  "sharded" — the graph is 1-D partitioned over a mesh axis
+              (``core.partition``); registered sharded providers run the
+              hot path under ``shard_map`` with mesh collectives for the
+              frontier/vector exchange (``core.distributed``). A sharded
+              provider's array contract differs from its single twin:
+              CSR/CSC operands arrive as (num_parts, …) stacked
+              per-device slices (``ShardedGraph``), dense vectors stay
+              replicated. There is NO silent fallback from "sharded" to
+              "single" — dropping to one device would silently change
+              what the caller asked for — but a pallas-backend sharded
+              dispatch falls back to the xla sharded provider (kernels
+              inside shard_map are future work).
+
+Selection precedence (first hit wins), identical for both dimensions:
   1. per-call override          advance(..., backend="pallas")
+                                spmv(..., placement="sharded")
   2. deprecated use_kernel=     True -> "pallas", False -> "xla"
+                                (backend only)
   3. context manager            with backend.use_backend("pallas"): ...
-  4. environment variable       REPRO_BACKEND=pallas
-  5. the default                "xla"
+                                with backend.use_placement("sharded",
+                                    mesh=mesh, axis="graph"): ...
+  4. environment variable       REPRO_BACKEND=pallas / REPRO_PLACEMENT=…
+  5. the default                "xla" / "single"
 
 Resolution happens at *trace* time: jitted primitives resolve in their
 Python wrapper and pass the concrete name down as a static argument, so
-a cached trace can never observe a stale context/env value.
+a cached trace can never observe a stale context/env value. The
+placement context additionally carries the (mesh, axis) pair sharded
+providers build their ``shard_map`` against; ``placement_mesh()`` reads
+it at trace time.
 """
 from __future__ import annotations
 
@@ -40,17 +62,26 @@ PALLAS = "pallas"
 AUTO = "auto"
 BACKENDS = (XLA, PALLAS, AUTO)
 
+SINGLE = "single"
+SHARDED = "sharded"
+PLACEMENTS = (SINGLE, SHARDED)
+
 ENV_VAR = "REPRO_BACKEND"
+PLACEMENT_ENV_VAR = "REPRO_PLACEMENT"
 
 _tls = threading.local()
 
-# (op_name, backend) -> implementation. Populated by @register decorators
-# in core.operators / core.frontier (xla) and kernels.ops (pallas).
-_REGISTRY: dict[tuple[str, str], Callable] = {}
+# (op_name, backend, placement) -> implementation. Populated by @register
+# decorators in core.operators / core.frontier (xla), kernels.ops
+# (pallas) and core.distributed (sharded).
+_REGISTRY: dict[tuple[str, str, str], Callable] = {}
 
 # Backends whose implementations live in a module that registers itself on
 # import — imported lazily so `import repro.core` never pulls in Pallas.
 _LAZY_PROVIDERS = {PALLAS: "repro.kernels.ops"}
+# Same discipline for the sharded placement: its providers live with the
+# mesh/shard_map machinery and register on import.
+_LAZY_PLACEMENT_PROVIDERS = {SHARDED: "repro.core.distributed"}
 _loaded: set[str] = set()
 
 # Ops whose xla implementations live outside repro.core (the algebra
@@ -69,10 +100,23 @@ def _stack() -> list:
     return _tls.stack
 
 
+def _pstack() -> list:
+    if not hasattr(_tls, "pstack"):
+        _tls.pstack = []
+    return _tls.pstack
+
+
 def _check(name: str) -> str:
     if name not in BACKENDS:
         raise ValueError(
             f"unknown backend {name!r}; expected one of {BACKENDS}")
+    return name
+
+
+def _check_placement(name: str) -> str:
+    if name not in PLACEMENTS:
+        raise ValueError(
+            f"unknown placement {name!r}; expected one of {PLACEMENTS}")
     return name
 
 
@@ -106,6 +150,17 @@ def resolve(backend: Optional[str] = None,
     return _auto() if backend == AUTO else backend
 
 
+def resolve_placement(placement: Optional[str] = None) -> str:
+    """Resolve a concrete placement name ("single" | "sharded"),
+    mirroring backend resolution: per-call → context → env → default."""
+    if placement is None:
+        stack = _pstack()
+        placement = stack[-1][0] if stack else None
+    if placement is None:
+        placement = os.environ.get(PLACEMENT_ENV_VAR) or SINGLE
+    return _check_placement(placement)
+
+
 @contextmanager
 def use_backend(name: str):
     """Context manager: route operator dispatch through ``name``."""
@@ -117,46 +172,120 @@ def use_backend(name: str):
         _stack().pop()
 
 
-def register(op: str, backend: str):
+@contextmanager
+def use_placement(name: str, mesh=None, axis: str = "graph"):
+    """Context manager: route operator dispatch through placement
+    ``name``. For "sharded", ``mesh``/``axis`` name the 1-D mesh axis the
+    providers shard over; sharded providers read them at trace time via
+    ``placement_mesh()``."""
+    _check_placement(name)
+    _pstack().append((name, mesh, axis))
+    try:
+        yield
+    finally:
+        _pstack().pop()
+
+
+def placement_mesh():
+    """The (mesh, axis) of the innermost placement context that carries
+    one, or None. Sharded providers call this at trace time to build
+    their shard_map."""
+    for name, mesh, axis in reversed(_pstack()):
+        if mesh is not None:
+            return mesh, axis
+    return None
+
+
+def resolve_graph_placement(graph, placement: Optional[str] = None):
+    """Resolve placement for a Graph-or-ShardedGraph operand.
+
+    Returns ``(placement, context)``: a ``ShardedGraph`` operand implies
+    "sharded" and the context activates its mesh for the providers; a
+    plain Graph resolves normally. Mismatches are errors, never silent
+    overrides: a plain Graph under a "sharded" selection has nothing to
+    shard over, and an explicit per-call ``placement="single"`` with a
+    ShardedGraph operand contradicts itself (re-assemble via
+    ``pg.source`` to run single-device).
+    Use as ``pl, ctx = resolve_graph_placement(g); with ctx: ...``.
+    """
+    import contextlib
+
+    from .partition import ShardedGraph
+    if isinstance(graph, ShardedGraph):
+        if placement == SINGLE:
+            raise ValueError(
+                "placement='single' with a ShardedGraph operand: the "
+                "per-device slices cannot run the single-device path; "
+                "pass the unpartitioned graph (PartitionedGraph.source) "
+                "instead")
+        return SHARDED, use_placement(SHARDED, mesh=graph.mesh,
+                                      axis=graph.axis)
+    pl = resolve_placement(placement)
+    if pl == SHARDED:
+        raise ValueError(
+            "sharded placement needs a ShardedGraph operand "
+            "(partition_1d(graph, p).shard(mesh)); got a single-device "
+            "graph")
+    return pl, contextlib.nullcontext()
+
+
+def register(op: str, backend: str, placement: str = SINGLE):
     """Decorator: register ``fn`` as the ``backend`` implementation of
-    operator hot path ``op``."""
+    operator hot path ``op`` under ``placement``."""
     _check(backend)
+    _check_placement(placement)
 
     def deco(fn: Callable) -> Callable:
-        _REGISTRY[(op, backend)] = fn
+        _REGISTRY[(op, backend, placement)] = fn
         return fn
 
     return deco
 
 
-def dispatch(op: str, backend: Optional[str] = None) -> Callable:
-    """Look up the implementation of ``op`` for the resolved backend.
+def _load_lazy(op: str, bk: str, pl: str) -> None:
+    if bk in _LAZY_PROVIDERS and bk not in _loaded:
+        importlib.import_module(_LAZY_PROVIDERS[bk])
+        _loaded.add(bk)
+    if pl in _LAZY_PLACEMENT_PROVIDERS and pl not in _loaded:
+        importlib.import_module(_LAZY_PLACEMENT_PROVIDERS[pl])
+        _loaded.add(pl)
+    if (op, bk, SINGLE) not in _REGISTRY and op in _LAZY_OPS:
+        importlib.import_module(_LAZY_OPS.pop(op))
 
-    Falls back to the "xla" implementation when the backend has none
-    registered (e.g. ops with no Pallas kernel yet). Internal call sites
-    pass ``backend`` only — the deprecated ``use_kernel`` alias lives
+
+def dispatch(op: str, backend: Optional[str] = None,
+             placement: Optional[str] = None) -> Callable:
+    """Look up the implementation of ``op`` for the resolved backend and
+    placement.
+
+    Single placement falls back to the "xla" implementation when the
+    backend has none registered (e.g. ops with no Pallas kernel yet).
+    Sharded placement falls back only across *backends* (pallas → xla
+    sharded provider) and raises if the op has no sharded provider at
+    all — a silent drop to single-device execution would not be the
+    program the caller selected. Internal call sites pass ``backend`` /
+    ``placement`` only — the deprecated ``use_kernel`` alias lives
     solely in the public wrappers, which resolve it (with a warning)
     before anything reaches the registry.
     """
     bk = resolve(backend)
-    if bk in _LAZY_PROVIDERS and bk not in _loaded:
-        importlib.import_module(_LAZY_PROVIDERS[bk])
-        _loaded.add(bk)
-    if (op, bk) not in _REGISTRY and op in _LAZY_OPS:
-        importlib.import_module(_LAZY_OPS.pop(op))
-    impl = _REGISTRY.get((op, bk))
+    pl = resolve_placement(placement)
+    _load_lazy(op, bk, pl)
+    impl = _REGISTRY.get((op, bk, pl))
     if impl is None:
-        impl = _REGISTRY.get((op, XLA))
+        impl = _REGISTRY.get((op, XLA, pl))
     if impl is None:
+        if pl == SHARDED:
+            raise KeyError(
+                f"no sharded implementation registered for operator "
+                f"{op!r} (sharded dispatch never falls back to the "
+                f"single-device path)")
         raise KeyError(f"no implementation registered for operator {op!r}")
     return impl
 
 
-def registered(op: str, backend: str) -> bool:
-    """True if ``op`` has a native (non-fallback) impl for ``backend``."""
-    if backend in _LAZY_PROVIDERS and backend not in _loaded:
-        importlib.import_module(_LAZY_PROVIDERS[backend])
-        _loaded.add(backend)
-    if (op, backend) not in _REGISTRY and op in _LAZY_OPS:
-        importlib.import_module(_LAZY_OPS.pop(op))
-    return (op, backend) in _REGISTRY
+def registered(op: str, backend: str, placement: str = SINGLE) -> bool:
+    """True if ``op`` has a native (non-fallback) impl for ``backend``
+    under ``placement``."""
+    _load_lazy(op, backend, placement)
+    return (op, backend, placement) in _REGISTRY

@@ -1,34 +1,62 @@
-"""Distributed graph primitives over a device mesh (paper §8.2.1).
+"""Distributed graph primitives + the sharded registry providers
+(paper §8.2.1; Pan et al. [56]).
 
-Gunrock's multi-GPU design [56] keeps the single-GPU engine unchanged and
-adds communication + partition modules; we do the same. The 1-D partition
-(partition.py) gives each device a CSR slice; traversal exchanges frontier
-information with mesh collectives inside `shard_map`:
+Gunrock's multi-GPU design keeps the single-GPU engine unchanged and
+adds communication + partition modules; we do the same, but behind the
+backend registry's *placement* dimension: this module registers the
+``placement="sharded"`` providers for the operator hot paths, so the
+same dispatch that picks xla-vs-pallas kernels also picks
+single-vs-mesh execution.
 
-  * push advance  — each device expands its owned frontier slice, marks
-    discovered destinations in a *global* bitmask, and the masks are
-    OR-combined with an all-reduce (`jax.lax.psum` on bools). This is the
-    bitmask-exchange strategy: O(n) bytes/device/iteration, independent of
-    frontier raggedness — the BSP-safe translation of Gunrock's frontier
-    segment exchange (which needed peer-to-peer queues).
-  * PageRank — classic 1-D SpMV: all-gather the rank vector, reduce owned
-    rows locally (the contribution sweep stays fully local).
+The 1-D partition (partition.py) gives each device a CSR slice (and a
+CSC slice when the source graph carries the mirror); the providers run
+under ``shard_map`` with two exchange strategies:
 
-These run on any 1-D mesh axis ("graph"), including the flattened
-data×model axes of the production mesh.
+  * "advance" (sharded) — bitmask exchange: each device expands its
+    owned frontier slice into a *global* discovered bitmask and the
+    masks are OR-combined with an all-reduce. O(n) bytes/device/step,
+    independent of frontier raggedness — the BSP-safe translation of
+    Gunrock's frontier segment exchange (which needed p2p queues).
+    Contract (called INSIDE an active shard_map):
+      (local_ro (vpp+1,), local_ci (me,), frontier (n,), base (),
+       vpp, axis) → (n,) bool discovered mask, already all-reduced.
+  * "spmv"/"spmm" (sharded) — classic 1-D row-partitioned products:
+    the dense operand stays replicated (the all-gather side), each
+    device reduces its owned rows locally with exactly the
+    single-device gather+segment formulation, and the row blocks
+    concatenate — no reduction crosses devices, so results are
+    bit-identical to the single-device sweep. Same positional contract
+    as the single providers, with (p, …) stacked CSR operands.
+  * "mxm" (sharded) — 1-D SpGEMM: the expansion side is row-partitioned
+    (each device expands the mask edges whose base row it owns), the
+    probe side stays replicated, and per-edge partials ⊕-combine across
+    the mesh (disjoint ownership ⇒ identity merge ⇒ bit parity).
+
+Traversal loops (BFS / SSSP / CC) run whole-loop inside one shard_map
+with replicated (n,)-sized state and local edge sweeps; every state
+update is an exact min/OR combine, so labels and distances bit-match
+the single-device primitives. All impls are module-level jits with the
+mesh as a static argument — repeated calls (the serving driver) reuse
+one trace per (shape, mesh).
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
-from .partition import PartitionedGraph
+from . import backend as B
+from .partition import PartitionedGraph, check_mesh_axis
+
+# a plain Python int on purpose: this module is imported LAZILY by the
+# registry, possibly in the middle of someone else's jit trace, and a
+# module-level jnp constant created there would be a leaked tracer
+INT_BIG = 2 ** 30
 
 
 class DistBFSResult(NamedTuple):
@@ -36,18 +64,63 @@ class DistBFSResult(NamedTuple):
     iterations: jax.Array
 
 
-def _local_expand_mask(local_ro, local_ci, frontier_slice, n, vpp, base):
+class DistSSSPResult(NamedTuple):
+    dist: jax.Array        # (n,) float32 distances
+    iterations: jax.Array
+
+
+class DistCCResult(NamedTuple):
+    labels: jax.Array
+    num_components: jax.Array
+    iterations: jax.Array
+
+
+def _check_mesh(pg: PartitionedGraph, mesh: Mesh, axis: str) -> None:
+    check_mesh_axis(mesh, axis, pg.num_parts)
+
+
+def _require_placement_mesh():
+    ctx = B.placement_mesh()
+    if ctx is None:
+        raise RuntimeError(
+            "sharded dispatch needs an active placement context that "
+            "carries a mesh: with backend.use_placement('sharded', "
+            "mesh=mesh, axis='graph'): ...")
+    return ctx
+
+
+def _all_reduce(sr, x: jax.Array, axis: str) -> jax.Array:
+    """⊕-combine per-device partials across the mesh axis."""
+    if sr.add == "plus":
+        return jax.lax.psum(x, axis)
+    if sr.add == "min":
+        return jax.lax.pmin(x, axis)
+    return jax.lax.pmax(x, axis)          # max | or
+
+
+# ---------------------------------------------------------------------------
+# local sweeps (the per-device half of each exchange strategy)
+# ---------------------------------------------------------------------------
+
+
+def _local_slots(local_ro: jax.Array, local_ci: jax.Array, vpp: int):
+    """Map local CSR slots back to (local source row, validity)."""
+    me = local_ci.shape[0]
+    slot = jnp.arange(me, dtype=jnp.int32)
+    src_local = jnp.searchsorted(local_ro, slot, side="right") - 1
+    src_local = jnp.clip(src_local, 0, vpp - 1).astype(jnp.int32)
+    valid = (slot < local_ro[-1]) & (local_ci >= 0)
+    return src_local, valid
+
+
+def _local_expand_mask(local_ro, local_ci, frontier_slice, n, vpp):
     """Expand the owned frontier slice; return a global discovered bitmask.
 
     frontier_slice: (vpp,) bool of owned active vertices.
     Dense formulation: every local CSR slot whose source vertex is active
     marks its destination. Source of local slot e = searchsorted(ro, e).
     """
-    me = local_ci.shape[0]
-    slot = jnp.arange(me, dtype=jnp.int32)
-    src_local = jnp.searchsorted(local_ro, slot, side="right") - 1
-    src_local = jnp.clip(src_local, 0, vpp - 1)
-    valid = (slot < local_ro[-1]) & (local_ci >= 0)
+    src_local, valid = _local_slots(local_ro, local_ci, vpp)
     active = frontier_slice[src_local] & valid
     mask = jnp.zeros((n,), bool)
     tgt = jnp.where(active, local_ci, n)
@@ -55,19 +128,140 @@ def _local_expand_mask(local_ro, local_ci, frontier_slice, n, vpp, base):
     return mask
 
 
-def distributed_bfs(pg: PartitionedGraph, src: int, mesh: Mesh,
-                    axis: str = "graph") -> DistBFSResult:
-    """Multi-device BFS. `mesh` must have a 1-D axis named ``axis`` whose
-    size equals pg.num_parts."""
-    n, vpp, p = pg.n, pg.verts_per_part, pg.num_parts
-    assert mesh.shape[axis] == p
+# ---------------------------------------------------------------------------
+# sharded registry providers
+# ---------------------------------------------------------------------------
 
-    ro = jnp.asarray(pg.row_offsets)
-    ci = jnp.asarray(pg.col_indices)
-    base = jnp.asarray(pg.vertex_base)
 
-    part = P(axis)
-    rep = P()
+@B.register("advance", B.XLA, B.SHARDED)
+def _advance_bitmask_exchange(local_ro, local_ci, frontier, base, vpp: int,
+                              axis: str):
+    """Bitmask-exchange advance step — see the module docstring contract.
+    Must be called inside an active shard_map over ``axis``."""
+    n = frontier.shape[0]
+    my_slice = jax.lax.dynamic_slice(frontier, (base,), (vpp,))
+    disc = _local_expand_mask(local_ro, local_ci, my_slice, n, vpp)
+    return jax.lax.psum(disc.astype(jnp.int32), axis) > 0
+
+
+@B.register("spmm", B.XLA, B.SHARDED)
+def _spmm_sharded(offsets, indices, values, x, sr, ell_width, mask):
+    """1-D row-partitioned semiring SpMM: Y⟨mask⟩ = A ⊗ X.
+
+    ``offsets``/``indices``/``values`` are (p, …) stacked per-device row
+    slices; ``x`` (n, k) and ``mask`` (n,) stay replicated. Each device
+    reduces its owned rows with the single-device gather+segment
+    formulation (bit parity); row blocks concatenate over the mesh axis.
+    Requires a square operand (the 1-D vertex partition), i.e.
+    x.shape[0] == the global row count.
+    """
+    del ell_width                      # single-pallas-only metadata
+    mesh, axis = _require_placement_mesh()
+    vpp = int(offsets.shape[1]) - 1
+    n = int(x.shape[0])
+    part, rep = P(axis), P()
+
+    def local_rows(ro_s, ci_s, ev_s, xg):
+        ro, ci = ro_s[0], ci_s[0]
+        src_local, valid = _local_slots(ro, ci, vpp)
+        xv = xg[jnp.where(valid, ci, 0)]                       # (me, k)
+        ev = None if ev_s is None else ev_s[0]
+        prod = xv if ev is None else sr.mul_op(ev[:, None], xv)
+        prod = jnp.where(valid[:, None], prod, sr.zero)
+        y = sr.segment_reduce(prod.astype(jnp.float32), src_local, vpp,
+                              indices_are_sorted=True)
+        deg = ro[1:] - ro[:-1]
+        return jnp.where((deg > 0)[:, None], y, sr.zero)
+
+    if values is None:
+        run = shard_map(lambda ro, ci, xg: local_rows(ro, ci, None, xg),
+                        mesh=mesh, in_specs=(part, part, rep),
+                        out_specs=part, check_rep=False)
+        y = run(offsets, indices, x)
+    else:
+        run = shard_map(local_rows, mesh=mesh,
+                        in_specs=(part, part, part, rep),
+                        out_specs=part, check_rep=False)
+        y = run(offsets, indices, values, x)
+    y = y[:n]                                   # drop tail-part padding rows
+    if mask is not None:
+        y = jnp.where(mask[:, None], y, sr.zero)
+    return y.astype(jnp.float32)
+
+
+@B.register("spmv", B.XLA, B.SHARDED)
+def _spmv_sharded(offsets, indices, values, x, sr, ell_width, mask):
+    """1-D row-partitioned semiring SpMV — the k=1 column of the SpMM."""
+    return _spmm_sharded(offsets, indices, values, x[:, None], sr,
+                         ell_width, mask)[:, 0]
+
+
+@B.register("mxm", B.XLA, B.SHARDED)
+def _mxm_sharded(a_off, a_idx, a_vals, bt_off, bt_idx, bt_vals,
+                 base, probe_rows, sr, cap_out: int):
+    """1-D masked SpGEMM: the expansion side (A) is row-partitioned, the
+    probe side (Bᵀ) replicated. Each device LB-expands the mask edges
+    whose ``base`` row it owns and probes the replicated structure;
+    per-edge partials ⊕-combine across the mesh (ownership is disjoint,
+    so the combine only merges identities — bit parity with the
+    single-device dot formulation)."""
+    from . import operators as _ops
+    mesh, axis = _require_placement_mesh()
+    vpp = int(a_off.shape[1]) - 1
+    e = int(base.shape[0])
+    part, rep = P(axis), P()
+    # one shard_map signature serves the structural/valued combinations:
+    # absent value operands ride as zero-size placeholders, the closure
+    # flags decide whether the slots index them
+    has_av = a_vals is not None
+    has_btv = bt_vals is not None
+    av_in = (a_vals if has_av
+             else jnp.zeros((int(a_off.shape[0]), 0), jnp.float32))
+    btv_in = bt_vals if has_btv else jnp.zeros((0,), jnp.float32)
+
+    def local(ao_s, ai_s, av_s, bto, bti, btv, base_g, rows_g):
+        ao, ai = ao_s[0], ai_s[0]
+        me = int(ai.shape[0])
+        my_base = jax.lax.axis_index(axis).astype(jnp.int32) * vpp
+        owned = (base_g >= my_base) & (base_g < my_base + vpp)
+        base_l = jnp.where(owned, base_g - my_base, 0)
+        deg = ao[base_l + 1] - ao[base_l]
+        sizes = jnp.where(owned, deg, 0).astype(jnp.int32)
+        _, needles, eid, pair, _, valid, _ = _ops._advance_xla(
+            ao, ai, base_l, sizes, cap_out)
+        rows = rows_g[pair]
+        pos = _ops._searchsorted_segment(bti, bto[rows], bto[rows + 1],
+                                         needles, locate=True)
+        found = (pos >= 0) & valid
+        sv = (av_s[0][jnp.clip(eid, 0, me - 1)] if has_av
+              else jnp.float32(sr.one))
+        lv = (btv[jnp.clip(pos, 0, int(bti.shape[0]) - 1)] if has_btv
+              else jnp.float32(sr.one))
+        prod = jnp.where(found, sr.mul_op(sv, lv), sr.zero)
+        c = sr.segment_reduce(prod.astype(jnp.float32), pair, e,
+                              indices_are_sorted=True)
+        c = _all_reduce(sr, c, axis)
+        gsizes = jax.lax.psum(sizes, axis)
+        return jnp.where(gsizes > 0, c, sr.zero).astype(jnp.float32)
+
+    run = shard_map(local, mesh=mesh,
+                    in_specs=(part, part, part, rep, rep, rep, rep, rep),
+                    out_specs=rep, check_rep=False)
+    return run(a_off, a_idx, av_in, bt_off, bt_idx, btv_in, base,
+               probe_rows)
+
+
+# ---------------------------------------------------------------------------
+# traversal primitives (whole loop inside one shard_map)
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "vpp", "mesh", "axis", "backend"))
+def _bfs_dist_impl(ro, ci, base, src, *, n: int, vpp: int, mesh: Mesh,
+                   axis: str, backend: str):
+    expand = B.dispatch("advance", backend, B.SHARDED)
+    part, rep = P(axis), P()
 
     @functools.partial(
         shard_map, mesh=mesh,
@@ -85,11 +279,9 @@ def distributed_bfs(pg: PartitionedGraph, src: int, mesh: Mesh,
 
         def body(carry):
             labels, frontier, it = carry
-            my_slice = jax.lax.dynamic_slice(frontier, (my_base,), (vpp,))
-            disc = _local_expand_mask(local_ro, local_ci, my_slice, n, vpp,
-                                      my_base)
-            # OR-combine discoveries across devices (frontier exchange)
-            disc = jax.lax.psum(disc.astype(jnp.int32), axis) > 0
+            # bitmask-exchange advance (OR-combined across devices)
+            disc = expand(local_ro, local_ci, frontier, my_base, vpp,
+                          axis)
             new = disc & (labels < 0)
             labels = jnp.where(new, it + 1, labels)
             return labels, new, it + 1
@@ -101,63 +293,230 @@ def distributed_bfs(pg: PartitionedGraph, src: int, mesh: Mesh,
                                             jnp.int32(0)))
         return labels, it
 
-    labels, it = jax.jit(run)(ro, ci, base, jnp.int32(src))
+    return run(ro, ci, base, src)
+
+
+def distributed_bfs(pg: PartitionedGraph, src: int, mesh: Mesh,
+                    axis: str = "graph",
+                    backend: Optional[str] = None) -> DistBFSResult:
+    """Multi-device BFS (bitmask-exchange advance). `mesh` must have a
+    1-D axis named ``axis`` whose size equals pg.num_parts. Labels are
+    bit-identical to the single-device ``bfs``."""
+    sg = pg.shard(mesh, axis)            # cached device arrays per mesh
+    labels, it = _bfs_dist_impl(
+        sg.row_offsets, sg.col_indices, sg.vertex_base, jnp.int32(src),
+        n=pg.n, vpp=pg.verts_per_part, mesh=mesh, axis=axis,
+        backend=B.resolve(backend))
     return DistBFSResult(labels=labels, iterations=it)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n", "vpp", "use_delta", "mesh", "axis"))
+def _sssp_dist_impl(ro, ci, ev, base, src, delta, *, n: int, vpp: int,
+                    use_delta: bool, mesh: Mesh, axis: str):
+    part, rep = P(axis), P()
+    inf = jnp.float32(jnp.inf)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(part, part, part, part, rep, rep),
+        out_specs=(rep, rep),
+        check_rep=False)
+    def run(ro_s, ci_s, ev_s, base_s, src_v, delta_v):
+        local_ro, local_ci, local_ev = ro_s[0], ci_s[0], ev_s[0]
+        my_base = base_s[0]
+        src_local, valid = _local_slots(local_ro, local_ci, vpp)
+
+        def relax_step(st):
+            # dense relax of the owned near-frontier rows: candidate
+            # distances scatter-min locally, min-combine across devices
+            # (min is exact — the atomicMin of paper §5.2 twice over)
+            dist, near, far, bucket = st
+            my_near = jax.lax.dynamic_slice(near, (my_base,), (vpp,))
+            my_dist = jax.lax.dynamic_slice(dist, (my_base,), (vpp,))
+            active = my_near[src_local] & valid
+            cand_v = my_dist[src_local] + local_ev
+            cand = jnp.full((n,), inf, jnp.float32)
+            tgt = jnp.where(active, local_ci, n)
+            cand = cand.at[tgt].min(jnp.where(active, cand_v, inf),
+                                    mode="drop")
+            cand = jax.lax.pmin(cand, axis)
+            new_dist = jnp.minimum(dist, cand)
+            improved = new_dist < dist
+            thresh = (bucket.astype(jnp.float32) + 1.0) * delta_v
+            if use_delta:
+                add_near = improved & (new_dist < thresh)
+                add_far = improved & (new_dist >= thresh)
+            else:
+                add_near = improved
+                add_far = jnp.zeros_like(improved)
+            far2 = (far | add_far) & ~add_near
+            return new_dist, add_near, far2, bucket
+
+        def pop_far(st):
+            # near pile empty: advance the bucket to the smallest far
+            # distance (replicated state ⇒ every device agrees)
+            dist, near, far, bucket = st
+            far_min = jnp.min(jnp.where(far, dist, inf))
+            new_bucket = jnp.where(jnp.isfinite(far_min),
+                                   (far_min / delta_v).astype(jnp.int32),
+                                   bucket + 1)
+            thresh = (new_bucket.astype(jnp.float32) + 1.0) * delta_v
+            near2 = far & (dist < thresh)
+            return dist, near2, far & ~near2, new_bucket
+
+        def body(carry):
+            st, it = carry
+            st = jax.lax.cond(jnp.any(st[1]), relax_step, pop_far, st)
+            return st, it + 1
+
+        def cond(carry):
+            (dist, near, far, bucket), it = carry
+            return (jnp.any(near) | jnp.any(far)) & (it < 4 * n + 8)
+
+        dist0 = jnp.full((n,), inf, jnp.float32).at[src_v].set(0.0)
+        near0 = jnp.zeros((n,), bool).at[src_v].set(True)
+        far0 = jnp.zeros((n,), bool)
+        (dist, _, _, _), it = jax.lax.while_loop(
+            cond, body, ((dist0, near0, far0, jnp.int32(0)), jnp.int32(0)))
+        return dist, it
+
+    return run(ro, ci, ev, base, src, delta)
+
+
+def distributed_sssp(pg: PartitionedGraph, src: int, mesh: Mesh,
+                     axis: str = "graph",
+                     delta: Optional[float] = None) -> DistSSSPResult:
+    """Multi-device delta-stepping SSSP: per-bucket dense relaxation of
+    owned rows with min-all-reduced distance improvements. Distances are
+    bit-identical to the single-device ``sssp`` (every relaxation value
+    ``dist[u] + w`` is computed the same way and min is exact)."""
+    assert pg.edge_values is not None, "SSSP needs edge weights"
+    sg = pg.shard(mesh, axis)
+    if delta is None:
+        if pg.source is not None:
+            from .primitives.sssp import _auto_delta
+            delta = _auto_delta(pg.source)
+        else:
+            import numpy as np
+            real = np.asarray(pg.col_indices) >= 0
+            mean_w = float(np.asarray(pg.edge_values)[real].mean())
+            delta = mean_w * max(pg.m / max(pg.n, 1), 1.0) / 2.0
+    use_delta = bool(jnp.isfinite(delta)) and delta > 0
+    dist, it = _sssp_dist_impl(
+        sg.row_offsets, sg.col_indices, sg.edge_values, sg.vertex_base,
+        jnp.int32(src), jnp.float32(delta),
+        n=pg.n, vpp=pg.verts_per_part, use_delta=use_delta, mesh=mesh,
+        axis=axis)
+    return DistSSSPResult(dist=dist, iterations=it)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "vpp", "mesh", "axis"))
+def _cc_dist_impl(ro, ci, base, *, n: int, vpp: int, mesh: Mesh, axis: str):
+    part, rep = P(axis), P()
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(part, part, part),
+        out_specs=(rep, rep),
+        check_rep=False)
+    def run(ro_s, ci_s, base_s):
+        local_ro, local_ci = ro_s[0], ci_s[0]
+        my_base = base_s[0]
+        src_local, valid = _local_slots(local_ro, local_ci, vpp)
+        src_g = my_base + src_local
+        dst = jnp.where(valid, local_ci, 0)
+
+        def pointer_jump(cid):
+            return jax.lax.while_loop(lambda c: jnp.any(c[c] != c),
+                                      lambda c: c[c], cid)
+
+        def body(carry):
+            cid, live, n_live, it = carry
+            cu = cid[src_g]
+            cv = cid[dst]
+            live = live & (cu != cv)
+            lo = jnp.minimum(cu, cv)
+            hi = jnp.maximum(cu, cv)
+            # hooking: scatter-min the local live edges, min-combine the
+            # label candidates across devices (all-reduced label mins)
+            tgt = jnp.where(live, hi, n)
+            cand = jnp.full((n,), INT_BIG, jnp.int32)
+            cand = cand.at[tgt].min(jnp.where(live, lo, INT_BIG),
+                                    mode="drop")
+            cand = jax.lax.pmin(cand, axis)
+            cid = pointer_jump(jnp.minimum(cid, cand))
+            still = live & (cid[src_g] != cid[dst])
+            n_live = jax.lax.psum(jnp.sum(still.astype(jnp.int32)), axis)
+            return cid, still, n_live, it + 1
+
+        def cond(carry):
+            _, _, n_live, it = carry
+            return (n_live > 0) & (it < n + 1)
+
+        cid0 = jnp.arange(n, dtype=jnp.int32)
+        cid, _, _, it = jax.lax.while_loop(
+            cond, body,
+            (cid0, valid, jnp.int32(1), jnp.int32(0)))
+        return cid, it
+
+    labels, it = run(ro, ci, base)
+    ncomp = jnp.sum((labels == jnp.arange(n)).astype(jnp.int32))
+    return labels, ncomp, it
+
+
+def distributed_cc(pg: PartitionedGraph, mesh: Mesh,
+                   axis: str = "graph") -> DistCCResult:
+    """Multi-device connected components: hooking over owned edges with
+    all-reduced label mins + replicated pointer-jumping. Labels are
+    bit-identical to the single-device ``connected_components`` (every
+    combine is an exact integer min)."""
+    sg = pg.shard(mesh, axis)
+    labels, ncomp, it = _cc_dist_impl(
+        sg.row_offsets, sg.col_indices, sg.vertex_base,
+        n=pg.n, vpp=pg.verts_per_part, mesh=mesh, axis=axis)
+    return DistCCResult(labels=labels, num_components=ncomp, iterations=it)
 
 
 def distributed_pagerank(pg: PartitionedGraph, mesh: Mesh,
                          axis: str = "graph", damping: float = 0.85,
                          iters: int = 20) -> jax.Array:
-    """1-D SpMV PageRank: rank vector all-gathered, rows reduced locally.
+    """1-D SpMV PageRank through the sharded "spmv" provider: the rank
+    vector stays replicated (the all-gather side of a 1-D SpMV), each
+    device reduces its owned CSC rows locally. This runs the SAME
+    ``_pagerank_impl`` as the single-device primitive — only the
+    dispatched spmv differs — so ranks are bit-identical to
+    ``pagerank``, not merely close."""
+    from .primitives.pagerank import pagerank
+    _check_mesh(pg, mesh, axis)
+    if not pg.has_csc:
+        raise ValueError(
+            "distributed_pagerank needs the partitioned CSC mirror; "
+            "partition a Graph built with build_csc=True")
+    return pagerank(pg.shard(mesh, axis), damping=damping,
+                    max_iter=iters).rank
 
-    Pull formulation needs in-edges; with an out-edge partition we instead
-    push locally then all-reduce partial accumulations — communication is
-    one psum of (n,) floats per iteration.
-    """
-    n, vpp, p = pg.n, pg.verts_per_part, pg.num_parts
-    ro = jnp.asarray(pg.row_offsets)
-    ci = jnp.asarray(pg.col_indices)
-    base = jnp.asarray(pg.vertex_base)
-    # global out-degrees (host-side from partition)
-    import numpy as np
-    degs = np.zeros(n, np.int32)
-    for q in range(p):
-        local_deg = np.diff(np.asarray(pg.row_offsets[q]))
-        lo = int(pg.vertex_base[q])
-        hi = min(lo + vpp, n)
-        degs[lo:hi] = local_deg[:hi - lo]
-    deg = jnp.asarray(degs, jnp.float32)
 
-    part = P(axis)
-    rep = P()
+# ---------------------------------------------------------------------------
+# algebraic primitives on a partition (delegate to the Graph primitives —
+# they dispatch through the sharded providers via ShardedGraph)
+# ---------------------------------------------------------------------------
 
-    @functools.partial(
-        shard_map, mesh=mesh,
-        in_specs=(part, part, part, rep),
-        out_specs=rep,
-        check_rep=False)
-    def run(ro_s, ci_s, base_s, deg_g):
-        local_ro = ro_s[0]
-        local_ci = ci_s[0]
-        my_base = base_s[0]
-        me = local_ci.shape[0]
-        slot = jnp.arange(me, dtype=jnp.int32)
-        src_local = jnp.searchsorted(local_ro, slot, side="right") - 1
-        src_local = jnp.clip(src_local, 0, vpp - 1)
-        valid = (slot < local_ro[-1]) & (local_ci >= 0)
 
-        def body(_, pr):
-            contrib = jnp.where(deg_g > 0, pr / jnp.maximum(deg_g, 1.), 0.)
-            my_contrib = jax.lax.dynamic_slice(contrib, (my_base,), (vpp,))
-            vals = jnp.where(valid, my_contrib[src_local], 0.0)
-            acc = jnp.zeros((n,), jnp.float32)
-            acc = acc.at[jnp.where(valid, local_ci, n)].add(vals,
-                                                            mode="drop")
-            acc = jax.lax.psum(acc, axis)
-            dangling = jnp.sum(jnp.where(deg_g == 0, pr, 0.0)) / n
-            return (1.0 - damping) / n + damping * (acc + dangling)
+def distributed_label_propagation(pg: PartitionedGraph, mesh: Mesh,
+                                  axis: str = "graph", **kwargs):
+    """Label propagation on the partition: the one-hot SpMM blocks run
+    through the sharded "spmm" provider; labels bit-match the
+    single-device primitive."""
+    from .primitives.label_propagation import label_propagation
+    _check_mesh(pg, mesh, axis)
+    return label_propagation(pg.shard(mesh, axis), **kwargs)
 
-        pr0 = jnp.full((n,), 1.0 / n, jnp.float32)
-        return jax.lax.fori_loop(0, iters, body, pr0)
 
-    return jax.jit(run)(ro, ci, base, deg)
+def distributed_reach(pg: PartitionedGraph, srcs, k: int = 3, *,
+                      mesh: Mesh, axis: str = "graph", **kwargs):
+    """Batched k-hop reachability on the partition (or-and SpMM closure
+    through the sharded provider)."""
+    from .primitives.reach import reach_batch
+    _check_mesh(pg, mesh, axis)
+    return reach_batch(pg.shard(mesh, axis), srcs, k, **kwargs)

@@ -258,7 +258,7 @@ def compact_values_batch(values: jax.Array, mask: jax.Array,
     over the batch axis (for "pallas" the batching rule turns the
     filter_compact kernel's grid into a (B, tiles) grid).
     """
-    impl = B.dispatch("compact", backend)
+    impl = B.dispatch("compact", backend, B.SINGLE)
     packed, totals = jax.vmap(impl)(values, mask)
     n = packed.shape[1]
     lengths = jnp.minimum(totals, capacity).astype(jnp.int32)

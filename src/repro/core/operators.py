@@ -44,10 +44,8 @@ Backends:
   ``backend=None`` defers to the ambient selection (context manager /
   REPRO_BACKEND env var; see core/backend.py). THREAD has no Pallas
   implementation — it is the deliberately-unbalanced ablation baseline —
-  and silently runs the XLA path on every backend. ``use_kernel=`` is
-  kept as a deprecated alias (True→"pallas", False→"xla") for one
-  release on the public entry points only; it always emits a
-  DeprecationWarning. Design notes: DESIGN.md.
+  and silently runs the XLA path on every backend. Design notes:
+  DESIGN.md.
 
 Batched operators:
   ``advance_batch`` / ``filter_frontier_batch`` / ``advance_pull_batch``
@@ -221,7 +219,7 @@ def advance(graph: Graph, frontier: SparseFrontier, cap_out: int,
         # size class, expand with the LB machinery, map lanes back
         order = twc_order(sizes)
         base, sizes = base[order], sizes[order]
-    expand = B.dispatch("advance", bk)
+    expand = B.dispatch("advance", bk, B.SINGLE)
     src, dst, edge_id, in_pos, rank, valid, total = expand(
         graph.row_offsets, graph.col_indices, base, sizes, cap_out)
     if order is not None:
@@ -301,7 +299,7 @@ def advance_batch(graph: Graph, frontier: BatchedSparseFrontier,
             order = jax.vmap(twc_order)(sizes)
             base = jnp.take_along_axis(base, order, axis=1)
             sizes = jnp.take_along_axis(sizes, order, axis=1)
-        expand = B.dispatch("advance_batch", bk)
+        expand = B.dispatch("advance_batch", bk, B.SINGLE)
         src, dst, edge_id, in_pos, rank, valid, total = expand(
             graph.row_offsets, graph.col_indices, base, sizes, cap_out)
         if order is not None:
@@ -622,11 +620,11 @@ def segmented_intersect(graph: Graph, fa: SparseFrontier, fb: SparseFrontier,
     sizes = jnp.where(valid_pair,
                       jnp.where(a_small, deg_a, deg_b), 0).astype(jnp.int32)
     # fused expansion: dst of the small-side advance IS the probe needle
-    expand = B.dispatch("advance", bk)
+    expand = B.dispatch("advance", bk, B.SINGLE)
     _, needles, _, pair, _, exp_valid, _ = expand(
         graph.row_offsets, graph.col_indices, small, sizes, cap_out)
     l_vert = large[pair]
-    search = B.dispatch("segment_search", bk)
+    search = B.dispatch("segment_search", bk, B.SINGLE)
     found = search(graph.col_indices, graph.row_offsets[l_vert],
                    graph.row_offsets[l_vert + 1], needles)
     found = found & exp_valid

@@ -4,49 +4,52 @@
 [d·ceil(n/p), (d+1)·ceil(n/p)) and the out-edges (CSR rows) of those
 vertices. Per-device CSR slices are rebased and padded to the max local
 edge count so the partition stacks into dense (p, …) arrays that
-shard_map can split over the mesh.
+shard_map can split over the mesh. When the source graph carries a CSC
+mirror, the mirror is partitioned the same way (device d owns the
+*in*-edges of its vertices), which is what lets pull-direction algebra
+(PageRank's contribution sweep, reach's CSC SpMM) run row-local and
+bit-identical to the single-device sweep.
 
 This is the same partitioning Gunrock's multi-GPU framework uses; the
-frontier exchange strategies live in core/distributed.py.
+frontier exchange strategies and the sharded registry providers live in
+core/distributed.py.
+
+Two containers:
+
+  ``PartitionedGraph``  — host-side numpy slices + balance accounting.
+  ``ShardedGraph``      — the device-side pytree ``PartitionedGraph.shard``
+                          builds: stacked jnp arrays named like ``Graph``
+                          attributes (``row_offsets``/``csc_offsets``/…)
+                          so primitives written against Graph run on it
+                          unchanged, with the mesh + axis carried as
+                          static aux data (part of every jit cache key).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .graph import Graph
 
 
-@dataclass(frozen=True)
-class PartitionedGraph:
-    """Host-side stacked per-device CSR slices (leading axis = device)."""
-
-    n: int                     # global vertex count
-    m: int                     # global edge count
-    num_parts: int
-    verts_per_part: int        # ceil(n / p)
-    row_offsets: np.ndarray    # (p, verts_per_part+1) rebased local CSR
-    col_indices: np.ndarray    # (p, max_local_edges) global dst ids, pad -1
-    edge_values: Optional[np.ndarray]  # (p, max_local_edges)
-    vertex_base: np.ndarray    # (p,) first global vertex id of each part
-
-    @property
-    def max_local_edges(self) -> int:
-        return int(self.col_indices.shape[1])
-
-    def owner_of(self, v: np.ndarray) -> np.ndarray:
-        return v // self.verts_per_part
+def check_mesh_axis(mesh, axis: str, num_parts: int) -> None:
+    """Validate that ``mesh`` carries a 1-D axis ``axis`` of size
+    ``num_parts`` (the one mesh precondition every sharded entry point
+    shares)."""
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if sizes.get(axis) != num_parts:
+        raise ValueError(
+            f"mesh axis {axis!r} (size {sizes.get(axis)}) must match "
+            f"the partition's {num_parts} parts")
 
 
-def partition_1d(graph: Graph, num_parts: int) -> PartitionedGraph:
-    ro = np.asarray(graph.row_offsets)
-    ci = np.asarray(graph.col_indices)
-    ev = (np.asarray(graph.edge_values)
-          if graph.edge_values is not None else None)
-    n = graph.num_vertices
-    vpp = -(-n // num_parts)  # ceil
+def _slice_rows(ro: np.ndarray, ci: np.ndarray, ev: Optional[np.ndarray],
+                n: int, num_parts: int, vpp: int):
+    """Rebase + pad per-part row slices of one CSR-like structure."""
     max_edges = 0
     slices = []
     for p in range(num_parts):
@@ -73,7 +76,178 @@ def partition_1d(graph: Graph, num_parts: int) -> PartitionedGraph:
         if v is not None:
             p_ev[p, :len(v)] = v
         base[p] = lo_v
+    return p_ro, p_ci, p_ev, base
+
+
+@dataclass(frozen=True)
+class PartitionedGraph:
+    """Host-side stacked per-device CSR (+ CSC) slices (leading axis =
+    device). ``source`` keeps the unpartitioned Graph around for
+    replicated operands (the probe side of a sharded SpGEMM, oracle
+    validation, degree vectors) — 1-D partitioning distributes the sweep,
+    not the whole dataset."""
+
+    n: int                     # global vertex count
+    m: int                     # global edge count
+    num_parts: int
+    verts_per_part: int        # ceil(n / p)
+    row_offsets: np.ndarray    # (p, verts_per_part+1) rebased local CSR
+    col_indices: np.ndarray    # (p, max_local_edges) global dst ids, pad -1
+    edge_values: Optional[np.ndarray]  # (p, max_local_edges)
+    vertex_base: np.ndarray    # (p,) first global vertex id of each part
+    # CSC mirror slices (in-edges of owned vertices), same layout
+    csc_row_offsets: Optional[np.ndarray] = None
+    csc_col_indices: Optional[np.ndarray] = None
+    csc_edge_values: Optional[np.ndarray] = None
+    source: Optional[Graph] = None
+
+    @property
+    def max_local_edges(self) -> int:
+        return int(self.col_indices.shape[1])
+
+    @property
+    def has_csc(self) -> bool:
+        return self.csc_row_offsets is not None
+
+    def owner_of(self, v: np.ndarray) -> np.ndarray:
+        return v // self.verts_per_part
+
+    def balance(self) -> dict:
+        """Per-device load accounting (for serving --json / benchmarks):
+        owned vertex and edge counts per part plus the edge imbalance
+        factor (max/mean — 1.0 is a perfectly balanced partition)."""
+        verts = [int(min((p + 1) * self.verts_per_part, self.n)
+                     - min(p * self.verts_per_part, self.n))
+                 for p in range(self.num_parts)]
+        edges = [int(self.row_offsets[p, -1]) for p in range(self.num_parts)]
+        mean_e = max(sum(edges) / max(self.num_parts, 1), 1e-9)
+        return {
+            "parts": self.num_parts,
+            "vertices_per_part": verts,
+            "edges_per_part": edges,
+            "edge_imbalance": round(max(edges) / mean_e, 3),
+        }
+
+    def shard(self, mesh, axis: str = "graph") -> "ShardedGraph":
+        """Device-side view for the sharded registry providers. ``mesh``
+        must carry a 1-D axis ``axis`` of size ``num_parts``. Views are
+        cached per (mesh, axis): repeated calls (every query of a
+        serving loop goes through here) reuse one set of device arrays
+        instead of re-uploading the partition."""
+        check_mesh_axis(mesh, axis, self.num_parts)
+        cache = self.__dict__.get("_shard_cache")
+        if cache is None:
+            object.__setattr__(self, "_shard_cache", {})  # frozen dc
+            cache = self.__dict__["_shard_cache"]
+        key = (mesh, axis)
+        if key in cache:
+            return cache[key]
+        cache[key] = ShardedGraph(
+            row_offsets=jnp.asarray(self.row_offsets),
+            col_indices=jnp.asarray(self.col_indices),
+            edge_values=(jnp.asarray(self.edge_values)
+                         if self.edge_values is not None else None),
+            csc_offsets=(jnp.asarray(self.csc_row_offsets)
+                         if self.csc_row_offsets is not None else None),
+            csc_indices=(jnp.asarray(self.csc_col_indices)
+                         if self.csc_col_indices is not None else None),
+            csc_edge_values=(jnp.asarray(self.csc_edge_values)
+                             if self.csc_edge_values is not None else None),
+            vertex_base=jnp.asarray(self.vertex_base),
+            n=self.n, m=self.m, verts_per_part=self.verts_per_part,
+            mesh=mesh, axis=axis)
+        return cache[key]
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class ShardedGraph:
+    """Stacked per-device graph slices as a jit-friendly pytree.
+
+    Attribute names mirror ``Graph`` (``row_offsets``, ``csc_offsets``,
+    ``num_vertices``, …) so algebra primitives written against Graph
+    dispatch on it unchanged — the sharded registry providers understand
+    the stacked (p, …) array layout. ``mesh``/``axis`` are static aux
+    data: they ride the pytree treedef, so every jit cache key that
+    closes over a ShardedGraph includes the mesh identity and a cached
+    trace can never run against the wrong mesh. ELL metadata is absent by
+    design (``ell_width is None``): the sharded providers are xla-backed;
+    a pallas-under-shard_map provider would re-pack per device.
+    """
+
+    row_offsets: jax.Array            # (p, vpp+1)
+    col_indices: jax.Array            # (p, max_local_edges)
+    edge_values: Optional[jax.Array]
+    csc_offsets: Optional[jax.Array]  # (p, vpp+1)
+    csc_indices: Optional[jax.Array]
+    csc_edge_values: Optional[jax.Array]
+    vertex_base: jax.Array            # (p,)
+    n: int
+    m: int
+    verts_per_part: int
+    mesh: object
+    axis: str
+
+    ell_width = None          # class attrs: Graph-interface compatibility
+    csc_ell_width = None
+
+    def tree_flatten(self):
+        children = (self.row_offsets, self.col_indices, self.edge_values,
+                    self.csc_offsets, self.csc_indices,
+                    self.csc_edge_values, self.vertex_base)
+        aux = (self.n, self.m, self.verts_per_part, self.mesh, self.axis)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, *aux)
+
+    @property
+    def num_vertices(self) -> int:
+        return self.n
+
+    @property
+    def num_edges(self) -> int:
+        return self.m
+
+    @property
+    def num_parts(self) -> int:
+        return int(self.row_offsets.shape[0])
+
+    @property
+    def has_csc(self) -> bool:
+        return self.csc_offsets is not None
+
+    @property
+    def weighted(self) -> bool:
+        return self.edge_values is not None
+
+    @property
+    def degrees(self) -> jax.Array:
+        """Global out-degree vector (n,), assembled from the local row
+        slices (pad rows repeat the final offset ⇒ degree 0)."""
+        local = self.row_offsets[:, 1:] - self.row_offsets[:, :-1]
+        return local.reshape(-1)[:self.n]
+
+
+def partition_1d(graph: Graph, num_parts: int) -> PartitionedGraph:
+    ro = np.asarray(graph.row_offsets)
+    ci = np.asarray(graph.col_indices)
+    ev = (np.asarray(graph.edge_values)
+          if graph.edge_values is not None else None)
+    n = graph.num_vertices
+    vpp = -(-n // num_parts)  # ceil
+    p_ro, p_ci, p_ev, base = _slice_rows(ro, ci, ev, n, num_parts, vpp)
+    c_ro = c_ci = c_ev = None
+    if graph.has_csc:
+        c_ro, c_ci, c_ev, _ = _slice_rows(
+            np.asarray(graph.csc_offsets), np.asarray(graph.csc_indices),
+            (np.asarray(graph.csc_edge_values)
+             if graph.csc_edge_values is not None else None),
+            n, num_parts, vpp)
     return PartitionedGraph(n=n, m=graph.num_edges, num_parts=num_parts,
                             verts_per_part=vpp, row_offsets=p_ro,
                             col_indices=p_ci, edge_values=p_ev,
-                            vertex_base=base)
+                            vertex_base=base,
+                            csc_row_offsets=c_ro, csc_col_indices=c_ci,
+                            csc_edge_values=c_ev, source=graph)

@@ -41,12 +41,12 @@ class LPResult(NamedTuple):
 
 @functools.partial(jax.jit, static_argnames=("max_iter", "backend",
                                              "ell_width", "num_labels",
-                                             "block"))
+                                             "block", "placement"))
 def _lp_impl(graph: Graph, labels0: jax.Array, max_iter: int, backend: str,
              ell_width: Optional[int], num_labels: int,
-             block: int) -> LPResult:
+             block: int, placement: str = B.SINGLE) -> LPResult:
     n = graph.num_vertices
-    spmm_op = B.dispatch("spmm", backend)
+    spmm_op = B.dispatch("spmm", backend, placement)
     nblk = -(-num_labels // block)
 
     def body(st):
@@ -77,19 +77,24 @@ def _lp_impl(graph: Graph, labels0: jax.Array, max_iter: int, backend: str,
     return LPResult(labels=labels, iterations=iters)
 
 
-def label_propagation(graph: Graph, *, labels0=None,
+def label_propagation(graph, *, labels0=None,
                       num_labels: Optional[int] = None,
                       max_iter: int = 30, block: Optional[int] = None,
                       backend: Optional[str] = None,
-                      use_kernel: Optional[bool] = None) -> LPResult:
+                      use_kernel: Optional[bool] = None,
+                      placement: Optional[str] = None) -> LPResult:
     """Synchronous LP until the labeling is stable (or max_iter).
 
     ``labels0`` defaults to each vertex being its own community
     (``arange(n)``); ``num_labels`` bounds the label domain (defaults to
     n) and ``block`` the SpMM column-block width. Labels spread along
     out-neighbors; pass an undirected graph for community detection.
+    ``graph`` may be a ``ShardedGraph`` — the one-hot SpMM blocks then
+    run through the sharded registry provider and labels bit-match the
+    single-device run.
     """
     bk = B.resolve(backend, use_kernel)
+    pl, ctx = B.resolve_graph_placement(graph, placement)
     n = graph.num_vertices
     if labels0 is None:
         labels0 = jnp.arange(n, dtype=jnp.int32)
@@ -100,11 +105,12 @@ def label_propagation(graph: Graph, *, labels0=None,
     if block is None:
         block = max(1, min(32, num_labels))
     ell_width = graph.ell_width
-    if ell_width is None and bk == B.PALLAS:
+    if ell_width is None and bk == B.PALLAS and pl == B.SINGLE:
         raise ValueError(
             "label_propagation on the pallas backend needs "
             "Graph.ell_width; build the Graph via Graph.from_csr / "
             "from_edge_list")
-    return _lp_impl(graph, labels0, max_iter, bk,
-                    None if ell_width is None else int(ell_width),
-                    int(num_labels), int(block))
+    with ctx:
+        return _lp_impl(graph, labels0, max_iter, bk,
+                        None if ell_width is None else int(ell_width),
+                        int(num_labels), int(block), pl)

@@ -41,21 +41,50 @@ class PRResult(NamedTuple):
     iterations: jax.Array
 
 
+def _fixed_tree_sum(x: jax.Array) -> jax.Array:
+    """Float sum with an accumulation grouping fixed by construction:
+    explicit pairwise halving, each step one elementwise add. A plain
+    ``jnp.sum`` leaves the grouping to per-program codegen, which drifts
+    by an ulp between the single-device and shard_map programs; here the
+    tree IS the dataflow, so both placements compute identical bits."""
+    n = int(x.shape[0])
+    k = 1
+    while k < n:
+        k *= 2
+    x = jnp.pad(x, (0, k - n))
+    while k > 1:
+        k //= 2
+        x = x[:k] + x[k:]
+    return x[0]
+
+
 @functools.partial(jax.jit, static_argnames=("max_iter", "backend",
-                                             "ell_width"))
-def _pagerank_impl(graph: Graph, damping: jax.Array, tol: jax.Array,
-                   max_iter: int, backend: str,
-                   ell_width: Optional[int]) -> PRResult:
+                                             "ell_width", "placement"))
+def _pagerank_impl(graph: Graph, inv_deg: jax.Array, damping: jax.Array,
+                   tol: jax.Array, max_iter: int, backend: str,
+                   ell_width: Optional[int],
+                   placement: str = B.SINGLE) -> PRResult:
     n = graph.num_vertices
-    deg = graph.degrees.astype(jnp.float32)
-    spmv_op = B.dispatch("spmv", backend)
+    spmv_op = B.dispatch("spmv", backend, placement)
 
     def body(st: PRState):
-        contrib = jnp.where(deg > 0, st.rank / jnp.maximum(deg, 1.0), 0.0)
+        # contribution split: rank × (host-precomputed) reciprocal
+        # out-degree. The reciprocal is NOT computed in-loop on purpose:
+        # XLA's per-kernel codegen emits an approximate (±1 ulp)
+        # division depending on what the op is fused with, and the
+        # fusion context differs between a single-device gather sweep
+        # and a shard_map call — sharded ranks then drift from
+        # single-device ranks. A single IEEE multiply has no such
+        # freedom, so placement bit-parity (a tested contract) holds.
+        # inv_deg is 0 on dangling vertices, folding the deg>0 guard in.
+        contrib = st.rank * inv_deg
         # acc = Aᵀ ⊗ contrib over plus-times (structural adjacency)
         acc = spmv_op(graph.csc_offsets, graph.csc_indices, None, contrib,
                       SR.plus_times, ell_width, None)
-        dangling = jnp.sum(jnp.where(deg == 0, st.rank, 0.0)) / n
+        # grouping-fixed sum — see _fixed_tree_sum for why jnp.sum would
+        # break placement bit-parity here
+        dangling = _fixed_tree_sum(
+            jnp.where(inv_deg == 0, st.rank, 0.0)) / n
         new_rank = (1.0 - damping) / n + damping * (acc + dangling)
         # convergence filter: retire vertices whose rank has settled
         still = jnp.abs(new_rank - st.rank) > tol
@@ -70,22 +99,48 @@ def _pagerank_impl(graph: Graph, damping: jax.Array, tol: jax.Array,
     return PRResult(rank=final.rank, iterations=iters)
 
 
-def pagerank(graph: Graph, *, damping: float = 0.85, tol: float = 0.0,
+def pagerank(graph, *, damping: float = 0.85, tol: float = 0.0,
              max_iter: int = 20, backend: Optional[str] = None,
              use_kernel: Optional[bool] = None,
-             ell_width: Optional[int] = None) -> PRResult:
+             ell_width: Optional[int] = None,
+             placement: Optional[str] = None) -> PRResult:
+    """``graph`` may be a ``Graph`` or a ``ShardedGraph``
+    (``partition_1d(...).shard(mesh)``) — a sharded graph routes the
+    SpMV sweep through the mesh providers and the SAME impl otherwise,
+    so ranks bit-match across placements."""
     assert graph.has_csc, "pagerank uses the CSC transpose"
     bk = B.resolve(backend, use_kernel)
+    pl, ctx = B.resolve_graph_placement(graph, placement)
     if ell_width is None:
         # static kernel metadata, computed exactly once at Graph build
         # time (Graph.from_csr) — never recomputed here, so the impl
         # stays synchronization-free on every path
         ell_width = graph.csc_ell_width
-    if ell_width is None and bk == B.PALLAS:
+    if ell_width is None and bk == B.PALLAS and pl == B.SINGLE:
         raise ValueError(
             "pagerank on the pallas backend needs Graph.csc_ell_width; "
             "build the Graph via Graph.from_csr / from_edge_list (the "
             "width is computed once at build time) or pass ell_width=")
-    return _pagerank_impl(graph, jnp.float32(damping), jnp.float32(tol),
-                          max_iter, bk,
-                          None if ell_width is None else int(ell_width))
+    with ctx:
+        return _pagerank_impl(
+            graph, _inv_out_degrees(graph), jnp.float32(damping),
+            jnp.float32(tol), max_iter, bk,
+            None if ell_width is None else int(ell_width), pl)
+
+
+def _inv_out_degrees(graph) -> jax.Array:
+    """Exact host-side reciprocal out-degrees (0 on dangling vertices);
+    see the in-loop comment for why the division never happens on
+    device. Memoized on the graph instance — the host sync + transfer
+    happens once per graph, not once per serving-loop call. (Both graph
+    containers are frozen dataclasses; the cache rides ``__dict__``
+    outside the pytree fields.)"""
+    cached = graph.__dict__.get("_inv_deg")
+    if cached is None:
+        import numpy as np
+        deg = np.asarray(graph.degrees).astype(np.float32)
+        inv = np.where(deg > 0, np.float32(1.0) / np.maximum(deg, 1.0),
+                       np.float32(0.0)).astype(np.float32)
+        cached = jnp.asarray(inv)
+        object.__setattr__(graph, "_inv_deg", cached)
+    return cached

@@ -36,12 +36,14 @@ class ReachResult(NamedTuple):
     hops: jax.Array       # () int32 the k that was run
 
 
-@functools.partial(jax.jit, static_argnames=("k", "backend", "ell_width"))
+@functools.partial(jax.jit, static_argnames=("k", "backend", "ell_width",
+                                             "placement"))
 def _reach_impl(graph: Graph, srcs: jax.Array, k: int, backend: str,
-                ell_width: Optional[int]) -> ReachResult:
+                ell_width: Optional[int],
+                placement: str = B.SINGLE) -> ReachResult:
     n = graph.num_vertices
     b = srcs.shape[0]
-    spmm_op = B.dispatch("spmm", backend)
+    spmm_op = B.dispatch("spmm", backend, placement)
     r0 = jnp.zeros((n, b), jnp.float32).at[
         srcs, jnp.arange(b, dtype=jnp.int32)].set(1.0)
 
@@ -60,20 +62,26 @@ def _reach_impl(graph: Graph, srcs: jax.Array, k: int, backend: str,
                        hops=jnp.int32(k))
 
 
-def reach_batch(graph: Graph, srcs, k: int = 3, *,
+def reach_batch(graph, srcs, k: int = 3, *,
                 backend: Optional[str] = None,
-                use_kernel: Optional[bool] = None) -> ReachResult:
-    """B-source k-hop reachability as ONE jitted or-and program."""
+                use_kernel: Optional[bool] = None,
+                placement: Optional[str] = None) -> ReachResult:
+    """B-source k-hop reachability as ONE jitted or-and program.
+    ``graph`` may be a ``ShardedGraph`` — each hop's CSC SpMM then runs
+    through the sharded registry provider (bit-matching results)."""
     assert graph.has_csc, "reach uses the CSC transpose (pull sweeps)"
     bk = B.resolve(backend, use_kernel)
+    pl, ctx = B.resolve_graph_placement(graph, placement)
     ell_width = graph.csc_ell_width
-    if ell_width is None and bk == B.PALLAS:
+    if ell_width is None and bk == B.PALLAS and pl == B.SINGLE:
         raise ValueError(
             "reach on the pallas backend needs Graph.csc_ell_width; "
             "build the Graph via Graph.from_csr / from_edge_list")
     srcs = jnp.asarray(srcs, jnp.int32).reshape(-1)
-    return _reach_impl(graph, srcs, int(k), bk,
-                       None if ell_width is None else int(ell_width))
+    with ctx:
+        return _reach_impl(graph, srcs, int(k), bk,
+                           None if ell_width is None else int(ell_width),
+                           pl)
 
 
 def reach(graph: Graph, src: int, k: int = 3, *,

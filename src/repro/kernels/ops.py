@@ -178,25 +178,6 @@ def _register_mxm():
 _register_mxm()
 
 
-def csr_spmv(offsets: jax.Array, indices: jax.Array, x: jax.Array,
-             ell_width: int) -> jax.Array:
-    """Deprecated alias (one release): unit-value plus-times SpMV.
-
-    The standalone SpMV path was absorbed into the semiring algebra
-    layer — call ``repro.linalg.spmv`` (which also handles masks,
-    values, CSC transpose and backend selection).
-    """
-    import warnings
-    warnings.warn(
-        "kernels.ops.csr_spmv is deprecated; use repro.linalg.spmv "
-        "(semiring algebra layer) instead", DeprecationWarning,
-        stacklevel=2)
-    from repro.linalg.semiring import plus_times
-    return semiring_spmv(offsets, indices, None,
-                         x.astype(jnp.float32), plus_times,
-                         ell_width, None)
-
-
 @B.register("compact", B.PALLAS)
 def filter_compact(ids: jax.Array, keep: jax.Array):
     """Stable compaction of ids[keep] → (packed, count)."""

@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config, shapes_for
+from repro.jax_compat import set_mesh
 from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
 from repro.models import build_model
 from repro.parallel.sharding import (fit_sharding, spec_for_mesh,
@@ -143,7 +144,7 @@ def lower_program(cfg, shape: dict, kind: str, mesh, quant: bool,
     model = build_model(cfg)
     axes = mesh_axis_sizes(mesh)
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         pspecs = model.param_specs(axes)
         pshard = tree_shardings(mesh, pspecs)
         params_sds = jax.eval_shape(model.init, jax.random.PRNGKey(0))
@@ -249,7 +250,8 @@ def lower_program(cfg, shape: dict, kind: str, mesh, quant: bool,
 
 
 def _cost_triplet(compiled) -> dict:
-    cost = compiled.cost_analysis()
+    from repro.jax_compat import cost_analysis
+    cost = cost_analysis(compiled)
     coll = parse_collectives(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),

@@ -19,10 +19,22 @@ one engine. Per-kind latency is reported alongside the aggregate, and
 lands in ``--json``.
 
 Reports per-query latency (enqueue → batch completion, so queuing delay
-from batch formation is included) and aggregate queries/sec.
+from batch formation is included; each query's enqueue time is stamped
+when it joins its slot queue) and aggregate queries/sec.
+
+``--parts P`` serves the same stream from a mesh: the graph is 1-D
+partitioned once at startup, traversal kinds run the distributed
+engine (bitmask-exchange advance), algebraic kinds the sharded
+spmv/spmm providers — results bit-match single-device serving, and
+``--json`` rows gain per-device balance accounting.
 
   PYTHONPATH=src python -m repro.launch.graph_serve --graph rmat \
       --scale 10 --kinds bfs,pagerank,reach --requests 64 --batch 8
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.graph_serve --graph rmat \
+      --scale 10 --parts 4 --kinds bfs,sssp,pagerank,reach \
+      --requests 64 --batch 8
 
   PYTHONPATH=src python -m repro.launch.graph_serve --graph rmat \
       --scale 10 --primitive bfs --requests 64 --batch 8 --backend xla
@@ -130,6 +142,58 @@ def _run_kind(g, kind: str, srcs: np.ndarray, backend: str, hops: int):
     raise ValueError(kind)
 
 
+def make_sharded_runner(pg, mesh, axis: str = "graph"):
+    """Mesh-backed query runner: every kind is served from the 1-D
+    partition built once at startup. Traversal kinds (bfs/sssp) run one
+    cached distributed trace per query lane (the trace is keyed on the
+    partition shapes + mesh, so lanes reuse it); algebraic kinds run the
+    sharded "spmm"/"spmv" providers through the unchanged primitives.
+    Results bit-match the single-device runner, so the oracle validation
+    path needs no sharded variant."""
+    import jax.numpy as jnp
+
+    from repro.core.distributed import distributed_bfs, distributed_sssp
+    from repro.core.primitives import pagerank, reach_batch
+
+    sg = pg.shard(mesh, axis)
+
+    def _per_source(srcs, one):
+        # padding lanes repeat the final real query — run each distinct
+        # source once and fan the result back out to its lanes
+        memo = {}
+        rows = []
+        for s in srcs:
+            s = int(s)
+            if s not in memo:
+                memo[s] = one(s)
+            rows.append(memo[s])
+        return jnp.stack(rows)
+
+    def run(kind: str, srcs: np.ndarray, backend: str, hops: int):
+        zeros = np.zeros(len(srcs), np.int64)
+        if kind == "bfs":
+            out = _per_source(srcs, lambda s: distributed_bfs(
+                pg, s, mesh, axis, backend=backend).labels)
+            jax.block_until_ready(out)
+            return out, zeros           # dense bitmask advance: no caps,
+        if kind == "sssp":              # so no overflow to report
+            out = _per_source(srcs, lambda s: distributed_sssp(
+                pg, s, mesh, axis).dist)
+            jax.block_until_ready(out)
+            return out, zeros
+        if kind == "reach":
+            r = reach_batch(sg, srcs, hops, backend=backend)
+            jax.block_until_ready(r.reached)
+            return r.reached, zeros
+        if kind == "pagerank":
+            r = pagerank(sg, backend=backend)
+            jax.block_until_ready(r.rank)
+            return r.rank, zeros
+        raise ValueError(kind)
+
+    return run
+
+
 def _validate_kind(g, kind: str, srcs, field, hops: int) -> int:
     fails = 0
     if kind == "pagerank":
@@ -148,7 +212,7 @@ def _validate_kind(g, kind: str, srcs, field, hops: int) -> int:
 
 
 def serve_mixed(g, queries, batch: int, backend: str, hops: int = 3,
-                validate: bool = False) -> dict:
+                validate: bool = False, runner=None) -> dict:
     """Serve a mixed-kind query stream through per-kind fixed batch slots.
 
     ``queries`` is a sequence of ``(kind, source)`` pairs, kinds drawn
@@ -156,12 +220,25 @@ def serve_mixed(g, queries, batch: int, backend: str, hops: int = 3,
     arrival order and a queue flushes as ONE jitted batched program the
     moment it fills (ragged tails flush padded at end-of-stream). Returns
     aggregate stats plus a ``per_kind`` latency/qps breakdown.
+
+    Per-query latency is enqueue → batch completion: each query's
+    enqueue time is recorded when it joins its slot queue and subtracted
+    at flush. (Measuring from stream start instead — the old behavior —
+    charged every query all the batches that ran before it joined the
+    queue, so mixed-stream p50/p95 grew with stream position.)
+
+    ``runner(kind, srcs, backend, hops)`` overrides query execution (the
+    sharded driver passes a mesh-backed runner); defaults to the
+    single-device ``_run_kind``.
     """
     n_q = len(queries)
     if n_q == 0:
         raise ValueError("empty query stream (requests must be > 0)")
+    run_kind = runner if runner is not None else \
+        (lambda kind, srcs, bk, h: _run_kind(g, kind, srcs, bk, h))
     lat_ms = {k: [] for k in KINDS}
     pending: dict = {k: [] for k in KINDS}
+    enqueue: dict = {k: [] for k in KINDS}   # per-query enqueue stamps
     failures = 0
     overflow = 0
     answers = []
@@ -176,19 +253,22 @@ def serve_mixed(g, queries, batch: int, backend: str, hops: int = 3,
         sl = np.asarray(q, np.int64)
         srcs = np.concatenate([sl, np.full(batch - len(sl), sl[-1],
                                            sl.dtype)])
-        field, ovf = _run_kind(g, kind, srcs, backend, hops)
+        field, ovf = run_kind(kind, srcs, backend, hops)
         t_done = time.monotonic()
         # padding lanes repeat the last real query; don't double-count
         # their overflow (same trim as serve())
         overflow += int(ovf[:len(sl)].sum())
         if validate:
             answers.append((kind, sl, np.asarray(field)))
-        lat_ms[kind].extend([(t_done - t_start) * 1e3] * len(sl))
+        lat_ms[kind].extend([(t_done - t_enq) * 1e3
+                             for t_enq in enqueue[kind]])
         pending[kind] = []
+        enqueue[kind] = []
         batches += 1
 
-    for kind, src in queries:            # closed loop: all queued at t0
+    for kind, src in queries:
         pending[kind].append(src)
+        enqueue[kind].append(time.monotonic())
         if len(pending[kind]) == batch:
             flush(kind)
     for kind in KINDS:                   # ragged tails, padded
@@ -248,6 +328,11 @@ def main(argv=None):
                     help="fixed batch-slot count (B traversal lanes)")
     ap.add_argument("--warmup", type=int, default=1,
                     help="untimed warmup batches (pays the jit trace)")
+    ap.add_argument("--parts", type=int, default=None, metavar="P",
+                    help="serve from a P-way 1-D partition over the "
+                         "first P local devices (sharded placement; "
+                         "builds the partition once, reports per-device "
+                         "balance in --json)")
     ap.add_argument("--validate", action="store_true",
                     help="check every lane against the numpy oracle")
     ap.add_argument("--backend", default=None,
@@ -266,22 +351,48 @@ def main(argv=None):
             if k not in KINDS:
                 raise SystemExit(f"unknown query kind {k!r}; pick from "
                                  f"{KINDS}")
+    if args.parts and not kinds:
+        kinds = [args.primitive]     # sharded serving goes through the
+    runner = None                    # mixed-kind (runner-based) path
+    pg = None
+    if args.parts:
+        if len(jax.devices()) < args.parts:
+            raise SystemExit(
+                f"--parts {args.parts} needs {args.parts} devices but "
+                f"only {len(jax.devices())} are visible (set XLA_FLAGS="
+                f"--xla_force_host_platform_device_count={args.parts} "
+                f"for host-platform serving)")
+        from jax.sharding import Mesh
+
+        from repro.core.partition import partition_1d
+        pg = partition_1d(g, args.parts)
+        mesh = Mesh(np.array(jax.devices()[:args.parts]), ("graph",))
+        runner = make_sharded_runner(pg, mesh)
+        bal = pg.balance()
+        print(f"[graph_serve] partition: {args.parts} parts, "
+              f"edges/part={bal['edges_per_part']} "
+              f"(imbalance {bal['edge_imbalance']}x)")
     what = ",".join(kinds) if kinds else args.primitive
     print(f"[graph_serve] {args.graph} scale={args.scale}: "
           f"n={g.num_vertices} m={g.num_edges} kinds={what} "
-          f"batch={args.batch} backend={bk}")
+          f"batch={args.batch} backend={bk} "
+          f"placement={'sharded' if args.parts else 'single'}")
 
     if kinds:
+        run_warm = runner if runner is not None else \
+            (lambda k, srcs, b, h: _run_kind(g, k, srcs, b, h))
         for _ in range(args.warmup):        # one trace per kind
             for k in kinds:
-                _run_kind(g, k,
-                          rng.integers(0, g.num_vertices, args.batch),
-                          bk, args.hops)
+                run_warm(k, rng.integers(0, g.num_vertices, args.batch),
+                         bk, args.hops)
         queries = [(kinds[i % len(kinds)],
                     int(rng.integers(0, g.num_vertices)))
                    for i in range(args.requests)]
         stats = serve_mixed(g, queries, args.batch, bk, hops=args.hops,
-                            validate=args.validate)
+                            validate=args.validate, runner=runner)
+        if args.parts:
+            stats["parts"] = args.parts
+            stats["balance"] = pg.balance()
     else:
         run = {"bfs": bfs_batch, "sssp": sssp_batch}[args.primitive]
         for _ in range(args.warmup):

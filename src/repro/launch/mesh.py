@@ -8,18 +8,19 @@ Single pod:  (16, 16)    axes ("data", "model")   — 256 chips (v5e pod)
 Multi-pod:   (2, 16, 16) axes ("pod", "data", "model") — 512 chips.
 The "pod" axis is pure data parallelism: the only collective that crosses
 it is the per-step gradient all-reduce (DCN-friendly).
+
+Meshes are built through ``repro.jax_compat.make_mesh`` so the
+``axis_types=`` kwarg drift across jax releases never reaches callers.
 """
 from __future__ import annotations
 
-import jax
+from repro.jax_compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def mesh_axis_sizes(mesh) -> dict:
@@ -28,6 +29,4 @@ def mesh_axis_sizes(mesh) -> dict:
 
 def make_test_mesh(data: int = 1, model: int = 1):
     """Small mesh for CPU tests (requires enough local devices)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))

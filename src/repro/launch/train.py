@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from repro.configs import get_config, get_smoke_config
 from repro.data import SyntheticLMDataset, make_batch_for
 from repro.ft import RestartableTrainer
+from repro.jax_compat import set_mesh
 from repro.launch.mesh import make_test_mesh, mesh_axis_sizes
 from repro.models import build_model
 from repro.parallel.sharding import tree_shardings
@@ -81,7 +82,7 @@ def main(argv=None):
         b["labels"] = lm["labels"]
         return b
 
-    with jax.set_mesh(mesh):
+    with set_mesh(mesh):
         def init_state():
             params = model.init(jax.random.PRNGKey(0))
             return (params, opt_init(params))

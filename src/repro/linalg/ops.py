@@ -32,6 +32,12 @@ Registry contracts (shared by both backends):
 
 Masked-out rows carry the semiring's ⊕-identity. ``values=None`` means a
 structural (pattern-only) matrix: every stored entry is the ⊗-identity.
+
+The same three ops carry ``placement="sharded"`` providers
+(``repro.core.distributed``) that accept the (p, …) stacked per-device
+slices of a ``ShardedGraph`` and run under shard_map; the public
+wrappers route a ShardedGraph operand there automatically, and results
+bit-match the single-device sweeps.
 """
 from __future__ import annotations
 
@@ -143,9 +149,12 @@ _mxm_xla = B.register("mxm", B.XLA)(
 
 
 def _csr_side(a, transpose: bool):
-    """Resolve (offsets, indices, values, ell_width) from a Graph (CSR or
-    its CSC mirror) or a raw (offsets, indices, values) triple."""
-    if isinstance(a, Graph):
+    """Resolve (offsets, indices, values, ell_width) from a Graph /
+    ShardedGraph (CSR or its CSC mirror) or a raw (offsets, indices,
+    values) triple. A ShardedGraph yields the (p, …) stacked per-device
+    slices the sharded registry providers understand."""
+    from repro.core.partition import ShardedGraph
+    if isinstance(a, (Graph, ShardedGraph)):
         if transpose:
             if not a.has_csc:
                 raise ValueError("transpose=True needs the CSC mirror "
@@ -188,46 +197,55 @@ def _ell_or_raise(ell_width, meta, bk: str):
 def spmv(a, x, *, semiring=plus_times, mask=None, complement: bool = False,
          transpose: bool = False, structural: bool = False,
          ell_width: Optional[int] = None, backend: Optional[str] = None,
-         use_kernel: Optional[bool] = None) -> jax.Array:
+         use_kernel: Optional[bool] = None,
+         placement: Optional[str] = None) -> jax.Array:
     """Masked semiring SpMV: ``y⟨mask⟩ = A ⊗ x`` (y (n,), x dense).
 
     ``transpose=True`` multiplies by Aᵀ via the CSC mirror (the pull /
     PageRank direction). ``structural=True`` ignores stored edge values
     (every entry is the ⊗-identity). ``mask`` is a (n,) output row mask;
     ``complement=True`` flips it. Masked-out rows hold the ⊕-identity.
+    ``a`` may be a ``ShardedGraph`` (``partition_1d(...).shard(mesh)``):
+    the sweep then runs row-partitioned under shard_map and bit-matches
+    the single-device result.
     """
     sr = S.get(semiring)
     bk = B.resolve(backend, use_kernel)
+    pl, ctx = B.resolve_graph_placement(a, placement)
     off, idx, vals, meta_w = _csr_side(a, transpose)
     if structural:
         vals = None
-    w = _ell_or_raise(ell_width, meta_w, bk)
+    w = _ell_or_raise(ell_width, meta_w, bk if pl == B.SINGLE else B.XLA)
     m = _resolve_mask(mask, complement)
     x = jnp.asarray(x, jnp.float32)
-    return B.dispatch("spmv", bk)(off, idx, vals, x, sr, w, m)
+    with ctx:
+        return B.dispatch("spmv", bk, pl)(off, idx, vals, x, sr, w, m)
 
 
 def spmm(a, x, *, semiring=plus_times, mask=None, complement: bool = False,
          transpose: bool = False, structural: bool = False,
          ell_width: Optional[int] = None, backend: Optional[str] = None,
-         use_kernel: Optional[bool] = None) -> jax.Array:
+         use_kernel: Optional[bool] = None,
+         placement: Optional[str] = None) -> jax.Array:
     """Dense-accumulator semiring SpMM: ``Y⟨mask⟩ = A ⊗ X`` (X (nx, k)).
 
     The whole-frontier batched product: each column of X is one lane
     (a reachability source, a label block). Same mask/transpose/
-    structural semantics as ``spmv``.
+    structural/placement semantics as ``spmv``.
     """
     sr = S.get(semiring)
     bk = B.resolve(backend, use_kernel)
+    pl, ctx = B.resolve_graph_placement(a, placement)
     off, idx, vals, meta_w = _csr_side(a, transpose)
     if structural:
         vals = None
-    w = _ell_or_raise(ell_width, meta_w, bk)
+    w = _ell_or_raise(ell_width, meta_w, bk if pl == B.SINGLE else B.XLA)
     m = _resolve_mask(mask, complement)
     x = jnp.asarray(x, jnp.float32)
     if x.ndim != 2:
         raise ValueError(f"spmm needs a dense (n, k) operand, got {x.shape}")
-    return B.dispatch("spmm", bk)(off, idx, vals, x, sr, w, m)
+    with ctx:
+        return B.dispatch("spmm", bk, pl)(off, idx, vals, x, sr, w, m)
 
 
 def spmsv(a, ids, xvals=None, *, semiring=plus_times, mask=None,
@@ -243,6 +261,12 @@ def spmsv(a, ids, xvals=None, *, semiring=plus_times, mask=None,
     Output is dense (n,) — the direction-optimization contract: callers
     pick spmsv (push) for small frontiers and spmv (pull) for large ones.
     """
+    from repro.core.partition import ShardedGraph
+    if isinstance(a, ShardedGraph):
+        raise ValueError(
+            "spmsv has no sharded provider (the push expansion is "
+            "frontier-shaped); use spmv/spmm on the ShardedGraph, or "
+            "run spmsv on the unpartitioned source graph")
     sr = S.get(semiring)
     bk = B.resolve(backend, use_kernel)
     off, idx, vals, _ = _csr_side(a, transpose=False)
@@ -275,7 +299,7 @@ def spmsv(a, ids, xvals=None, *, semiring=plus_times, mask=None,
         cap = int((ro[live + 1] - ro[live]).sum()) if len(live) else 1
     else:
         cap = int(cap_out)
-    expand = B.dispatch("advance", bk)
+    expand = B.dispatch("advance", bk, B.SINGLE)
     _, dst, eid, in_pos, _, exp_valid, _ = expand(off, idx, base, sizes,
                                                   max(cap, 1))
     sv = (jnp.float32(sr.one) if xvals is None
@@ -292,7 +316,8 @@ def spmsv(a, ids, xvals=None, *, semiring=plus_times, mask=None,
 def mxm(a, b, mask, *, semiring=plus_times, b_transpose: bool = False,
         structural: bool = False, cap_out: Optional[int] = None,
         backend: Optional[str] = None,
-        use_kernel: Optional[bool] = None) -> jax.Array:
+        use_kernel: Optional[bool] = None,
+        placement: Optional[str] = None) -> jax.Array:
     """Row-tiled masked semiring SpGEMM (dot formulation):
     ``C⟨M⟩ = A ⊗ B`` computed only at the mask pattern.
 
@@ -310,16 +335,36 @@ def mxm(a, b, mask, *, semiring=plus_times, b_transpose: bool = False,
     dot is symmetric in the two rows and every supported ⊗ commutes.
     Capacity planning (``cap_out``) is host-side, like every frontier
     capacity in this engine; call the wrapper outside jit.
+
+    Sharded: pass a ``ShardedGraph`` as ``a`` (the expansion side is
+    row-partitioned over the mesh) with a plain Graph as ``b`` (the
+    probe side stays replicated — the 1-D SpGEMM split). The SmallLarge
+    swap is disabled there (the sides live in different layouts).
     """
+    from repro.core.partition import ShardedGraph
     sr = S.get(semiring)
     bk = B.resolve(backend, use_kernel)
+    pl, ctx = B.resolve_graph_placement(a, placement)
+    if isinstance(b, ShardedGraph):
+        # the probe side is ALWAYS replicated (the 1-D SpGEMM split):
+        # stacked per-device slices can neither be probed globally nor
+        # feed the single-device path's degree planning
+        raise ValueError(
+            "mxm keeps the probe side (b) replicated; pass the "
+            "expansion side (a) as a ShardedGraph and b as a plain "
+            "Graph (e.g. pg.source)")
     a_off, a_idx, a_vals, _ = _csr_side(a, transpose=False)
     bt_off, bt_idx, bt_vals, _ = _csr_side(b, transpose=not b_transpose)
     if structural:
         a_vals = bt_vals = None
     msrc = np.asarray(mask[0], np.int32)
     mdst = np.asarray(mask[1], np.int32)
-    deg_a = np.diff(np.asarray(a_off))[msrc]
+    if pl == B.SHARDED:
+        # stacked (p, vpp+1) offsets → global out-degrees, pads → 0
+        deg_all = np.diff(np.asarray(a_off), axis=1).reshape(-1)
+        deg_a = deg_all[:a.num_vertices][msrc]
+    else:
+        deg_a = np.diff(np.asarray(a_off))[msrc]
     deg_b = np.diff(np.asarray(bt_off))[mdst]
     shared = (a_off is bt_off) and (a_idx is bt_idx)
     if shared:
@@ -331,15 +376,19 @@ def mxm(a, b, mask, *, semiring=plus_times, b_transpose: bool = False,
         base, probe_rows = msrc, mdst
         cap = int(deg_a.sum())
     cap = max(cap, 1) if cap_out is None else int(cap_out)
-    impl = B.dispatch("mxm", bk)
-    run = _jit_mxm(impl, sr, cap)
-    return run(a_off, a_idx, a_vals, bt_off, bt_idx, bt_vals,
-               jnp.asarray(base, jnp.int32),
-               jnp.asarray(probe_rows, jnp.int32))
+    impl = B.dispatch("mxm", bk, pl)
+    mesh_key = (a.mesh, a.axis) if pl == B.SHARDED else None
+    with ctx:
+        run = _jit_mxm(impl, sr, cap, mesh_key)
+        return run(a_off, a_idx, a_vals, bt_off, bt_idx, bt_vals,
+                   jnp.asarray(base, jnp.int32),
+                   jnp.asarray(probe_rows, jnp.int32))
 
 
 @functools.lru_cache(maxsize=64)
-def _jit_mxm(impl, sr: Semiring, cap: int):
-    """One cached jit wrapper per (impl, semiring, capacity) — repeated
-    mxm calls of the same shape reuse one trace."""
+def _jit_mxm(impl, sr: Semiring, cap: int, mesh_key=None):
+    """One cached jit wrapper per (impl, semiring, capacity, mesh) —
+    repeated mxm calls of the same shape reuse one trace. ``mesh_key``
+    keys sharded traces by their (mesh, axis) so a cached program can
+    never run against the wrong mesh."""
     return jax.jit(lambda *args: impl(*args, sr, cap))

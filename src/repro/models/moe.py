@@ -76,7 +76,8 @@ def _wq(params, name, dtype):
 
 
 def _num_data_shards() -> int:
-    mesh = jax.sharding.get_abstract_mesh()
+    from repro.jax_compat import get_abstract_mesh
+    mesh = get_abstract_mesh()
     if mesh is None or mesh.empty:
         return 1
     sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))

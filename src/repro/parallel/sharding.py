@@ -19,6 +19,8 @@ import jax
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.jax_compat import get_abstract_mesh
+
 BATCH_AXES = ("pod", "data")      # batch dim shards over both when present
 FSDP_AXIS = "data"
 TENSOR_AXIS = "model"
@@ -40,7 +42,7 @@ def _filter_entry(entry, axis_names):
 def spec_for_mesh(spec: P, mesh=None) -> P:
     """Drop axes not present in ``mesh`` (or the active abstract mesh)."""
     if mesh is None:
-        mesh = jax.sharding.get_abstract_mesh()
+        mesh = get_abstract_mesh()
         if mesh is None or mesh.empty:
             return P()
     names = mesh.axis_names
@@ -49,7 +51,7 @@ def spec_for_mesh(spec: P, mesh=None) -> P:
 
 def mesh_axis_size(name: str) -> int:
     """Size of a mesh axis in the active abstract mesh (1 if absent)."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or mesh.empty:
         return 1
     sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
@@ -59,7 +61,7 @@ def mesh_axis_size(name: str) -> int:
 def constrain(x, *spec_entries):
     """with_sharding_constraint against the active mesh; no-op when no mesh
     is active (single-device tests) or in eager mode."""
-    mesh = jax.sharding.get_abstract_mesh()
+    mesh = get_abstract_mesh()
     if mesh is None or mesh.empty:
         return x
     spec = spec_for_mesh(P(*spec_entries), mesh)

@@ -277,11 +277,13 @@ def test_pagerank_parity_and_jit_clean(rmat_graph):
     # jit-clean: the pallas impl must trace with abstract values only (a
     # hidden device_get would raise a ConcretizationTypeError here)
     from repro.core.primitives.pagerank import _pagerank_impl
+    inv_deg = jnp.zeros((rmat_graph.num_vertices,), jnp.float32)
     jax.eval_shape(
-        lambda g: _pagerank_impl(g, jnp.float32(0.85), jnp.float32(0.0),
-                                 max_iter=2, backend="pallas",
-                                 ell_width=rmat_graph.csc_ell_width),
-        rmat_graph)
+        lambda g, iv: _pagerank_impl(g, iv, jnp.float32(0.85),
+                                     jnp.float32(0.0),
+                                     max_iter=2, backend="pallas",
+                                     ell_width=rmat_graph.csc_ell_width),
+        rmat_graph, inv_deg)
 
 
 def test_tc_parity(grid_graph):

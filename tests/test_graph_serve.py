@@ -1,0 +1,79 @@
+"""Serving-driver unit behavior — in particular the serve_mixed latency
+accounting: per-query latency must be measured from the query's OWN
+enqueue time, not from stream start. The old code charged every query
+all the batches that ran before it joined its slot queue, so p50/p95 of
+a mixed stream grew monotonically with stream position."""
+import numpy as np
+import pytest
+
+from repro.launch import graph_serve
+
+
+class FakeClock:
+    """Deterministic monotonic clock; only the (stubbed) batch execution
+    advances it, so latencies are exact integers of 'batch runtimes'."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def monotonic(self):
+        return self.t
+
+
+def _stub_runner(clock, batch_seconds=1.0):
+    def run(kind, srcs, backend, hops):
+        clock.t += batch_seconds           # one batch costs 1 fake second
+        return np.zeros((len(srcs), 4), np.float32), \
+            np.zeros(len(srcs), np.int64)
+    return run
+
+
+def test_serve_mixed_latency_measured_from_enqueue(monkeypatch):
+    clock = FakeClock()
+    monkeypatch.setattr(graph_serve, "time", clock)
+    # two full bfs batches run BEFORE the sssp queries even arrive; a
+    # third kind's single query arrives last and flushes in the ragged
+    # tail. Stream: 4×bfs, 2×sssp, 1×reach with batch=2 →
+    #   bfs flushes at t=1 and t=2, sssp at t=3, reach (tail) at t=4.
+    queries = ([("bfs", 0)] * 4) + ([("sssp", 0)] * 2) + [("reach", 0)]
+    stats = graph_serve.serve_mixed(
+        None, queries, batch=2, backend="xla",
+        runner=_stub_runner(clock))
+    per = stats["per_kind"]
+    # bfs batch 1 enqueued at t=0, done t=1; batch 2 enqueued t=1, done
+    # t=2 → every bfs query waited exactly one batch
+    assert per["bfs"]["lat_ms_mean"] == pytest.approx(1000.0)
+    assert per["bfs"]["lat_ms_p95"] == pytest.approx(1000.0)
+    # the sssp queries enqueued AFTER two bfs batches already ran (t=2)
+    # and completed at t=3 — one batch of latency, NOT three. The old
+    # stream-start accounting reported 3000 ms here.
+    assert per["sssp"]["lat_ms_mean"] == pytest.approx(1000.0)
+    # late ragged-tail query: enqueued t=3, flushed t=4
+    assert per["reach"]["lat_ms_mean"] == pytest.approx(1000.0)
+    # aggregate percentiles no longer grow with stream position
+    assert stats["lat_ms_p95"] == pytest.approx(1000.0)
+    assert stats["batches"] == 4
+
+
+def test_serve_mixed_latency_includes_queue_wait(monkeypatch):
+    """A query that sits in a half-full slot queue while OTHER kinds'
+    batches run still pays its true queue wait (enqueue → completion),
+    so the fix cannot under-report either."""
+    clock = FakeClock()
+    monkeypatch.setattr(graph_serve, "time", clock)
+    # sssp#1 arrives first, then two full bfs batches flush (t=1, t=2),
+    # then sssp#2 completes the sssp batch which flushes at t=3:
+    # sssp#1 waited 3 fake seconds, sssp#2 only 1.
+    queries = [("sssp", 0)] + ([("bfs", 0)] * 4) + [("sssp", 0)]
+    stats = graph_serve.serve_mixed(
+        None, queries, batch=2, backend="xla",
+        runner=_stub_runner(clock))
+    per = stats["per_kind"]
+    assert per["sssp"]["lat_ms_mean"] == pytest.approx(2000.0)  # (3+1)/2
+    assert per["bfs"]["lat_ms_mean"] == pytest.approx(1000.0)
+
+
+def test_serve_mixed_empty_stream_rejected():
+    with pytest.raises(ValueError):
+        graph_serve.serve_mixed(None, [], batch=2, backend="xla",
+                                runner=lambda *a: None)

@@ -10,7 +10,7 @@ Coverage demanded by the PR-3 checklist:
   * Graph.from_csr builds ELL metadata once; the pagerank / lp / reach
     impls trace with abstract values only (no host sync — one-trace
     tests);
-  * the csr_spmv deprecation shim.
+  * the csr_spmv shim's removal (the one-release deprecation expired).
 """
 import jax
 import jax.numpy as jnp
@@ -386,11 +386,12 @@ def test_algebra_impls_trace_without_host_sync(rmat_graph):
     from repro.core.primitives.pagerank import _pagerank_impl
     from repro.core.primitives.reach import _reach_impl
     g = rmat_graph
+    inv_deg = jnp.zeros((g.num_vertices,), jnp.float32)
     for bk in ("xla", "pallas"):
         jax.eval_shape(
-            lambda gg: _pagerank_impl(gg, jnp.float32(0.85),
-                                      jnp.float32(0.0), 2, bk,
-                                      g.csc_ell_width), g)
+            lambda gg, iv: _pagerank_impl(gg, iv, jnp.float32(0.85),
+                                          jnp.float32(0.0), 2, bk,
+                                          g.csc_ell_width), g, inv_deg)
         jax.eval_shape(
             lambda gg: _lp_impl(gg, jnp.arange(g.num_vertices,
                                                dtype=jnp.int32), 2, bk,
@@ -421,13 +422,8 @@ def test_linalg_ops_registered_on_both_backends():
         assert B.dispatch(op, B.PALLAS) is not B.dispatch(op, B.XLA)
 
 
-def test_csr_spmv_deprecation_shim(rmat_graph):
+def test_csr_spmv_shim_removed():
+    # the one-release csr_spmv deprecation shim has expired: the symbol
+    # must be gone (its replacement is repro.linalg.spmv)
     from repro.kernels import ops as K
-    g = rmat_graph
-    x = np.random.default_rng(0).random(g.num_vertices).astype(np.float32)
-    with pytest.deprecated_call():
-        old = K.csr_spmv(g.row_offsets, g.col_indices, x,
-                         ell_width=g.ell_width)
-    new = linalg.spmv(g, x, structural=True, backend="pallas")
-    np.testing.assert_allclose(np.asarray(old), np.asarray(new),
-                               rtol=1e-6)
+    assert not hasattr(K, "csr_spmv")
