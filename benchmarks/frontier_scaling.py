@@ -1,0 +1,190 @@
+"""Frontier-proportional performance benchmark → BENCH_pr5.json.
+
+Two measurements:
+
+  1. Primitive wall clock at scale 12 (same graph/methodology as
+     benchmarks/distributed_scale.py, whose parts=1 rows are the
+     BENCH_pr4 single-device baselines): bfs / sssp / pagerank through
+     the tiered+fused engine, plus the pinned top tier (tiered=False)
+     as the A/B control. The acceptance bar is ≥2× on bfs and pagerank
+     versus the BENCH_pr4 numbers.
+
+  2. Frontier-occupancy sweep: one fused advance_filter dispatch at
+     frontier sizes sweeping 2⁰ … n, tiered vs pinned. Sub-capacity
+     frontiers must cost sub-linearly in the tiered engine (the
+     Gunrock property: work ∝ frontier, not graph) while the pinned
+     path stays ~flat at worst-case cost.
+
+Usage:
+    python benchmarks/frontier_scaling.py --scale 12 --json BENCH_pr5.json
+    python benchmarks/frontier_scaling.py --quick       # CI smoke
+    REPRO_TUNE=1 python benchmarks/frontier_scaling.py --tune   # retune
+"""
+import argparse
+import json
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                                                   # noqa: E402
+import jax.numpy as jnp                                      # noqa: E402
+import numpy as np                                           # noqa: E402
+
+from repro.core import backend as B                          # noqa: E402
+from repro.core import frontier as F                         # noqa: E402
+from repro.core import graph as G                            # noqa: E402
+from repro.core import operators as ops                      # noqa: E402
+from repro.core.primitives import bfs_batch, pagerank, \
+    sssp_batch                                               # noqa: E402
+
+ROWS = []
+
+
+def timeit(fn, reps=5):
+    fn()                                    # warmup (pays the trace)
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.monotonic()
+        jax.block_until_ready(fn())
+        best = min(best, time.monotonic() - t0)
+    return best * 1e3
+
+
+def emit(row):
+    ROWS.append(row)
+    keys = " ".join(f"{k}={v}" for k, v in row.items()
+                    if k not in ("bench",))
+    print(f"[bench] {keys}")
+
+
+def bench_primitives(g, src, backend, reps, baselines):
+    edges = int(g.num_edges)
+
+    def run(name, fn, tiered):
+        ms = timeit(fn, reps)
+        mteps = edges / ms / 1e3
+        row = {"bench": "frontier_scaling", "primitive": name,
+               "tiered": tiered, "backend": backend,
+               "ms": round(ms, 2), "mteps": round(mteps, 2),
+               "n": g.num_vertices, "m": edges}
+        base = baselines.get(name)
+        if base and tiered:
+            row["baseline_pr4_ms"] = base
+            row["speedup_vs_pr4"] = round(base / ms, 2)
+        emit(row)
+
+    for tiered in (True, False):
+        run("bfs", lambda t=tiered: bfs_batch(
+            g, [src], backend=backend, tiered=t).labels, tiered)
+        run("sssp", lambda t=tiered: sssp_batch(
+            g, [src], backend=backend, tiered=t).dist, tiered)
+    # pagerank's sweep is dense (pinned top tier by design): one flavour
+    run("pagerank", lambda: pagerank(
+        g, max_iter=20, backend=backend).rank, True)
+
+
+def bench_occupancy(g, backend, reps):
+    """One fused push step at controlled frontier occupancy: cost must
+    track the live frontier (tiered) vs stay worst-case flat (pinned)."""
+    n, m = g.num_vertices, g.num_edges
+    cap_v = min(n, m)
+    caps = B.tier_plan("advance_filter", m)
+    rng = np.random.default_rng(0)
+    visited = jnp.zeros((n,), bool)
+
+    def step(ids, cap_t):
+        fr = F.from_ids(ids, cap_v)
+        return ops.advance_filter(g, fr, visited, cap_t, cap_v,
+                                  backend=backend)[0].ids
+
+    size = 4
+    while size <= n:
+        ids = rng.choice(n, size=size, replace=False)
+        fr = F.from_ids(ids, cap_v)
+        need = int(ops.frontier_workload(g, fr))
+        tier = caps[int(F.tier_index(jnp.int32(need), caps))]
+        jit_t = jax.jit(lambda i: step(i, tier))
+        jit_p = jax.jit(lambda i: step(i, caps[-1]))
+        idsj = jnp.asarray(ids, jnp.int32)
+        ms_t = timeit(lambda: jit_t(idsj), reps)
+        ms_p = timeit(lambda: jit_p(idsj), reps)
+        emit({"bench": "frontier_occupancy", "backend": backend,
+              "frontier": size, "workload": need, "tier": int(tier),
+              "ms_tiered": round(ms_t, 3), "ms_pinned": round(ms_p, 3),
+              "occupancy": round(need / max(m, 1), 4)})
+        size *= 8
+
+
+def run():
+    """benchmarks.run entry point (ambient REPRO_BACKEND honored); rows
+    also land in benchmarks.common.RESULTS for the aggregate --json."""
+    main(["--scale", "10", "--reps", "3",
+          "--json", os.environ.get("FRONTIER_SCALING_JSON", "")])
+    from benchmarks.common import RESULTS
+    RESULTS.extend({"table": r.pop("bench"), **r} for r in list(ROWS))
+    ROWS.clear()
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--edge-factor", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--backend", default=None,
+                    choices=("xla", "pallas", "auto"))
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--json", default="BENCH_pr5.json")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke: scale 9, 1 rep, skip the sweep tail")
+    ap.add_argument("--tune", action="store_true",
+                    help="autotune kernel tiles first (REPRO_TUNE=1)")
+    ap.add_argument("--baseline", default="BENCH_pr4.json",
+                    help="PR-4 JSON with the parts=1 rows to compare to")
+    args = ap.parse_args(argv)
+    if args.quick:
+        args.scale, args.reps = 9, 1
+    backend = B.resolve(args.backend)
+
+    if args.tune:
+        os.environ.setdefault("REPRO_TUNE", "1")
+        from repro.kernels import tuner
+        import repro.kernels.ops  # noqa: F401  (registers probes)
+        caps = [512, 2048, 8192, 32768, 131072]
+        picked = tuner.autotune_all(caps)
+        print(f"[tune] {len(picked)} entries -> {tuner.cache_path()}")
+
+    g = G.rmat(args.scale, args.edge_factor, seed=args.seed,
+               weighted=True)
+    deg = np.diff(np.asarray(g.row_offsets))
+    src = int(np.argmax(deg))
+    print(f"[bench] rmat scale={args.scale}: n={g.num_vertices} "
+          f"m={g.num_edges} backend={backend}")
+
+    baselines = {}
+    base_path = os.path.join(os.path.dirname(__file__), "..",
+                             args.baseline)
+    if args.scale == 12 and os.path.exists(base_path):
+        with open(base_path) as f:
+            for row in json.load(f):
+                if row.get("parts") == 1:
+                    baselines[row["primitive"]] = row["ms"]
+
+    with B.use_backend(backend):
+        bench_primitives(g, src, backend, args.reps, baselines)
+        bench_occupancy(g, backend, args.reps)
+
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(ROWS, f, indent=1)
+        print(f"[bench] wrote {args.json}")
+    # machine-checkable summary (the CI perf-smoke contract)
+    worst = min((r.get("mteps", 1) for r in ROWS
+                 if r["bench"] == "frontier_scaling"), default=0)
+    assert worst > 0, "zero-throughput row in frontier_scaling results"
+    print(f"[bench] OK: min mteps {worst}")
+
+
+if __name__ == "__main__":
+    main()

@@ -9,6 +9,8 @@
   fig25_tc            TC filtered vs full vs CPU baseline (Fig. 25)
   table10_wtf         Who-To-Follow pipeline + scaling (Tables 9-11)
   roofline            LM dry-run roofline tables (deliverable g)
+  frontier_scaling    tiered/fused traversal vs pinned worst-case +
+                      frontier-occupancy sweep (PR 5; → BENCH_pr5.json)
 
 Run all:  PYTHONPATH=src python -m benchmarks.run
 One:      PYTHONPATH=src python -m benchmarks.run --only fig25_tc
@@ -33,6 +35,7 @@ MODULES = [
     "fig25_tc",
     "table10_wtf",
     "roofline",
+    "frontier_scaling",
 ]
 
 

@@ -289,3 +289,52 @@ def registered(op: str, backend: str, placement: str = SINGLE) -> bool:
     under ``placement``."""
     _load_lazy(op, backend, placement)
     return (op, backend, placement) in _REGISTRY
+
+
+# ---------------------------------------------------------------------------
+# Capacity tiers (the frontier-proportional dispatch axis)
+# ---------------------------------------------------------------------------
+
+
+def tier_plan(op: str, cap: int, *, min_tier: Optional[int] = None
+              ) -> tuple[int, ...]:
+    """Static capacity ladder for ``op`` up to ``cap``.
+
+    Primitives ``lax.switch`` their per-iteration step over this ladder
+    so an iteration with a 40-vertex frontier does ~one-tile work
+    instead of worst-case ``cap``. The ladder is keyed by op because its
+    *floor* is the tuner's tile choice for that op on this platform
+    (kernels/tuner.py): a tier smaller than one kernel tile would pad
+    right back up to the tile, buying switch overhead for nothing.
+    Tier choice never affects results — every rung computes the same
+    masked expansion, larger rungs just carry more dead lanes — which is
+    the tier/untier bit-parity contract tests/test_tiered.py pins.
+    """
+    from repro.core.frontier import MIN_TIER, tier_caps
+    if min_tier is None:
+        try:
+            from repro.kernels import tuner
+            min_tier = tuner.tier_floor(op, MIN_TIER)
+        except ImportError:          # tuner unavailable: heuristic floor
+            min_tier = MIN_TIER
+    return tier_caps(cap, min_tier=min_tier)
+
+
+def dispatch_tiered(op: str, backend: Optional[str] = None,
+                    placement: Optional[str] = None, *, cap: int,
+                    pin: bool = False) -> tuple[Callable, tuple[int, ...]]:
+    """Resolve ``op`` plus the capacity ladder its call site may switch
+    over: ``(impl, caps)``.
+
+    ``pin=True`` and the sharded placement both pin to the top tier
+    (single-rung ladder): a dense sweep touches every row regardless of
+    the frontier, and sharded providers run collectives whose shapes
+    must agree across devices no matter what any one device's frontier
+    holds — per-device tier choices would deadlock the exchange.
+    """
+    bk = resolve(backend)
+    pl = resolve_placement(placement)
+    impl = dispatch(op, bk, pl)
+    if pin or pl == SHARDED:
+        return impl, (max(int(cap), 1),)
+    return impl, tier_plan(op, cap)

@@ -145,7 +145,8 @@ def _advance_bitmask_exchange(local_ro, local_ci, frontier, base, vpp: int,
 
 
 @B.register("spmm", B.XLA, B.SHARDED)
-def _spmm_sharded(offsets, indices, values, x, sr, ell_width, mask):
+def _spmm_sharded(offsets, indices, values, x, sr, ell_width, mask,
+                  row_seg=None):
     """1-D row-partitioned semiring SpMM: Y⟨mask⟩ = A ⊗ X.
 
     ``offsets``/``indices``/``values`` are (p, …) stacked per-device row
@@ -156,6 +157,7 @@ def _spmm_sharded(offsets, indices, values, x, sr, ell_width, mask):
     x.shape[0] == the global row count.
     """
     del ell_width                      # single-pallas-only metadata
+    del row_seg     # per-shard edge->row maps are derived locally below
     mesh, axis = _require_placement_mesh()
     vpp = int(offsets.shape[1]) - 1
     n = int(x.shape[0])
@@ -190,10 +192,54 @@ def _spmm_sharded(offsets, indices, values, x, sr, ell_width, mask):
 
 
 @B.register("spmv", B.XLA, B.SHARDED)
-def _spmv_sharded(offsets, indices, values, x, sr, ell_width, mask):
-    """1-D row-partitioned semiring SpMV — the k=1 column of the SpMM."""
-    return _spmm_sharded(offsets, indices, values, x[:, None], sr,
-                         ell_width, mask)[:, 0]
+def _spmv_sharded(offsets, indices, values, x, sr, ell_width, mask,
+                  row_seg=None, over_pos=None, over_row=None):
+    """1-D row-partitioned semiring SpMV.
+
+    With ``ell_width`` metadata (a ShardedGraph built from a
+    ``Graph.from_csr`` source) each device runs the SAME hybrid
+    ELL-tree + overflow-fold as the single-device sweep on its local row
+    slice — identical per-row fold dataflow, so bits match across
+    placements (the PR-4 parity discipline). The compacted overflow
+    lists have no stacked counterpart, so shards take the masked
+    drop-scatter flavour (same per-row edge sequence, same bits; the
+    sharded path is a parity/serving path, not the single-device hot
+    loop). Without metadata, falls back to the k=1 SpMM column.
+    """
+    del row_seg, over_pos, over_row        # derived/absent per shard
+    if ell_width is None:
+        return _spmm_sharded(offsets, indices, values, x[:, None], sr,
+                             None, mask)[:, 0]
+    from repro.linalg.ops import hybrid_ell_reduce
+    mesh, axis = _require_placement_mesh()
+    vpp = int(offsets.shape[1]) - 1
+    n = int(x.shape[0])
+    part, rep = P(axis), P()
+
+    def local_rows(ro_s, ci_s, ev_s, xg):
+        ro, ci = ro_s[0], ci_s[0]
+        ev = None if ev_s is None else ev_s[0]
+        me = ci.shape[0]
+        edge_valid = jnp.arange(me, dtype=jnp.int32) < ro[-1]
+        y = hybrid_ell_reduce(ro, ci, ev, xg, sr, int(ell_width),
+                              edge_valid=edge_valid)
+        deg = ro[1:] - ro[:-1]
+        return jnp.where(deg > 0, y, sr.zero)
+
+    if values is None:
+        run = shard_map(lambda ro, ci, xg: local_rows(ro, ci, None, xg),
+                        mesh=mesh, in_specs=(part, part, rep),
+                        out_specs=part, check_rep=False)
+        y = run(offsets, indices, x)
+    else:
+        run = shard_map(local_rows, mesh=mesh,
+                        in_specs=(part, part, part, rep),
+                        out_specs=part, check_rep=False)
+        y = run(offsets, indices, values, x)
+    y = y[:n]
+    if mask is not None:
+        y = jnp.where(mask, y, sr.zero)
+    return y.astype(jnp.float32)
 
 
 @B.register("mxm", B.XLA, B.SHARDED)

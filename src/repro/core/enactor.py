@@ -17,10 +17,17 @@ still computes them (BSP lockstep — static shapes rule out early exit) but
 the driver discards their updates, so stragglers finish while finished
 lanes are bit-stable no-ops. Per-lane iteration counts come back alongside
 the wall-clock iteration count.
+
+`tiered_step` is the frontier-proportional escape hatch from worst-case
+static shapes: one BSP step dispatched over a static capacity ladder
+(`lax.switch`), so the edge-shaped intermediates inside the step are
+sized to the live workload's tier instead of the graph. Only state —
+frontier/vertex-shaped, tier-independent — crosses the switch boundary,
+which is what makes every rung bit-identical given enough capacity.
 """
 from __future__ import annotations
 
-from typing import Callable, TypeVar
+from typing import Callable, Sequence, TypeVar
 
 import jax
 import jax.numpy as jnp
@@ -96,3 +103,25 @@ def run_until_any(cond: Callable[[S], jax.Array],
     final, lane_iters, iters, _ = jax.lax.while_loop(
         _cond, _body, (state, lanes0, jnp.int32(0), active0))
     return final, lane_iters, iters
+
+
+def tiered_step(need, caps: Sequence[int],
+                step_of: Callable[[int], Callable[[S], S]],
+                state: S) -> S:
+    """Run one BSP step at the smallest capacity tier holding ``need``.
+
+    ``caps`` is the static power-of-two ladder (``backend.tier_plan``),
+    ``need`` the traced workload upper bound (e.g. the frontier's degree
+    sum), ``step_of(cap)`` builds the step function for one static tier
+    capacity. Every branch must return state of identical structure —
+    which holds by construction when only frontier/vertex-shaped state
+    crosses the boundary and the tier sizes just the edge-shaped
+    intermediates. A single-rung ladder skips the switch entirely (the
+    untiered / pinned case — also the sharded contract, where per-device
+    tier choices would desynchronize collective shapes).
+    """
+    if len(caps) == 1:
+        return step_of(caps[0])(state)
+    from .frontier import tier_index
+    return jax.lax.switch(tier_index(need, tuple(caps)),
+                          [step_of(c) for c in caps], state)

@@ -24,6 +24,18 @@ multi-source BFS):
 They obey the same conversion/compaction contract as the single-lane
 classes; compaction vmaps the registered "compact" backend implementation
 (xla scatter or the Pallas filter_compact kernel) over the batch axis.
+
+Capacity tiers: Gunrock's core performance property is work proportional
+to the *frontier*, not the graph. Static shapes would seem to forbid
+that — every buffer is worst-case sized — but a ``lax.switch`` over a
+power-of-two capacity ladder restores it: each BSP step runs in the
+smallest tier that holds the live workload, and only state (which is
+frontier- or vertex-shaped, never edge-shaped) crosses the switch
+boundary. ``tier_caps`` builds the static ladder, ``tier_index`` picks
+the rung from a traced workload bound. Compaction is already
+tier-aware: ``compact_values(_batch)`` accepts an output capacity larger
+than its input length and pads, so a tier-sized expansion compacts
+straight into the full-capacity frontier buffer the loop carries.
 """
 from __future__ import annotations
 
@@ -36,6 +48,37 @@ import jax.numpy as jnp
 from . import backend as B
 
 INVALID = jnp.int32(-1)
+
+# The smallest capacity tier. Below this, switch overhead beats the work
+# saved; it also matches the kernels' default tile floor so a tier is
+# never smaller than one kernel tile (kernels/tuner.py).
+MIN_TIER = 512
+
+
+def tier_caps(cap: int, min_tier: int = MIN_TIER) -> tuple[int, ...]:
+    """Static power-of-two capacity ladder ending exactly at ``cap``:
+    (min_tier, 2·min_tier, …, cap). A cap at or below the floor is a
+    single-rung ladder (untiered)."""
+    cap = max(int(cap), 1)
+    if cap <= min_tier:
+        return (cap,)
+    caps, t = [], min_tier
+    while t < cap:
+        caps.append(t)
+        t *= 2
+    caps.append(cap)
+    return tuple(caps)
+
+
+def tier_index(need, caps: tuple[int, ...]) -> jax.Array:
+    """Index of the smallest tier with cap ≥ ``need`` (traced). A need
+    beyond every rung selects the top tier — the untiered worst case,
+    which is exactly what an unbounded workload must get."""
+    need = jnp.asarray(need, jnp.int32)
+    idx = jnp.int32(0)
+    for c in caps[:-1]:
+        idx = idx + (need > c).astype(jnp.int32)
+    return idx
 
 
 @jax.tree_util.register_pytree_node_class

@@ -39,6 +39,22 @@ class Graph:
     csc_edge_values: Optional[jax.Array] = None
     # mapping from CSC slot -> original edge id (for edge-centric pulls)
     csc_edge_ids: Optional[jax.Array] = None
+    # edge→row maps (slot e ⇒ owning row): loop-invariant structure that
+    # the edge-sweep hot paths (SpMV segment reduce, pull advance, THREAD
+    # expansion) would otherwise re-derive by binary search EVERY
+    # iteration inside their jitted while loops — XLA does not reliably
+    # hoist it. Built once with the CSR.
+    row_seg: Optional[jax.Array] = None       # (m,) int32
+    csc_row_seg: Optional[jax.Array] = None   # (m,) int32
+    # compacted ELL-overflow edge lists (positions + owning rows of edges
+    # whose within-row rank ≥ ell width): the hybrid XLA SpMV reduces
+    # the first `ell_width` edges of every row with a dense rank-aligned
+    # tree and lets ONLY these edges take the serial-scatter path.
+    # Ascending edge order (the fold-continuation contract).
+    over_pos: Optional[jax.Array] = None       # (K,) int32
+    over_row: Optional[jax.Array] = None       # (K,) int32
+    csc_over_pos: Optional[jax.Array] = None   # (Kc,) int32
+    csc_over_row: Optional[jax.Array] = None   # (Kc,) int32
     # Host-side (static) kernel metadata, computed at build time so jitted
     # code never synchronizes to pick kernel shapes: ELL pack width for the
     # hybrid SpMV kernel, out-degree (CSR) and in-degree (CSC) flavours.
@@ -49,7 +65,9 @@ class Graph:
     def tree_flatten(self):
         children = (self.row_offsets, self.col_indices, self.edge_values,
                     self.csc_offsets, self.csc_indices, self.csc_edge_values,
-                    self.csc_edge_ids)
+                    self.csc_edge_ids, self.row_seg, self.csc_row_seg,
+                    self.over_pos, self.over_row,
+                    self.csc_over_pos, self.csc_over_row)
         return children, (self.ell_width, self.csc_ell_width)
 
     @classmethod
@@ -120,10 +138,17 @@ class Graph:
                 vals = vals[order]
         csc = (None, None, None, None)
         csc_ell = None
+        csc_seg = None
+        csc_over = (None, None)
+        src = np.repeat(np.arange(n, dtype=np.int32), counts)
+        ell_w = ell_width_for(counts)
+        over = _overflow_edges(ro, src, ell_w)
         if build_csc:
-            src = np.repeat(np.arange(n, dtype=np.int32), counts)
             csc = _build_csc(n, src, ci.astype(np.int64), vals)
             csc_ell = ell_width_for(np.diff(csc[0]))
+            csc_seg = np.repeat(np.arange(n, dtype=np.int32),
+                                np.diff(csc[0]))
+            csc_over = _overflow_edges(csc[0], csc_seg, csc_ell)
         return cls(
             row_offsets=jnp.asarray(ro),
             col_indices=jnp.asarray(ci),
@@ -133,9 +158,39 @@ class Graph:
             csc_edge_values=(jnp.asarray(csc[2])
                              if csc[2] is not None else None),
             csc_edge_ids=jnp.asarray(csc[3]) if csc[3] is not None else None,
-            ell_width=ell_width_for(counts),
+            row_seg=jnp.asarray(src),
+            csc_row_seg=(jnp.asarray(csc_seg)
+                         if csc_seg is not None else None),
+            over_pos=jnp.asarray(over[0]),
+            over_row=jnp.asarray(over[1]),
+            csc_over_pos=(jnp.asarray(csc_over[0])
+                          if csc_over[0] is not None else None),
+            csc_over_row=(jnp.asarray(csc_over[1])
+                          if csc_over[1] is not None else None),
+            ell_width=ell_w,
             csc_ell_width=csc_ell,
         )
+
+
+def _overflow_edges(offsets: np.ndarray, seg: np.ndarray,
+                    width: int) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side (build-time): positions + owning rows of the edges whose
+    within-row rank ≥ ``width`` — the serial-scatter remainder of the
+    hybrid ELL SpMV. Ascending edge order by construction."""
+    m = len(seg)
+    rank = np.arange(m, dtype=np.int64) - offsets[:-1][seg]
+    pos = np.nonzero(rank >= width)[0].astype(np.int32)
+    return pos, seg[pos].astype(np.int32)
+
+
+def row_segments_of(offsets: jax.Array, m: int) -> jax.Array:
+    """Edge→row map derived from CSR offsets under jit, O(m): cumsum of
+    row-start marks. Bit-identical to the searchsorted formulation
+    (``searchsorted(offsets, e, 'right') - 1``) at ~3× less cost — the
+    fallback for hand-built Graphs whose ``row_seg`` metadata is None."""
+    marks = jnp.zeros((m,), jnp.int32).at[offsets[1:-1]].add(
+        1, mode="drop")
+    return jnp.cumsum(marks)
 
 
 def ell_width_for(degrees: np.ndarray) -> int:

@@ -68,7 +68,7 @@ from . import backend as B
 from .frontier import (INVALID, BatchedDenseFrontier, BatchedSparseFrontier,
                        DenseFrontier, SparseFrontier, compact_values,
                        compact_values_batch)
-from .graph import Graph
+from .graph import Graph, row_segments_of
 
 # ---------------------------------------------------------------------------
 # Expansion geometry: given per-input segment sizes, map output slots back to
@@ -185,8 +185,8 @@ def advance(graph: Graph, frontier: SparseFrontier, cap_out: int,
         n, m = graph.num_vertices, graph.num_edges
         flags = frontier.to_dense(n).flags
         slot = jnp.arange(m, dtype=jnp.int32)
-        src_of = jnp.searchsorted(graph.row_offsets, slot,
-                                  side="right").astype(jnp.int32) - 1
+        src_of = (graph.row_seg if graph.row_seg is not None
+                  else row_segments_of(graph.row_offsets, m))
         valid = flags[src_of]
         res = AdvanceResult(
             src=jnp.where(valid, src_of, INVALID)[:cap_out],
@@ -270,8 +270,8 @@ def advance_batch(graph: Graph, frontier: BatchedSparseFrontier,
         n, m = graph.num_vertices, graph.num_edges
         flags = frontier.to_dense(n).flags               # (B, n)
         slot = jnp.arange(m, dtype=jnp.int32)
-        src_of = jnp.searchsorted(graph.row_offsets, slot,
-                                  side="right").astype(jnp.int32) - 1
+        src_of = (graph.row_seg if graph.row_seg is not None
+                  else row_segments_of(graph.row_offsets, m))
         valid = flags[:, src_of] if m else jnp.zeros((frontier.batch, 0),
                                                      bool)
         res = AdvanceResult(
@@ -319,6 +319,111 @@ def advance_batch(graph: Graph, frontier: BatchedSparseFrontier,
                          total=res.total), data
 
 
+def frontier_workload(graph: Graph, frontier) -> jax.Array:
+    """Upper bound on the advance output size of ``frontier``: the sum of
+    out-degrees of its live vertices. (B,) for a batched frontier, ()
+    for a single one. This is the traced quantity the tiered dispatch
+    switches on (backend.tier_plan / enactor.tiered_step): computing it
+    costs one degree gather — frontier-shaped, never edge-shaped."""
+    ids = jnp.where(frontier.valid_mask, frontier.ids, 0)
+    deg = graph.row_offsets[ids + 1] - graph.row_offsets[ids]
+    deg = jnp.where(frontier.valid_mask, deg, 0)
+    return jnp.sum(deg, axis=-1).astype(jnp.int32)
+
+
+@B.register("advance_filter", B.XLA)
+def _advance_filter_xla(row_offsets: jax.Array, col_indices: jax.Array,
+                        base: jax.Array, sizes: jax.Array,
+                        visited: jax.Array, cap_out: int, cap_front: int):
+    """XLA advance_filter: the unfused composition the fused Pallas
+    megakernel must match bit for bit — LB expansion, visited-bitmap
+    predicate, exact FIRST-occurrence culling (min-lane winner, so the
+    surviving order is ascending slot order — exactly the order the
+    sequential kernel emits), compaction of (dst, src) into cap_front
+    slots. Returns (ids, srcs, length, total)."""
+    src, dst, _, _, _, valid, _ = _advance_xla(row_offsets, col_indices,
+                                               base, sizes, cap_out)
+    n = visited.shape[0]
+    safe = jnp.where(valid, dst, 0)
+    keep = valid & (visited.astype(jnp.int32)[safe] == 0)
+    lane = jnp.arange(cap_out, dtype=jnp.int32)
+    first = jnp.full((n,), cap_out, jnp.int32)
+    first = first.at[safe].min(jnp.where(keep, lane, cap_out), mode="drop")
+    keep = keep & (first[safe] == lane)
+    ids, length = compact_values(dst, keep, cap_front, backend=B.XLA)
+    srcs, _ = compact_values(src, keep, cap_front, backend=B.XLA)
+    return ids, srcs, length, jnp.sum(keep.astype(jnp.int32))
+
+
+@B.register("advance_filter_batch", B.XLA)
+def _advance_filter_batch_xla(row_offsets: jax.Array,
+                              col_indices: jax.Array, base: jax.Array,
+                              sizes: jax.Array, visited: jax.Array,
+                              cap_out: int, cap_front: int):
+    """Batched XLA advance_filter: vmap the single-lane composition
+    (base/sizes/visited carry a leading batch axis, CSR shared)."""
+    return jax.vmap(
+        lambda b, s, v: _advance_filter_xla(row_offsets, col_indices,
+                                            b, s, v, cap_out, cap_front)
+    )(base, sizes, visited)
+
+
+def advance_filter(graph: Graph, frontier: SparseFrontier,
+                   visited: jax.Array, cap_out: int,
+                   cap_front: Optional[int] = None, *,
+                   backend: Optional[str] = None
+                   ) -> tuple[SparseFrontier, jax.Array, jax.Array]:
+    """Fused advance→filter (paper §5.3 taken whole): expand the
+    frontier, keep destinations whose ``visited`` bit is clear, cull
+    duplicates exactly (first discovering slot wins), and compact the
+    survivors — without materializing the intermediate edge tuple.
+
+    Returns ``(new_frontier, srcs, total)``: the compacted discovered
+    frontier (capacity ``cap_front``, default the input's capacity), the
+    discovering source of each surviving slot (aligned with
+    ``new_frontier.ids``; the predecessor scatter BFS needs), and the
+    true pre-clamp survivor count. Dispatches "advance_filter": the XLA
+    composition above, or one fused Pallas megakernel
+    (kernels/advance_filter_fused.py).
+    """
+    bk = B.resolve(backend)
+    if graph.num_edges == 0:
+        bk = B.XLA
+    cap_front = frontier.capacity if cap_front is None else cap_front
+    base, valid_in = _frontier_base_vertices(graph, frontier, "vertex")
+    deg = graph.row_offsets[base + 1] - graph.row_offsets[base]
+    sizes = jnp.where(valid_in, deg, 0).astype(jnp.int32)
+    impl = B.dispatch("advance_filter", bk, B.SINGLE)
+    ids, srcs, length, total = impl(graph.row_offsets, graph.col_indices,
+                                    base, sizes,
+                                    visited.astype(jnp.int32),
+                                    cap_out, cap_front)
+    return SparseFrontier(ids=ids, length=length), srcs, total
+
+
+def advance_filter_batch(graph: Graph, frontier: BatchedSparseFrontier,
+                         visited: jax.Array, cap_out: int,
+                         cap_front: Optional[int] = None, *,
+                         backend: Optional[str] = None
+                         ) -> tuple[BatchedSparseFrontier, jax.Array,
+                                    jax.Array]:
+    """Multi-source fused advance→filter; per-lane semantics identical
+    to ``advance_filter`` (``visited`` is (B, n), outputs batched)."""
+    bk = B.resolve(backend)
+    if graph.num_edges == 0:
+        bk = B.XLA
+    cap_front = frontier.capacity if cap_front is None else cap_front
+    base, valid_in = _frontier_base_vertices(graph, frontier, "vertex")
+    deg = graph.row_offsets[base + 1] - graph.row_offsets[base]
+    sizes = jnp.where(valid_in, deg, 0).astype(jnp.int32)
+    impl = B.dispatch("advance_filter_batch", bk, B.SINGLE)
+    ids, srcs, lengths, totals = impl(graph.row_offsets,
+                                      graph.col_indices, base, sizes,
+                                      visited.astype(jnp.int32),
+                                      cap_out, cap_front)
+    return BatchedSparseFrontier(ids=ids, lengths=lengths), srcs, totals
+
+
 def advance_to_vertex_frontier(res: AdvanceResult,
                                cap: Optional[int] = None,
                                backend: Optional[str] = None
@@ -363,17 +468,21 @@ def advance_pull(graph: Graph, unvisited: DenseFrontier,
     n = graph.num_vertices
     m = graph.num_edges
     # For each CSC slot e: dst vertex = segment owner, src = csc_indices[e].
-    seg = jnp.searchsorted(graph.csc_offsets,
-                           jnp.arange(m, dtype=jnp.int32), side="right") - 1
+    # The edge→row map is loop-invariant graph structure: build-time
+    # metadata when available (Graph.from_csr), else derived here.
+    seg = graph.csc_row_seg
+    if seg is None:
+        seg = row_segments_of(graph.csc_offsets, m)
     pred_active = current.flags[graph.csc_indices]
-    hit = jax.ops.segment_max(pred_active.astype(jnp.int32), seg,
-                              num_segments=n, indices_are_sorted=True)
-    new_flags = (hit > 0) & unvisited.flags
-    if not return_preds:
-        return DenseFrontier(new_flags)
+    # ONE segment-max serves both outputs: the max surviving in-neighbor
+    # id is ≥ 0 exactly where any in-neighbor is active (ids are
+    # non-negative), so the hit test rides the predecessor sweep free.
     pred_id = jnp.where(pred_active, graph.csc_indices, -1)
     preds = jax.ops.segment_max(pred_id, seg, num_segments=n,
                                 indices_are_sorted=True)
+    new_flags = (preds >= 0) & unvisited.flags
+    if not return_preds:
+        return DenseFrontier(new_flags)
     return DenseFrontier(new_flags), preds
 
 

@@ -155,7 +155,11 @@ class PartitionedGraph:
                              if self.csc_edge_values is not None else None),
             vertex_base=jnp.asarray(self.vertex_base),
             n=self.n, m=self.m, verts_per_part=self.verts_per_part,
-            mesh=mesh, axis=axis)
+            mesh=mesh, axis=axis,
+            ell_width=(self.source.ell_width
+                       if self.source is not None else None),
+            csc_ell_width=(self.source.csc_ell_width
+                           if self.source is not None else None))
         return cache[key]
 
 
@@ -170,9 +174,11 @@ class ShardedGraph:
     the stacked (p, …) array layout. ``mesh``/``axis`` are static aux
     data: they ride the pytree treedef, so every jit cache key that
     closes over a ShardedGraph includes the mesh identity and a cached
-    trace can never run against the wrong mesh. ELL metadata is absent by
-    design (``ell_width is None``): the sharded providers are xla-backed;
-    a pallas-under-shard_map provider would re-pack per device.
+    trace can never run against the wrong mesh. ELL *widths* are carried
+    as aux from the source graph — the sharded hybrid SpMV needs the
+    same fold shape as the single-device sweep — but the providers stay
+    xla-backed (a pallas-under-shard_map provider would re-pack per
+    device).
     """
 
     row_offsets: jax.Array            # (p, vpp+1)
@@ -187,15 +193,29 @@ class ShardedGraph:
     verts_per_part: int
     mesh: object
     axis: str
+    # ELL pack widths copied from the SOURCE graph: the sharded hybrid
+    # SpMV must fold each row with exactly the same tree shape as the
+    # single-device sweep (placement bit-parity), so the width is shared
+    # static metadata, not a per-shard choice.
+    ell_width: Optional[int] = None
+    csc_ell_width: Optional[int] = None
 
-    ell_width = None          # class attrs: Graph-interface compatibility
-    csc_ell_width = None
+    # per-shard edge→row maps and overflow lists are derived locally by
+    # the sharded providers (local offsets differ per device); the
+    # Graph-level metadata has no stacked counterpart by design
+    row_seg = None
+    csc_row_seg = None
+    over_pos = None
+    over_row = None
+    csc_over_pos = None
+    csc_over_row = None
 
     def tree_flatten(self):
         children = (self.row_offsets, self.col_indices, self.edge_values,
                     self.csc_offsets, self.csc_indices,
                     self.csc_edge_values, self.vertex_base)
-        aux = (self.n, self.m, self.verts_per_part, self.mesh, self.axis)
+        aux = (self.n, self.m, self.verts_per_part, self.mesh, self.axis,
+               self.ell_width, self.csc_ell_width)
         return children, aux
 
     @classmethod

@@ -6,6 +6,16 @@
     hash/bitmask culling filter (Fig. 19 ablation)
   * predecessor recording
 
+The LB push is the fused tiered path: one "advance_filter" dispatch per
+iteration (expansion + visited test + exact first-occurrence culling +
+compaction in a single op — paper §5.3's fusion applied to the whole
+step), run at the smallest power-of-two capacity tier that holds the
+frontier's degree sum (``enactor.tiered_step``), so an iteration's cost
+tracks the live frontier instead of worst-case m. In-op culling is
+exact for free (the bitmap is already in hand), which makes
+``idempotence`` moot there; the flag keeps selecting hash-vs-exact
+uniquify on the unfused TWC/THREAD ablation path.
+
 The engine is *multi-source*: ``bfs_batch`` runs B traversals over one
 shared topology as a single jitted batched BSP loop (the frontier-matrix
 view — GraphBLAST's multi-source BFS), with per-lane convergence masking
@@ -30,7 +40,7 @@ import jax.numpy as jnp
 from .. import backend as B
 from .. import operators as ops
 from ..direction import PULL, PUSH, DirectionParams, decide_direction
-from ..enactor import run_until_any, select_lanes
+from ..enactor import run_until_any, select_lanes, tiered_step
 from ..frontier import (BatchedDenseFrontier, BatchedSparseFrontier,
                         from_ids_batch)
 from ..graph import Graph
@@ -60,10 +70,12 @@ class BFSResult(NamedTuple):
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "direction", "idempotence", "strategy", "record_preds", "backend"))
+    "direction", "idempotence", "strategy", "record_preds", "backend",
+    "tiered"))
 def _bfs_impl(graph: Graph, srcs: jax.Array, do_a: float, do_b: float,
               direction: bool, idempotence: bool, strategy: str,
-              record_preds: bool, backend: str) -> BFSResult:
+              record_preds: bool, backend: str,
+              tiered: bool = True) -> BFSResult:
     n, m = graph.num_vertices, graph.num_edges
     b = srcs.shape[0]
     # edge frontiers are worst-case expansion (m); vertex frontiers are
@@ -71,6 +83,15 @@ def _bfs_impl(graph: Graph, srcs: jax.Array, do_a: float, do_b: float,
     # counted per lane instead of silently sized away
     cap_v = min(n, m)
     cap_e = m
+    # LB push runs the fused advance_filter over a capacity-tier ladder:
+    # each iteration expands in the smallest tier holding its live
+    # workload (the frontier's degree sum) instead of worst-case cap_e.
+    # Tier choice never changes results — tested bit-exact against the
+    # pinned top tier (tiered=False). TWC/THREAD keep the unfused
+    # ablation path at full capacity.
+    caps_e = (B.tier_plan("advance_filter", cap_e)
+              if (tiered and strategy == "LB" and cap_e > 0) else
+              (max(cap_e, 1),))
     params = DirectionParams(do_a=do_a, do_b=do_b, enabled=direction)
 
     lane = jnp.arange(b)
@@ -87,7 +108,49 @@ def _bfs_impl(graph: Graph, srcs: jax.Array, do_a: float, do_b: float,
                      pull_iters=jnp.zeros((b,), jnp.int32),
                      overflow=jnp.zeros((b,), jnp.int32))
 
-    def push_step(st: BFSState):
+    def fused_push_at(cap_t: int):
+        """LB push at one capacity tier: the fused advance_filter does
+        expansion, visited test, exact first-occurrence culling and
+        compaction in one dispatch — the (cap_t,) edge tuple never
+        escapes the op, and every scatter below is frontier-shaped
+        (cap_v), not edge-shaped (cap_e)."""
+
+        def push_step(st: BFSState):
+            depth1 = st.depth + 1
+            new_frontier, srcs, totals = ops.advance_filter_batch(
+                graph, st.frontier, st.visited, cap_t, cap_front=cap_v,
+                backend=backend)
+            ids = new_frontier.ids
+            tgt = jnp.where(ids >= 0, ids, n)    # n = out of bounds → drop
+            # apply: set depth (one surviving slot per discovery, so the
+            # scatters are conflict-free; paper §5.2.1)
+            labels = jax.vmap(
+                lambda l, t, d1: l.at[t].set(d1, mode="drop"))(
+                    st.labels, tgt, depth1)
+            if record_preds:
+                preds = jax.vmap(
+                    lambda p, t, s: p.at[t].set(s, mode="drop"))(
+                        st.preds, tgt, srcs)
+            else:
+                preds = st.preds
+            visited = jax.vmap(
+                lambda v, t: v.at[t].set(True, mode="drop"))(
+                    st.visited, tgt)
+            # exact culling can never exceed the min(n, m) vertex
+            # frontier; the counter stays for the state contract
+            ovf = jnp.maximum(totals - new_frontier.lengths, 0)
+            return st._replace(labels=labels, preds=preds,
+                               frontier=new_frontier, dense=visited,
+                               visited=visited,
+                               n_f=new_frontier.lengths,
+                               n_u=st.n_u - new_frontier.lengths,
+                               depth=depth1, overflow=st.overflow + ovf)
+
+        return push_step
+
+    def legacy_push_step(st: BFSState):
+        # TWC/THREAD ablation path: unfused advance → filter with the
+        # idempotence-selected uniquify, at full capacity
         depth1 = st.depth + 1
 
         def functor(s, d, e, rank, valid, data):
@@ -125,6 +188,12 @@ def _bfs_impl(graph: Graph, srcs: jax.Array, do_a: float, do_b: float,
                            visited=visited, n_f=new_frontier.lengths,
                            n_u=st.n_u - new_frontier.lengths, depth=depth1,
                            overflow=st.overflow + ovf)
+
+    def push_step(st: BFSState):
+        if strategy != "LB":
+            return legacy_push_step(st)
+        need = jnp.max(ops.frontier_workload(graph, st.frontier))
+        return tiered_step(need, caps_e, fused_push_at, st)
 
     def pull_step(st: BFSState):
         depth1 = st.depth + 1
@@ -190,18 +259,25 @@ def bfs_batch(graph: Graph, srcs, *, direction: bool = True,
               do_a: float = 0.001, do_b: float = 0.2,
               idempotence: bool = True, strategy: str = "LB",
               record_preds: bool = True,
-              backend: Optional[str] = None) -> BFSResult:
+              backend: Optional[str] = None,
+              tiered: bool = True) -> BFSResult:
     """Multi-source BFS: one jitted batched BSP loop over ``srcs``.
 
     Every ``BFSResult`` field carries a leading batch axis; lane i is
     bit-identical to ``bfs(graph, srcs[i])``. All lanes share one trace —
     batches of the same size never retrace, which is the contract the
-    query-serving driver (launch/graph_serve.py) relies on."""
+    query-serving driver (launch/graph_serve.py) relies on.
+
+    ``tiered=False`` pins every push to the top capacity tier (the
+    worst-case-sized program) — results are bit-identical to the tiered
+    default; the flag exists for the tier-parity tests and A/B
+    benchmarking."""
     if direction and not graph.has_csc:
         direction = False
     srcs = jnp.asarray(srcs, dtype=jnp.int32).reshape(-1)
     return _bfs_impl(graph, srcs, do_a, do_b, direction, idempotence,
-                     strategy, record_preds, B.resolve(backend))
+                     strategy, record_preds, B.resolve(backend),
+                     tiered)
 
 
 def bfs(graph: Graph, src: int, *, direction: bool = True,

@@ -58,7 +58,8 @@ def _lp_impl(graph: Graph, labels0: jax.Array, max_iter: int, backend: str,
             onehot = (labels[:, None] == cols[None, :]).astype(jnp.float32)
             # votes[v, j] = #neighbors of v carrying label cols[j]
             votes = spmm_op(graph.row_offsets, graph.col_indices, None,
-                            onehot, SR.plus_times, ell_width, None)
+                            onehot, SR.plus_times, ell_width, None,
+                            graph.row_seg)
             bs = jnp.max(votes, axis=1)
             bl = cols[jnp.argmax(votes, axis=1)]   # first max = min label
             # ⟨max,min⟩ merge: higher count wins, equal count → smaller

@@ -65,7 +65,13 @@ def _pagerank_impl(graph: Graph, inv_deg: jax.Array, damping: jax.Array,
                    ell_width: Optional[int],
                    placement: str = B.SINGLE) -> PRResult:
     n = graph.num_vertices
-    spmv_op = B.dispatch("spmv", backend, placement)
+    # PageRank's sweep is dense — every row contributes every iteration —
+    # so it is explicitly PINNED to the top capacity tier (pin=True); the
+    # frontier-proportional tier ladder applies to traversal, not to
+    # dense algebra. Sharded placements pin for a second reason:
+    # collective shapes must agree across devices.
+    spmv_op, _tiers = B.dispatch_tiered("spmv", backend, placement,
+                                        cap=n, pin=True)
 
     def body(st: PRState):
         # contribution split: rank × (host-precomputed) reciprocal
@@ -78,9 +84,13 @@ def _pagerank_impl(graph: Graph, inv_deg: jax.Array, damping: jax.Array,
         # freedom, so placement bit-parity (a tested contract) holds.
         # inv_deg is 0 on dangling vertices, folding the deg>0 guard in.
         contrib = st.rank * inv_deg
-        # acc = Aᵀ ⊗ contrib over plus-times (structural adjacency)
+        # acc = Aᵀ ⊗ contrib over plus-times (structural adjacency). The
+        # CSC edge→row map rides along as build-time metadata so the
+        # sweep never re-derives it inside the loop (it was the largest
+        # single per-iteration cost of this impl).
         acc = spmv_op(graph.csc_offsets, graph.csc_indices, None, contrib,
-                      SR.plus_times, ell_width, None)
+                      SR.plus_times, ell_width, None, graph.csc_row_seg,
+                      graph.csc_over_pos, graph.csc_over_row)
         # grouping-fixed sum — see _fixed_tree_sum for why jnp.sum would
         # break placement bit-parity here
         dangling = _fixed_tree_sum(

@@ -52,7 +52,7 @@ def _reach_impl(graph: Graph, srcs: jax.Array, k: int, backend: str,
         # change (R is monotone under ⋁), so skip their sweep entirely
         need = jnp.min(r, axis=1) < 1.0
         new = spmm_op(graph.csc_offsets, graph.csc_indices, None, r,
-                      SR.or_and, ell_width, need)
+                      SR.or_and, ell_width, need, graph.csc_row_seg)
         return jnp.maximum(r, new)
 
     r = jax.lax.fori_loop(0, k, hop, r0)

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 
 from .. import backend as B
 from .. import operators as ops
-from ..enactor import run_until_any, select_lanes
+from ..enactor import run_until_any, select_lanes, tiered_step
 from ..frontier import BatchedDenseFrontier
 from ..graph import Graph
 
@@ -52,12 +52,24 @@ class SSSPResult(NamedTuple):
 
 
 @functools.partial(jax.jit, static_argnames=("use_delta", "strategy",
-                                             "backend"))
+                                             "backend", "tiered"))
 def _sssp_impl(graph: Graph, srcs: jax.Array, delta: jax.Array,
                use_delta: bool, strategy: str,
-               backend: str) -> SSSPResult:
+               backend: str, tiered: bool = True) -> SSSPResult:
     n, m = graph.num_vertices, graph.num_edges
     b = srcs.shape[0]
+    # relax sweeps run at the smallest capacity tier holding the near
+    # pile's degree sum — delta-stepping's whole point is small near
+    # piles, so most relaxes run orders of magnitude below worst-case m.
+    # Results are bit-identical across tiers (tested vs tiered=False).
+    # THREAD pins to the top tier: its O(m) static sweep is truncated at
+    # cap_out, not workload-bounded, so a smaller tier would drop edges.
+    # ladder keyed under "advance" — the op the expansion kernels tile
+    # (advance_fused_batch_kernel's tuner key), so the floor coupling
+    # reads the entries the probes actually write
+    caps_e = (B.tier_plan("advance", m)
+              if (tiered and m > 0 and strategy != "THREAD")
+              else (max(m, 1),))
     lane = jnp.arange(b)
     dist = jnp.full((b, n), INF).at[lane, srcs].set(0.0)
     preds = jnp.full((b, n), -1, jnp.int32)
@@ -68,14 +80,25 @@ def _sssp_impl(graph: Graph, srcs: jax.Array, delta: jax.Array,
                       n_near=jnp.ones((b,), jnp.int32),
                       relaxations=jnp.zeros((b,), jnp.int32))
 
+    def relax_at(cap_t: int):
+        def relax_step(st: SSSPState):
+            return _relax_step(st, cap_t)
+        return relax_step
+
     def relax_step(st: SSSPState):
+        need = jnp.max(jnp.sum(
+            jnp.where(st.near, graph.degrees[None, :], 0), axis=1))
+        return tiered_step(need, caps_e, relax_at, st)
+
+    def _relax_step(st: SSSPState, cap_t: int):
         frontier = BatchedDenseFrontier(st.near).to_sparse(
             n, backend=backend)
 
         def functor(s, d, e, rank, valid, data):
             return valid, data
 
-        res, _ = ops.advance_batch(graph, frontier, m, functor=functor,
+        res, _ = ops.advance_batch(graph, frontier, cap_t,
+                                   functor=functor,
                                    strategy=strategy, backend=backend)
         w = graph.edge_values[jnp.where(res.valid, res.edge_id, 0)]
         safe_src = jnp.where(res.valid, res.src, 0)
@@ -156,16 +179,19 @@ def _auto_delta(graph: Graph) -> float:
 
 def sssp_batch(graph: Graph, srcs, *, delta: Optional[float] = None,
                strategy: str = "LB",
-               backend: Optional[str] = None) -> SSSPResult:
+               backend: Optional[str] = None,
+               tiered: bool = True) -> SSSPResult:
     """Multi-source delta-stepping: one jitted batched program over
-    ``srcs``; lane i is bit-identical to ``sssp(graph, srcs[i])``."""
+    ``srcs``; lane i is bit-identical to ``sssp(graph, srcs[i])``.
+    ``tiered=False`` pins relax sweeps to the worst-case capacity
+    (bit-identical results; the tier-parity test hook)."""
     assert graph.weighted, "SSSP needs edge weights"
     if delta is None:
         delta = _auto_delta(graph)
     use_delta = bool(jnp.isfinite(delta)) and delta > 0
     srcs = jnp.asarray(srcs, dtype=jnp.int32).reshape(-1)
     return _sssp_impl(graph, srcs, jnp.float32(delta), use_delta,
-                      strategy, B.resolve(backend))
+                      strategy, B.resolve(backend), tiered)
 
 
 def sssp(graph: Graph, src: int, *, delta: Optional[float] = None,

@@ -1,0 +1,226 @@
+"""Pallas megakernel: fused advance + filter (paper §5.3 taken whole).
+
+The unfused traversal step materializes the full ``(cap_out,)`` edge
+six-tuple in HBM between two registry ops: advance expands and gathers,
+then filter re-reads everything to test the visited bitmap, uniquify and
+compact. Gunrock's kernel-fusion strategy (and GraphBLAST's fused masked
+operations) put the functor, the status test and the compaction inside
+the expansion kernel; this is that kernel for the TPU engine. One
+``pallas_call`` does
+
+  LB sorted search → CSR gathers → visited-bitmap predicate →
+  exact first-occurrence culling → compacted emission,
+
+emitting only surviving destinations (+ their discovering sources) plus
+a running survivor count — the intermediate edge tuple never exists.
+
+The mechanism that makes in-kernel culling exact is the *sequential*
+Pallas grid: tiles execute in order, and the working bitmap + output
+buffers live in constant-index-map output blocks that persist across
+grid steps (the standard accumulation pattern). A destination kept by
+tile t marks the bitmap before tile t+1 tests it, so cross-tile
+duplicates die in the predicate; in-tile duplicates die by a lane
+comparison matrix (first occurrence in slot order wins, globally).
+
+The XLA provider in ``core.operators`` composes the unfused path to the
+same contract (predicate → min-lane winner scatter → compaction), so
+every parity test has an oracle: fused == composed, bit for bit,
+including the emission ORDER (first-occurrence positions are ascending
+in slot order — exactly compaction order).
+
+``advance_filter_fused_batch_kernel`` is the multi-source variant on the
+(B, tiles) grid of ``advance_fused``: per-lane prefix sums, bitmaps and
+output rows selected by the batch coordinate, CSR broadcast. Grid
+iteration is row-major, so each lane's tiles stay sequential — the
+per-lane bitmap discipline is untouched.
+
+Scatter/gather note: emissions use value-level ``.at[]`` updates on the
+VMEM-resident output block (dynamic-index stores, the accumulate
+pattern); interpret mode — the off-TPU correctness contract — executes
+them as jnp scatters.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import runtime, tuner
+from .advance_fused import _lb_body
+
+
+def _step(offsets, base, row_offsets, col_indices, vis, bm_prev, ids_prev,
+          src_prev, cnt_prev, first, slots, *, cap_in: int, num_edges: int,
+          n: int, iters: int, cap_front: int):
+    """One tile's worth of fused work on value-level state. Shared by the
+    single-lane and batched kernels (they differ only in ref slicing)."""
+    tile = slots.shape[0]
+    bm = jnp.where(first, vis, bm_prev)
+    cnt = jnp.where(first, 0, cnt_prev)
+    out_ids = jnp.where(first, jnp.full((cap_front,), -1, jnp.int32),
+                        ids_prev)
+    out_src = jnp.where(first, jnp.full((cap_front,), -1, jnp.int32),
+                        src_prev)
+
+    src, dst, _, _, _, valid = _lb_body(
+        offsets, base, row_offsets, col_indices, slots,
+        cap_in=cap_in, num_edges=num_edges, iters=iters)
+    valid = valid > 0
+    safe_dst = jnp.where(valid, dst, 0)
+
+    # functor predicate + visited test (idempotent discovery, §5.2.1)
+    keep = valid & (bm[safe_dst] == 0)
+    # in-tile first-occurrence culling: lane i dies if an earlier kept
+    # lane claims the same destination (cross-tile dups already died on
+    # the bitmap test above)
+    lane = jax.lax.iota(jnp.int32, tile)
+    earlier_same = ((safe_dst[None, :] == safe_dst[:, None])
+                    & keep[None, :] & (lane[None, :] < lane[:, None]))
+    keep = keep & ~jnp.any(earlier_same, axis=1)
+
+    bm = bm.at[safe_dst].max(keep.astype(jnp.int32))
+
+    kept = keep.astype(jnp.int32)
+    gpos = cnt + jnp.cumsum(kept) - kept
+    tgt = jnp.where(keep & (gpos < cap_front), gpos, cap_front)
+    out_ids = out_ids.at[tgt].set(dst, mode="drop")
+    out_src = out_src.at[tgt].set(src, mode="drop")
+    cnt = cnt + jnp.sum(kept)
+    return bm, out_ids, out_src, cnt
+
+
+def _kernel(offsets_ref, base_ref, ro_ref, ci_ref, vis_ref,
+            ids_ref, src_ref, cnt_ref, bm_ref, *,
+            cap_in: int, num_edges: int, n: int, iters: int, tile: int,
+            cap_front: int):
+    t = pl.program_id(0)
+    slots = t * tile + jax.lax.iota(jnp.int32, tile)
+    bm, out_ids, out_src, cnt = _step(
+        offsets_ref[...], base_ref[...], ro_ref[...], ci_ref[...],
+        vis_ref[...], bm_ref[...], ids_ref[...], src_ref[...],
+        cnt_ref[0], t == 0, slots, cap_in=cap_in, num_edges=num_edges,
+        n=n, iters=iters, cap_front=cap_front)
+    bm_ref[...] = bm
+    ids_ref[...] = out_ids
+    src_ref[...] = out_src
+    cnt_ref[...] = jnp.full((1,), cnt, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("cap_out", "cap_front",
+                                             "interpret", "tile"))
+def advance_filter_fused_kernel(offsets: jax.Array, base: jax.Array,
+                                row_offsets: jax.Array,
+                                col_indices: jax.Array, visited: jax.Array,
+                                cap_out: int, cap_front: int,
+                                interpret: bool | None = None,
+                                tile: int | None = None):
+    """One-pass advance+filter.
+
+    offsets:     (cap_in+1,) int32 exclusive prefix sum of masked degrees.
+    base:        (cap_in,)   int32 base vertices (invalid lanes 0).
+    row_offsets / col_indices: CSR (m ≥ 1).
+    visited:     (n,) int32 bitmap — destinations with a set bit are
+                 culled; survivors set their bit for later slots.
+
+    Returns (ids, srcs, length, total): ids/srcs (cap_front,) compacted
+    surviving destinations + discovering sources (-1 padded, clamped at
+    cap_front), length = min(total, cap_front), total = true survivor
+    count. Matches the XLA advance→filter composition bit for bit.
+    """
+    interpret = runtime.interpret_mode(interpret)
+    cap_in = offsets.shape[0] - 1
+    m = col_indices.shape[0]
+    n = visited.shape[0]
+    if tile is None:
+        tile = tuner.tile_for("advance_filter", cap_out)
+    padded = -(-cap_out // tile) * tile
+    iters = max(math.ceil(math.log2(max(cap_in, 2))) + 1, 1)
+    grid = (padded // tile,)
+    bcast = lambda shape: pl.BlockSpec(shape, lambda i: (0,))
+    ids, srcs, cnt, _ = pl.pallas_call(
+        functools.partial(_kernel, cap_in=cap_in, num_edges=m, n=n,
+                          iters=iters, tile=tile, cap_front=cap_front),
+        grid=grid,
+        in_specs=[bcast((cap_in + 1,)), bcast((cap_in,)),
+                  bcast(row_offsets.shape), bcast(col_indices.shape),
+                  bcast((n,))],
+        out_specs=[bcast((cap_front,)), bcast((cap_front,)),
+                   bcast((1,)), bcast((n,))],
+        out_shape=[jax.ShapeDtypeStruct((cap_front,), jnp.int32),
+                   jax.ShapeDtypeStruct((cap_front,), jnp.int32),
+                   jax.ShapeDtypeStruct((1,), jnp.int32),
+                   jax.ShapeDtypeStruct((n,), jnp.int32)],
+        interpret=interpret,
+    )(offsets, base, row_offsets, col_indices,
+      visited.astype(jnp.int32))
+    total = cnt[0]
+    return ids, srcs, jnp.minimum(total, cap_front), total
+
+
+def _batch_kernel(offsets_ref, base_ref, ro_ref, ci_ref, vis_ref,
+                  ids_ref, src_ref, cnt_ref, bm_ref, *,
+                  cap_in: int, num_edges: int, n: int, iters: int,
+                  tile: int, cap_front: int):
+    t = pl.program_id(1)
+    slots = t * tile + jax.lax.iota(jnp.int32, tile)
+    bm, out_ids, out_src, cnt = _step(
+        offsets_ref[0, :], base_ref[0, :], ro_ref[0, :], ci_ref[0, :],
+        vis_ref[0, :], bm_ref[0, :], ids_ref[0, :], src_ref[0, :],
+        cnt_ref[0, 0], t == 0, slots, cap_in=cap_in, num_edges=num_edges,
+        n=n, iters=iters, cap_front=cap_front)
+    bm_ref[0, :] = bm
+    ids_ref[0, :] = out_ids
+    src_ref[0, :] = out_src
+    cnt_ref[0, :] = jnp.full((1,), cnt, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("cap_out", "cap_front",
+                                             "interpret", "tile"))
+def advance_filter_fused_batch_kernel(offsets: jax.Array, base: jax.Array,
+                                      row_offsets: jax.Array,
+                                      col_indices: jax.Array,
+                                      visited: jax.Array,
+                                      cap_out: int, cap_front: int,
+                                      interpret: bool | None = None,
+                                      tile: int | None = None):
+    """Multi-source fused advance+filter over a (B, tiles) grid.
+
+    offsets (B, cap_in+1), base (B, cap_in), visited (B, n); CSR shared.
+    Returns (ids, srcs, lengths, totals) with ids/srcs (B, cap_front)
+    and lengths/totals (B,) — per-lane semantics identical to the
+    single-lane kernel (grid iteration is row-major, so each lane's
+    tiles run sequentially against its own bitmap row).
+    """
+    interpret = runtime.interpret_mode(interpret)
+    b, cap_in1 = offsets.shape
+    cap_in = cap_in1 - 1
+    m = col_indices.shape[0]
+    n = visited.shape[1]
+    if tile is None:
+        tile = tuner.tile_for("advance_filter", cap_out, lanes=b)
+    padded = -(-cap_out // tile) * tile
+    iters = max(math.ceil(math.log2(max(cap_in, 2))) + 1, 1)
+    grid = (b, padded // tile)
+    row = lambda shape: pl.BlockSpec((1,) + shape, lambda bi, ti: (bi, 0))
+    bcast = lambda shape: pl.BlockSpec((1,) + shape, lambda bi, ti: (0, 0))
+    ids, srcs, cnt, _ = pl.pallas_call(
+        functools.partial(_batch_kernel, cap_in=cap_in, num_edges=m, n=n,
+                          iters=iters, tile=tile, cap_front=cap_front),
+        grid=grid,
+        in_specs=[row((cap_in + 1,)), row((cap_in,)),
+                  bcast(row_offsets.shape), bcast(col_indices.shape),
+                  row((n,))],
+        out_specs=[row((cap_front,)), row((cap_front,)),
+                   row((1,)), row((n,))],
+        out_shape=[jax.ShapeDtypeStruct((b, cap_front), jnp.int32),
+                   jax.ShapeDtypeStruct((b, cap_front), jnp.int32),
+                   jax.ShapeDtypeStruct((b, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((b, n), jnp.int32)],
+        interpret=interpret,
+    )(offsets, base, row_offsets[None, :], col_indices[None, :],
+      visited.astype(jnp.int32))
+    totals = cnt[:, 0]
+    return ids, srcs, jnp.minimum(totals, cap_front), totals

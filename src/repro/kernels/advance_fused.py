@@ -14,15 +14,17 @@ Memory layout (one program per output tile):
   base        (cap_in,)   VMEM-resident broadcast — frontier base vertices.
   row_offsets (n+1,)      VMEM-resident broadcast — CSR row starts.
   col_indices (m,)        VMEM-resident broadcast — CSR neighbor IDs.
-  outputs     5 × (TILE,) streamed, one tile per program.
+  outputs     6 × (tile,) streamed, one tile per program.
 
 Same shape discipline as ``lb_expand_kernel``: 1-D tiles, int32 lanes,
 every lane runs the identical ceil(log2(cap_in)) compare steps (fully
 regular VPU work — the merge-path partitioning of Davidson et al. with
 the divergence removed).
 
-The tile size adapts to cap_out so the grid stays small enough for
-interpret mode (each grid step costs a host round trip off-TPU).
+Tile sizes come from the autotuner (``kernels.tuner``): a measured
+(op, tier, platform) cache entry when one exists, else the clamped
+default heuristic — a tile never exceeds the padded output size, so a
+small capacity tier cannot inflate VMEM block sizes past what it uses.
 
 ``advance_fused_batch_kernel`` is the multi-source variant: the grid gains
 an explicit leading batch-row dimension (B, tiles). Each program serves
@@ -40,16 +42,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-MIN_TILE = 512
-MAX_GRID = 128
-
-
-def _tile_for(cap_out: int) -> int:
-    """Smallest power-of-two tile ≥ MIN_TILE keeping the grid ≤ MAX_GRID."""
-    tile = MIN_TILE
-    while -(-cap_out // tile) > MAX_GRID:
-        tile *= 2
-    return tile
+from . import runtime, tuner
 
 
 def _lb_body(offsets, base, row_offsets, col_indices, slots,
@@ -105,10 +98,12 @@ def _kernel(offsets_ref, base_ref, ro_ref, ci_ref,
     valid_ref[...] = valid
 
 
-@functools.partial(jax.jit, static_argnames=("cap_out", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("cap_out", "interpret", "tile"))
 def advance_fused_kernel(offsets: jax.Array, base: jax.Array,
                          row_offsets: jax.Array, col_indices: jax.Array,
-                         cap_out: int, interpret: bool = True):
+                         cap_out: int, interpret: bool | None = None,
+                         tile: int | None = None):
     """One-pass LB advance.
 
     offsets:     (cap_in+1,) int32 exclusive prefix sum of masked degrees
@@ -127,9 +122,10 @@ def advance_fused_kernel(offsets: jax.Array, base: jax.Array,
     CPU-scaled dataset zoo is far below that; graphs beyond it need a
     future HBM-resident variant with manual DMA over edge windows.
     """
+    interpret = runtime.interpret_mode(interpret)
     cap_in = offsets.shape[0] - 1
     m = col_indices.shape[0]
-    tile = _tile_for(cap_out)
+    tile = tuner.tile_for("advance", cap_out) if tile is None else tile
     padded = -(-cap_out // tile) * tile
     iters = max(math.ceil(math.log2(max(cap_in, 2))) + 1, 1)
     grid = (padded // tile,)
@@ -167,11 +163,13 @@ def _batch_kernel(offsets_ref, base_ref, ro_ref, ci_ref,
     valid_ref[0, :] = valid
 
 
-@functools.partial(jax.jit, static_argnames=("cap_out", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("cap_out", "interpret", "tile"))
 def advance_fused_batch_kernel(offsets: jax.Array, base: jax.Array,
                                row_offsets: jax.Array,
                                col_indices: jax.Array,
-                               cap_out: int, interpret: bool = True):
+                               cap_out: int, interpret: bool | None = None,
+                               tile: int | None = None):
     """Multi-source one-pass LB advance over a (B, tiles) grid.
 
     offsets: (B, cap_in+1) int32 per-lane exclusive degree prefix sums.
@@ -181,10 +179,12 @@ def advance_fused_batch_kernel(offsets: jax.Array, base: jax.Array,
     Returns (src, dst, edge_id, in_pos, rank, valid) each (B, cap_out)
     plus totals (B,) int32 — the batched registry contract.
     """
+    interpret = runtime.interpret_mode(interpret)
     b, cap_in1 = offsets.shape
     cap_in = cap_in1 - 1
     m = col_indices.shape[0]
-    tile = _tile_for(cap_out)
+    if tile is None:
+        tile = tuner.tile_for("advance", cap_out, lanes=b)
     padded = -(-cap_out // tile) * tile
     iters = max(math.ceil(math.log2(max(cap_in, 2))) + 1, 1)
     grid = (b, padded // tile)

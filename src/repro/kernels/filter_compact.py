@@ -16,14 +16,16 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-TILE = 256
+from . import runtime, tuner
+
+TILE = 256          # heuristic floor; the tuner may pick larger tiles
 
 
-def _kernel(ids_ref, keep_ref, packed_ref, count_ref):
-    ids = ids_ref[...]                       # (TILE,)
-    keep = keep_ref[...] > 0                 # (TILE,)
+def _kernel(ids_ref, keep_ref, packed_ref, count_ref, *, tile: int):
+    ids = ids_ref[...]                       # (tile,)
+    keep = keep_ref[...] > 0                 # (tile,)
     pos = jnp.cumsum(keep.astype(jnp.int32)) - keep.astype(jnp.int32)
-    lane = jax.lax.iota(jnp.int32, TILE)
+    lane = jax.lax.iota(jnp.int32, tile)
     # one-hot "scatter": packed[j] = ids[i] where pos[i]==j and keep[i]
     onehot = (pos[:, None] == lane[None, :]) & keep[:, None]
     packed = jnp.sum(jnp.where(onehot, ids[:, None], 0), axis=0)
@@ -32,15 +34,19 @@ def _kernel(ids_ref, keep_ref, packed_ref, count_ref):
     count_ref[...] = jnp.full((1,), cnt, jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "tile"))
 def filter_compact_kernel(ids: jax.Array, keep: jax.Array,
-                          interpret: bool = True):
+                          interpret: bool | None = None,
+                          tile: int | None = None):
     """Compact ids[keep] (stable). Returns (packed (cap,), count ()).
 
     cap = len(ids); tail is -1 padding.
     """
+    interpret = runtime.interpret_mode(interpret)
     cap = ids.shape[0]
-    padded = -(-cap // TILE) * TILE
+    if tile is None:
+        tile = tuner.tile_for("compact", cap, min_tile=TILE)
+    padded = -(-cap // tile) * tile
     if padded != cap:
         pad = padded - cap
         ids = jnp.concatenate([ids, jnp.full((pad,), -1, ids.dtype)])
@@ -48,13 +54,13 @@ def filter_compact_kernel(ids: jax.Array, keep: jax.Array,
                                 jnp.zeros((pad,), jnp.int32)])
     else:
         keep = keep.astype(jnp.int32)
-    ntile = padded // TILE
+    ntile = padded // tile
     packed, counts = pl.pallas_call(
-        _kernel,
+        functools.partial(_kernel, tile=tile),
         grid=(ntile,),
-        in_specs=[pl.BlockSpec((TILE,), lambda i: (i,)),
-                  pl.BlockSpec((TILE,), lambda i: (i,))],
-        out_specs=[pl.BlockSpec((TILE,), lambda i: (i,)),
+        in_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
+                  pl.BlockSpec((tile,), lambda i: (i,))],
+        out_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
                    pl.BlockSpec((1,), lambda i: (i,))],
         out_shape=[jax.ShapeDtypeStruct((padded,), ids.dtype),
                    jax.ShapeDtypeStruct((ntile,), jnp.int32)],
@@ -63,9 +69,9 @@ def filter_compact_kernel(ids: jax.Array, keep: jax.Array,
     # phase 2: global reassembly (coarse offsets + gather)
     offsets = jnp.cumsum(counts) - counts
     lane = jnp.arange(padded, dtype=jnp.int32)
-    tile_of = lane // TILE
-    local = lane % TILE
-    src = tile_of * TILE + local
+    tile_of = lane // tile
+    local = lane % tile
+    src = tile_of * tile + local
     gpos = offsets[tile_of] + local
     out = jnp.full((padded,), -1, ids.dtype)
     valid = local < counts[tile_of]

@@ -18,6 +18,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from . import runtime
+
 DEFAULT_BQ = 128
 DEFAULT_BK = 128
 NEG_INF = -1e30
@@ -72,8 +74,9 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
 def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
                            causal: bool = True, bq: int = DEFAULT_BQ,
                            bk: int = DEFAULT_BK,
-                           interpret: bool = True) -> jax.Array:
+                           interpret: bool | None = None) -> jax.Array:
     """Single-head fused attention. q: (Sq, D); k, v: (Sk, D)."""
+    interpret = runtime.interpret_mode(interpret)
     sq, d = q.shape
     sk = k.shape[0]
     scale = float(1.0 / (d ** 0.5))

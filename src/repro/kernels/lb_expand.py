@@ -19,19 +19,19 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-TILE = 512
+from . import runtime, tuner
 
 
 def _kernel(offsets_ref, in_pos_ref, rank_ref, valid_ref, *, cap_in: int,
-            iters: int):
-    tile = pl.program_id(0)
+            iters: int, tile: int):
+    t = pl.program_id(0)
     offsets = offsets_ref[...]          # (cap_in + 1,)
-    slots = tile * TILE + jax.lax.iota(jnp.int32, TILE)
+    slots = t * tile + jax.lax.iota(jnp.int32, tile)
     total = offsets[cap_in]
 
     # upper-bound binary search over offsets[0:cap_in] (exclusive scan)
-    lo = jnp.zeros((TILE,), jnp.int32)
-    hi = jnp.full((TILE,), cap_in, jnp.int32)
+    lo = jnp.zeros((tile,), jnp.int32)
+    hi = jnp.full((tile,), cap_in, jnp.int32)
 
     def body(_, carry):
         lo_, hi_ = carry
@@ -48,21 +48,26 @@ def _kernel(offsets_ref, in_pos_ref, rank_ref, valid_ref, *, cap_in: int,
     valid_ref[...] = (slots < total).astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("cap_out", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("cap_out", "interpret", "tile"))
 def lb_expand_kernel(offsets: jax.Array, cap_out: int,
-                     interpret: bool = True):
+                     interpret: bool | None = None,
+                     tile: int | None = None):
     """offsets: (cap_in+1,) int32 exclusive prefix sum (total in last slot).
     Returns (in_pos, rank, valid) each (cap_out,) int32."""
+    interpret = runtime.interpret_mode(interpret)
     cap_in = offsets.shape[0] - 1
-    padded = -(-cap_out // TILE) * TILE
+    if tile is None:
+        tile = tuner.tile_for("lb_expand", cap_out)
+    padded = -(-cap_out // tile) * tile
     iters = max(math.ceil(math.log2(max(cap_in, 2))) + 1, 1)
-    grid = (padded // TILE,)
+    grid = (padded // tile,)
     out_shape = [jax.ShapeDtypeStruct((padded,), jnp.int32)] * 3
     in_pos, rank, valid = pl.pallas_call(
-        functools.partial(_kernel, cap_in=cap_in, iters=iters),
+        functools.partial(_kernel, cap_in=cap_in, iters=iters, tile=tile),
         grid=grid,
         in_specs=[pl.BlockSpec((cap_in + 1,), lambda i: (0,))],
-        out_specs=[pl.BlockSpec((TILE,), lambda i: (i,))] * 3,
+        out_specs=[pl.BlockSpec((tile,), lambda i: (i,))] * 3,
         out_shape=out_shape,
         interpret=interpret,
     )(offsets)

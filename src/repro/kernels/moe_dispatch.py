@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import runtime
+
 TILE_S = 128
 
 
@@ -34,9 +36,10 @@ def _kernel(slot_ref, x_ref, out_ref):
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def moe_gather_kernel(x: jax.Array, slot_token: jax.Array,
-                      interpret: bool = True) -> jax.Array:
+                      interpret: bool | None = None) -> jax.Array:
     """x: (T, D) tokens; slot_token: (S,) token id per expert slot (-1 =
     empty). Returns (S, D) expert-buffer rows."""
+    interpret = runtime.interpret_mode(interpret)
     s = slot_token.shape[0]
     t, d = x.shape
     padded = -(-s // TILE_S) * TILE_S

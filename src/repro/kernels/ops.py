@@ -15,7 +15,6 @@ Set ``REPRO_FORCE_INTERPRET=0`` to attempt native compilation.
 """
 from __future__ import annotations
 
-import os
 from typing import NamedTuple
 
 import jax
@@ -23,21 +22,17 @@ import jax.numpy as jnp
 
 from repro.core import backend as B
 
-from . import ref
+from . import ref, tuner
+from .advance_filter_fused import (advance_filter_fused_batch_kernel,
+                                   advance_filter_fused_kernel)
 from .advance_fused import advance_fused_batch_kernel, advance_fused_kernel
 from .filter_compact import filter_compact_kernel
 from .flash_attention import flash_attention_kernel
 from .lb_expand import lb_expand_kernel
 from .moe_dispatch import moe_gather_kernel
+from .runtime import interpret_mode as _interpret
 from .segment_search import segment_search_kernel
 from .semiring_spmv import semiring_ell_kernel
-
-
-def _interpret() -> bool:
-    env = os.environ.get("REPRO_FORCE_INTERPRET")
-    if env is not None:
-        return env not in ("0", "false", "False")
-    return jax.default_backend() != "tpu"
 
 
 class KExpansion(NamedTuple):
@@ -92,6 +87,41 @@ def advance_fused_batch(row_offsets: jax.Array, col_indices: jax.Array,
     return src, dst, eid, in_pos, rank, valid > 0, totals
 
 
+@B.register("advance_filter", B.PALLAS)
+def advance_filter_fused(row_offsets: jax.Array, col_indices: jax.Array,
+                         base: jax.Array, sizes: jax.Array,
+                         visited: jax.Array, cap_out: int, cap_front: int):
+    """Fused advance+filter megakernel: LB sorted search, CSR gathers,
+    visited-bitmap predicate, exact first-occurrence culling and
+    compacted emission in ONE pallas_call — the intermediate edge tuple
+    never reaches HBM. Registry contract shared with the XLA
+    composition in ``core.operators``: returns (ids, srcs, length,
+    total) with ids/srcs (cap_front,) compacted survivors."""
+    sizes = sizes.astype(jnp.int32)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(sizes)])
+    return advance_filter_fused_kernel(
+        offsets, base.astype(jnp.int32), row_offsets, col_indices,
+        visited, cap_out, cap_front, interpret=_interpret())
+
+
+@B.register("advance_filter_batch", B.PALLAS)
+def advance_filter_fused_batch(row_offsets: jax.Array,
+                               col_indices: jax.Array, base: jax.Array,
+                               sizes: jax.Array, visited: jax.Array,
+                               cap_out: int, cap_front: int):
+    """Multi-source fused advance+filter on the (B, tiles) grid; per-lane
+    bitmaps/outputs, shared CSR. Returns (ids, srcs, lengths, totals)
+    with a leading batch axis."""
+    sizes = sizes.astype(jnp.int32)
+    offsets = jnp.concatenate(
+        [jnp.zeros((sizes.shape[0], 1), jnp.int32),
+         jnp.cumsum(sizes, axis=1)], axis=1)
+    return advance_filter_fused_batch_kernel(
+        offsets, base.astype(jnp.int32), row_offsets, col_indices,
+        visited, cap_out, cap_front, interpret=_interpret())
+
+
 @B.register("segment_search", B.PALLAS)
 def segment_search(haystack: jax.Array, lo: jax.Array, hi: jax.Array,
                    needles: jax.Array) -> jax.Array:
@@ -102,7 +132,7 @@ def segment_search(haystack: jax.Array, lo: jax.Array, hi: jax.Array,
 
 @B.register("spmm", B.PALLAS)
 def semiring_spmm(offsets: jax.Array, indices: jax.Array, values, x,
-                  sr, ell_width, mask) -> jax.Array:
+                  sr, ell_width, mask, row_seg=None) -> jax.Array:
     """Hybrid ELL+COO masked-semiring SpMM over a CSR structure —
     ``Y⟨mask⟩ = A ⊗ X`` with X (nx, k) dense. Registry contract shared
     with ``linalg.ops._spmm_xla``.
@@ -137,9 +167,13 @@ def semiring_spmm(offsets: jax.Array, indices: jax.Array, values, x,
                             interpret=_interpret())
     # COO overflow: edges beyond the ELL width, ⊕-merged into the kernel
     # output (sound because masked-out rows are forced to the ⊕-identity
-    # on both parts before the merge).
+    # on both parts before the merge). ``row_seg`` is the loop-invariant
+    # edge→row map (Graph build-time metadata); absent, derive it here.
     slot = jnp.arange(m, dtype=jnp.int32)
-    row = jnp.searchsorted(offsets, slot, side="right") - 1
+    if row_seg is None:
+        row = jnp.searchsorted(offsets, slot, side="right") - 1
+    else:
+        row = row_seg
     row = jnp.clip(row, 0, n - 1)
     rank = slot - offsets[row]
     over = rank >= w
@@ -155,10 +189,14 @@ def semiring_spmm(offsets: jax.Array, indices: jax.Array, values, x,
 
 @B.register("spmv", B.PALLAS)
 def semiring_spmv(offsets: jax.Array, indices: jax.Array, values, x,
-                  sr, ell_width, mask) -> jax.Array:
-    """Masked-semiring SpMV — the k=1 column of the SpMM kernel."""
+                  sr, ell_width, mask, row_seg=None, over_pos=None,
+                  over_row=None) -> jax.Array:
+    """Masked-semiring SpMV — the k=1 column of the SpMM kernel. The
+    compacted overflow metadata is the XLA hybrid's concern; the ELL
+    kernel's COO remainder uses ``row_seg`` only."""
+    del over_pos, over_row
     return semiring_spmm(offsets, indices, values, x[:, None], sr,
-                         ell_width, mask)[:, 0]
+                         ell_width, mask, row_seg)[:, 0]
 
 
 def _locate_pallas(haystack, lo, hi, needles):
@@ -199,3 +237,99 @@ def moe_gather(x: jax.Array, slot_token: jax.Array) -> jax.Array:
 
 # re-export oracles for tests/benchmarks
 oracle = ref
+
+
+# ---------------------------------------------------------------------------
+# Autotuner probes: representative kernel launches with a FORCED tile
+# (the ``tile=`` static argument defeats the jit cache between candidate
+# tiles). Registered here so ``tuner.autotune`` / the tuner CLI can
+# measure without knowing kernel signatures. Synthetic inputs model the
+# traversal hot path: a uniform-degree CSR sized to the capacity.
+# ---------------------------------------------------------------------------
+
+
+def _probe_graph(cap: int):
+    import numpy as np
+    n = max(cap // 8, 16)
+    deg = 8
+    ro = jnp.asarray(np.arange(n + 1, dtype=np.int32) * deg)
+    ci = jnp.asarray(np.random.default_rng(0).integers(
+        0, n, size=n * deg).astype(np.int32))
+    return n, ro, ci
+
+
+def _time(fn) -> float:
+    import time
+    out = fn()
+    jax.block_until_ready(jax.tree_util.tree_leaves(out))
+    t0 = time.monotonic()
+    out = fn()
+    jax.block_until_ready(jax.tree_util.tree_leaves(out))
+    return time.monotonic() - t0
+
+
+def _probe_advance(cap: int, tile: int) -> float:
+    n, ro, ci = _probe_graph(cap)
+    k = min(n, max(cap // 8, 1))
+    base = jnp.arange(k, dtype=jnp.int32) % n
+    sizes = jnp.full((k,), 8, jnp.int32)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(sizes)])
+    return _time(lambda: advance_fused_kernel(
+        offsets, base, ro, ci, cap, interpret=_interpret(), tile=tile))
+
+
+def _probe_advance_filter(cap: int, tile: int) -> float:
+    if tile > 4096:
+        # in-tile culling is O(tile²) (the lane comparison matrix);
+        # tiles past 4k are never competitive and the probe's matrix
+        # alone would be gigabytes — skip the candidate
+        raise ValueError("advance_filter tile too large to probe")
+    n, ro, ci = _probe_graph(cap)
+    k = min(n, max(cap // 8, 1))
+    base = jnp.arange(k, dtype=jnp.int32) % n
+    sizes = jnp.full((k,), 8, jnp.int32)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(sizes)])
+    visited = jnp.zeros((n,), jnp.int32)
+    return _time(lambda: advance_filter_fused_kernel(
+        offsets, base, ro, ci, visited, cap, min(cap, n),
+        interpret=_interpret(), tile=tile))
+
+
+def _probe_compact(cap: int, tile: int) -> float:
+    ids = jnp.arange(cap, dtype=jnp.int32)
+    keep = (ids % 3) == 0
+    return _time(lambda: filter_compact_kernel(
+        ids, keep, interpret=_interpret(), tile=tile))
+
+
+def _probe_lb_expand(cap: int, tile: int) -> float:
+    k = max(cap // 8, 1)
+    sizes = jnp.full((k,), 8, jnp.int32)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(sizes)])
+    return _time(lambda: lb_expand_kernel(
+        offsets, cap, interpret=_interpret(), tile=tile))
+
+
+def _probe_spmv(cap: int, tile: int) -> float:
+    import numpy as np
+    n = max(cap, 16)
+    w = 8
+    rng = np.random.default_rng(0)
+    nbrs = jnp.asarray(rng.integers(0, n, size=(n, w)).astype(np.int32))
+    vals = jnp.ones((n, w), jnp.float32)
+    x = jnp.ones((n, 1), jnp.float32)
+    mask = jnp.ones((n,), jnp.int32)
+    from repro.linalg import semiring as SR
+    return _time(lambda: semiring_ell_kernel(
+        nbrs, vals, x, mask, SR.plus_times, interpret=_interpret(),
+        tile=tile))
+
+
+tuner.register_probe("advance", _probe_advance)
+tuner.register_probe("advance_filter", _probe_advance_filter)
+tuner.register_probe("compact", _probe_compact)
+tuner.register_probe("lb_expand", _probe_lb_expand)
+tuner.register_probe("spmv", _probe_spmv)

@@ -1,0 +1,53 @@
+"""Shared Pallas runtime probes: interpret-mode selection and platform id.
+
+Every kernel module used to hardcode ``interpret: bool = True`` defaults
+while ``kernels/ops.py`` carried its own platform probe — two sources of
+truth that could drift per callsite (a TPU build would silently run some
+kernels interpreted). This module is now the single probe:
+
+  * ``interpret_mode(explicit)`` — the one interpret decision. Explicit
+    ``True``/``False`` wins; otherwise ``REPRO_FORCE_INTERPRET`` (any
+    value but "0"/"false"); otherwise interpret everywhere except a real
+    TPU backend. Every kernel wrapper defaults ``interpret=None`` and
+    resolves through here at trace time, so TPU compiles natively
+    everywhere with zero per-module opt-in.
+  * ``platform()`` — the string the autotuner keys its cache on
+    ("tpu" | "cpu+interpret" | …): tile choices measured in interpret
+    mode must never be replayed on compiled TPU kernels and vice versa.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+
+ENV_VAR = "REPRO_FORCE_INTERPRET"
+
+
+def interpret_mode(explicit: Optional[bool] = None) -> bool:
+    """Resolve the interpret flag for a pallas_call.
+
+    Precedence: explicit bool > REPRO_FORCE_INTERPRET env > platform
+    probe (native only on TPU). Resolution happens when the kernel
+    TRACES: with ``interpret=None`` the jit cache key is ``None``, so a
+    mid-process env flip does NOT retrace already-compiled shapes.
+    Callers that must honor env flips per call resolve eagerly and pass
+    the concrete bool (``kernels/ops.py`` does exactly this for every
+    registry path); the env var is primarily a process-level debug
+    switch set before the first call.
+    """
+    if explicit is not None:
+        return bool(explicit)
+    env = os.environ.get(ENV_VAR)
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def platform() -> str:
+    """Tuner cache key: the execution platform a measurement is valid
+    for. Interpret mode is its own platform — its cost model (one host
+    round trip per grid step) is unrelated to compiled-kernel cost."""
+    base = jax.default_backend()
+    return base if not interpret_mode() else f"{base}+interpret"

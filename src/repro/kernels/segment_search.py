@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from . import runtime, tuner
+
 TILE = 512
 
 
@@ -49,7 +51,7 @@ def _kernel(hay_ref, lo_ref, hi_ref, needle_ref, found_ref, *, iters: int,
 @functools.partial(jax.jit, static_argnames=("interpret", "locate"))
 def segment_search_kernel(haystack: jax.Array, lo: jax.Array, hi: jax.Array,
                           needles: jax.Array,
-                          interpret: bool = True,
+                          interpret: bool | None = None,
                           locate: bool = False) -> jax.Array:
     """found[i] ∈ {0,1} for needles[i] in haystack[lo[i]:hi[i]).
 
@@ -58,8 +60,10 @@ def segment_search_kernel(haystack: jax.Array, lo: jax.Array, hi: jax.Array,
     the semiring SpGEMM needs (B's stored value at the match feeds the
     ⊗ combine).
     """
+    interpret = runtime.interpret_mode(interpret)
     cap = needles.shape[0]
-    padded = -(-cap // TILE) * TILE
+    tile = tuner.tile_for("segment_search", cap, min_tile=TILE)
+    padded = -(-cap // tile) * tile
     if padded != cap:
         pad = padded - cap
         z = jnp.zeros((pad,), jnp.int32)
@@ -72,14 +76,14 @@ def segment_search_kernel(haystack: jax.Array, lo: jax.Array, hi: jax.Array,
     iters = max(math.ceil(math.log2(max(haystack.shape[0], 2))) + 1, 1)
     found = pl.pallas_call(
         functools.partial(_kernel, iters=iters, locate=locate),
-        grid=(padded // TILE,),
+        grid=(padded // tile,),
         in_specs=[
             pl.BlockSpec(haystack.shape, lambda i: (0,)),
-            pl.BlockSpec((TILE,), lambda i: (i,)),
-            pl.BlockSpec((TILE,), lambda i: (i,)),
-            pl.BlockSpec((TILE,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            pl.BlockSpec((tile,), lambda i: (i,)),
         ],
-        out_specs=pl.BlockSpec((TILE,), lambda i: (i,)),
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((padded,), jnp.int32),
         interpret=interpret,
     )(haystack, lo, hi, needles)

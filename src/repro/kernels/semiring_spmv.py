@@ -32,18 +32,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-TILE_R = 256
+from . import runtime, tuner
+
+TILE_R = 256        # heuristic floor; the tuner may pick larger tiles
 MAX_GRID = 256
-
-
-def _tile_for(n: int, k: int) -> int:
-    """Row-tile size: grows from TILE_R so the (k, tiles) grid stays under
-    MAX_GRID programs (interpret-mode grid steps cost a host round trip
-    each; on TPU larger tiles amortize the VMEM-resident operand)."""
-    tile = TILE_R
-    while k * (-(-n // tile)) > MAX_GRID and tile < max(n, 1):
-        tile *= 2
-    return tile
 
 
 def _row_kernel(nbrs_ref, vals_ref, mask_ref, x_ref, y_ref, *, sr):
@@ -59,10 +51,12 @@ def _row_kernel(nbrs_ref, vals_ref, mask_ref, x_ref, y_ref, *, sr):
     y_ref[...] = jnp.where(rowm > 0, red, sr.zero)[:, None]
 
 
-@functools.partial(jax.jit, static_argnames=("semiring", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("semiring", "interpret", "tile"))
 def semiring_ell_kernel(nbrs: jax.Array, vals: jax.Array, x: jax.Array,
                         mask: jax.Array, semiring,
-                        interpret: bool = True) -> jax.Array:
+                        interpret: bool | None = None,
+                        tile: int | None = None) -> jax.Array:
     """nbrs/vals: (n, W); x: (nx, k); mask: (n,) int32. Returns (n, k) f32.
 
     One program per (column, row-tile) — grid (k, tiles). The dense
@@ -70,9 +64,12 @@ def semiring_ell_kernel(nbrs: jax.Array, vals: jax.Array, x: jax.Array,
     program; the semiring is static so the combine/reduce lower to fixed
     VPU ops.
     """
+    interpret = runtime.interpret_mode(interpret)
     n, w = nbrs.shape
     nx, k = x.shape
-    tile = _tile_for(n, k)
+    if tile is None:
+        tile = tuner.tile_for("spmv", n, lanes=k, min_tile=TILE_R,
+                              max_grid=MAX_GRID)
     padded = -(-n // tile) * tile
     if padded != n:
         pad = padded - n

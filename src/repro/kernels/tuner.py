@@ -1,0 +1,256 @@
+"""Kernel autotuner: measured tile/grid selection per (op, tier, platform).
+
+The Pallas kernels used to pick tiles with hardcoded heuristics
+(``MIN_TILE = 512`` doubled until the grid fit under ``MAX_GRID``),
+which bakes one platform's tradeoff into every kernel: interpret mode
+wants few grid steps (each costs a host round trip), compiled TPU wants
+tiles sized to VMEM residency and pipeline depth. This module owns the
+choice:
+
+  * ``tile_for(op, cap)`` — the one lookup every kernel wrapper calls at
+    trace time (caps are static, so this is plain Python). Measured
+    entries from the JSON cache win; otherwise the clamped default
+    heuristic below.
+  * ``autotune(op, cap, probe)`` — measure candidate tiles with the
+    op's registered probe and persist the winner. Never triggered
+    implicitly from inside a trace: the benchmark harness
+    (``benchmarks/frontier_scaling.py --tune``) and the CLI
+    (``python -m repro.kernels.tuner``) drive it at top level.
+
+Cache format (JSON, committed or pointed at via ``REPRO_TUNE_CACHE``):
+
+    {"version": 1,
+     "entries": {"<op>|<tier>|<platform>": {"tile": 1024,
+                                            "ms": 0.41, ...}}}
+
+``tier`` is the power-of-two bucket of the capacity (the same ladder the
+tiered dispatch in ``core.backend`` switches over), ``platform`` comes
+from ``runtime.platform()`` — interpret-mode measurements never leak
+onto compiled TPU runs. Bumping ``_VERSION`` invalidates every entry
+(schema or cost-model changes); unknown versions are ignored, never
+deleted.
+
+Env switches:
+  REPRO_TUNE=0       ignore the cache entirely (pure heuristic defaults)
+  REPRO_TUNE=1       allow ``autotune`` to (re)measure and persist
+  REPRO_TUNE_CACHE   cache path (default: tuner_cache.json next to this
+                     module — the committed cache)
+
+Tile choice never affects results — kernels pad to the tile and slice
+back — so a stale or missing cache is a performance bug, never a
+correctness one (the parity suite runs identically under any cache).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, Optional
+
+_VERSION = 1
+
+DEFAULT_MIN_TILE = 512
+DEFAULT_MAX_GRID = 128
+
+# op -> probe(cap, tile) -> seconds; registered by kernel modules so the
+# CLI / bench can measure without knowing kernel call signatures.
+PROBES: Dict[str, Callable[[int, int], float]] = {}
+
+_cache: Optional[dict] = None
+# in-memory cache validity key: (path, mtime, size) — path so a
+# REPRO_TUNE_CACHE switch reloads, size so same-mtime rewrites (coarse
+# filesystem clocks) cannot serve stale entries
+_cache_key: Optional[tuple] = None
+
+
+def cache_path() -> str:
+    return os.environ.get(
+        "REPRO_TUNE_CACHE",
+        os.path.join(os.path.dirname(__file__), "tuner_cache.json"))
+
+
+def _enabled() -> bool:
+    return os.environ.get("REPRO_TUNE", "") != "0"
+
+
+def _load() -> dict:
+    global _cache, _cache_key
+    path = cache_path()
+    try:
+        st = os.stat(path)
+        key = (path, st.st_mtime_ns, st.st_size)
+    except OSError:
+        _cache, _cache_key = {"version": _VERSION, "entries": {}}, None
+        return _cache
+    if _cache is None or key != _cache_key:
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+        except (OSError, ValueError):
+            raw = {}
+        if raw.get("version") != _VERSION:
+            raw = {"version": _VERSION, "entries": {}}
+        raw.setdefault("entries", {})
+        _cache, _cache_key = raw, key
+    return _cache
+
+
+def _persist(cache: dict) -> None:
+    global _cache_key
+    path = cache_path()
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump(cache, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+    st = os.stat(path)
+    _cache_key = (path, st.st_mtime_ns, st.st_size)
+
+
+def pow2_ceil(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def tier_of(cap: int, min_tile: int = DEFAULT_MIN_TILE) -> int:
+    """Power-of-two bucket a capacity falls in — the cache key's tier
+    axis and the capacity ladder's rung (core.backend.tier_plan)."""
+    return max(min(pow2_ceil(max(cap, 1)), 1 << 30), min_tile)
+
+
+def _key(op: str, cap: int, platform: str, min_tile: int) -> str:
+    return f"{op}|{tier_of(cap, min_tile)}|{platform}"
+
+
+def default_tile(cap: int, lanes: int = 1,
+                 min_tile: int = DEFAULT_MIN_TILE,
+                 max_grid: int = DEFAULT_MAX_GRID) -> int:
+    """Untuned heuristic: smallest power-of-two tile ≥ ``min_tile``
+    keeping the (lanes × tiles) grid ≤ ``max_grid``, clamped to the
+    padded output size — a tile can never exceed pow2_ceil(cap), so a
+    small capacity (a low tier) no longer inflates VMEM block sizes to
+    ``min_tile`` × doublings it cannot use."""
+    hi = pow2_ceil(max(cap, 1))
+    tile = min(min_tile, hi)
+    while lanes * (-(-cap // tile)) > max_grid and tile < hi:
+        tile *= 2
+    return tile
+
+
+def tile_for(op: str, cap: int, *, lanes: int = 1,
+             min_tile: int = DEFAULT_MIN_TILE,
+             max_grid: int = DEFAULT_MAX_GRID) -> int:
+    """Tile size for one kernel launch of ``op`` at capacity ``cap``.
+
+    Called at trace time with static values. A measured cache entry for
+    (op, tier(cap), platform) wins; the clamped heuristic is the
+    fallback. The returned tile is always ≤ pow2_ceil(cap).
+    """
+    if _enabled():
+        from . import runtime
+        entry = _load()["entries"].get(_key(op, cap, runtime.platform(),
+                                            min_tile))
+        if entry and "tile" in entry:
+            return min(int(entry["tile"]), pow2_ceil(max(cap, 1)))
+    return default_tile(cap, lanes=lanes, min_tile=min_tile,
+                        max_grid=max_grid)
+
+
+def tier_floor(op: str, default: int = DEFAULT_MIN_TILE) -> int:
+    """Floor for ``op``'s capacity-tier ladder (core.backend.tier_plan):
+    the RAW measured tile at the bottom tier bucket when one exists —
+    deliberately unclamped, unlike ``tile_for`` — so a platform whose
+    measurements want big tiles (compiled TPU pipelines) never gets
+    capacity tiers smaller than one kernel tile (they would pad right
+    back up, buying switch overhead for nothing)."""
+    if _enabled():
+        from . import runtime
+        entry = _load()["entries"].get(
+            _key(op, default, runtime.platform(), default))
+        if entry and "tile" in entry:
+            return max(int(entry["tile"]), default)
+    return default
+
+
+def register_probe(op: str, fn: Callable[[int, int], float]) -> None:
+    """Register ``fn(cap, tile) -> seconds`` as the measurement probe
+    for ``op`` (called by kernel modules at import)."""
+    PROBES[op] = fn
+
+
+def candidates(cap: int, min_tile: int = 128) -> list[int]:
+    hi = pow2_ceil(max(cap, 1))
+    out, t = [], min(min_tile, hi)
+    while t <= hi:
+        out.append(t)
+        t *= 2
+    return out
+
+
+def autotune(op: str, cap: int, probe: Optional[Callable] = None, *,
+             repeats: int = 3, force: bool = False,
+             min_tile: int = DEFAULT_MIN_TILE) -> int:
+    """Measure candidate tiles for ``op`` at ``cap`` and persist the
+    winner under (op, tier, platform). Requires REPRO_TUNE=1 (or
+    ``force=True``); must run at top level, never inside a trace.
+    Returns the selected tile."""
+    from . import runtime
+    probe = probe or PROBES.get(op)
+    if probe is None:
+        raise KeyError(f"no tuning probe registered for op {op!r}")
+    if not force and os.environ.get("REPRO_TUNE") != "1":
+        return tile_for(op, cap, min_tile=min_tile)
+    cache = _load()
+    key = _key(op, cap, runtime.platform(), min_tile)
+    if not force and key in cache["entries"]:
+        return int(cache["entries"][key]["tile"])
+    best_tile, best_s = None, float("inf")
+    for tile in candidates(cap):
+        try:
+            probe(cap, tile)                         # compile / warm
+            s = min(probe(cap, tile) for _ in range(repeats))
+        except Exception:                            # tile unsupported
+            continue
+        if s < best_s:
+            best_tile, best_s = tile, s
+    if best_tile is None:
+        return tile_for(op, cap, min_tile=min_tile)
+    cache["entries"][key] = {"tile": int(best_tile),
+                             "ms": round(best_s * 1e3, 4),
+                             "cap": int(cap),
+                             "stamp": time.strftime("%Y-%m-%d")}
+    _persist(cache)
+    return best_tile
+
+
+def autotune_all(caps: list[int], ops: Optional[list[str]] = None,
+                 force: bool = True) -> dict:
+    """Tune every registered probe over a capacity ladder (the CLI /
+    bench entry point). Returns {(op, cap): tile}."""
+    picked = {}
+    for op in (ops or sorted(PROBES)):
+        for cap in caps:
+            picked[(op, cap)] = autotune(op, cap, force=force)
+    return picked
+
+
+def main(argv=None) -> None:
+    import argparse
+    ap = argparse.ArgumentParser(description="kernel autotuner")
+    ap.add_argument("--ops", default=None,
+                    help="comma-separated op subset (default: all probes)")
+    ap.add_argument("--caps", default="512,2048,8192,32768,131072",
+                    help="comma-separated capacities to tune at")
+    args = ap.parse_args(argv)
+    import repro.kernels.ops  # noqa: F401  (registers the probes)
+    ops = args.ops.split(",") if args.ops else None
+    caps = [int(c) for c in args.caps.split(",")]
+    picked = autotune_all(caps, ops)
+    for (op, cap), tile in sorted(picked.items()):
+        print(f"{op:16s} cap={cap:<8d} -> tile {tile}")
+    print(f"# cache: {cache_path()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -18,10 +18,13 @@ static ELL metadata, then dispatch.
 
 Registry contracts (shared by both backends):
 
-  "spmv" (offsets, indices, values|None, x (nx,), sr, ell_width, mask|None)
+  "spmv" (offsets, indices, values|None, x (nx,), sr, ell_width, mask|None,
+          row_seg|None, over_pos|None, over_row|None)
          → y (n,)  f32
-  "spmm" (offsets, indices, values|None, x (nx,k), sr, ell_width, mask|None)
+  "spmm" (offsets, indices, values|None, x (nx,k), sr, ell_width, mask|None,
+          row_seg|None)
          → y (n,k) f32
+
   "mxm"  (a_off, a_idx, a_vals|None, bt_off, bt_idx, bt_vals|None,
           base (E,), probe_rows (E,), sr, cap_out)
          → c (E,) f32   — the dot formulation over a mask pattern;
@@ -29,6 +32,14 @@ Registry contracts (shared by both backends):
            (row-tiled by the advance kernels), each emitted column id is
            probed in ``probe_rows`` of the B-transpose structure, and
            matches are ⊗-combined and ⊕-reduced per mask edge.
+
+``row_seg`` is the optional loop-invariant edge→row map ((m,) int32,
+``Graph.row_seg`` / ``Graph.csc_row_seg`` build-time metadata). The XLA
+sweep's segment reduce needs it every call; deriving it in-loop by
+binary search was the single largest per-iteration cost of the PageRank
+sweep. When absent (raw-CSR callers, sharded stacked slices) providers
+derive it with the O(m) cumsum formulation — bit-identical, still ~3×
+cheaper than searchsorted.
 
 Masked-out rows carry the semiring's ⊕-identity. ``values=None`` means a
 structural (pattern-only) matrix: every stored entry is the ⊗-identity.
@@ -61,8 +72,8 @@ from .semiring import Semiring, plus_times
 
 
 def _row_segments(offsets: jax.Array, m: int) -> jax.Array:
-    return (jnp.searchsorted(offsets, jnp.arange(m, dtype=jnp.int32),
-                             side="right").astype(jnp.int32) - 1)
+    from repro.core.graph import row_segments_of
+    return row_segments_of(offsets, m)
 
 
 def _apply_mask(y: jax.Array, mask: Optional[jax.Array], zero: float):
@@ -72,28 +83,101 @@ def _apply_mask(y: jax.Array, mask: Optional[jax.Array], zero: float):
     return jnp.where(m, y, zero)
 
 
+def hybrid_ell_reduce(offsets, indices, values, x, sr: Semiring,
+                      width: int, *, over_pos=None, over_row=None,
+                      row_seg=None, edge_valid=None):
+    """Shared hybrid row reduction: y[i] = ⊕ over row i's edges of
+    (values ⊗ x[dst]) — the XLA twin of the Pallas ELL kernel, designed
+    for *placement-stable bits* (the PR-4 discipline: explicit
+    elementwise dataflow only, no compiler-grouped reduces, no
+    division):
+
+      * the first ``width`` edges of each row land in a rank-aligned
+        (rows, pow2(width)) block (pure gathers) and are ⊕-folded by an
+        EXPLICIT pairwise halving tree — the grouping is the dataflow,
+        so the single-device sweep and every shard_map row slice compute
+        identical bits for identical rows;
+      * edges past ``width`` (the heavy-tail remainder) continue the
+        fold through the serial ⊕-scatter, in ascending edge order —
+        either compacted build-time lists (``over_pos``/``over_row``,
+        the fast single-device path: only ~the 95th-percentile overflow
+        pays the serial scatter) or a masked drop-scatter over all edges
+        (the per-shard path, where no compacted metadata exists; same
+        per-row sequence, same bits).
+
+    ``edge_valid`` masks padding lanes of stacked per-shard edge arrays.
+    Returns the raw (rows,) folded vector — callers clamp empty rows and
+    apply masks.
+    """
+    nrows = int(offsets.shape[0]) - 1
+    m = int(indices.shape[0])
+    width = max(int(width), 1)
+    wp = 1
+    while wp < width:
+        wp *= 2
+    starts = offsets[:-1]
+    deg = offsets[1:] - offsets[:-1]
+    lanes = jnp.arange(wp, dtype=jnp.int32)
+    e = jnp.minimum(starts[:, None] + lanes[None, :], max(m - 1, 0))
+    lane_ok = lanes[None, :] < jnp.minimum(deg, width)[:, None]
+    xi = x[jnp.clip(indices[e], 0, x.shape[0] - 1)]   # pad ids may be -1
+    prod = xi if values is None else sr.mul_op(values[e], xi)
+    prod = jnp.where(lane_ok, prod, sr.zero)
+    k = wp
+    while k > 1:                      # explicit halving: grouping fixed
+        k //= 2
+        prod = sr.add_op(prod[:, :k], prod[:, k:2 * k])
+    y = prod[:, 0]
+    if over_pos is not None:
+        if int(over_pos.shape[0]):
+            ov = x[indices[over_pos]]
+            if values is not None:
+                ov = sr.mul_op(values[over_pos], ov)
+            y = sr.scatter_accum(y, over_row, ov)
+        return y
+    # masked drop-scatter fallback (per-shard): rank ≥ width continues
+    # the fold, everything else targets the drop slot
+    seg = _row_segments(offsets, m) if row_seg is None else row_seg
+    rank = jnp.arange(m, dtype=jnp.int32) - starts[seg]
+    over = rank >= width
+    if edge_valid is not None:
+        over = over & edge_valid
+    ov = x[jnp.clip(indices, 0, x.shape[0] - 1)]
+    if values is not None:
+        ov = sr.mul_op(values, ov)
+    return sr.scatter_accum(y, jnp.where(over, seg, nrows), ov)
+
+
 @B.register("spmv", B.XLA)
-def _spmv_xla(offsets, indices, values, x, sr: Semiring, ell_width, mask):
-    """Gather + semiring segment reduce. With values=None and plus_times
-    this is bit-identical to the pre-refactor pagerank sweep."""
-    del ell_width                       # pallas-only metadata
+def _spmv_xla(offsets, indices, values, x, sr: Semiring, ell_width, mask,
+              row_seg=None, over_pos=None, over_row=None):
+    """Hybrid ELL-tree + overflow-scatter sweep when the Graph's static
+    width metadata is available (the hot path — PageRank's loop lives
+    here); gather + semiring segment reduce otherwise (raw-CSR callers,
+    bit-identical to the pre-refactor pagerank sweep)."""
     n = int(offsets.shape[0]) - 1
     m = int(indices.shape[0])
-    seg = _row_segments(offsets, m)
-    xv = x[indices]
-    prod = xv if values is None else sr.mul_op(values, xv)
-    y = sr.segment_reduce(prod, seg, n, indices_are_sorted=True)
+    if ell_width is not None and m > 0 and over_pos is not None:
+        y = hybrid_ell_reduce(offsets, indices, values, x, sr,
+                              int(ell_width), over_pos=over_pos,
+                              over_row=over_row)
+    else:
+        seg = _row_segments(offsets, m) if row_seg is None else row_seg
+        xv = x[indices]
+        prod = xv if values is None else sr.mul_op(values, xv)
+        y = sr.segment_reduce(prod, seg, n, indices_are_sorted=True)
     deg = offsets[1:] - offsets[:-1]
     y = jnp.where(deg > 0, y, sr.zero)  # empty rows ⇒ ⊕-identity
     return _apply_mask(y, mask, sr.zero).astype(jnp.float32)
 
 
 @B.register("spmm", B.XLA)
-def _spmm_xla(offsets, indices, values, x, sr: Semiring, ell_width, mask):
+def _spmm_xla(offsets, indices, values, x, sr: Semiring, ell_width, mask,
+              row_seg=None):
     del ell_width
     n = int(offsets.shape[0]) - 1
     m = int(indices.shape[0])
-    seg = _row_segments(offsets, m)
+    seg = _row_segments(offsets, m) if row_seg is None else row_seg
     xv = x[indices]                                   # (m, k)
     prod = xv if values is None else sr.mul_op(values[:, None], xv)
     y = sr.segment_reduce(prod, seg, n, indices_are_sorted=True)
@@ -149,10 +233,11 @@ _mxm_xla = B.register("mxm", B.XLA)(
 
 
 def _csr_side(a, transpose: bool):
-    """Resolve (offsets, indices, values, ell_width) from a Graph /
-    ShardedGraph (CSR or its CSC mirror) or a raw (offsets, indices,
-    values) triple. A ShardedGraph yields the (p, …) stacked per-device
-    slices the sharded registry providers understand."""
+    """Resolve (offsets, indices, values, ell_width, row_seg) from a
+    Graph / ShardedGraph (CSR or its CSC mirror) or a raw (offsets,
+    indices, values) triple. A ShardedGraph yields the (p, …) stacked
+    per-device slices the sharded registry providers understand (its
+    per-shard edge→row maps are derived locally, so row_seg is None)."""
     from repro.core.partition import ShardedGraph
     if isinstance(a, (Graph, ShardedGraph)):
         if transpose:
@@ -160,8 +245,10 @@ def _csr_side(a, transpose: bool):
                 raise ValueError("transpose=True needs the CSC mirror "
                                  "(build_csc=True)")
             return (a.csc_offsets, a.csc_indices, a.csc_edge_values,
-                    a.csc_ell_width)
-        return a.row_offsets, a.col_indices, a.edge_values, a.ell_width
+                    a.csc_ell_width, a.csc_row_seg, a.csc_over_pos,
+                    a.csc_over_row)
+        return (a.row_offsets, a.col_indices, a.edge_values, a.ell_width,
+                a.row_seg, a.over_pos, a.over_row)
     if transpose:
         raise ValueError(
             "a raw (offsets, indices, values) triple carries no CSC "
@@ -169,7 +256,7 @@ def _csr_side(a, transpose: bool):
             "transposed structure explicitly (for mxm: b_transpose=True "
             "with bᵀ's CSR)")
     offsets, indices, values = a
-    return offsets, indices, values, None
+    return offsets, indices, values, None, None, None, None
 
 
 def _resolve_mask(mask, complement: bool):
@@ -212,14 +299,15 @@ def spmv(a, x, *, semiring=plus_times, mask=None, complement: bool = False,
     sr = S.get(semiring)
     bk = B.resolve(backend, use_kernel)
     pl, ctx = B.resolve_graph_placement(a, placement)
-    off, idx, vals, meta_w = _csr_side(a, transpose)
+    off, idx, vals, meta_w, seg, opos, orow = _csr_side(a, transpose)
     if structural:
         vals = None
     w = _ell_or_raise(ell_width, meta_w, bk if pl == B.SINGLE else B.XLA)
     m = _resolve_mask(mask, complement)
     x = jnp.asarray(x, jnp.float32)
     with ctx:
-        return B.dispatch("spmv", bk, pl)(off, idx, vals, x, sr, w, m)
+        return B.dispatch("spmv", bk, pl)(off, idx, vals, x, sr, w, m,
+                                          seg, opos, orow)
 
 
 def spmm(a, x, *, semiring=plus_times, mask=None, complement: bool = False,
@@ -236,7 +324,7 @@ def spmm(a, x, *, semiring=plus_times, mask=None, complement: bool = False,
     sr = S.get(semiring)
     bk = B.resolve(backend, use_kernel)
     pl, ctx = B.resolve_graph_placement(a, placement)
-    off, idx, vals, meta_w = _csr_side(a, transpose)
+    off, idx, vals, meta_w, seg, _, _ = _csr_side(a, transpose)
     if structural:
         vals = None
     w = _ell_or_raise(ell_width, meta_w, bk if pl == B.SINGLE else B.XLA)
@@ -245,7 +333,8 @@ def spmm(a, x, *, semiring=plus_times, mask=None, complement: bool = False,
     if x.ndim != 2:
         raise ValueError(f"spmm needs a dense (n, k) operand, got {x.shape}")
     with ctx:
-        return B.dispatch("spmm", bk, pl)(off, idx, vals, x, sr, w, m)
+        return B.dispatch("spmm", bk, pl)(off, idx, vals, x, sr, w, m,
+                                          seg)
 
 
 def spmsv(a, ids, xvals=None, *, semiring=plus_times, mask=None,
@@ -269,7 +358,7 @@ def spmsv(a, ids, xvals=None, *, semiring=plus_times, mask=None,
             "run spmsv on the unpartitioned source graph")
     sr = S.get(semiring)
     bk = B.resolve(backend, use_kernel)
-    off, idx, vals, _ = _csr_side(a, transpose=False)
+    off, idx, vals, _, _, _, _ = _csr_side(a, transpose=False)
     if structural:
         vals = None
     n = int(off.shape[0]) - 1
@@ -353,8 +442,8 @@ def mxm(a, b, mask, *, semiring=plus_times, b_transpose: bool = False,
             "mxm keeps the probe side (b) replicated; pass the "
             "expansion side (a) as a ShardedGraph and b as a plain "
             "Graph (e.g. pg.source)")
-    a_off, a_idx, a_vals, _ = _csr_side(a, transpose=False)
-    bt_off, bt_idx, bt_vals, _ = _csr_side(b, transpose=not b_transpose)
+    a_off, a_idx, a_vals = _csr_side(a, transpose=False)[:3]
+    bt_off, bt_idx, bt_vals = _csr_side(b, transpose=not b_transpose)[:3]
     if structural:
         a_vals = bt_vals = None
     msrc = np.asarray(mask[0], np.int32)

@@ -1,0 +1,71 @@
+"""Direct unit tests for the direction-optimization heuristics
+(core/direction.py, paper §5.1.4 eqs. 1–6) — previously exercised only
+indirectly through the fig21 benchmark sweep."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.direction import (PULL, PUSH, DirectionParams,
+                                  decide_direction, estimate_workloads)
+
+
+def test_estimate_workloads_printed_formulas():
+    """m_f = n_f·m/n and m_u = n_u·n/(n−n_u), the paper's eqs. 3/4."""
+    n, m = 100, 1600
+    m_f, m_u = estimate_workloads(jnp.int32(10), jnp.int32(40), n, m)
+    assert np.isclose(float(m_f), 10 * m / n)
+    assert np.isclose(float(m_u), 40 * n / (n - 40))
+
+
+def test_estimate_workloads_n_u_equals_n_guard():
+    """The n_u == n pole of eq. 4 (nothing visited yet): the max(·, 1)
+    denominator guard must keep the estimate finite."""
+    n, m = 64, 512
+    m_f, m_u = estimate_workloads(jnp.int32(1), jnp.int32(n), n, m)
+    assert np.isfinite(float(m_u))
+    assert np.isclose(float(m_u), n * n / 1.0)
+    # and past the pole (n_u > n can transiently happen with batched
+    # bookkeeping): still finite, still the clamped denominator
+    m_f, m_u = estimate_workloads(jnp.int32(1), jnp.int32(n + 3), n, m)
+    assert np.isfinite(float(m_u))
+
+
+def test_decide_direction_disabled_always_push():
+    params = DirectionParams(enabled=False)
+    for mode in (PUSH, PULL):
+        got = decide_direction(mode, jnp.int32(50), jnp.int32(1),
+                               64, 4096, params)
+        assert int(got) == int(PUSH), mode
+
+
+def test_decide_direction_hysteresis_round_trip():
+    """push→pull on a growing frontier, pull→push once it collapses,
+    and the in-between band keeps the current mode (do_b < do_a band
+    hysteresis)."""
+    n, m = 1000, 16000
+    params = DirectionParams(do_a=0.5, do_b=0.01)
+    # big frontier while most is unvisited: m_f > m_u·do_a → PULL
+    got = decide_direction(PUSH, jnp.int32(600), jnp.int32(390), n, m,
+                           params)
+    assert int(got) == int(PULL)
+    # collapsed frontier: m_f < m_u·do_b → back to PUSH
+    got = decide_direction(PULL, jnp.int32(1), jnp.int32(900), n, m,
+                           params)
+    assert int(got) == int(PUSH)
+    # the hysteresis band: neither threshold crossed keeps the mode
+    n_f, n_u = jnp.int32(10), jnp.int32(500)
+    m_f, m_u = estimate_workloads(n_f, n_u, n, m)
+    assert float(m_u) * params.do_b < float(m_f) < float(m_u) * params.do_a
+    assert int(decide_direction(PUSH, n_f, n_u, n, m, params)) == int(PUSH)
+    assert int(decide_direction(PULL, n_f, n_u, n, m, params)) == int(PULL)
+
+
+def test_decide_direction_default_params_scale_free_profile():
+    """With the paper's defaults a hub frontier on a scale-free graph
+    flips to pull within the first hops (the Fig. 21 sweet spot)."""
+    n, m = 4096, 97000
+    params = DirectionParams()
+    assert int(decide_direction(PUSH, jnp.int32(800), jnp.int32(3000),
+                                n, m, params)) == int(PULL)
+    # a near-dead frontier with plenty still unvisited flips back
+    assert int(decide_direction(PULL, jnp.int32(2), jnp.int32(400),
+                                n, m, params)) == int(PUSH)
