@@ -76,6 +76,31 @@ def emit(rows, header, table: str | None = None):
     return rows
 
 
+def emit_storage(graphs: dict) -> None:
+    """Emit one resident-bytes row per named graph (per-array breakdown
+    plus the headline column bytes-per-edge) into the shared CSV/JSON
+    stream — every harness run reports what the bandwidth-bound kernels
+    will actually stream."""
+    from repro.core.storage import resident_bytes
+    header = None
+    rows = []
+    for name, g in graphs.items():
+        rb = resident_bytes(g)
+        row = {"dataset": name,
+               "index_dtype": rb["plan"]["index_dtype"],
+               "encoding": rb["plan"]["encoding"],
+               "bytes_per_edge": rb["bytes_per_edge"],
+               "column_bytes": rb["column_bytes"],
+               "total_bytes": rb["total_bytes"],
+               "total_bytes_per_edge": rb["total_bytes_per_edge"],
+               **rb["arrays"]}
+        if header is None:
+            header = tuple(row)
+        rows.append([row[h] for h in header])
+    if rows:
+        emit(rows, header, table="storage")
+
+
 def write_json(path: str) -> None:
     """Dump every row emitted so far (with its backend column) to JSON."""
     with open(path, "w") as f:

@@ -11,6 +11,9 @@
   roofline            LM dry-run roofline tables (deliverable g)
   frontier_scaling    tiered/fused traversal vs pinned worst-case +
                       frontier-occupancy sweep (PR 5; → BENCH_pr5.json)
+  bandwidth           storage-plan grid {int64,int32,delta}×{fp32,bf16}:
+                      ms + bytes-per-edge + parity (PR 6; →
+                      BENCH_pr6.json)
 
 Run all:  PYTHONPATH=src python -m benchmarks.run
 One:      PYTHONPATH=src python -m benchmarks.run --only fig25_tc
@@ -36,6 +39,7 @@ MODULES = [
     "table10_wtf",
     "roofline",
     "frontier_scaling",
+    "bandwidth",
 ]
 
 
@@ -65,6 +69,18 @@ def main() -> None:
         except Exception:
             traceback.print_exc()
             failures.append(name)
+    # resident-bytes accounting for every dataset the run touched (plus
+    # the zoo defaults when run standalone) — the storage side of every
+    # ms number above
+    print("\n===== storage =====", flush=True)
+    try:
+        from benchmarks.common import _CACHE, dataset, emit_storage
+        if not _CACHE:
+            dataset("rmat_s12_e16")
+        emit_storage(dict(_CACHE))
+    except Exception:
+        traceback.print_exc()
+        failures.append("storage")
     if args.json:
         from benchmarks.common import write_json
         write_json(args.json)

@@ -28,7 +28,7 @@ def run():
         g = dataset(name)
         src = best_source(g)
         ro = np.asarray(g.row_offsets)
-        ci = np.asarray(g.col_indices)
+        ci = g.cols_np()
         ids = np.unique(ci[ro[src]:ro[src + 1]])[:256]
         fr = F.from_ids(ids, g.num_edges)
         work = int(np.sum(np.diff(ro)[ids]))

@@ -76,6 +76,16 @@ _tls = threading.local()
 # (pallas) and core.distributed (sharded).
 _REGISTRY: dict[tuple[str, str, str], Callable] = {}
 
+# (op_name, backend, placement) -> column encodings the provider decodes
+# natively (third registry dimension, PR 6). Every provider accepts
+# "dense" (any index width — gathers cast at the access point); a
+# provider that also understands the delta stream declares
+# encodings=("dense", "delta") and receives the EncodedCols pytree in
+# the positional slot the dense array normally occupies. storage_arg()
+# inserts the decode-to-dense fallback for everyone else, so every
+# (op, backend, placement) combination works under every storage plan.
+_ENCODINGS: dict[tuple[str, str, str], tuple] = {}
+
 # Backends whose implementations live in a module that registers itself on
 # import — imported lazily so `import repro.core` never pulls in Pallas.
 _LAZY_PROVIDERS = {PALLAS: "repro.kernels.ops"}
@@ -229,14 +239,21 @@ def resolve_graph_placement(graph, placement: Optional[str] = None):
     return pl, contextlib.nullcontext()
 
 
-def register(op: str, backend: str, placement: str = SINGLE):
+def register(op: str, backend: str, placement: str = SINGLE,
+             encodings: tuple = ("dense",)):
     """Decorator: register ``fn`` as the ``backend`` implementation of
-    operator hot path ``op`` under ``placement``."""
+    operator hot path ``op`` under ``placement``. ``encodings`` declares
+    which column storage encodings the provider decodes natively (see
+    ``_ENCODINGS`` / ``storage_arg``)."""
     _check(backend)
     _check_placement(placement)
+    for enc in encodings:
+        if enc not in ("dense", "delta"):
+            raise ValueError(f"unknown storage encoding {enc!r}")
 
     def deco(fn: Callable) -> Callable:
         _REGISTRY[(op, backend, placement)] = fn
+        _ENCODINGS[(op, backend, placement)] = tuple(encodings)
         return fn
 
     return deco
@@ -270,10 +287,19 @@ def dispatch(op: str, backend: Optional[str] = None,
     """
     bk = resolve(backend)
     pl = resolve_placement(placement)
+    return _lookup(op, bk, pl)[1]
+
+
+def _lookup(op: str, bk: str, pl: str) -> tuple[tuple, Callable]:
+    """Resolved (registry key, impl) — the key identifies the provider
+    that will actually run (fallbacks included), which is what encoding
+    acceptance must be read from."""
     _load_lazy(op, bk, pl)
-    impl = _REGISTRY.get((op, bk, pl))
+    key = (op, bk, pl)
+    impl = _REGISTRY.get(key)
     if impl is None:
-        impl = _REGISTRY.get((op, XLA, pl))
+        key = (op, XLA, pl)
+        impl = _REGISTRY.get(key)
     if impl is None:
         if pl == SHARDED:
             raise KeyError(
@@ -281,7 +307,7 @@ def dispatch(op: str, backend: Optional[str] = None,
                 f"{op!r} (sharded dispatch never falls back to the "
                 f"single-device path)")
         raise KeyError(f"no implementation registered for operator {op!r}")
-    return impl
+    return key, impl
 
 
 def registered(op: str, backend: str, placement: str = SINGLE) -> bool:
@@ -289,6 +315,42 @@ def registered(op: str, backend: str, placement: str = SINGLE) -> bool:
     under ``placement``."""
     _load_lazy(op, backend, placement)
     return (op, backend, placement) in _REGISTRY
+
+
+def declared_encodings(op: str, backend: Optional[str] = None,
+                       placement: Optional[str] = None) -> tuple:
+    """Column encodings natively decoded by the provider that dispatch
+    would select for (op, backend, placement), fallbacks included."""
+    bk = resolve(backend)
+    pl = resolve_placement(placement)
+    key, _ = _lookup(op, bk, pl)
+    return _ENCODINGS.get(key, ("dense",))
+
+
+def coerce_store(op: str, backend: Optional[str] = None,
+                 placement: Optional[str] = None, *, store):
+    """The registry-level decode-to-dense fallback on a raw column
+    store: returns ``store`` unchanged when it is already dense or when
+    the provider dispatch would select declared its encoding, else the
+    decoded dense int32 view."""
+    from . import storage as S
+    if not isinstance(store, S.EncodedCols):
+        return store
+    if "delta" in declared_encodings(op, backend, placement):
+        return store
+    return S.decode_cols(store)
+
+
+def storage_arg(op: str, backend: Optional[str] = None,
+                placement: Optional[str] = None, *, graph,
+                side: str = "csr"):
+    """The column-storage operand to pass in the registry contract's
+    ``col_indices`` slot: the graph's native store when the selected
+    provider declared its encoding, else the decoded dense int32 view
+    (the registry-level decode-to-dense fallback). ``side`` picks the
+    CSR or CSC mirror."""
+    store = graph.col_store if side == "csr" else graph.csc_store
+    return coerce_store(op, backend, placement, store=store)
 
 
 # ---------------------------------------------------------------------------

@@ -133,7 +133,9 @@ class DenseFrontier:
 
     @property
     def length(self) -> jax.Array:
-        return jnp.sum(self.flags.astype(jnp.int32))
+        # int32-pinned: under jax_enable_x64 jnp.sum accumulates int32
+        # into int64, which would leak into while_loop carries
+        return jnp.sum(self.flags.astype(jnp.int32)).astype(jnp.int32)
 
     def to_sparse(self, capacity: int | None = None,
                   backend: Optional[str] = None) -> SparseFrontier:
@@ -205,7 +207,9 @@ class BatchedDenseFrontier:
 
     @property
     def lengths(self) -> jax.Array:
-        return jnp.sum(self.flags.astype(jnp.int32), axis=1)
+        # int32-pinned — see DenseFrontier.length
+        return jnp.sum(self.flags.astype(jnp.int32),
+                       axis=1).astype(jnp.int32)
 
     def to_sparse(self, capacity: int | None = None,
                   backend: Optional[str] = None) -> BatchedSparseFrontier:

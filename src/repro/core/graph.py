@@ -13,6 +13,16 @@ plus an optional CSC mirror (``csc_*``) used by pull-direction traversal
 
 All shapes are static; n and m are Python ints so a Graph can be closed
 over by jitted functions without retracing on content changes.
+
+Storage is planned at build time (core/storage.py): ``from_csr`` /
+``from_edge_list`` pick the narrowest safe vertex-id dtype (or honor an
+explicit ``index_dtype=``), optionally delta-encode the CSR/CSC columns
+(``encoding="delta"``), and pin EVERY structural array to the plan's
+dtype — under ``jax_enable_x64`` JAX would otherwise silently widen
+index arrays to int64 and double the traversal bandwidth. The chosen
+:class:`~repro.core.storage.StoragePlan` rides the pytree aux data, so
+storage format is part of every jit cache key, like the mesh of a
+ShardedGraph.
 """
 from __future__ import annotations
 
@@ -24,6 +34,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import storage as S
+
 
 @jax.tree_util.register_pytree_node_class
 @dataclass(frozen=True)
@@ -31,7 +43,8 @@ class Graph:
     """Static-topology graph in CSR (+ optional CSC) form."""
 
     row_offsets: jax.Array          # (n+1,) int32
-    col_indices: jax.Array          # (m,)  int32
+    col_indices: Optional[jax.Array]  # (m,) plan index dtype; None when
+    #                                   the columns are delta-encoded
     edge_values: Optional[jax.Array] = None   # (m,) float32
     # CSC mirror (for pull traversal / reverse advance)
     csc_offsets: Optional[jax.Array] = None   # (n+1,) int32
@@ -55,11 +68,20 @@ class Graph:
     over_row: Optional[jax.Array] = None       # (K,) int32
     csc_over_pos: Optional[jax.Array] = None   # (Kc,) int32
     csc_over_row: Optional[jax.Array] = None   # (Kc,) int32
+    # Delta-encoded column stores (storage plan encoding="delta"): when
+    # set, the matching dense ``*_indices`` child is None and consumers
+    # go through ``col_store``/``cols()`` (storage.gather_cols decodes
+    # per touched edge; storage.decode_cols is the dense fallback).
+    col_enc: Optional[S.EncodedCols] = None
+    csc_enc: Optional[S.EncodedCols] = None
     # Host-side (static) kernel metadata, computed at build time so jitted
     # code never synchronizes to pick kernel shapes: ELL pack width for the
     # hybrid SpMV kernel, out-degree (CSR) and in-degree (CSC) flavours.
     ell_width: Optional[int] = None
     csc_ell_width: Optional[int] = None
+    # The build-time storage decision (static aux: part of every jit
+    # cache key). None only for hand-constructed Graphs.
+    plan: Optional[S.StoragePlan] = None
 
     # --- pytree plumbing -------------------------------------------------
     def tree_flatten(self):
@@ -67,13 +89,15 @@ class Graph:
                     self.csc_offsets, self.csc_indices, self.csc_edge_values,
                     self.csc_edge_ids, self.row_seg, self.csc_row_seg,
                     self.over_pos, self.over_row,
-                    self.csc_over_pos, self.csc_over_row)
-        return children, (self.ell_width, self.csc_ell_width)
+                    self.csc_over_pos, self.csc_over_row,
+                    self.col_enc, self.csc_enc)
+        return children, (self.ell_width, self.csc_ell_width, self.plan)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        ell, csc_ell = aux if aux is not None else (None, None)
-        return cls(*children, ell_width=ell, csc_ell_width=csc_ell)
+        ell, csc_ell, plan = aux if aux is not None else (None, None, None)
+        return cls(*children, ell_width=ell, csc_ell_width=csc_ell,
+                   plan=plan)
 
     # --- basic properties -------------------------------------------------
     @property
@@ -82,7 +106,34 @@ class Graph:
 
     @property
     def num_edges(self) -> int:
-        return int(self.col_indices.shape[0])
+        if self.col_indices is not None:
+            return int(self.col_indices.shape[0])
+        return self.col_enc.num_edges
+
+    # --- storage access ---------------------------------------------------
+    @property
+    def col_store(self) -> S.ColStore:
+        """CSR column storage as the registry passes it: the dense array
+        (plan index dtype) or the EncodedCols pytree."""
+        return self.col_indices if self.col_enc is None else self.col_enc
+
+    @property
+    def csc_store(self) -> Optional[S.ColStore]:
+        if self.csc_enc is not None:
+            return self.csc_enc
+        return self.csc_indices
+
+    def cols(self) -> jax.Array:
+        """Dense int32 CSR column view (decode-to-dense when delta)."""
+        return S.decode_cols(self.col_store)
+
+    def csc_cols(self) -> jax.Array:
+        assert self.has_csc, "graph has no CSC mirror"
+        return S.decode_cols(self.csc_store)
+
+    def cols_np(self) -> np.ndarray:
+        """Host-side dense int32 columns (partitioning, edge recovery)."""
+        return np.asarray(self.cols())
 
     @property
     def degrees(self) -> jax.Array:
@@ -103,14 +154,17 @@ class Graph:
         starts = self.row_offsets[:-1, None]
         deg = self.degrees[:, None]
         idx = jnp.minimum(starts + lanes, self.num_edges - 1)
-        nbrs = self.col_indices[idx]
+        nbrs = self.cols()[idx]
         mask = lanes < deg
         return jnp.where(mask, nbrs, -1), mask
 
     @classmethod
     def from_csr(cls, row_offsets, col_indices, edge_values=None, *,
                  build_csc: bool = True,
-                 sort_neighbors: bool = True) -> "Graph":
+                 sort_neighbors: bool = True,
+                 index_dtype: Optional[str] = None,
+                 encoding: str = "dense",
+                 value_dtype: str = "fp32") -> "Graph":
         """Build a Graph from host-side CSR arrays.
 
         ALL static kernel metadata — the CSC mirror and both ELL pack
@@ -124,12 +178,23 @@ class Graph:
         along) unless ``sort_neighbors=False`` — segmented intersection
         and the SpGEMM probe binary-search rows and silently miscount on
         unsorted input (paper §4.3 assumes sorted adjacency lists).
+
+        The storage plan (``index_dtype`` / ``encoding`` /
+        ``value_dtype``, see core/storage.py) is resolved here and every
+        structural array is pinned to it — notably under
+        ``jax_enable_x64``, where index arrays would otherwise drift to
+        int64. ``encoding="delta"`` requires sorted neighbor lists.
         """
-        ro = np.asarray(row_offsets, np.int32)
-        ci = np.asarray(col_indices, np.int32)
+        ro = np.asarray(row_offsets, np.int64)
+        n = len(ro) - 1
+        plan = S.plan_for(n, index_dtype=index_dtype, encoding=encoding,
+                          value_dtype=value_dtype)
+        # delta encoding needs sorted rows; callers that pre-sort (e.g.
+        # from_edge_list) pass sort_neighbors=False and encode_delta
+        # itself rejects genuinely unsorted input.
+        ci = np.asarray(col_indices, plan.np_index_dtype)
         vals = (None if edge_values is None
                 else np.asarray(edge_values, np.float32))
-        n = len(ro) - 1
         counts = np.diff(ro)
         if sort_neighbors and len(ci):
             order = np.lexsort((ci, np.repeat(np.arange(n), counts)))
@@ -149,13 +214,41 @@ class Graph:
             csc_seg = np.repeat(np.arange(n, dtype=np.int32),
                                 np.diff(csc[0]))
             csc_over = _overflow_edges(csc[0], csc_seg, csc_ell)
+
+        def _idx(a):
+            """Pin a structural index array to the plan's dtype on
+            device, and verify the dtype survived the transfer (without
+            jax_enable_x64 JAX silently truncates int64 to int32 —
+            corrupting ids on a >2^31-vertex graph, so refuse)."""
+            out = jnp.asarray(np.asarray(a, plan.np_index_dtype))
+            if out.dtype != plan.jnp_index_dtype:
+                raise RuntimeError(
+                    f"index_dtype={plan.index_dtype!r} needs "
+                    "jax_enable_x64 (JAX truncated the array to "
+                    f"{out.dtype})")
+            return out
+
+        col_enc = csc_enc = None
+        col_dense = _idx(ci)
+        csc_dense = _idx(csc[1]) if csc[1] is not None else None
+        if plan.encoding == "delta":
+            col_enc = S.encode_delta(ro, ci, src)
+            col_dense = None
+            if csc[1] is not None:
+                csc_enc = S.encode_delta(csc[0], csc[1], csc_seg)
+                csc_dense = None
+        # value_dtype="bf16" halves resident value bytes; compute
+        # promotes back through float32 (semiring.with_precision is the
+        # compute-side knob — the two compose but are independent)
+        vdt = jnp.bfloat16 if plan.value_dtype == "bf16" else jnp.float32
         return cls(
-            row_offsets=jnp.asarray(ro),
-            col_indices=jnp.asarray(ci),
-            edge_values=jnp.asarray(vals) if vals is not None else None,
-            csc_offsets=jnp.asarray(csc[0]) if csc[0] is not None else None,
-            csc_indices=jnp.asarray(csc[1]) if csc[1] is not None else None,
-            csc_edge_values=(jnp.asarray(csc[2])
+            row_offsets=jnp.asarray(ro.astype(np.int32)),
+            col_indices=col_dense,
+            edge_values=jnp.asarray(vals, vdt) if vals is not None else None,
+            csc_offsets=(jnp.asarray(csc[0].astype(np.int32))
+                         if csc[0] is not None else None),
+            csc_indices=csc_dense,
+            csc_edge_values=(jnp.asarray(csc[2], vdt)
                              if csc[2] is not None else None),
             csc_edge_ids=jnp.asarray(csc[3]) if csc[3] is not None else None,
             row_seg=jnp.asarray(src),
@@ -167,8 +260,11 @@ class Graph:
                           if csc_over[0] is not None else None),
             csc_over_row=(jnp.asarray(csc_over[1])
                           if csc_over[1] is not None else None),
+            col_enc=col_enc,
+            csc_enc=csc_enc,
             ell_width=ell_w,
             csc_ell_width=csc_ell,
+            plan=plan,
         )
 
 
@@ -220,7 +316,10 @@ def from_edge_list(src, dst, n: Optional[int] = None, values=None,
                    undirected: bool = False, build_csc: bool = True,
                    sort_neighbors: bool = True,
                    remove_self_loops: bool = True,
-                   deduplicate: bool = True) -> Graph:
+                   deduplicate: bool = True,
+                   index_dtype: Optional[str] = None,
+                   encoding: str = "dense",
+                   value_dtype: str = "fp32") -> Graph:
     """Build a Graph from host-side edge arrays.
 
     Mirrors the paper's dataset preparation: optionally symmetrize,
@@ -263,15 +362,20 @@ def from_edge_list(src, dst, n: Optional[int] = None, values=None,
     # Graph.from_csr is the single build-time home of kernel metadata
     # (CSC mirror + ELL pack widths) — computed once, never under jit.
     # Rows are already in the order this function's flags chose, so the
-    # constructor must not re-sort them.
-    return Graph.from_csr(row_offsets, dst.astype(np.int32), values,
-                          build_csc=build_csc, sort_neighbors=False)
+    # constructor must not re-sort them. ``encoding="delta"`` needs
+    # sorted rows (storage.encode_delta validates).
+    if encoding == "delta" and not sort_neighbors:
+        raise ValueError("encoding='delta' requires sort_neighbors=True")
+    return Graph.from_csr(row_offsets, dst, values,
+                          build_csc=build_csc, sort_neighbors=False,
+                          index_dtype=index_dtype, encoding=encoding,
+                          value_dtype=value_dtype)
 
 
 def edge_list(graph: Graph) -> tuple[np.ndarray, np.ndarray]:
     """Recover (src, dst) host arrays from CSR."""
     ro = np.asarray(graph.row_offsets)
-    ci = np.asarray(graph.col_indices)
+    ci = graph.cols_np()
     src = np.repeat(np.arange(len(ro) - 1, dtype=np.int32), np.diff(ro))
     return src, ci
 
@@ -283,7 +387,8 @@ def edge_list(graph: Graph) -> tuple[np.ndarray, np.ndarray]:
 
 def rmat(scale: int, edge_factor: int = 16, a: float = 0.57, b: float = 0.19,
          c: float = 0.19, seed: int = 0, weighted: bool = False,
-         undirected: bool = True) -> Graph:
+         undirected: bool = True, index_dtype: Optional[str] = None,
+         encoding: str = "dense", value_dtype: str = "fp32") -> Graph:
     """R-MAT / Kronecker generator with Graph500 parameters (paper §7).
 
     a=0.57, b=0.19, c=0.19, d=0.05 is the Graph500 initiator used in the
@@ -305,11 +410,16 @@ def rmat(scale: int, edge_factor: int = 16, a: float = 0.57, b: float = 0.19,
     perm = rng.permutation(n)
     src, dst = perm[src], perm[dst]
     values = rng.integers(1, 64, size=m).astype(np.float32) if weighted else None
-    return from_edge_list(src, dst, n=n, values=values, undirected=undirected)
+    return from_edge_list(src, dst, n=n, values=values,
+                          undirected=undirected, index_dtype=index_dtype,
+                          encoding=encoding, value_dtype=value_dtype)
 
 
 def random_geometric(n: int, radius: float, seed: int = 0,
-                     weighted: bool = False) -> Graph:
+                     weighted: bool = False,
+                     index_dtype: Optional[str] = None,
+                     encoding: str = "dense",
+                     value_dtype: str = "fp32") -> Graph:
     """Random geometric graph on the unit square (paper's rgg datasets)."""
     rng = np.random.default_rng(seed)
     pts = rng.random((n, 2))
@@ -344,10 +454,14 @@ def random_geometric(n: int, radius: float, seed: int = 0,
     dst = np.concatenate(dst_l) if dst_l else np.zeros(0, np.int64)
     values = (rng.integers(1, 64, size=len(src)).astype(np.float32)
               if weighted else None)
-    return from_edge_list(src, dst, n=n, values=values, undirected=True)
+    return from_edge_list(src, dst, n=n, values=values, undirected=True,
+                          index_dtype=index_dtype, encoding=encoding,
+                          value_dtype=value_dtype)
 
 
-def grid2d(side: int, weighted: bool = False, seed: int = 0) -> Graph:
+def grid2d(side: int, weighted: bool = False, seed: int = 0,
+           index_dtype: Optional[str] = None, encoding: str = "dense",
+           value_dtype: str = "fp32") -> Graph:
     """2-D grid — the mesh-like / road-network stand-in (large diameter,
     uniform small degree, like the paper's roadnet_USA)."""
     rng = np.random.default_rng(seed)
@@ -359,7 +473,8 @@ def grid2d(side: int, weighted: bool = False, seed: int = 0) -> Graph:
     values = (rng.integers(1, 64, size=len(src)).astype(np.float32)
               if weighted else None)
     return from_edge_list(src, dst, n=side * side, values=values,
-                          undirected=True)
+                          undirected=True, index_dtype=index_dtype,
+                          encoding=encoding, value_dtype=value_dtype)
 
 
 def bipartite_random(n_users: int, n_items: int, avg_degree: int,

@@ -65,6 +65,7 @@ import jax
 import jax.numpy as jnp
 
 from . import backend as B
+from . import storage as S
 from .frontier import (INVALID, BatchedDenseFrontier, BatchedSparseFrontier,
                        DenseFrontier, SparseFrontier, compact_values,
                        compact_values_batch)
@@ -115,18 +116,25 @@ def twc_order(sizes: jax.Array) -> jax.Array:
     return jnp.argsort(cls, stable=True)
 
 
-@B.register("advance", B.XLA)
-def _advance_xla(row_offsets: jax.Array, col_indices: jax.Array,
+@B.register("advance", B.XLA, encodings=("dense", "delta"))
+def _advance_xla(row_offsets: jax.Array, col_indices: S.ColStore,
                  base: jax.Array, sizes: jax.Array, cap_out: int):
     """XLA advance hot path: LB sorted search + CSR gathers as separate
     (XLA-fused) passes. Shares the registry contract with the fused Pallas
     kernel: (src, dst, edge_id, in_pos, rank, valid, total), with
-    src/dst/edge_id masked to INVALID and rank to 0 on dead lanes."""
+    src/dst/edge_id masked to INVALID and rank to 0 on dead lanes.
+
+    ``col_indices`` is the column *store* — a dense array at any index
+    width, or the delta EncodedCols pytree. gather_cols decodes per
+    touched edge (the src gather already in hand supplies the owning
+    row, so delta decode adds exactly one uint16 gather + one add) and
+    always yields int32 — storage width never leaks into frontier ids.
+    """
     exp = lb_expand(sizes, jnp.ones(sizes.shape, bool), cap_out)
     src = base[exp.in_pos]
     edge_id = row_offsets[src] + exp.rank
     edge_id = jnp.where(exp.valid, edge_id, 0)
-    dst = col_indices[edge_id]
+    dst = S.gather_cols(col_indices, edge_id, src)
     return (jnp.where(exp.valid, src, INVALID),
             jnp.where(exp.valid, dst, INVALID),
             jnp.where(exp.valid, edge_id, INVALID), exp.in_pos,
@@ -154,8 +162,10 @@ def _frontier_base_vertices(graph: Graph, frontier: SparseFrontier,
     if input_kind == "vertex":
         return ids, frontier.valid_mask
     if input_kind == "edge":
-        # an edge item expands the neighbor list of its destination vertex
-        return graph.col_indices[ids], frontier.valid_mask
+        # an edge item expands the neighbor list of its destination
+        # vertex (ids are edge positions; decode-on-gather handles every
+        # storage plan and returns int32 vertex ids)
+        return S.gather_cols(graph.col_store, ids), frontier.valid_mask
     raise ValueError(f"unknown input_kind {input_kind}")
 
 
@@ -190,7 +200,7 @@ def advance(graph: Graph, frontier: SparseFrontier, cap_out: int,
         valid = flags[src_of]
         res = AdvanceResult(
             src=jnp.where(valid, src_of, INVALID)[:cap_out],
-            dst=jnp.where(valid, graph.col_indices, INVALID)[:cap_out],
+            dst=jnp.where(valid, graph.cols(), INVALID)[:cap_out],
             edge_id=jnp.where(valid, slot, INVALID)[:cap_out],
             in_pos=src_of[:cap_out],
             valid=valid[:cap_out],
@@ -220,8 +230,9 @@ def advance(graph: Graph, frontier: SparseFrontier, cap_out: int,
         order = twc_order(sizes)
         base, sizes = base[order], sizes[order]
     expand = B.dispatch("advance", bk, B.SINGLE)
+    cols = B.storage_arg("advance", bk, B.SINGLE, graph=graph)
     src, dst, edge_id, in_pos, rank, valid, total = expand(
-        graph.row_offsets, graph.col_indices, base, sizes, cap_out)
+        graph.row_offsets, cols, base, sizes, cap_out)
     if order is not None:
         in_pos = order[in_pos]
     res = AdvanceResult(src=src, dst=dst, edge_id=edge_id, in_pos=in_pos,
@@ -239,8 +250,8 @@ def advance(graph: Graph, frontier: SparseFrontier, cap_out: int,
     return res, data
 
 
-@B.register("advance_batch", B.XLA)
-def _advance_batch_xla(row_offsets: jax.Array, col_indices: jax.Array,
+@B.register("advance_batch", B.XLA, encodings=("dense", "delta"))
+def _advance_batch_xla(row_offsets: jax.Array, col_indices: S.ColStore,
                        base: jax.Array, sizes: jax.Array, cap_out: int):
     """XLA batched advance: vmap the single-lane expansion over the batch
     axis (base/sizes (B, cap_in)); the CSR is closed over and shared.
@@ -276,7 +287,7 @@ def advance_batch(graph: Graph, frontier: BatchedSparseFrontier,
                                                      bool)
         res = AdvanceResult(
             src=jnp.where(valid, src_of[None, :], INVALID)[:, :cap_out],
-            dst=jnp.where(valid, graph.col_indices[None, :],
+            dst=jnp.where(valid, graph.cols()[None, :],
                           INVALID)[:, :cap_out],
             edge_id=jnp.where(valid, slot[None, :], INVALID)[:, :cap_out],
             in_pos=jnp.broadcast_to(src_of[None, :],
@@ -300,8 +311,9 @@ def advance_batch(graph: Graph, frontier: BatchedSparseFrontier,
             base = jnp.take_along_axis(base, order, axis=1)
             sizes = jnp.take_along_axis(sizes, order, axis=1)
         expand = B.dispatch("advance_batch", bk, B.SINGLE)
+        cols = B.storage_arg("advance_batch", bk, B.SINGLE, graph=graph)
         src, dst, edge_id, in_pos, rank, valid, total = expand(
-            graph.row_offsets, graph.col_indices, base, sizes, cap_out)
+            graph.row_offsets, cols, base, sizes, cap_out)
         if order is not None:
             in_pos = jnp.take_along_axis(order, in_pos, axis=1)
         res = AdvanceResult(src=src, dst=dst, edge_id=edge_id,
@@ -331,8 +343,8 @@ def frontier_workload(graph: Graph, frontier) -> jax.Array:
     return jnp.sum(deg, axis=-1).astype(jnp.int32)
 
 
-@B.register("advance_filter", B.XLA)
-def _advance_filter_xla(row_offsets: jax.Array, col_indices: jax.Array,
+@B.register("advance_filter", B.XLA, encodings=("dense", "delta"))
+def _advance_filter_xla(row_offsets: jax.Array, col_indices: S.ColStore,
                         base: jax.Array, sizes: jax.Array,
                         visited: jax.Array, cap_out: int, cap_front: int):
     """XLA advance_filter: the unfused composition the fused Pallas
@@ -352,12 +364,15 @@ def _advance_filter_xla(row_offsets: jax.Array, col_indices: jax.Array,
     keep = keep & (first[safe] == lane)
     ids, length = compact_values(dst, keep, cap_front, backend=B.XLA)
     srcs, _ = compact_values(src, keep, cap_front, backend=B.XLA)
-    return ids, srcs, length, jnp.sum(keep.astype(jnp.int32))
+    # int32-pinned: under jax_enable_x64 jnp.sum would widen the total
+    # and split the while_loop carry dtypes between push and pull
+    return ids, srcs, length, jnp.sum(
+        keep.astype(jnp.int32)).astype(jnp.int32)
 
 
-@B.register("advance_filter_batch", B.XLA)
+@B.register("advance_filter_batch", B.XLA, encodings=("dense", "delta"))
 def _advance_filter_batch_xla(row_offsets: jax.Array,
-                              col_indices: jax.Array, base: jax.Array,
+                              col_indices: S.ColStore, base: jax.Array,
                               sizes: jax.Array, visited: jax.Array,
                               cap_out: int, cap_front: int):
     """Batched XLA advance_filter: vmap the single-lane composition
@@ -394,7 +409,8 @@ def advance_filter(graph: Graph, frontier: SparseFrontier,
     deg = graph.row_offsets[base + 1] - graph.row_offsets[base]
     sizes = jnp.where(valid_in, deg, 0).astype(jnp.int32)
     impl = B.dispatch("advance_filter", bk, B.SINGLE)
-    ids, srcs, length, total = impl(graph.row_offsets, graph.col_indices,
+    cols = B.storage_arg("advance_filter", bk, B.SINGLE, graph=graph)
+    ids, srcs, length, total = impl(graph.row_offsets, cols,
                                     base, sizes,
                                     visited.astype(jnp.int32),
                                     cap_out, cap_front)
@@ -417,8 +433,9 @@ def advance_filter_batch(graph: Graph, frontier: BatchedSparseFrontier,
     deg = graph.row_offsets[base + 1] - graph.row_offsets[base]
     sizes = jnp.where(valid_in, deg, 0).astype(jnp.int32)
     impl = B.dispatch("advance_filter_batch", bk, B.SINGLE)
+    cols = B.storage_arg("advance_filter_batch", bk, B.SINGLE, graph=graph)
     ids, srcs, lengths, totals = impl(graph.row_offsets,
-                                      graph.col_indices, base, sizes,
+                                      cols, base, sizes,
                                       visited.astype(jnp.int32),
                                       cap_out, cap_front)
     return BatchedSparseFrontier(ids=ids, lengths=lengths), srcs, totals
@@ -473,11 +490,15 @@ def advance_pull(graph: Graph, unvisited: DenseFrontier,
     seg = graph.csc_row_seg
     if seg is None:
         seg = row_segments_of(graph.csc_offsets, m)
-    pred_active = current.flags[graph.csc_indices]
+    # the pull sweep touches every CSC slot, so the dense decoded view
+    # costs nothing extra under delta storage (same O(m) stream); going
+    # through the store keeps this generic over Graph / ShardedGraph
+    csc = S.decode_cols(graph.csc_store)
+    pred_active = current.flags[csc]
     # ONE segment-max serves both outputs: the max surviving in-neighbor
     # id is ≥ 0 exactly where any in-neighbor is active (ids are
     # non-negative), so the hit test rides the predecessor sweep free.
-    pred_id = jnp.where(pred_active, graph.csc_indices, -1)
+    pred_id = jnp.where(pred_active, csc, -1)
     preds = jax.ops.segment_max(pred_id, seg, num_segments=n,
                                 indices_are_sorted=True)
     new_flags = (preds >= 0) & unvisited.flags
@@ -730,11 +751,16 @@ def segmented_intersect(graph: Graph, fa: SparseFrontier, fb: SparseFrontier,
                       jnp.where(a_small, deg_a, deg_b), 0).astype(jnp.int32)
     # fused expansion: dst of the small-side advance IS the probe needle
     expand = B.dispatch("advance", bk, B.SINGLE)
+    cols = B.storage_arg("advance", bk, B.SINGLE, graph=graph)
     _, needles, _, pair, _, exp_valid, _ = expand(
-        graph.row_offsets, graph.col_indices, small, sizes, cap_out)
+        graph.row_offsets, cols, small, sizes, cap_out)
     l_vert = large[pair]
     search = B.dispatch("segment_search", bk, B.SINGLE)
-    found = search(graph.col_indices, graph.row_offsets[l_vert],
+    # the probe binary-searches column VALUES in place, so it gets the
+    # dense view (narrow dense compares fine; delta decodes once here)
+    found = search(B.storage_arg("segment_search", bk, B.SINGLE,
+                                 graph=graph),
+                   graph.row_offsets[l_vert],
                    graph.row_offsets[l_vert + 1], needles)
     found = found & exp_valid
     counts = jax.ops.segment_sum(found.astype(jnp.int32), pair,

@@ -33,7 +33,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from . import storage as S
 from .graph import Graph
+
+# What every shard actually holds, whatever the source graph's storage
+# plan chose: partitioning decodes to dense int32 columns and fp32
+# values (the pad sentinel -1 and the shard_map collectives both assume
+# the canonical layout; compressing per-shard slices is future work —
+# the plan still rides the ShardedGraph aux for reporting/provenance).
+SHARD_PLAN = S.StoragePlan(index_dtype="int32", encoding="dense",
+                           value_dtype="fp32")
 
 
 def check_mesh_axis(mesh, axis: str, num_parts: int) -> None:
@@ -159,7 +168,9 @@ class PartitionedGraph:
             ell_width=(self.source.ell_width
                        if self.source is not None else None),
             csc_ell_width=(self.source.csc_ell_width
-                           if self.source is not None else None))
+                           if self.source is not None else None),
+            source_plan=(self.source.plan
+                         if self.source is not None else None))
         return cache[key]
 
 
@@ -199,6 +210,9 @@ class ShardedGraph:
     # static metadata, not a per-shard choice.
     ell_width: Optional[int] = None
     csc_ell_width: Optional[int] = None
+    # the source graph's storage plan (provenance/reporting); the shards
+    # themselves always hold SHARD_PLAN storage — see module constant
+    source_plan: Optional[S.StoragePlan] = None
 
     # per-shard edge→row maps and overflow lists are derived locally by
     # the sharded providers (local offsets differ per device); the
@@ -215,7 +229,7 @@ class ShardedGraph:
                     self.csc_offsets, self.csc_indices,
                     self.csc_edge_values, self.vertex_base)
         aux = (self.n, self.m, self.verts_per_part, self.mesh, self.axis,
-               self.ell_width, self.csc_ell_width)
+               self.ell_width, self.csc_ell_width, self.source_plan)
         return children, aux
 
     @classmethod
@@ -243,6 +257,24 @@ class ShardedGraph:
         return self.edge_values is not None
 
     @property
+    def plan(self) -> S.StoragePlan:
+        """The storage plan of the shard arrays themselves (always
+        SHARD_PLAN — dense int32/fp32); the source graph's plan is
+        ``source_plan``."""
+        return SHARD_PLAN
+
+    @property
+    def col_store(self):
+        """Stacked dense column slices — ShardedGraph storage is always
+        dense, so the store IS the array (keeps ``B.storage_arg``
+        placement-generic in primitives that accept either container)."""
+        return self.col_indices
+
+    @property
+    def csc_store(self):
+        return self.csc_indices
+
+    @property
     def degrees(self) -> jax.Array:
         """Global out-degree vector (n,), assembled from the local row
         slices (pad rows repeat the final offset ⇒ degree 0)."""
@@ -252,8 +284,12 @@ class ShardedGraph:
 
 def partition_1d(graph: Graph, num_parts: int) -> PartitionedGraph:
     ro = np.asarray(graph.row_offsets)
-    ci = np.asarray(graph.col_indices)
-    ev = (np.asarray(graph.edge_values)
+    # decode-to-dense before slicing: shards hold SHARD_PLAN storage
+    # regardless of the source plan (narrow/delta/bf16 sources partition
+    # fine; exact-semiring results stay bit-identical because decode is
+    # exact and fp32 round-trips bf16 values losslessly)
+    ci = graph.cols_np()
+    ev = (np.asarray(graph.edge_values, np.float32)
           if graph.edge_values is not None else None)
     n = graph.num_vertices
     vpp = -(-n // num_parts)  # ceil
@@ -261,8 +297,9 @@ def partition_1d(graph: Graph, num_parts: int) -> PartitionedGraph:
     c_ro = c_ci = c_ev = None
     if graph.has_csc:
         c_ro, c_ci, c_ev, _ = _slice_rows(
-            np.asarray(graph.csc_offsets), np.asarray(graph.csc_indices),
-            (np.asarray(graph.csc_edge_values)
+            np.asarray(graph.csc_offsets),
+            np.asarray(graph.csc_cols()),
+            (np.asarray(graph.csc_edge_values, np.float32)
              if graph.csc_edge_values is not None else None),
             n, num_parts, vpp)
     return PartitionedGraph(n=n, m=graph.num_edges, num_parts=num_parts,

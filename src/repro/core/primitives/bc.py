@@ -67,7 +67,7 @@ def _bc_impl(graph: Graph, esrc: jax.Array, srcs: jax.Array,
     lane's dependency contribution (0 masks a padding lane)."""
     n, m = graph.num_vertices, graph.num_edges
     b = srcs.shape[0]
-    edst = graph.col_indices
+    edst = graph.cols()
     lane = jnp.arange(b)
 
     # ---- forward: BFS levels + sigma accumulation -----------------------

@@ -80,8 +80,9 @@ def _bfs_impl(graph: Graph, srcs: jax.Array, do_a: float, do_b: float,
     b = srcs.shape[0]
     # edge frontiers are worst-case expansion (m); vertex frontiers are
     # post-uniquify and need only min(n, m) — overflow past that is
-    # counted per lane instead of silently sized away
-    cap_v = min(n, m)
+    # counted per lane instead of silently sized away. The floor of 1
+    # keeps the seed frontier representable on an edgeless graph.
+    cap_v = max(min(n, m), 1)
     cap_e = m
     # LB push runs the fused advance_filter over a capacity-tier ladder:
     # each iteration expands in the smallest tier holding its live

@@ -40,7 +40,9 @@ class CCResult(NamedTuple):
 @jax.jit
 def _cc_impl(graph: Graph, src: jax.Array) -> CCResult:
     n, m = graph.num_vertices, graph.num_edges
-    dst = graph.col_indices
+    # dense decoded view, hoisted once before the loop (the hooking sweep
+    # reads every edge every iteration — an in-loop decode would re-run)
+    dst = graph.cols()
 
     def pointer_jump(cid):
         def cond(c):

@@ -47,6 +47,8 @@ def _lp_impl(graph: Graph, labels0: jax.Array, max_iter: int, backend: str,
              block: int, placement: str = B.SINGLE) -> LPResult:
     n = graph.num_vertices
     spmm_op = B.dispatch("spmm", backend, placement)
+    col_store = B.storage_arg("spmm", backend, placement, graph=graph,
+                              side="csr")
     nblk = -(-num_labels // block)
 
     def body(st):
@@ -57,7 +59,7 @@ def _lp_impl(graph: Graph, labels0: jax.Array, max_iter: int, backend: str,
             cols = i * block + jnp.arange(block, dtype=jnp.int32)
             onehot = (labels[:, None] == cols[None, :]).astype(jnp.float32)
             # votes[v, j] = #neighbors of v carrying label cols[j]
-            votes = spmm_op(graph.row_offsets, graph.col_indices, None,
+            votes = spmm_op(graph.row_offsets, col_store, None,
                             onehot, SR.plus_times, ell_width, None,
                             graph.row_seg)
             bs = jnp.max(votes, axis=1)

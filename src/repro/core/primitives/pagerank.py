@@ -59,11 +59,13 @@ def _fixed_tree_sum(x: jax.Array) -> jax.Array:
 
 
 @functools.partial(jax.jit, static_argnames=("max_iter", "backend",
-                                             "ell_width", "placement"))
+                                             "ell_width", "placement",
+                                             "precision"))
 def _pagerank_impl(graph: Graph, inv_deg: jax.Array, damping: jax.Array,
                    tol: jax.Array, max_iter: int, backend: str,
                    ell_width: Optional[int],
-                   placement: str = B.SINGLE) -> PRResult:
+                   placement: str = B.SINGLE,
+                   precision: str = "fp32") -> PRResult:
     n = graph.num_vertices
     # PageRank's sweep is dense — every row contributes every iteration —
     # so it is explicitly PINNED to the top capacity tier (pin=True); the
@@ -72,6 +74,12 @@ def _pagerank_impl(graph: Graph, inv_deg: jax.Array, damping: jax.Array,
     # collective shapes must agree across devices.
     spmv_op, _tiers = B.dispatch_tiered("spmv", backend, placement,
                                         cap=n, pin=True)
+    # the storage-plan column store when the provider decodes it
+    # natively, else the dense fallback view (decoded once, hoisted out
+    # of the iteration loop)
+    csc = B.storage_arg("spmv", backend, placement, graph=graph,
+                        side="csc")
+    sr = SR.with_precision(SR.plus_times, precision)
 
     def body(st: PRState):
         # contribution split: rank × (host-precomputed) reciprocal
@@ -88,8 +96,8 @@ def _pagerank_impl(graph: Graph, inv_deg: jax.Array, damping: jax.Array,
         # CSC edge→row map rides along as build-time metadata so the
         # sweep never re-derives it inside the loop (it was the largest
         # single per-iteration cost of this impl).
-        acc = spmv_op(graph.csc_offsets, graph.csc_indices, None, contrib,
-                      SR.plus_times, ell_width, None, graph.csc_row_seg,
+        acc = spmv_op(graph.csc_offsets, csc, None, contrib,
+                      sr, ell_width, None, graph.csc_row_seg,
                       graph.csc_over_pos, graph.csc_over_row)
         # grouping-fixed sum — see _fixed_tree_sum for why jnp.sum would
         # break placement bit-parity here
@@ -102,7 +110,11 @@ def _pagerank_impl(graph: Graph, inv_deg: jax.Array, damping: jax.Array,
                        n_active=jnp.sum(still).astype(jnp.int32),
                        iters=st.iters + 1)
 
-    state = PRState(rank=jnp.full((n,), 1.0 / n), active=jnp.ones((n,), bool),
+    # float32-pinned: under jax_enable_x64 the bare python literal would
+    # seed a float64 rank vector and the whole loop would run (and
+    # retrace) in double precision
+    state = PRState(rank=jnp.full((n,), 1.0 / n, jnp.float32),
+                    active=jnp.ones((n,), bool),
                     n_active=jnp.int32(n), iters=jnp.int32(0))
     final, iters = run_until(lambda st: st.n_active > 0, body, state,
                              max_iter=max_iter)
@@ -113,11 +125,15 @@ def pagerank(graph, *, damping: float = 0.85, tol: float = 0.0,
              max_iter: int = 20, backend: Optional[str] = None,
              use_kernel: Optional[bool] = None,
              ell_width: Optional[int] = None,
-             placement: Optional[str] = None) -> PRResult:
+             placement: Optional[str] = None,
+             precision: str = "fp32") -> PRResult:
     """``graph`` may be a ``Graph`` or a ``ShardedGraph``
     (``partition_1d(...).shard(mesh)``) — a sharded graph routes the
     SpMV sweep through the mesh providers and the SAME impl otherwise,
-    so ranks bit-match across placements."""
+    so ranks bit-match across placements. ``precision="bf16"`` runs the
+    sweep's ⊗ in bfloat16 (fp32 accumulate) — ranks then agree with the
+    fp32 run to ~1e-2 absolute on a unit-mass vector (the documented
+    parity tolerance; see DESIGN.md §8), not bit-exactly."""
     assert graph.has_csc, "pagerank uses the CSC transpose"
     bk = B.resolve(backend, use_kernel)
     pl, ctx = B.resolve_graph_placement(graph, placement)
@@ -135,7 +151,8 @@ def pagerank(graph, *, damping: float = 0.85, tol: float = 0.0,
         return _pagerank_impl(
             graph, _inv_out_degrees(graph), jnp.float32(damping),
             jnp.float32(tol), max_iter, bk,
-            None if ell_width is None else int(ell_width), pl)
+            None if ell_width is None else int(ell_width), pl,
+            precision)
 
 
 def _inv_out_degrees(graph) -> jax.Array:

@@ -44,6 +44,8 @@ def _reach_impl(graph: Graph, srcs: jax.Array, k: int, backend: str,
     n = graph.num_vertices
     b = srcs.shape[0]
     spmm_op = B.dispatch("spmm", backend, placement)
+    csc = B.storage_arg("spmm", backend, placement, graph=graph,
+                        side="csc")
     r0 = jnp.zeros((n, b), jnp.float32).at[
         srcs, jnp.arange(b, dtype=jnp.int32)].set(1.0)
 
@@ -51,7 +53,7 @@ def _reach_impl(graph: Graph, srcs: jax.Array, k: int, backend: str,
         # complemented mask: rows already reached by EVERY lane cannot
         # change (R is monotone under ⋁), so skip their sweep entirely
         need = jnp.min(r, axis=1) < 1.0
-        new = spmm_op(graph.csc_offsets, graph.csc_indices, None, r,
+        new = spmm_op(graph.csc_offsets, csc, None, r,
                       SR.or_and, ell_width, need, graph.csc_row_seg)
         return jnp.maximum(r, new)
 

@@ -66,6 +66,9 @@ def subgraph_match(graph: Graph, n_q: int,
 
     n = graph.num_vertices
     deg = graph.degrees
+    # dense decoded view, hoisted once: the join loop re-reads the full
+    # adjacency both for expansion and for the binary-search probes
+    ci = graph.cols()
 
     # ---- filtering phase: candidates of query vertex 0 -------------------
     keep = deg >= int(qdeg[0])
@@ -94,7 +97,7 @@ def subgraph_match(graph: Graph, n_q: int,
         exp = ops.lb_expand(sizes, valid_emb, cap_out)
         src_row = exp.in_pos                       # embedding index
         eidx = graph.row_offsets[base[src_row]] + exp.rank
-        cand = graph.col_indices[jnp.where(exp.valid, eidx, 0)]
+        cand = ci[jnp.where(exp.valid, eidx, 0)]
         ok = exp.valid
         # degree / label filter
         ok = ok & (deg[cand] >= int(qdeg[k]))
@@ -105,8 +108,7 @@ def subgraph_match(graph: Graph, n_q: int,
             av = emb[src_row, a]
             lo = graph.row_offsets[jnp.where(ok, av, 0)]
             hi = graph.row_offsets[jnp.where(ok, av, 0) + 1]
-            found = ops._searchsorted_segment(graph.col_indices, lo, hi,
-                                              cand)
+            found = ops._searchsorted_segment(ci, lo, hi, cand)
             ok = ok & found
         # distinctness: candidate must differ from all bound vertices
         for j in range(k):
@@ -128,7 +130,7 @@ def subgraph_match(graph: Graph, n_q: int,
 def subgraph_match_ref(graph: Graph, n_q: int, q_edges) -> int:
     """Brute-force oracle: count ordered embeddings (numpy)."""
     ro = np.asarray(graph.row_offsets)
-    ci = np.asarray(graph.col_indices)
+    ci = graph.cols_np()
     n = len(ro) - 1
     adj = [set(ci[ro[u]:ro[u + 1]]) for u in range(n)]
     q_adj = [[] for _ in range(n_q)]

@@ -42,7 +42,8 @@ def _wtf_impl(graph: Graph, src: jax.Array, damping: jax.Array, k: int,
     src_all = jnp.searchsorted(graph.row_offsets,
                                jnp.arange(m, dtype=jnp.int32),
                                side="right") - 1
-    esrc_csc = graph.csc_indices
+    esrc_csc = graph.csc_cols()
+    edst_csr = graph.cols()
 
     # ---- stage 1: PPR ----------------------------------------------------
     def ppr_body(pr):
@@ -84,7 +85,7 @@ def _wtf_impl(graph: Graph, src: jax.Array, damping: jax.Array, k: int,
         contrib_a = jnp.where(auth_deg > 0, a_new / jnp.maximum(auth_deg,
                                                                 1.0), 0.0)
         h_new = jax.ops.segment_sum(
-            jnp.where(live_csr, contrib_a[graph.col_indices], 0.0), src_all,
+            jnp.where(live_csr, contrib_a[edst_csr], 0.0), src_all,
             num_segments=n, indices_are_sorted=True)
         h_new = jnp.where(hubs, h_new, 0.0)
         return h_new, a_new

@@ -13,7 +13,7 @@ import numpy as np
 
 
 def _csr(graph):
-    return (np.asarray(graph.row_offsets), np.asarray(graph.col_indices),
+    return (np.asarray(graph.row_offsets), graph.cols_np(),
             None if graph.edge_values is None
             else np.asarray(graph.edge_values))
 

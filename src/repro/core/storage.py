@@ -1,0 +1,289 @@
+"""Bandwidth-proportional graph storage (paper §5.4 + ROADMAP
+"compression is speed").
+
+Gunrock's traversal operators are memory-bound: every advance/filter
+step streams the CSR column array, so *bytes per edge* — not FLOPs — is
+the ceiling on traversal throughput. PR 5's tier ladder cut how many
+edges a step touches; this layer cuts how many bytes each touched edge
+costs. Three independent knobs, chosen once at ``Graph.from_csr`` build
+time and carried as a :class:`StoragePlan` in the Graph's static aux
+data (so every jit cache key includes the storage format):
+
+  index dtype   int16 | int32 | int64 — the narrowest dtype that holds
+                every vertex id (and the -1 invalid sentinel). Picked
+                automatically from ``n`` by :func:`plan_for`; an
+                explicit ``index_dtype=`` override must still be wide
+                enough (validated, never silently narrowed).
+  encoding      "dense" — the classic column array, stored at the index
+                dtype. "delta" — per-row anchored deltas: neighbor
+                lists are sorted (a from_csr invariant), so row r is
+                stored as ``anchor[r]`` (its first neighbor id, int32)
+                plus uint16 ``delta[e] = col[e] - anchor[r]``. Escape
+                path: a delta that would exceed 0xFFFE stores the
+                sentinel 0xFFFF and the true value rides in a sorted
+                (position, value) side list — O(log K) fixup on gather,
+                zero cost when K == 0 (the common case: escapes need
+                id ranges wider than 65534 *within one row*).
+  value dtype   "fp32" | "bf16" — requested compute precision for the
+                inexact semirings (plus_times / plus_and): bf16
+                multiply, fp32 accumulate. Exact semirings (min/max/or)
+                ignore it; see linalg.ops for the parity contract.
+
+Anchored deltas (not prefix deltas) keep O(1) random slot access:
+``col[e] = anchor[row(e)] + delta[e]`` needs no scan, so the LB advance
+kernels decode in place with one extra VMEM gather while streaming half
+the bytes. :func:`gather_cols` is the one decode primitive every XLA
+consumer routes through — gathers decode per *touched* edge, never by
+materializing the dense array (that fallback exists too, for providers
+that declare ``encodings=("dense",)``; backend.storage_arg inserts it).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INDEX_DTYPES = ("int16", "int32", "int64")
+ENCODINGS = ("dense", "delta")
+VALUE_DTYPES = ("fp32", "bf16")
+
+# uint16 delta stream: 0xFFFF marks an escaped slot (true value in the
+# side list); 0xFFFE is therefore the largest inline delta.
+DELTA_ESCAPE = 0xFFFF
+DELTA_MAX = 0xFFFE
+
+_NP_INDEX = {"int16": np.int16, "int32": np.int32, "int64": np.int64}
+_JNP_INDEX = {"int16": jnp.int16, "int32": jnp.int32, "int64": jnp.int64}
+# largest representable vertex id per dtype, keeping -1 free as the
+# invalid-lane sentinel (any id ≤ max is distinguishable from -1)
+_MAX_ID = {"int16": 2**15 - 1, "int32": 2**31 - 1, "int64": 2**63 - 1}
+
+
+@dataclass(frozen=True)
+class StoragePlan:
+    """The build-time storage decision. Frozen + hashable (str fields
+    only) so it rides pytree aux data and jit static args unchanged."""
+
+    index_dtype: str = "int32"
+    encoding: str = "dense"
+    value_dtype: str = "fp32"
+
+    def __post_init__(self):
+        if self.index_dtype not in INDEX_DTYPES:
+            raise ValueError(f"index_dtype must be one of {INDEX_DTYPES}, "
+                             f"got {self.index_dtype!r}")
+        if self.encoding not in ENCODINGS:
+            raise ValueError(f"encoding must be one of {ENCODINGS}, "
+                             f"got {self.encoding!r}")
+        if self.value_dtype not in VALUE_DTYPES:
+            raise ValueError(f"value_dtype must be one of {VALUE_DTYPES}, "
+                             f"got {self.value_dtype!r}")
+
+    @property
+    def np_index_dtype(self):
+        return _NP_INDEX[self.index_dtype]
+
+    @property
+    def jnp_index_dtype(self):
+        return _JNP_INDEX[self.index_dtype]
+
+    @property
+    def index_bytes(self) -> int:
+        return np.dtype(self.np_index_dtype).itemsize
+
+
+def plan_for(n: int, *, index_dtype: Optional[str] = None,
+             encoding: str = "dense",
+             value_dtype: str = "fp32") -> StoragePlan:
+    """Pick the storage plan for an ``n``-vertex graph.
+
+    With no override the dtype ladder selects the narrowest type whose
+    id range covers ``n-1`` (int16 up to 32767 vertices, int32 up to
+    2^31-1, int64 beyond). An explicit ``index_dtype`` must still be
+    wide enough — requesting int16 for a 10^6-vertex graph raises
+    instead of corrupting ids. int64 requires ``jax_enable_x64`` (JAX
+    silently truncates 64-bit arrays otherwise); that check lives in
+    Graph.from_csr where the arrays are created.
+    """
+    max_id = max(n - 1, 0)
+    if index_dtype is None:
+        for cand in INDEX_DTYPES:
+            if max_id <= _MAX_ID[cand]:
+                index_dtype = cand
+                break
+    elif index_dtype not in INDEX_DTYPES:
+        raise ValueError(f"index_dtype must be one of {INDEX_DTYPES}, "
+                         f"got {index_dtype!r}")
+    elif max_id > _MAX_ID[index_dtype]:
+        raise ValueError(
+            f"index_dtype={index_dtype!r} cannot hold vertex ids up to "
+            f"{max_id} (max {_MAX_ID[index_dtype]})")
+    return StoragePlan(index_dtype=index_dtype, encoding=encoding,
+                       value_dtype=value_dtype)
+
+
+class EncodedCols(NamedTuple):
+    """Delta-encoded CSR/CSC column storage — a pytree, so it flows
+    through jit / registry dispatch in the positional slot the dense
+    column array normally occupies (providers that declared the
+    ``"delta"`` encoding branch on ``isinstance(..., EncodedCols)`` at
+    trace time).
+
+    anchor   (n,) int32   first neighbor id of each row (0 if empty)
+    delta    (m,) uint16  col - anchor[row]; 0xFFFF = escaped slot
+    esc_pos  (K,) int32   edge positions of escaped slots, ascending
+    esc_val  (K,) int32   true column values at those positions
+    row_seg  (m,) int32   edge→row map (anchors the vectorized decode)
+    """
+
+    anchor: jax.Array
+    delta: jax.Array
+    esc_pos: jax.Array
+    esc_val: jax.Array
+    row_seg: jax.Array
+
+    @property
+    def num_edges(self) -> int:
+        return int(self.delta.shape[0])
+
+    @property
+    def num_escapes(self) -> int:
+        return int(self.esc_pos.shape[0])
+
+
+ColStore = Union[jax.Array, EncodedCols]
+
+
+def encode_delta(offsets: np.ndarray, cols: np.ndarray,
+                 row_seg: np.ndarray) -> EncodedCols:
+    """Host-side (build-time) delta encoder. ``cols`` must be sorted
+    within each row — a ``Graph.from_csr`` invariant — so deltas are
+    non-negative and decoded rows stay sorted (segmented intersection
+    binary-searches them)."""
+    offsets = np.asarray(offsets, np.int64)
+    cols64 = np.asarray(cols, np.int64)
+    seg = np.asarray(row_seg, np.int64)
+    n = len(offsets) - 1
+    anchor = np.zeros(n, np.int32)
+    nonempty = offsets[:-1] < offsets[1:]
+    anchor[nonempty] = cols64[offsets[:-1][nonempty]]
+    d = cols64 - anchor.astype(np.int64)[seg]
+    if len(d) and d.min() < 0:
+        raise ValueError("delta encoding requires sorted neighbor lists "
+                         "(build the Graph with sort_neighbors=True)")
+    esc = np.nonzero(d > DELTA_MAX)[0].astype(np.int32)
+    delta = np.where(d > DELTA_MAX, DELTA_ESCAPE, d).astype(np.uint16)
+    return EncodedCols(
+        anchor=jnp.asarray(anchor),
+        delta=jnp.asarray(delta),
+        esc_pos=jnp.asarray(esc),
+        esc_val=jnp.asarray(cols64[esc].astype(np.int32)
+                            if len(esc) else np.zeros(0, np.int32)),
+        row_seg=jnp.asarray(np.asarray(row_seg, np.int32)))
+
+
+def decode_cols(store: ColStore) -> jax.Array:
+    """Canonical dense int32 column view — the decode-to-dense fallback
+    (vectorized, one gather + one add + an escape scatter, O(m))."""
+    if not isinstance(store, EncodedCols):
+        return store if store.dtype == jnp.int32 else store.astype(jnp.int32)
+    dense = store.anchor[store.row_seg] + store.delta.astype(jnp.int32)
+    if store.num_escapes:
+        dense = dense.at[store.esc_pos].set(store.esc_val)
+    return dense
+
+
+def gather_cols(store: ColStore, eid: jax.Array,
+                src: Optional[jax.Array] = None) -> jax.Array:
+    """Decode-on-gather: column values at edge positions ``eid``, as
+    int32 whatever the storage. THE access primitive for XLA providers —
+    bytes move per touched edge, the dense array is never materialized.
+
+    ``src`` (owning row of each ``eid``, when the caller already has it,
+    e.g. the advance expansion) saves the row_seg lookup; without it the
+    encoded row_seg map supplies the row. Escaped slots are patched via
+    binary search of the sorted escape list (K is 0 for every graph
+    whose per-row id spans fit 16 bits, so the searchsorted branch is
+    compiled out in the common case)."""
+    if store_num_edges(store) == 0:
+        # XLA rejects gathers from a zero-length axis; an edgeless store
+        # has no real slots, so every (masked-out) lane reads 0
+        return jnp.zeros(jnp.shape(eid), jnp.int32)
+    if not isinstance(store, EncodedCols):
+        out = store[eid]
+        return out if out.dtype == jnp.int32 else out.astype(jnp.int32)
+    row = store.row_seg[eid] if src is None else src
+    out = store.anchor[row] + store.delta[eid].astype(jnp.int32)
+    if store.num_escapes:
+        j = jnp.searchsorted(store.esc_pos, eid.astype(jnp.int32))
+        j = jnp.clip(j, 0, store.num_escapes - 1)
+        hit = store.esc_pos[j] == eid
+        out = jnp.where(hit, store.esc_val[j], out)
+    return out
+
+
+def store_num_edges(store: ColStore) -> int:
+    """Edge count of a column store (dense array or delta stream)."""
+    if isinstance(store, EncodedCols):
+        return store.num_edges
+    return int(store.shape[0])
+
+
+def store_bytes(store: Optional[ColStore]) -> int:
+    """Resident bytes of one column store (dense array or delta parts)."""
+    if store is None:
+        return 0
+    if isinstance(store, EncodedCols):
+        return sum(int(np.dtype(a.dtype).itemsize) * int(a.shape[0])
+                   for a in (store.anchor, store.delta,
+                             store.esc_pos, store.esc_val))
+    return int(np.dtype(store.dtype).itemsize) * int(store.shape[0])
+
+
+def resident_bytes(graph) -> dict:
+    """Per-array resident-byte breakdown for a Graph (serving --json and
+    every bench artifact report this next to latency).
+
+    ``bytes_per_edge`` is the headline bandwidth metric: bytes of
+    *column storage* (CSR + CSC neighbor ids, the arrays every
+    advance/SpMV step streams per edge) divided by m. The edge→row maps
+    and offsets are deliberately excluded from the headline — they are
+    loop metadata, not per-edge streamed payload — but appear in the
+    breakdown and in ``total_bytes`` / ``total_bytes_per_edge``.
+    """
+    def _nbytes(a):
+        if a is None:
+            return 0
+        return int(np.dtype(a.dtype).itemsize) * int(np.prod(a.shape))
+
+    arrays = {
+        "row_offsets": _nbytes(graph.row_offsets),
+        "col_storage": store_bytes(graph.col_store),
+        "edge_values": _nbytes(graph.edge_values),
+        "csc_offsets": _nbytes(graph.csc_offsets),
+        "csc_col_storage": store_bytes(graph.csc_store),
+        "csc_edge_values": _nbytes(graph.csc_edge_values),
+        "csc_edge_ids": _nbytes(graph.csc_edge_ids),
+        "row_seg": _nbytes(graph.row_seg),
+        "csc_row_seg": _nbytes(graph.csc_row_seg),
+        "overflow_lists": (_nbytes(graph.over_pos) + _nbytes(graph.over_row)
+                           + _nbytes(graph.csc_over_pos)
+                           + _nbytes(graph.csc_over_row)),
+    }
+    m = max(graph.num_edges, 1)
+    col_bytes = arrays["col_storage"] + arrays["csc_col_storage"]
+    total = sum(arrays.values())
+    plan = getattr(graph, "plan", None)
+    return {
+        "plan": None if plan is None else {
+            "index_dtype": plan.index_dtype, "encoding": plan.encoding,
+            "value_dtype": plan.value_dtype},
+        "arrays": arrays,
+        "column_bytes": col_bytes,
+        "bytes_per_edge": round(col_bytes / m, 3),
+        "total_bytes": total,
+        "total_bytes_per_edge": round(total / m, 3),
+    }

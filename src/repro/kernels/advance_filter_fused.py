@@ -49,12 +49,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from . import runtime, tuner
-from .advance_fused import _lb_body
+from .advance_fused import _lb_body, _split_store
 
 
 def _step(offsets, base, row_offsets, col_indices, vis, bm_prev, ids_prev,
           src_prev, cnt_prev, first, slots, *, cap_in: int, num_edges: int,
-          n: int, iters: int, cap_front: int):
+          n: int, iters: int, cap_front: int, anchor=None):
     """One tile's worth of fused work on value-level state. Shared by the
     single-lane and batched kernels (they differ only in ref slicing)."""
     tile = slots.shape[0]
@@ -67,7 +67,7 @@ def _step(offsets, base, row_offsets, col_indices, vis, bm_prev, ids_prev,
 
     src, dst, _, _, _, valid = _lb_body(
         offsets, base, row_offsets, col_indices, slots,
-        cap_in=cap_in, num_edges=num_edges, iters=iters)
+        cap_in=cap_in, num_edges=num_edges, iters=iters, anchor=anchor)
     valid = valid > 0
     safe_dst = jnp.where(valid, dst, 0)
 
@@ -88,21 +88,24 @@ def _step(offsets, base, row_offsets, col_indices, vis, bm_prev, ids_prev,
     tgt = jnp.where(keep & (gpos < cap_front), gpos, cap_front)
     out_ids = out_ids.at[tgt].set(dst, mode="drop")
     out_src = out_src.at[tgt].set(src, mode="drop")
-    cnt = cnt + jnp.sum(kept)
+    # dtype= pins the count under jax_enable_x64 (int32 sums otherwise
+    # promote to int64 and poison the carried cnt / output ref)
+    cnt = cnt + jnp.sum(kept, dtype=jnp.int32)
     return bm, out_ids, out_src, cnt
 
 
-def _kernel(offsets_ref, base_ref, ro_ref, ci_ref, vis_ref,
+def _kernel(offsets_ref, base_ref, ro_ref, ci_ref, anchor_ref, vis_ref,
             ids_ref, src_ref, cnt_ref, bm_ref, *,
             cap_in: int, num_edges: int, n: int, iters: int, tile: int,
-            cap_front: int):
+            cap_front: int, encoded: bool):
     t = pl.program_id(0)
     slots = t * tile + jax.lax.iota(jnp.int32, tile)
     bm, out_ids, out_src, cnt = _step(
         offsets_ref[...], base_ref[...], ro_ref[...], ci_ref[...],
         vis_ref[...], bm_ref[...], ids_ref[...], src_ref[...],
         cnt_ref[0], t == 0, slots, cap_in=cap_in, num_edges=num_edges,
-        n=n, iters=iters, cap_front=cap_front)
+        n=n, iters=iters, cap_front=cap_front,
+        anchor=anchor_ref[...] if encoded else None)
     bm_ref[...] = bm
     ids_ref[...] = out_ids
     src_ref[...] = out_src
@@ -113,7 +116,7 @@ def _kernel(offsets_ref, base_ref, ro_ref, ci_ref, vis_ref,
                                              "interpret", "tile"))
 def advance_filter_fused_kernel(offsets: jax.Array, base: jax.Array,
                                 row_offsets: jax.Array,
-                                col_indices: jax.Array, visited: jax.Array,
+                                col_indices, visited: jax.Array,
                                 cap_out: int, cap_front: int,
                                 interpret: bool | None = None,
                                 tile: int | None = None):
@@ -121,7 +124,9 @@ def advance_filter_fused_kernel(offsets: jax.Array, base: jax.Array,
 
     offsets:     (cap_in+1,) int32 exclusive prefix sum of masked degrees.
     base:        (cap_in,)   int32 base vertices (invalid lanes 0).
-    row_offsets / col_indices: CSR (m ≥ 1).
+    row_offsets / col_indices: CSR (m ≥ 1); ``col_indices`` may be a
+                 ``storage.EncodedCols`` delta stream, decoded in the
+                 LB body (see ``advance_fused._lb_body``).
     visited:     (n,) int32 bitmap — destinations with a set bit are
                  culled; survivors set their bit for later slots.
 
@@ -132,21 +137,24 @@ def advance_filter_fused_kernel(offsets: jax.Array, base: jax.Array,
     """
     interpret = runtime.interpret_mode(interpret)
     cap_in = offsets.shape[0] - 1
-    m = col_indices.shape[0]
+    ci, anchor, encoded = _split_store(col_indices)
+    m = ci.shape[0]
     n = visited.shape[0]
     if tile is None:
-        tile = tuner.tile_for("advance_filter", cap_out)
+        tile = tuner.tile_for("advance_filter", cap_out,
+                              encoding="delta" if encoded else "dense")
     padded = -(-cap_out // tile) * tile
     iters = max(math.ceil(math.log2(max(cap_in, 2))) + 1, 1)
     grid = (padded // tile,)
     bcast = lambda shape: pl.BlockSpec(shape, lambda i: (0,))
     ids, srcs, cnt, _ = pl.pallas_call(
         functools.partial(_kernel, cap_in=cap_in, num_edges=m, n=n,
-                          iters=iters, tile=tile, cap_front=cap_front),
+                          iters=iters, tile=tile, cap_front=cap_front,
+                          encoded=encoded),
         grid=grid,
         in_specs=[bcast((cap_in + 1,)), bcast((cap_in,)),
-                  bcast(row_offsets.shape), bcast(col_indices.shape),
-                  bcast((n,))],
+                  bcast(row_offsets.shape), bcast(ci.shape),
+                  bcast(anchor.shape), bcast((n,))],
         out_specs=[bcast((cap_front,)), bcast((cap_front,)),
                    bcast((1,)), bcast((n,))],
         out_shape=[jax.ShapeDtypeStruct((cap_front,), jnp.int32),
@@ -154,23 +162,24 @@ def advance_filter_fused_kernel(offsets: jax.Array, base: jax.Array,
                    jax.ShapeDtypeStruct((1,), jnp.int32),
                    jax.ShapeDtypeStruct((n,), jnp.int32)],
         interpret=interpret,
-    )(offsets, base, row_offsets, col_indices,
+    )(offsets, base, row_offsets, ci, anchor,
       visited.astype(jnp.int32))
     total = cnt[0]
     return ids, srcs, jnp.minimum(total, cap_front), total
 
 
-def _batch_kernel(offsets_ref, base_ref, ro_ref, ci_ref, vis_ref,
-                  ids_ref, src_ref, cnt_ref, bm_ref, *,
+def _batch_kernel(offsets_ref, base_ref, ro_ref, ci_ref, anchor_ref,
+                  vis_ref, ids_ref, src_ref, cnt_ref, bm_ref, *,
                   cap_in: int, num_edges: int, n: int, iters: int,
-                  tile: int, cap_front: int):
+                  tile: int, cap_front: int, encoded: bool):
     t = pl.program_id(1)
     slots = t * tile + jax.lax.iota(jnp.int32, tile)
     bm, out_ids, out_src, cnt = _step(
         offsets_ref[0, :], base_ref[0, :], ro_ref[0, :], ci_ref[0, :],
         vis_ref[0, :], bm_ref[0, :], ids_ref[0, :], src_ref[0, :],
         cnt_ref[0, 0], t == 0, slots, cap_in=cap_in, num_edges=num_edges,
-        n=n, iters=iters, cap_front=cap_front)
+        n=n, iters=iters, cap_front=cap_front,
+        anchor=anchor_ref[0, :] if encoded else None)
     bm_ref[0, :] = bm
     ids_ref[0, :] = out_ids
     src_ref[0, :] = out_src
@@ -181,7 +190,7 @@ def _batch_kernel(offsets_ref, base_ref, ro_ref, ci_ref, vis_ref,
                                              "interpret", "tile"))
 def advance_filter_fused_batch_kernel(offsets: jax.Array, base: jax.Array,
                                       row_offsets: jax.Array,
-                                      col_indices: jax.Array,
+                                      col_indices,
                                       visited: jax.Array,
                                       cap_out: int, cap_front: int,
                                       interpret: bool | None = None,
@@ -197,10 +206,12 @@ def advance_filter_fused_batch_kernel(offsets: jax.Array, base: jax.Array,
     interpret = runtime.interpret_mode(interpret)
     b, cap_in1 = offsets.shape
     cap_in = cap_in1 - 1
-    m = col_indices.shape[0]
+    ci, anchor, encoded = _split_store(col_indices)
+    m = ci.shape[0]
     n = visited.shape[1]
     if tile is None:
-        tile = tuner.tile_for("advance_filter", cap_out, lanes=b)
+        tile = tuner.tile_for("advance_filter", cap_out, lanes=b,
+                              encoding="delta" if encoded else "dense")
     padded = -(-cap_out // tile) * tile
     iters = max(math.ceil(math.log2(max(cap_in, 2))) + 1, 1)
     grid = (b, padded // tile)
@@ -208,11 +219,12 @@ def advance_filter_fused_batch_kernel(offsets: jax.Array, base: jax.Array,
     bcast = lambda shape: pl.BlockSpec((1,) + shape, lambda bi, ti: (0, 0))
     ids, srcs, cnt, _ = pl.pallas_call(
         functools.partial(_batch_kernel, cap_in=cap_in, num_edges=m, n=n,
-                          iters=iters, tile=tile, cap_front=cap_front),
+                          iters=iters, tile=tile, cap_front=cap_front,
+                          encoded=encoded),
         grid=grid,
         in_specs=[row((cap_in + 1,)), row((cap_in,)),
-                  bcast(row_offsets.shape), bcast(col_indices.shape),
-                  row((n,))],
+                  bcast(row_offsets.shape), bcast(ci.shape),
+                  bcast(anchor.shape), row((n,))],
         out_specs=[row((cap_front,)), row((cap_front,)),
                    row((1,)), row((n,))],
         out_shape=[jax.ShapeDtypeStruct((b, cap_front), jnp.int32),
@@ -220,7 +232,7 @@ def advance_filter_fused_batch_kernel(offsets: jax.Array, base: jax.Array,
                    jax.ShapeDtypeStruct((b, 1), jnp.int32),
                    jax.ShapeDtypeStruct((b, n), jnp.int32)],
         interpret=interpret,
-    )(offsets, base, row_offsets[None, :], col_indices[None, :],
+    )(offsets, base, row_offsets[None, :], ci[None, :], anchor[None, :],
       visited.astype(jnp.int32))
     totals = cnt[:, 0]
     return ids, srcs, jnp.minimum(totals, cap_front), totals

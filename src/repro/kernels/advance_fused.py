@@ -46,11 +46,21 @@ from . import runtime, tuner
 
 
 def _lb_body(offsets, base, row_offsets, col_indices, slots,
-             *, cap_in: int, num_edges: int, iters: int):
+             *, cap_in: int, num_edges: int, iters: int, anchor=None):
     """Shared kernel body: LB sorted search + fused CSR gathers for one
     tile of output slots. Returns the six masked output vectors; the
     single-lane and batched kernels differ only in how they slice their
-    refs around this."""
+    refs around this.
+
+    ``anchor`` selects the column decode (the PR 6 storage plan): when
+    None, ``col_indices`` is the dense neighbor array (any int dtype,
+    widened to int32 after the gather). When given, ``col_indices`` is
+    the uint16 anchored-delta stream and ``anchor`` the (n,) int32
+    first-neighbor array — the destination decode is one extra VMEM
+    gather, ``dst = anchor[src] + delta[eid]``, and the row id it needs
+    is the ``src`` the LB search just produced, so the decode rides the
+    existing dataflow for free. Escaped streams never reach the kernel
+    (the wrapper falls back to the decoded dense view)."""
     total = offsets[cap_in]
     tile = slots.shape[0]
 
@@ -75,21 +85,27 @@ def _lb_body(offsets, base, row_offsets, col_indices, slots,
     src = base[pos]
     eid = row_offsets[src] + rank
     eid = jnp.where(valid, eid, 0)
-    dst = col_indices[jnp.clip(eid, 0, max(num_edges - 1, 0))]
+    col = col_indices[jnp.clip(eid, 0, max(num_edges - 1, 0))]
+    if anchor is None:
+        dst = col.astype(jnp.int32)
+    else:
+        dst = anchor[src] + col.astype(jnp.int32)
 
     return (jnp.where(valid, src, -1), jnp.where(valid, dst, -1),
             jnp.where(valid, eid, -1), pos, jnp.where(valid, rank, 0),
             valid.astype(jnp.int32))
 
 
-def _kernel(offsets_ref, base_ref, ro_ref, ci_ref,
+def _kernel(offsets_ref, base_ref, ro_ref, ci_ref, anchor_ref,
             src_ref, dst_ref, eid_ref, ipos_ref, rank_ref, valid_ref,
-            *, cap_in: int, num_edges: int, iters: int, tile: int):
+            *, cap_in: int, num_edges: int, iters: int, tile: int,
+            encoded: bool):
     t = pl.program_id(0)
     slots = t * tile + jax.lax.iota(jnp.int32, tile)
     src, dst, eid, pos, rank, valid = _lb_body(
         offsets_ref[...], base_ref[...], ro_ref[...], ci_ref[...], slots,
-        cap_in=cap_in, num_edges=num_edges, iters=iters)
+        cap_in=cap_in, num_edges=num_edges, iters=iters,
+        anchor=anchor_ref[...] if encoded else None)
     src_ref[...] = src
     dst_ref[...] = dst
     eid_ref[...] = eid
@@ -98,10 +114,25 @@ def _kernel(offsets_ref, base_ref, ro_ref, ci_ref,
     valid_ref[...] = valid
 
 
+def _split_store(col_indices):
+    """Kernel operands ``(ci, anchor, encoded)`` for a column store.
+    Dense arrays pass through with a dummy anchor; an escape-free delta
+    stream splits into (uint16 deltas, int32 anchors); a stream WITH
+    escapes decodes to dense right here — the wrapper-level fallback, so
+    the kernel body never needs the sorted-side-list fixup."""
+    from repro.core import storage as S
+    if isinstance(col_indices, S.EncodedCols):
+        if col_indices.num_escapes:
+            return (S.decode_cols(col_indices),
+                    jnp.zeros((1,), jnp.int32), False)
+        return col_indices.delta, col_indices.anchor, True
+    return col_indices, jnp.zeros((1,), jnp.int32), False
+
+
 @functools.partial(jax.jit,
                    static_argnames=("cap_out", "interpret", "tile"))
 def advance_fused_kernel(offsets: jax.Array, base: jax.Array,
-                         row_offsets: jax.Array, col_indices: jax.Array,
+                         row_offsets: jax.Array, col_indices,
                          cap_out: int, interpret: bool | None = None,
                          tile: int | None = None):
     """One-pass LB advance.
@@ -111,7 +142,11 @@ def advance_fused_kernel(offsets: jax.Array, base: jax.Array,
     base:        (cap_in,) int32 base vertex of each input lane (invalid
                  lanes must carry a safe in-range id, e.g. 0).
     row_offsets: (n+1,) int32 CSR offsets.
-    col_indices: (m,)  int32 CSR neighbor ids; m must be ≥ 1.
+    col_indices: (m,) int CSR neighbor ids (m ≥ 1; int16/int32 widen
+                 in-kernel after the gather) or a ``storage.EncodedCols``
+                 delta stream — decoded in place by the kernel (see
+                 ``_lb_body``), streaming uint16 instead of the dense
+                 dtype per edge.
 
     Returns (src, dst, edge_id, in_pos, rank, valid) each (cap_out,) with
     src/dst/edge_id == -1 and rank == 0 on invalid lanes, plus total ()
@@ -124,8 +159,11 @@ def advance_fused_kernel(offsets: jax.Array, base: jax.Array,
     """
     interpret = runtime.interpret_mode(interpret)
     cap_in = offsets.shape[0] - 1
-    m = col_indices.shape[0]
-    tile = tuner.tile_for("advance", cap_out) if tile is None else tile
+    ci, anchor, encoded = _split_store(col_indices)
+    m = ci.shape[0]
+    if tile is None:
+        tile = tuner.tile_for("advance", cap_out,
+                              encoding="delta" if encoded else "dense")
     padded = -(-cap_out // tile) * tile
     iters = max(math.ceil(math.log2(max(cap_in, 2))) + 1, 1)
     grid = (padded // tile,)
@@ -133,28 +171,31 @@ def advance_fused_kernel(offsets: jax.Array, base: jax.Array,
     bcast = lambda shape: pl.BlockSpec(shape, lambda i: (0,))
     src, dst, eid, ipos, rank, valid = pl.pallas_call(
         functools.partial(_kernel, cap_in=cap_in, num_edges=m, iters=iters,
-                          tile=tile),
+                          tile=tile, encoded=encoded),
         grid=grid,
         in_specs=[bcast((cap_in + 1,)), bcast((cap_in,)),
-                  bcast(row_offsets.shape), bcast(col_indices.shape)],
+                  bcast(row_offsets.shape), bcast(ci.shape),
+                  bcast(anchor.shape)],
         out_specs=[pl.BlockSpec((tile,), lambda i: (i,))] * 6,
         out_shape=out_shape,
         interpret=interpret,
-    )(offsets, base, row_offsets, col_indices)
+    )(offsets, base, row_offsets, ci, anchor)
     return (src[:cap_out], dst[:cap_out], eid[:cap_out], ipos[:cap_out],
             rank[:cap_out], valid[:cap_out], offsets[-1])
 
 
-def _batch_kernel(offsets_ref, base_ref, ro_ref, ci_ref,
+def _batch_kernel(offsets_ref, base_ref, ro_ref, ci_ref, anchor_ref,
                   src_ref, dst_ref, eid_ref, ipos_ref, rank_ref, valid_ref,
-                  *, cap_in: int, num_edges: int, iters: int, tile: int):
+                  *, cap_in: int, num_edges: int, iters: int, tile: int,
+                  encoded: bool):
     """Same body as ``_kernel`` with a leading batch-row grid axis: refs
     carry (1, ·) row blocks selected by program_id(0)."""
     t = pl.program_id(1)
     slots = t * tile + jax.lax.iota(jnp.int32, tile)
     src, dst, eid, pos, rank, valid = _lb_body(
         offsets_ref[0, :], base_ref[0, :], ro_ref[0, :], ci_ref[0, :],
-        slots, cap_in=cap_in, num_edges=num_edges, iters=iters)
+        slots, cap_in=cap_in, num_edges=num_edges, iters=iters,
+        anchor=anchor_ref[0, :] if encoded else None)
     src_ref[0, :] = src
     dst_ref[0, :] = dst
     eid_ref[0, :] = eid
@@ -167,7 +208,7 @@ def _batch_kernel(offsets_ref, base_ref, ro_ref, ci_ref,
                    static_argnames=("cap_out", "interpret", "tile"))
 def advance_fused_batch_kernel(offsets: jax.Array, base: jax.Array,
                                row_offsets: jax.Array,
-                               col_indices: jax.Array,
+                               col_indices,
                                cap_out: int, interpret: bool | None = None,
                                tile: int | None = None):
     """Multi-source one-pass LB advance over a (B, tiles) grid.
@@ -182,9 +223,11 @@ def advance_fused_batch_kernel(offsets: jax.Array, base: jax.Array,
     interpret = runtime.interpret_mode(interpret)
     b, cap_in1 = offsets.shape
     cap_in = cap_in1 - 1
-    m = col_indices.shape[0]
+    ci, anchor, encoded = _split_store(col_indices)
+    m = ci.shape[0]
     if tile is None:
-        tile = tuner.tile_for("advance", cap_out, lanes=b)
+        tile = tuner.tile_for("advance", cap_out, lanes=b,
+                              encoding="delta" if encoded else "dense")
     padded = -(-cap_out // tile) * tile
     iters = max(math.ceil(math.log2(max(cap_in, 2))) + 1, 1)
     grid = (b, padded // tile)
@@ -193,14 +236,15 @@ def advance_fused_batch_kernel(offsets: jax.Array, base: jax.Array,
     bcast = lambda shape: pl.BlockSpec((1,) + shape, lambda bi, ti: (0, 0))
     src, dst, eid, ipos, rank, valid = pl.pallas_call(
         functools.partial(_batch_kernel, cap_in=cap_in, num_edges=m,
-                          iters=iters, tile=tile),
+                          iters=iters, tile=tile, encoded=encoded),
         grid=grid,
         in_specs=[row((cap_in + 1,)), row((cap_in,)),
-                  bcast(row_offsets.shape), bcast(col_indices.shape)],
+                  bcast(row_offsets.shape), bcast(ci.shape),
+                  bcast(anchor.shape)],
         out_specs=[pl.BlockSpec((1, tile), lambda bi, ti: (bi, ti))] * 6,
         out_shape=out_shape,
         interpret=interpret,
-    )(offsets, base, row_offsets[None, :], col_indices[None, :])
+    )(offsets, base, row_offsets[None, :], ci[None, :], anchor[None, :])
     return (src[:, :cap_out], dst[:, :cap_out], eid[:, :cap_out],
             ipos[:, :cap_out], rank[:, :cap_out], valid[:, :cap_out],
             offsets[:, -1])

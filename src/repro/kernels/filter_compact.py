@@ -28,8 +28,11 @@ def _kernel(ids_ref, keep_ref, packed_ref, count_ref, *, tile: int):
     lane = jax.lax.iota(jnp.int32, tile)
     # one-hot "scatter": packed[j] = ids[i] where pos[i]==j and keep[i]
     onehot = (pos[:, None] == lane[None, :]) & keep[:, None]
-    packed = jnp.sum(jnp.where(onehot, ids[:, None], 0), axis=0)
-    cnt = jnp.sum(keep.astype(jnp.int32))
+    # dtype= pins the accumulator: under jax_enable_x64 an int32 sum
+    # would promote to int64 and fail the int32 output-ref swap
+    packed = jnp.sum(jnp.where(onehot, ids[:, None], 0), axis=0,
+                     dtype=ids.dtype)
+    cnt = jnp.sum(keep, dtype=jnp.int32)
     packed_ref[...] = jnp.where(lane < cnt, packed, -1)
     count_ref[...] = jnp.full((1,), cnt, jnp.int32)
 
@@ -77,5 +80,5 @@ def filter_compact_kernel(ids: jax.Array, keep: jax.Array,
     valid = local < counts[tile_of]
     out = out.at[jnp.where(valid, gpos, padded)].set(packed[src],
                                                      mode="drop")
-    total = jnp.sum(counts)
+    total = jnp.sum(counts, dtype=jnp.int32)
     return out[:cap], total

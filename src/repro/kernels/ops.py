@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import backend as B
+from repro.core import storage as St
 
 from . import ref, tuner
 from .advance_filter_fused import (advance_filter_fused_batch_kernel,
@@ -53,14 +54,17 @@ def lb_expand(sizes: jax.Array, cap_out: int) -> KExpansion:
                       total=offsets[-1])
 
 
-@B.register("advance", B.PALLAS)
-def advance_fused(row_offsets: jax.Array, col_indices: jax.Array,
+@B.register("advance", B.PALLAS, encodings=("dense", "delta"))
+def advance_fused(row_offsets: jax.Array, col_indices,
                   base: jax.Array, sizes: jax.Array, cap_out: int):
     """Fused LB advance: one pallas_call does the sorted search over the
     degree prefix sum *and* the CSR gathers (paper §5.1.3 + the §5.3
     fusion philosophy). Returns (src, dst, edge_id, in_pos, rank, valid,
     total) — the backend-registry contract shared with the XLA
-    implementation in ``core.operators``."""
+    implementation in ``core.operators``. ``col_indices`` may be dense
+    (any int dtype) or a ``storage.EncodedCols`` delta stream — the
+    kernel decodes anchored deltas in place (escaped streams fall back
+    to a decoded dense view inside the kernel wrapper)."""
     sizes = sizes.astype(jnp.int32)
     offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
                                jnp.cumsum(sizes)])
@@ -70,8 +74,8 @@ def advance_fused(row_offsets: jax.Array, col_indices: jax.Array,
     return src, dst, eid, in_pos, rank, valid > 0, total
 
 
-@B.register("advance_batch", B.PALLAS)
-def advance_fused_batch(row_offsets: jax.Array, col_indices: jax.Array,
+@B.register("advance_batch", B.PALLAS, encodings=("dense", "delta"))
+def advance_fused_batch(row_offsets: jax.Array, col_indices,
                         base: jax.Array, sizes: jax.Array, cap_out: int):
     """Multi-source fused LB advance: base/sizes carry a leading batch
     axis; one pallas_call with an explicit (B, tiles) grid expands all
@@ -87,8 +91,8 @@ def advance_fused_batch(row_offsets: jax.Array, col_indices: jax.Array,
     return src, dst, eid, in_pos, rank, valid > 0, totals
 
 
-@B.register("advance_filter", B.PALLAS)
-def advance_filter_fused(row_offsets: jax.Array, col_indices: jax.Array,
+@B.register("advance_filter", B.PALLAS, encodings=("dense", "delta"))
+def advance_filter_fused(row_offsets: jax.Array, col_indices,
                          base: jax.Array, sizes: jax.Array,
                          visited: jax.Array, cap_out: int, cap_front: int):
     """Fused advance+filter megakernel: LB sorted search, CSR gathers,
@@ -105,9 +109,9 @@ def advance_filter_fused(row_offsets: jax.Array, col_indices: jax.Array,
         visited, cap_out, cap_front, interpret=_interpret())
 
 
-@B.register("advance_filter_batch", B.PALLAS)
+@B.register("advance_filter_batch", B.PALLAS, encodings=("dense", "delta"))
 def advance_filter_fused_batch(row_offsets: jax.Array,
-                               col_indices: jax.Array, base: jax.Array,
+                               col_indices, base: jax.Array,
                                sizes: jax.Array, visited: jax.Array,
                                cap_out: int, cap_front: int):
     """Multi-source fused advance+filter on the (B, tiles) grid; per-lane
@@ -130,8 +134,8 @@ def segment_search(haystack: jax.Array, lo: jax.Array, hi: jax.Array,
                                  interpret=_interpret()) > 0
 
 
-@B.register("spmm", B.PALLAS)
-def semiring_spmm(offsets: jax.Array, indices: jax.Array, values, x,
+@B.register("spmm", B.PALLAS, encodings=("dense", "delta"))
+def semiring_spmm(offsets: jax.Array, indices, values, x,
                   sr, ell_width, mask, row_seg=None) -> jax.Array:
     """Hybrid ELL+COO masked-semiring SpMM over a CSR structure —
     ``Y⟨mask⟩ = A ⊗ X`` with X (nx, k) dense. Registry contract shared
@@ -143,6 +147,13 @@ def semiring_spmm(offsets: jax.Array, indices: jax.Array, values, x,
     ``ell_width`` is static graph metadata chosen at build time
     (``Graph.ell_width`` / ``Graph.csc_ell_width`` via ``Graph.from_csr``)
     so this path performs no host synchronization and is jit-clean.
+
+    ``indices`` may be a ``storage.EncodedCols`` delta stream: the ELL
+    pack gathers through ``storage.gather_cols`` (decode per packed
+    slot, escapes included), so the dense (m,) column array never
+    materializes — the pack IS the decode. The semiring's ``precision``
+    (``SR.with_precision(sr, "bf16")``) controls the ⊗ rounding inside
+    the row kernel and on both fallback paths.
     """
     if ell_width is None:
         raise ValueError(
@@ -151,14 +162,14 @@ def semiring_spmm(offsets: jax.Array, indices: jax.Array, values, x,
             "time by Graph.from_csr / from_edge_list) or pass one "
             "explicitly")
     n = offsets.shape[0] - 1
-    m = indices.shape[0]
+    m = St.store_num_edges(indices)
     deg = offsets[1:] - offsets[:-1]
     w = int(ell_width)
     lanes = jnp.arange(w, dtype=jnp.int32)[None, :]
     starts = offsets[:-1, None]
     idx = jnp.minimum(starts + lanes, m - 1)
     lane_ok = lanes < deg[:, None]
-    nbrs = jnp.where(lane_ok, indices[idx], -1)
+    nbrs = jnp.where(lane_ok, St.gather_cols(indices, idx), -1)
     vals = (jnp.where(lane_ok, jnp.float32(sr.one), 0.0)
             if values is None else values[idx].astype(jnp.float32))
     rowm = (jnp.ones((n,), jnp.int32) if mask is None
@@ -177,8 +188,9 @@ def semiring_spmm(offsets: jax.Array, indices: jax.Array, values, x,
     row = jnp.clip(row, 0, n - 1)
     rank = slot - offsets[row]
     over = rank >= w
-    xv = x[indices]                                       # (m, k)
-    prod = xv if values is None else sr.mul_op(values[:, None], xv)
+    xv = x[St.decode_cols(indices)]                       # (m, k)
+    prod = (sr.round_prod(xv) if values is None
+            else sr.mul_op(values[:, None], xv))
     prod = jnp.where(over[:, None], prod, sr.zero)
     y_over = sr.segment_reduce(prod.astype(jnp.float32), row, n,
                                indices_are_sorted=True)
@@ -187,8 +199,8 @@ def semiring_spmm(offsets: jax.Array, indices: jax.Array, values, x,
     return sr.add_op(y, y_over).astype(jnp.float32)
 
 
-@B.register("spmv", B.PALLAS)
-def semiring_spmv(offsets: jax.Array, indices: jax.Array, values, x,
+@B.register("spmv", B.PALLAS, encodings=("dense", "delta"))
+def semiring_spmv(offsets: jax.Array, indices, values, x,
                   sr, ell_width, mask, row_seg=None, over_pos=None,
                   over_row=None) -> jax.Array:
     """Masked-semiring SpMV — the k=1 column of the SpMM kernel. The
@@ -248,14 +260,18 @@ oracle = ref
 # ---------------------------------------------------------------------------
 
 
-def _probe_graph(cap: int):
+def _probe_graph(cap: int, encoding: str = "dense"):
     import numpy as np
     n = max(cap // 8, 16)
     deg = 8
-    ro = jnp.asarray(np.arange(n + 1, dtype=np.int32) * deg)
-    ci = jnp.asarray(np.random.default_rng(0).integers(
-        0, n, size=n * deg).astype(np.int32))
-    return n, ro, ci
+    ro = np.arange(n + 1, dtype=np.int32) * deg
+    ci = np.sort(np.random.default_rng(0).integers(
+        0, n, size=(n, deg)).astype(np.int32), axis=1).ravel()
+    if encoding == "delta":
+        # measure the real in-kernel decode path: anchored uint16 stream
+        seg = np.repeat(np.arange(n, dtype=np.int32), deg)
+        return n, jnp.asarray(ro), St.encode_delta(ro, ci, seg)
+    return n, jnp.asarray(ro), jnp.asarray(ci)
 
 
 def _time(fn) -> float:
@@ -268,8 +284,8 @@ def _time(fn) -> float:
     return time.monotonic() - t0
 
 
-def _probe_advance(cap: int, tile: int) -> float:
-    n, ro, ci = _probe_graph(cap)
+def _probe_advance(cap: int, tile: int, encoding: str = "dense") -> float:
+    n, ro, ci = _probe_graph(cap, encoding)
     k = min(n, max(cap // 8, 1))
     base = jnp.arange(k, dtype=jnp.int32) % n
     sizes = jnp.full((k,), 8, jnp.int32)
@@ -279,13 +295,14 @@ def _probe_advance(cap: int, tile: int) -> float:
         offsets, base, ro, ci, cap, interpret=_interpret(), tile=tile))
 
 
-def _probe_advance_filter(cap: int, tile: int) -> float:
+def _probe_advance_filter(cap: int, tile: int,
+                          encoding: str = "dense") -> float:
     if tile > 4096:
         # in-tile culling is O(tile²) (the lane comparison matrix);
         # tiles past 4k are never competitive and the probe's matrix
         # alone would be gigabytes — skip the candidate
         raise ValueError("advance_filter tile too large to probe")
-    n, ro, ci = _probe_graph(cap)
+    n, ro, ci = _probe_graph(cap, encoding)
     k = min(n, max(cap // 8, 1))
     base = jnp.arange(k, dtype=jnp.int32) % n
     sizes = jnp.full((k,), 8, jnp.int32)

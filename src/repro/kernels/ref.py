@@ -69,7 +69,8 @@ def filter_compact_ref(ids: jax.Array, keep: jax.Array):
     out = jnp.full((cap,), -1, ids.dtype)
     tgt = jnp.where(keep, pos, cap)
     out = out.at[tgt].set(ids, mode="drop")
-    return out, jnp.sum(keep.astype(jnp.int32))
+    # dtype= keeps the count int32 under jax_enable_x64
+    return out, jnp.sum(keep, dtype=jnp.int32)
 
 
 def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,

@@ -19,16 +19,19 @@ choice:
 
 Cache format (JSON, committed or pointed at via ``REPRO_TUNE_CACHE``):
 
-    {"version": 1,
-     "entries": {"<op>|<tier>|<platform>": {"tile": 1024,
-                                            "ms": 0.41, ...}}}
+    {"version": 2,
+     "entries": {"<op>|<tier>|<platform>|<encoding>": {"tile": 1024,
+                                                       "ms": 0.41, ...}}}
 
 ``tier`` is the power-of-two bucket of the capacity (the same ladder the
 tiered dispatch in ``core.backend`` switches over), ``platform`` comes
 from ``runtime.platform()`` — interpret-mode measurements never leak
-onto compiled TPU runs. Bumping ``_VERSION`` invalidates every entry
-(schema or cost-model changes); unknown versions are ignored, never
-deleted.
+onto compiled TPU runs — and ``encoding`` is the column storage format
+("dense" | "delta", PR 6): a delta-decoding kernel does strictly more
+VPU work per lane than a dense gather, so its best tile is measured
+separately. Bumping ``_VERSION`` invalidates every entry (schema or
+cost-model changes — version 1 entries lacked the encoding axis and are
+dropped on load); unknown versions are ignored, never deleted.
 
 Env switches:
   REPRO_TUNE=0       ignore the cache entirely (pure heuristic defaults)
@@ -47,7 +50,9 @@ import os
 import time
 from typing import Callable, Dict, Optional
 
-_VERSION = 1
+# v2: cache keys gained the storage-encoding axis (PR 6); v1 entries
+# (no encoding suffix) are invalidated wholesale on load.
+_VERSION = 2
 
 DEFAULT_MIN_TILE = 512
 DEFAULT_MAX_GRID = 128
@@ -119,8 +124,9 @@ def tier_of(cap: int, min_tile: int = DEFAULT_MIN_TILE) -> int:
     return max(min(pow2_ceil(max(cap, 1)), 1 << 30), min_tile)
 
 
-def _key(op: str, cap: int, platform: str, min_tile: int) -> str:
-    return f"{op}|{tier_of(cap, min_tile)}|{platform}"
+def _key(op: str, cap: int, platform: str, min_tile: int,
+         encoding: str = "dense") -> str:
+    return f"{op}|{tier_of(cap, min_tile)}|{platform}|{encoding}"
 
 
 def default_tile(cap: int, lanes: int = 1,
@@ -140,17 +146,24 @@ def default_tile(cap: int, lanes: int = 1,
 
 def tile_for(op: str, cap: int, *, lanes: int = 1,
              min_tile: int = DEFAULT_MIN_TILE,
-             max_grid: int = DEFAULT_MAX_GRID) -> int:
-    """Tile size for one kernel launch of ``op`` at capacity ``cap``.
+             max_grid: int = DEFAULT_MAX_GRID,
+             encoding: str = "dense") -> int:
+    """Tile size for one kernel launch of ``op`` at capacity ``cap``
+    under column storage ``encoding``.
 
     Called at trace time with static values. A measured cache entry for
-    (op, tier(cap), platform) wins; the clamped heuristic is the
-    fallback. The returned tile is always ≤ pow2_ceil(cap).
+    (op, tier(cap), platform, encoding) wins; a dense measurement at the
+    same tier is the second choice for an unmeasured delta launch (same
+    memory shape, slightly more per-lane work); the clamped heuristic is
+    the fallback. The returned tile is always ≤ pow2_ceil(cap).
     """
     if _enabled():
         from . import runtime
-        entry = _load()["entries"].get(_key(op, cap, runtime.platform(),
-                                            min_tile))
+        entries = _load()["entries"]
+        entry = entries.get(_key(op, cap, runtime.platform(), min_tile,
+                                 encoding))
+        if entry is None and encoding != "dense":
+            entry = entries.get(_key(op, cap, runtime.platform(), min_tile))
         if entry and "tile" in entry:
             return min(int(entry["tile"]), pow2_ceil(max(cap, 1)))
     return default_tile(cap, lanes=lanes, min_tile=min_tile,
@@ -190,32 +203,38 @@ def candidates(cap: int, min_tile: int = 128) -> list[int]:
 
 def autotune(op: str, cap: int, probe: Optional[Callable] = None, *,
              repeats: int = 3, force: bool = False,
-             min_tile: int = DEFAULT_MIN_TILE) -> int:
+             min_tile: int = DEFAULT_MIN_TILE,
+             encoding: str = "dense") -> int:
     """Measure candidate tiles for ``op`` at ``cap`` and persist the
-    winner under (op, tier, platform). Requires REPRO_TUNE=1 (or
-    ``force=True``); must run at top level, never inside a trace.
+    winner under (op, tier, platform, encoding). Requires REPRO_TUNE=1
+    (or ``force=True``); must run at top level, never inside a trace.
     Returns the selected tile."""
     from . import runtime
     probe = probe or PROBES.get(op)
     if probe is None:
         raise KeyError(f"no tuning probe registered for op {op!r}")
     if not force and os.environ.get("REPRO_TUNE") != "1":
-        return tile_for(op, cap, min_tile=min_tile)
+        return tile_for(op, cap, min_tile=min_tile, encoding=encoding)
     cache = _load()
-    key = _key(op, cap, runtime.platform(), min_tile)
+    key = _key(op, cap, runtime.platform(), min_tile, encoding)
     if not force and key in cache["entries"]:
         return int(cache["entries"][key]["tile"])
+    # probes that model the storage encoding accept it as a kwarg; the
+    # others measure their one (dense) workload under any key
+    import inspect
+    kw = ({"encoding": encoding}
+          if "encoding" in inspect.signature(probe).parameters else {})
     best_tile, best_s = None, float("inf")
     for tile in candidates(cap):
         try:
-            probe(cap, tile)                         # compile / warm
-            s = min(probe(cap, tile) for _ in range(repeats))
+            probe(cap, tile, **kw)                   # compile / warm
+            s = min(probe(cap, tile, **kw) for _ in range(repeats))
         except Exception:                            # tile unsupported
             continue
         if s < best_s:
             best_tile, best_s = tile, s
     if best_tile is None:
-        return tile_for(op, cap, min_tile=min_tile)
+        return tile_for(op, cap, min_tile=min_tile, encoding=encoding)
     cache["entries"][key] = {"tile": int(best_tile),
                              "ms": round(best_s * 1e3, 4),
                              "cap": int(cap),
@@ -227,11 +246,19 @@ def autotune(op: str, cap: int, probe: Optional[Callable] = None, *,
 def autotune_all(caps: list[int], ops: Optional[list[str]] = None,
                  force: bool = True) -> dict:
     """Tune every registered probe over a capacity ladder (the CLI /
-    bench entry point). Returns {(op, cap): tile}."""
+    bench entry point). Returns {(op, cap, encoding): tile}. Ops whose
+    probe models the storage encoding are measured once per encoding;
+    the rest get one dense measurement."""
+    import inspect
     picked = {}
     for op in (ops or sorted(PROBES)):
+        encodings = (("dense", "delta")
+                     if "encoding" in inspect.signature(
+                         PROBES[op]).parameters else ("dense",))
         for cap in caps:
-            picked[(op, cap)] = autotune(op, cap, force=force)
+            for enc in encodings:
+                picked[(op, cap, enc)] = autotune(op, cap, force=force,
+                                                  encoding=enc)
     return picked
 
 
@@ -247,8 +274,8 @@ def main(argv=None) -> None:
     ops = args.ops.split(",") if args.ops else None
     caps = [int(c) for c in args.caps.split(",")]
     picked = autotune_all(caps, ops)
-    for (op, cap), tile in sorted(picked.items()):
-        print(f"{op:16s} cap={cap:<8d} -> tile {tile}")
+    for (op, cap, enc), tile in sorted(picked.items()):
+        print(f"{op:16s} cap={cap:<8d} {enc:5s} -> tile {tile}")
     print(f"# cache: {cache_path()}")
 
 

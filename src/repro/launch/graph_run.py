@@ -31,17 +31,20 @@ from repro.core.primitives import (bc, bc_batch, bfs, bfs_batch,
                                    who_to_follow)
 
 
-def make_graph(kind: str, scale: int, edge_factor: int, seed: int):
+def make_graph(kind: str, scale: int, edge_factor: int, seed: int,
+               index_dtype: str | None = None, encoding: str = "dense"):
+    plan = dict(index_dtype=index_dtype, encoding=encoding)
     if kind == "rmat":
-        return G.rmat(scale, edge_factor, seed=seed, weighted=True)
+        return G.rmat(scale, edge_factor, seed=seed, weighted=True, **plan)
     if kind == "rgg":
         n = 1 << scale
         import math
         radius = math.sqrt(8.0 / n)   # ~avg degree 8·π/4
-        return G.random_geometric(n, radius, seed=seed, weighted=True)
+        return G.random_geometric(n, radius, seed=seed, weighted=True,
+                                  **plan)
     if kind == "grid":
         side = int((1 << scale) ** 0.5)
-        return G.grid2d(side, weighted=True, seed=seed)
+        return G.grid2d(side, weighted=True, seed=seed, **plan)
     raise ValueError(kind)
 
 

@@ -50,6 +50,7 @@ import numpy as np
 
 from repro.core import backend as B
 from repro.core import ref as R
+from repro.core.storage import resident_bytes
 from repro.core.primitives import bfs_batch, pagerank, reach_batch, \
     sssp_batch
 
@@ -315,6 +316,13 @@ def main(argv=None):
     ap.add_argument("--scale", type=int, default=12)
     ap.add_argument("--edge-factor", type=int, default=16)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--index-dtype", default=None,
+                    choices=("int16", "int32", "int64"),
+                    help="vertex-id width for the served graph (default: "
+                         "narrowest safe width)")
+    ap.add_argument("--encoding", default="dense",
+                    choices=("dense", "delta"),
+                    help="CSR/CSC column storage encoding")
     ap.add_argument("--primitive", default="bfs", choices=("bfs", "sssp"))
     ap.add_argument("--kinds", default=None, metavar="K0,K1,...",
                     help=f"serve a MIXED stream over these query kinds "
@@ -342,7 +350,9 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     bk = B.resolve(args.backend)
-    g = make_graph(args.graph, args.scale, args.edge_factor, args.seed)
+    g = make_graph(args.graph, args.scale, args.edge_factor, args.seed,
+                   index_dtype=args.index_dtype, encoding=args.encoding)
+    storage = resident_bytes(g)
     rng = np.random.default_rng(args.seed)
     kinds = None
     if args.kinds:
@@ -377,6 +387,11 @@ def main(argv=None):
           f"n={g.num_vertices} m={g.num_edges} kinds={what} "
           f"batch={args.batch} backend={bk} "
           f"placement={'sharded' if args.parts else 'single'}")
+    pl = storage["plan"]
+    print(f"[graph_serve] storage: {pl['index_dtype']}/{pl['encoding']} "
+          f"{storage['total_bytes'] / 2**20:.1f} MiB resident, "
+          f"{storage['bytes_per_edge']} column bytes/edge "
+          f"({storage['total_bytes_per_edge']} total)")
 
     if kinds:
         run_warm = runner if runner is not None else \
@@ -403,6 +418,7 @@ def main(argv=None):
         sources = rng.integers(0, g.num_vertices, args.requests)
         stats = serve(g, args.primitive, sources, args.batch, bk,
                       validate=args.validate)
+    stats["storage"] = storage
     print(f"[graph_serve] {stats['requests']} queries in "
           f"{stats['total_s']:.2f}s = {stats['qps']:.1f} q/s  "
           f"(lat ms mean {stats['lat_ms_mean']} p50 {stats['lat_ms_p50']} "

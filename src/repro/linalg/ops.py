@@ -61,6 +61,7 @@ import numpy as np
 
 from repro.core import backend as B
 from repro.core import operators as _ops
+from repro.core import storage as St
 from repro.core.graph import Graph
 
 from . import semiring as S
@@ -110,7 +111,7 @@ def hybrid_ell_reduce(offsets, indices, values, x, sr: Semiring,
     apply masks.
     """
     nrows = int(offsets.shape[0]) - 1
-    m = int(indices.shape[0])
+    m = St.store_num_edges(indices)
     width = max(int(width), 1)
     wp = 1
     while wp < width:
@@ -120,8 +121,11 @@ def hybrid_ell_reduce(offsets, indices, values, x, sr: Semiring,
     lanes = jnp.arange(wp, dtype=jnp.int32)
     e = jnp.minimum(starts[:, None] + lanes[None, :], max(m - 1, 0))
     lane_ok = lanes[None, :] < jnp.minimum(deg, width)[:, None]
-    xi = x[jnp.clip(indices[e], 0, x.shape[0] - 1)]   # pad ids may be -1
-    prod = xi if values is None else sr.mul_op(values[e], xi)
+    # gather_cols decodes the touched (row, lane) slots in place when the
+    # store is delta-encoded — the ELL block never materializes dense ids
+    xi = x[jnp.clip(St.gather_cols(indices, e), 0,
+                    x.shape[0] - 1)]                  # pad ids may be -1
+    prod = sr.round_prod(xi) if values is None else sr.mul_op(values[e], xi)
     prod = jnp.where(lane_ok, prod, sr.zero)
     k = wp
     while k > 1:                      # explicit halving: grouping fixed
@@ -130,9 +134,9 @@ def hybrid_ell_reduce(offsets, indices, values, x, sr: Semiring,
     y = prod[:, 0]
     if over_pos is not None:
         if int(over_pos.shape[0]):
-            ov = x[indices[over_pos]]
-            if values is not None:
-                ov = sr.mul_op(values[over_pos], ov)
+            ov = x[St.gather_cols(indices, over_pos)]
+            ov = (sr.round_prod(ov) if values is None
+                  else sr.mul_op(values[over_pos], ov))
             y = sr.scatter_accum(y, over_row, ov)
         return y
     # masked drop-scatter fallback (per-shard): rank ≥ width continues
@@ -142,44 +146,46 @@ def hybrid_ell_reduce(offsets, indices, values, x, sr: Semiring,
     over = rank >= width
     if edge_valid is not None:
         over = over & edge_valid
-    ov = x[jnp.clip(indices, 0, x.shape[0] - 1)]
-    if values is not None:
-        ov = sr.mul_op(values, ov)
+    ov = x[jnp.clip(St.decode_cols(indices), 0, x.shape[0] - 1)]
+    ov = sr.round_prod(ov) if values is None else sr.mul_op(values, ov)
     return sr.scatter_accum(y, jnp.where(over, seg, nrows), ov)
 
 
-@B.register("spmv", B.XLA)
+@B.register("spmv", B.XLA, encodings=("dense", "delta"))
 def _spmv_xla(offsets, indices, values, x, sr: Semiring, ell_width, mask,
               row_seg=None, over_pos=None, over_row=None):
     """Hybrid ELL-tree + overflow-scatter sweep when the Graph's static
     width metadata is available (the hot path — PageRank's loop lives
     here); gather + semiring segment reduce otherwise (raw-CSR callers,
-    bit-identical to the pre-refactor pagerank sweep)."""
+    bit-identical to the pre-refactor pagerank sweep). ``indices`` may
+    be a delta-encoded store: the ELL block decodes per touched slot
+    (gather_cols); the whole-edge fallback decodes vectorized."""
     n = int(offsets.shape[0]) - 1
-    m = int(indices.shape[0])
+    m = St.store_num_edges(indices)
     if ell_width is not None and m > 0 and over_pos is not None:
         y = hybrid_ell_reduce(offsets, indices, values, x, sr,
                               int(ell_width), over_pos=over_pos,
                               over_row=over_row)
     else:
         seg = _row_segments(offsets, m) if row_seg is None else row_seg
-        xv = x[indices]
-        prod = xv if values is None else sr.mul_op(values, xv)
+        xv = x[St.decode_cols(indices)]
+        prod = sr.round_prod(xv) if values is None else sr.mul_op(values, xv)
         y = sr.segment_reduce(prod, seg, n, indices_are_sorted=True)
     deg = offsets[1:] - offsets[:-1]
     y = jnp.where(deg > 0, y, sr.zero)  # empty rows ⇒ ⊕-identity
     return _apply_mask(y, mask, sr.zero).astype(jnp.float32)
 
 
-@B.register("spmm", B.XLA)
+@B.register("spmm", B.XLA, encodings=("dense", "delta"))
 def _spmm_xla(offsets, indices, values, x, sr: Semiring, ell_width, mask,
               row_seg=None):
     del ell_width
     n = int(offsets.shape[0]) - 1
-    m = int(indices.shape[0])
+    m = St.store_num_edges(indices)
     seg = _row_segments(offsets, m) if row_seg is None else row_seg
-    xv = x[indices]                                   # (m, k)
-    prod = xv if values is None else sr.mul_op(values[:, None], xv)
+    xv = x[St.decode_cols(indices)]                   # (m, k)
+    prod = (sr.round_prod(xv) if values is None
+            else sr.mul_op(values[:, None], xv))
     y = sr.segment_reduce(prod, seg, n, indices_are_sorted=True)
     deg = offsets[1:] - offsets[:-1]
     y = jnp.where((deg > 0)[:, None], y, sr.zero)
@@ -233,21 +239,24 @@ _mxm_xla = B.register("mxm", B.XLA)(
 
 
 def _csr_side(a, transpose: bool):
-    """Resolve (offsets, indices, values, ell_width, row_seg) from a
+    """Resolve (offsets, store, values, ell_width, row_seg) from a
     Graph / ShardedGraph (CSR or its CSC mirror) or a raw (offsets,
-    indices, values) triple. A ShardedGraph yields the (p, …) stacked
-    per-device slices the sharded registry providers understand (its
-    per-shard edge→row maps are derived locally, so row_seg is None)."""
+    indices, values) triple. The column slot is the graph's *native*
+    store (dense at the plan dtype, or the EncodedCols delta pytree) —
+    wrappers run it through ``B.coerce_store`` for the provider that
+    will execute. A ShardedGraph yields the (p, …) stacked per-device
+    slices the sharded registry providers understand (its per-shard
+    edge→row maps are derived locally, so row_seg is None)."""
     from repro.core.partition import ShardedGraph
     if isinstance(a, (Graph, ShardedGraph)):
         if transpose:
             if not a.has_csc:
                 raise ValueError("transpose=True needs the CSC mirror "
                                  "(build_csc=True)")
-            return (a.csc_offsets, a.csc_indices, a.csc_edge_values,
+            return (a.csc_offsets, a.csc_store, a.csc_edge_values,
                     a.csc_ell_width, a.csc_row_seg, a.csc_over_pos,
                     a.csc_over_row)
-        return (a.row_offsets, a.col_indices, a.edge_values, a.ell_width,
+        return (a.row_offsets, a.col_store, a.edge_values, a.ell_width,
                 a.row_seg, a.over_pos, a.over_row)
     if transpose:
         raise ValueError(
@@ -285,7 +294,8 @@ def spmv(a, x, *, semiring=plus_times, mask=None, complement: bool = False,
          transpose: bool = False, structural: bool = False,
          ell_width: Optional[int] = None, backend: Optional[str] = None,
          use_kernel: Optional[bool] = None,
-         placement: Optional[str] = None) -> jax.Array:
+         placement: Optional[str] = None,
+         precision: str = "fp32") -> jax.Array:
     """Masked semiring SpMV: ``y⟨mask⟩ = A ⊗ x`` (y (n,), x dense).
 
     ``transpose=True`` multiplies by Aᵀ via the CSC mirror (the pull /
@@ -294,12 +304,15 @@ def spmv(a, x, *, semiring=plus_times, mask=None, complement: bool = False,
     ``complement=True`` flips it. Masked-out rows hold the ⊕-identity.
     ``a`` may be a ``ShardedGraph`` (``partition_1d(...).shard(mesh)``):
     the sweep then runs row-partitioned under shard_map and bit-matches
-    the single-device result.
+    the single-device result. ``precision="bf16"`` rounds the ⊗ operands
+    to bfloat16 (fp32 accumulate); only the plus-accumulating semirings
+    admit it (see semiring.with_precision).
     """
-    sr = S.get(semiring)
+    sr = S.with_precision(semiring, precision)
     bk = B.resolve(backend, use_kernel)
     pl, ctx = B.resolve_graph_placement(a, placement)
     off, idx, vals, meta_w, seg, opos, orow = _csr_side(a, transpose)
+    idx = B.coerce_store("spmv", bk, pl, store=idx)
     if structural:
         vals = None
     w = _ell_or_raise(ell_width, meta_w, bk if pl == B.SINGLE else B.XLA)
@@ -314,17 +327,19 @@ def spmm(a, x, *, semiring=plus_times, mask=None, complement: bool = False,
          transpose: bool = False, structural: bool = False,
          ell_width: Optional[int] = None, backend: Optional[str] = None,
          use_kernel: Optional[bool] = None,
-         placement: Optional[str] = None) -> jax.Array:
+         placement: Optional[str] = None,
+         precision: str = "fp32") -> jax.Array:
     """Dense-accumulator semiring SpMM: ``Y⟨mask⟩ = A ⊗ X`` (X (nx, k)).
 
     The whole-frontier batched product: each column of X is one lane
     (a reachability source, a label block). Same mask/transpose/
-    structural/placement semantics as ``spmv``.
+    structural/placement/precision semantics as ``spmv``.
     """
-    sr = S.get(semiring)
+    sr = S.with_precision(semiring, precision)
     bk = B.resolve(backend, use_kernel)
     pl, ctx = B.resolve_graph_placement(a, placement)
     off, idx, vals, meta_w, seg, _, _ = _csr_side(a, transpose)
+    idx = B.coerce_store("spmm", bk, pl, store=idx)
     if structural:
         vals = None
     w = _ell_or_raise(ell_width, meta_w, bk if pl == B.SINGLE else B.XLA)
@@ -359,10 +374,13 @@ def spmsv(a, ids, xvals=None, *, semiring=plus_times, mask=None,
     sr = S.get(semiring)
     bk = B.resolve(backend, use_kernel)
     off, idx, vals, _, _, _, _ = _csr_side(a, transpose=False)
+    # spmsv's expansion runs the "advance" hot path, whose providers
+    # decode the delta stream natively — coerce against that op
+    idx = B.coerce_store("advance", bk, B.SINGLE, store=idx)
     if structural:
         vals = None
     n = int(off.shape[0]) - 1
-    m = int(idx.shape[0])
+    m = St.store_num_edges(idx)
     ids = jnp.asarray(ids, jnp.int32)
     valid_in = ids >= 0
     base = jnp.where(valid_in, ids, 0)
@@ -444,6 +462,13 @@ def mxm(a, b, mask, *, semiring=plus_times, b_transpose: bool = False,
             "Graph (e.g. pg.source)")
     a_off, a_idx, a_vals = _csr_side(a, transpose=False)[:3]
     bt_off, bt_idx, bt_vals = _csr_side(b, transpose=not b_transpose)[:3]
+    # decide shared-structure on the native stores (identity), THEN
+    # coerce — decoding twice would break the `is` check and the
+    # SmallLarge swap with it
+    shared_store = (a_off is bt_off) and (a_idx is bt_idx)
+    a_idx = B.coerce_store("mxm", bk, pl, store=a_idx)
+    bt_idx = a_idx if shared_store else B.coerce_store("mxm", bk, pl,
+                                                       store=bt_idx)
     if structural:
         a_vals = bt_vals = None
     msrc = np.asarray(mask[0], np.int32)
@@ -455,7 +480,7 @@ def mxm(a, b, mask, *, semiring=plus_times, b_transpose: bool = False,
     else:
         deg_a = np.diff(np.asarray(a_off))[msrc]
     deg_b = np.diff(np.asarray(bt_off))[mdst]
-    shared = (a_off is bt_off) and (a_idx is bt_idx)
+    shared = shared_store
     if shared:
         a_small = deg_a <= deg_b
         base = np.where(a_small, msrc, mdst)

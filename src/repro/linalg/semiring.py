@@ -21,9 +21,20 @@ trace time with zero runtime branching.
 
 All values are float32 on device; boolean semirings operate on {0.0, 1.0}
 (``and`` is ``minimum``, ``or`` is ``maximum`` on that domain).
+
+Mixed precision (PR 6, the storage plan's ``value_dtype`` knob):
+``with_precision(sr, "bf16")`` derives a variant whose ⊗ rounds both
+operands to bfloat16 before combining and accumulates in float32 —
+halving the multiply-side mantissa while keeping the ⊕ fold exact in
+its own arithmetic. Only the plus-accumulating semirings (plus_times,
+plus_and — PageRank mass flow and intersection counting) admit it; the
+selection semirings (min/max/or — BFS, SSSP, bottleneck) are *exact*
+algorithms whose results are id-like or distance-like, so they reject
+bf16 rather than silently perturbing parity.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 
 import jax
@@ -31,6 +42,7 @@ import jax.numpy as jnp
 
 _ADD = ("plus", "min", "max", "or")
 _MUL = ("times", "plus", "min", "max", "and")
+_PRECISIONS = ("fp32", "bf16")
 
 
 @dataclass(frozen=True)
@@ -45,23 +57,51 @@ class Semiring:
     mul: str     # ⊗: "times" | "plus" | "min" | "max" | "and"
     zero: float  # ⊕ identity
     one: float   # ⊗ identity
+    precision: str = "fp32"  # ⊗ operand rounding: "fp32" | "bf16"
 
     def __post_init__(self):
         if self.add not in _ADD:
             raise ValueError(f"unknown add monoid {self.add!r}")
         if self.mul not in _MUL:
             raise ValueError(f"unknown mul op {self.mul!r}")
+        if self.precision not in _PRECISIONS:
+            raise ValueError(f"unknown precision {self.precision!r}; "
+                             f"expected one of {_PRECISIONS}")
+        if self.precision == "bf16" and self.add != "plus":
+            raise ValueError(
+                f"bf16 precision is only defined for plus-accumulating "
+                f"semirings (plus_times / plus_and); {self.name!r} is an "
+                f"exact selection semiring")
 
     # --- combinators (all shapes, broadcasting) ---------------------------
     def mul_op(self, a: jax.Array, b: jax.Array) -> jax.Array:
-        """⊗ of two arrays (commutative for every supported op)."""
+        """⊗ of two arrays (commutative for every supported op). Under
+        ``precision="bf16"`` both operands round to bfloat16 and the
+        product widens back to float32 for the ⊕ fold."""
+        if self.precision == "bf16":
+            a = jnp.asarray(a, jnp.bfloat16)
+            b = jnp.asarray(b, jnp.bfloat16)
         if self.mul == "times":
-            return a * b
-        if self.mul == "plus":
-            return a + b
-        if self.mul in ("min", "and"):
-            return jnp.minimum(a, b)
-        return jnp.maximum(a, b)
+            out = a * b
+        elif self.mul == "plus":
+            out = a + b
+        elif self.mul in ("min", "and"):
+            out = jnp.minimum(a, b)
+        else:
+            out = jnp.maximum(a, b)
+        if self.precision == "bf16":
+            out = out.astype(jnp.float32)
+        return out
+
+    def round_prod(self, x: jax.Array) -> jax.Array:
+        """⊗-product rounding for the *structural* case (values=None ⇒
+        the product IS the gathered operand, so mul_op never runs):
+        under ``precision="bf16"`` the product stream still carries a
+        bfloat16 mantissa before the fp32 ⊕ fold — the same contract as
+        a stored-value multiply. Identity under fp32."""
+        if self.precision == "bf16":
+            return x.astype(jnp.bfloat16).astype(jnp.float32)
+        return x
 
     def add_op(self, a: jax.Array, b: jax.Array) -> jax.Array:
         """⊕ of two partial reductions (merging ELL and overflow parts)."""
@@ -122,3 +162,15 @@ def get(semiring) -> Semiring:
         raise ValueError(
             f"unknown semiring {semiring!r}; named semirings: "
             f"{sorted(SEMIRINGS)}") from None
+
+
+def with_precision(semiring, precision: str = "fp32") -> Semiring:
+    """The ``precision`` variant of a semiring (still frozen/hashable,
+    so it passes through jit static args and registry dispatch exactly
+    like the named instances). ``"fp32"`` returns the semiring as-is;
+    ``"bf16"`` is rejected for the exact selection semirings — see the
+    module docstring for the parity contract."""
+    sr = get(semiring)
+    if precision == sr.precision:
+        return sr
+    return dataclasses.replace(sr, precision=precision)

@@ -216,6 +216,83 @@ def test_sssp_tiered_bitmatch(rmat_graph, high_degree_src, backend):
                        R.sssp_ref(g, high_degree_src), rtol=1e-5)
 
 
+# ---------------------------------------------------------------------------
+# degenerate graphs through the tiered dispatch (PR 6 satellite):
+# shapes where the tier ladder collapses (0/1 rungs), rows expand to
+# nothing, or one row exceeds every non-top rung by itself
+# ---------------------------------------------------------------------------
+
+
+def _tiered_equals_pinned(g, srcs, backend):
+    rt = bfs_batch(g, srcs, backend=backend, tiered=True)
+    ru = bfs_batch(g, srcs, backend=backend, tiered=False)
+    for f in rt._fields:
+        assert np.array_equal(np.asarray(getattr(rt, f)),
+                              np.asarray(getattr(ru, f))), (f, backend)
+    for i, s in enumerate(srcs):
+        assert np.array_equal(np.asarray(rt.labels[i]), R.bfs_ref(g, s)), i
+    return rt
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("encoding", ["dense", "delta"])
+def test_tiered_edgeless_graph(backend, encoding):
+    """Zero edges: the expansion cap is 0, so the fused tiered path is
+    skipped entirely — every source terminates at depth 0."""
+    e = np.zeros(0, np.int64)
+    g = G.from_edge_list(e, e, n=8, encoding=encoding)
+    assert g.num_edges == 0
+    rt = _tiered_equals_pinned(g, [0, 7], backend)
+    want = np.full(8, -1, np.int32)
+    want[0] = 0
+    assert np.array_equal(np.asarray(rt.labels[0]), want)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_tiered_single_vertex(backend):
+    e = np.zeros(0, np.int64)
+    g = G.from_edge_list(e, e, n=1)
+    rt = _tiered_equals_pinned(g, [0], backend)
+    assert np.asarray(rt.labels[0]).tolist() == [0]
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("encoding", ["dense", "delta"])
+def test_tiered_all_self_loops(backend, encoding):
+    """Every row is exactly one self-loop: frontiers expand into already-
+    visited vertices only, so the traversal must settle after one step
+    (a filter that never compacts anything new)."""
+    ids = np.arange(16, dtype=np.int64)
+    g = G.from_edge_list(ids, ids, n=16, remove_self_loops=False,
+                         encoding=encoding)
+    assert g.num_edges == 16
+    rt = _tiered_equals_pinned(g, [3], backend)
+    want = np.full(16, -1, np.int32)
+    want[3] = 0
+    assert np.array_equal(np.asarray(rt.labels[0]), want)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("encoding", ["dense", "delta"])
+def test_tiered_star_degree_exceeds_lower_rungs(backend, encoding):
+    """A hub whose single-row expansion (1500 edges) exceeds every
+    power-of-two rung below the top: the first step must select the top
+    (exact-cap) rung while the return wave (1500 leaves × degree 1) fits
+    a bottom rung — both directions of the ladder in one traversal."""
+    hub = np.zeros(1500, np.int64)
+    leaves = np.arange(1, 1501, dtype=np.int64)
+    w = np.random.default_rng(0).integers(1, 64, 1500).astype(np.float32)
+    g = G.from_edge_list(hub, leaves, n=1501, undirected=True, values=w,
+                         encoding=encoding)
+    caps = B.tier_plan("advance_filter", g.num_edges)
+    assert caps[0] < 1500 <= caps[-1]
+    rt = _tiered_equals_pinned(g, [0, 1500], backend)
+    assert int(np.asarray(rt.labels[0]).max()) == 1
+    sr = sssp_batch(g, [0], backend=backend, tiered=True)
+    su = sssp_batch(g, [0], backend=backend, tiered=False)
+    assert np.array_equal(np.asarray(sr.dist), np.asarray(su.dist))
+
+
 def test_bfs_tiered_overflow_lane_stays_frozen(rmat_graph):
     """A lane that converges early (empty frontier ⇒ workload 0) keeps
     selecting the bottom rung while the straggler drives the switch —
@@ -251,19 +328,45 @@ def test_default_tile_clamps_to_padded_output():
 
 def test_tile_for_prefers_cache_entry(tmp_path, monkeypatch):
     path = tmp_path / "cache.json"
-    key = f"advance|{tuner.tier_of(4096)}|{runtime.platform()}"
+    key = f"advance|{tuner.tier_of(4096)}|{runtime.platform()}|dense"
     path.write_text(json.dumps(
-        {"version": 1, "entries": {key: {"tile": 2048}}}))
+        {"version": 2, "entries": {key: {"tile": 2048}}}))
     monkeypatch.setenv("REPRO_TUNE_CACHE", str(path))
     monkeypatch.delenv("REPRO_TUNE", raising=False)
     assert tuner.tile_for("advance", 4096) == 2048
     # REPRO_TUNE=0 ignores the cache (pure heuristic)
     monkeypatch.setenv("REPRO_TUNE", "0")
     assert tuner.tile_for("advance", 4096) == tuner.default_tile(4096)
-    # stale schema versions are ignored wholesale
+    # stale schema versions are ignored wholesale — v1 entries lacked
+    # the encoding axis, so the v2 bump invalidates them
     monkeypatch.delenv("REPRO_TUNE", raising=False)
     path.write_text(json.dumps(
-        {"version": 0, "entries": {key: {"tile": 2048}}}))
+        {"version": 1, "entries": {key.rsplit("|", 1)[0]: {"tile": 2048}}}))
+    assert tuner.tile_for("advance", 4096) == tuner.default_tile(4096)
+
+
+def test_tile_for_encoding_axis(tmp_path, monkeypatch):
+    """The v2 cache keys on storage encoding: a delta launch prefers its
+    own measurement, falls back to the dense entry at the same tier, and
+    a dense launch never reads the delta entry."""
+    path = tmp_path / "cache.json"
+    tier = tuner.tier_of(4096)
+    plat = runtime.platform()
+    monkeypatch.setenv("REPRO_TUNE_CACHE", str(path))
+    monkeypatch.delenv("REPRO_TUNE", raising=False)
+    # dense-only cache: delta launches borrow the dense measurement
+    path.write_text(json.dumps({"version": 2, "entries": {
+        f"advance|{tier}|{plat}|dense": {"tile": 2048}}}))
+    assert tuner.tile_for("advance", 4096, encoding="delta") == 2048
+    # both present: each encoding reads its own entry
+    path.write_text(json.dumps({"version": 2, "entries": {
+        f"advance|{tier}|{plat}|dense": {"tile": 2048},
+        f"advance|{tier}|{plat}|delta": {"tile": 1024}}}))
+    assert tuner.tile_for("advance", 4096, encoding="delta") == 1024
+    assert tuner.tile_for("advance", 4096, encoding="dense") == 2048
+    # delta-only cache: a dense launch does NOT borrow backwards
+    path.write_text(json.dumps({"version": 2, "entries": {
+        f"advance|{tier}|{plat}|delta": {"tile": 1024}}}))
     assert tuner.tile_for("advance", 4096) == tuner.default_tile(4096)
 
 
@@ -280,8 +383,9 @@ def test_autotune_persists_measured_tile(tmp_path, monkeypatch):
     tile = tuner.autotune("fake_op", 1024, probe, repeats=1, force=True)
     assert tile == 256
     data = json.loads(path.read_text())
+    assert data["version"] == 2
     entry = data["entries"][
-        f"fake_op|{tuner.tier_of(1024)}|{runtime.platform()}"]
+        f"fake_op|{tuner.tier_of(1024)}|{runtime.platform()}|dense"]
     assert entry["tile"] == 256
     # a second call hits the cache, not the probe
     calls.clear()
