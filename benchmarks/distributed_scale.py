@@ -1,13 +1,21 @@
-"""Sharded-placement scaling benchmark → BENCH_pr4.json.
+"""Placement scaling benchmark (1-D sharded vs 2-D vertex cut)
+→ BENCH_pr7.json.
 
 Runs bfs / sssp / cc / pagerank single-device (the PR 2/3 engine — the
-baseline) and through the sharded placement at 1/2/4-way partitions on
-fake host-platform devices. On CPU the mesh is simulated, so the point
-is the partitioning/exchange OVERHEAD trajectory (and trace-cache reuse
-across queries), not speedup — the speedup story needs real devices.
-Numbers land next to the PR1–PR3 baselines in the repo root.
+baseline), through the 1-D sharded placement at 4/8-way partitions, and
+through the 2-D vertex-cut placement on 2×2 / 2×4 meshes, on fake
+host-platform devices. On CPU the mesh is simulated, so wall time shows
+the partitioning/exchange OVERHEAD trajectory, not speedup — the
+speedup story needs real devices. What IS real on any platform is the
+``comm_bytes_per_step`` column: the analytic bytes each device
+exchanges per BSP step (ring-collective cost model, see
+``repro.core.distributed.exchange_bytes_per_step``). The 2-D win the
+ISSUE measures lives there — traversal exchanges drop from
+n-proportional (1-D replicated-vector all-reduce) to chunk-proportional
+(row psum of (vpc,) uint8 tiles + column gather).
 
-    python benchmarks/distributed_scale.py --scale 12 --json BENCH_pr4.json
+    python benchmarks/distributed_scale.py --scales 12,13,14 \
+        --json BENCH_pr7.json
 """
 import argparse
 import json
@@ -15,7 +23,7 @@ import os
 import time
 
 os.environ.setdefault("XLA_FLAGS",
-                      "--xla_force_host_platform_device_count=4")
+                      "--xla_force_host_platform_device_count=8")
 
 import sys                                                   # noqa: E402
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -28,10 +36,14 @@ from repro.core import graph as G                            # noqa: E402
 from repro.core.distributed import (distributed_bfs,         # noqa: E402
                                     distributed_cc,
                                     distributed_pagerank,
-                                    distributed_sssp)
-from repro.core.partition import partition_1d                # noqa: E402
+                                    distributed_sssp,
+                                    exchange_bytes_per_step)
+from repro.core.partition import (partition_1d,              # noqa: E402
+                                  partition_2d)
 from repro.core.primitives import (bfs, connected_components,  # noqa: E402
                                    pagerank, sssp)
+
+PRIMS = ("bfs", "sssp", "cc", "pagerank")
 
 
 def timeit(fn, reps=3):
@@ -44,56 +56,97 @@ def timeit(fn, reps=3):
     return best * 1e3
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--scale", type=int, default=12)
-    ap.add_argument("--edge-factor", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--json", default="BENCH_pr4.json")
-    args = ap.parse_args()
+def run_prim(primitive, g, pg, mesh, src, iters):
+    if pg is None:
+        return {
+            "bfs": lambda: bfs(g, src).labels,
+            "sssp": lambda: sssp(g, src).dist,
+            "cc": lambda: connected_components(g).labels,
+            "pagerank": lambda: pagerank(g, max_iter=iters).rank,
+        }[primitive]
+    return {
+        "bfs": lambda: distributed_bfs(pg, src, mesh).labels,
+        "sssp": lambda: distributed_sssp(pg, src, mesh).dist,
+        "cc": lambda: distributed_cc(pg, mesh).labels,
+        "pagerank": lambda: distributed_pagerank(pg, mesh, iters=iters),
+    }[primitive]
 
-    g = G.rmat(args.scale, args.edge_factor, seed=args.seed, weighted=True)
+
+def bench_scale(scale, edge_factor, seed, iters, parts_1d, meshes_2d,
+                rows):
+    g = G.rmat(scale, edge_factor, seed=seed, weighted=True)
     deg = np.diff(np.asarray(g.row_offsets))
     src = int(np.argmax(deg))
-    print(f"[bench] rmat scale={args.scale}: n={g.num_vertices} "
+    print(f"[bench] rmat scale={scale}: n={g.num_vertices} "
           f"m={g.num_edges} devices={len(jax.devices())}")
 
-    rows = []
-
-    def emit(primitive, parts, ms, extra=None):
+    def emit(primitive, placement, parts, mesh_shape, ms, pg=None):
+        comm = (0 if pg is None
+                else exchange_bytes_per_step(pg, primitive))
         row = {"bench": "distributed_scale", "primitive": primitive,
-               "parts": parts, "ms": round(ms, 2),
-               "n": g.num_vertices, "m": g.num_edges,
-               "scale": args.scale}
-        row.update(extra or {})
+               "placement": placement, "parts": parts,
+               "mesh": list(mesh_shape) if mesh_shape else None,
+               "ms": round(ms, 2), "comm_bytes_per_step": comm,
+               "n": g.num_vertices, "m": g.num_edges, "scale": scale}
+        if pg is not None:
+            bal = pg.balance()
+            row["edge_imbalance"] = bal["edge_imbalance"]
         rows.append(row)
-        tag = "single" if parts == 1 else f"{parts}-way"
-        print(f"[bench] {primitive:9s} {tag:7s} {ms:9.2f} ms")
+        tag = ("single" if parts == 1
+               else f"{mesh_shape[0]}x{mesh_shape[1]}" if mesh_shape
+               else f"{parts}-way")
+        print(f"[bench] {primitive:9s} {tag:7s} {ms:9.2f} ms  "
+              f"{comm / 1024:8.1f} KiB/step")
 
-    # single-device baselines (the PR 2/3 engine)
-    emit("bfs", 1, timeit(lambda: bfs(g, src).labels))
-    emit("sssp", 1, timeit(lambda: sssp(g, src).dist))
-    emit("cc", 1, timeit(lambda: connected_components(g).labels))
-    emit("pagerank", 1, timeit(lambda: pagerank(g, max_iter=20).rank))
-
-    for p in (2, 4):
+    for prim in PRIMS:
+        emit(prim, "single", 1, None,
+             timeit(run_prim(prim, g, None, None, src, iters)))
+    for p in parts_1d:
         if len(jax.devices()) < p:
             print(f"[bench] skipping {p}-way (only "
                   f"{len(jax.devices())} devices)")
             continue
         pg = partition_1d(g, p)
         mesh = Mesh(np.array(jax.devices()[:p]), ("graph",))
-        bal = pg.balance()
-        extra = {"edge_imbalance": bal["edge_imbalance"]}
-        emit("bfs", p,
-             timeit(lambda: distributed_bfs(pg, src, mesh).labels), extra)
-        emit("sssp", p,
-             timeit(lambda: distributed_sssp(pg, src, mesh).dist), extra)
-        emit("cc", p,
-             timeit(lambda: distributed_cc(pg, mesh).labels), extra)
-        emit("pagerank", p,
-             timeit(lambda: distributed_pagerank(pg, mesh, iters=20)),
-             extra)
+        for prim in PRIMS:
+            emit(prim, "sharded", p, None,
+                 timeit(run_prim(prim, g, pg, mesh, src, iters)), pg)
+    for (r, c) in meshes_2d:
+        if len(jax.devices()) < r * c:
+            print(f"[bench] skipping {r}x{c} (only "
+                  f"{len(jax.devices())} devices)")
+            continue
+        pg = partition_2d(g, r, c)
+        mesh = Mesh(np.array(jax.devices()[:r * c]).reshape(r, c),
+                    ("row", "col"))
+        for prim in PRIMS:
+            emit(prim, "2d", r * c, (r, c),
+                 timeit(run_prim(prim, g, pg, mesh, src, iters)), pg)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scales", default="12,13,14",
+                    help="comma-separated rmat scales")
+    ap.add_argument("--edge-factor", type=int, default=16)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--iters", type=int, default=20,
+                    help="pagerank iterations")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI mode: one small scale, 4/8-way only, fewer "
+                         "pagerank iterations")
+    ap.add_argument("--json", default="BENCH_pr7.json")
+    args = ap.parse_args()
+
+    scales = [int(s) for s in args.scales.split(",")]
+    parts_1d, meshes_2d, iters = (4, 8), ((2, 2), (2, 4)), args.iters
+    if args.quick:
+        scales, parts_1d, meshes_2d, iters = [10], (4, 8), \
+            ((2, 2), (2, 4)), 8
+    rows = []
+    for scale in scales:
+        bench_scale(scale, args.edge_factor, args.seed, iters,
+                    parts_1d, meshes_2d, rows)
 
     with open(args.json, "w") as f:
         json.dump(rows, f, indent=1)

@@ -24,11 +24,19 @@ Placements (the second registry dimension, paper §8.2.1 scale-out):
               provider's array contract differs from its single twin:
               CSR/CSC operands arrive as (num_parts, …) stacked
               per-device slices (``ShardedGraph``), dense vectors stay
-              replicated. There is NO silent fallback from "sharded" to
-              "single" — dropping to one device would silently change
-              what the caller asked for — but a pallas-backend sharded
-              dispatch falls back to the xla sharded provider (kernels
-              inside shard_map are future work).
+              replicated.
+  "2d"      — the graph is vertex-cut 2-D partitioned over an R×C mesh
+              (``partition_2d``): edge blocks are sharded over BOTH mesh
+              axes, frontier discovery psum-ORs along the row axis and
+              outputs mirror-merge along the column axis. CSR/CSC
+              operands arrive as (R, C, …) stacked blocks
+              (``Sharded2DGraph``), dense vectors stay replicated.
+
+There is NO silent fallback from a distributed placement ("sharded" or
+"2d") to "single" — dropping to one device would silently change what
+the caller asked for — but a pallas-backend distributed dispatch falls
+back to the xla provider of the SAME placement (kernels inside
+shard_map are future work).
 
 Selection precedence (first hit wins), identical for both dimensions:
   1. per-call override          advance(..., backend="pallas")
@@ -64,7 +72,8 @@ BACKENDS = (XLA, PALLAS, AUTO)
 
 SINGLE = "single"
 SHARDED = "sharded"
-PLACEMENTS = (SINGLE, SHARDED)
+TWOD = "2d"
+PLACEMENTS = (SINGLE, SHARDED, TWOD)
 
 ENV_VAR = "REPRO_BACKEND"
 PLACEMENT_ENV_VAR = "REPRO_PLACEMENT"
@@ -89,9 +98,10 @@ _ENCODINGS: dict[tuple[str, str, str], tuple] = {}
 # Backends whose implementations live in a module that registers itself on
 # import — imported lazily so `import repro.core` never pulls in Pallas.
 _LAZY_PROVIDERS = {PALLAS: "repro.kernels.ops"}
-# Same discipline for the sharded placement: its providers live with the
-# mesh/shard_map machinery and register on import.
-_LAZY_PLACEMENT_PROVIDERS = {SHARDED: "repro.core.distributed"}
+# Same discipline for the distributed placements: their providers live
+# with the mesh/shard_map machinery and register on import.
+_LAZY_PLACEMENT_PROVIDERS = {SHARDED: "repro.core.distributed",
+                             TWOD: "repro.core.distributed"}
 _loaded: set[str] = set()
 
 # Ops whose xla implementations live outside repro.core (the algebra
@@ -183,11 +193,12 @@ def use_backend(name: str):
 
 
 @contextmanager
-def use_placement(name: str, mesh=None, axis: str = "graph"):
+def use_placement(name: str, mesh=None, axis="graph"):
     """Context manager: route operator dispatch through placement
-    ``name``. For "sharded", ``mesh``/``axis`` name the 1-D mesh axis the
-    providers shard over; sharded providers read them at trace time via
-    ``placement_mesh()``."""
+    ``name``. For "sharded", ``mesh``/``axis`` name the 1-D mesh axis
+    the providers shard over; for "2d", ``axis`` is the ("row", "col")
+    axis-name pair of the R×C mesh. Providers read them at trace time
+    via ``placement_mesh()``."""
     _check_placement(name)
     _pstack().append((name, mesh, axis))
     try:
@@ -198,8 +209,9 @@ def use_placement(name: str, mesh=None, axis: str = "graph"):
 
 def placement_mesh():
     """The (mesh, axis) of the innermost placement context that carries
-    one, or None. Sharded providers call this at trace time to build
-    their shard_map."""
+    one, or None. Distributed providers call this at trace time to build
+    their shard_map (``axis`` is a name for 1-D placements, a name pair
+    for 2-D)."""
     for name, mesh, axis in reversed(_pstack()):
         if mesh is not None:
             return mesh, axis
@@ -207,35 +219,45 @@ def placement_mesh():
 
 
 def resolve_graph_placement(graph, placement: Optional[str] = None):
-    """Resolve placement for a Graph-or-ShardedGraph operand.
+    """Resolve placement for a Graph / ShardedGraph / Sharded2DGraph
+    operand.
 
     Returns ``(placement, context)``: a ``ShardedGraph`` operand implies
-    "sharded" and the context activates its mesh for the providers; a
-    plain Graph resolves normally. Mismatches are errors, never silent
-    overrides: a plain Graph under a "sharded" selection has nothing to
-    shard over, and an explicit per-call ``placement="single"`` with a
-    ShardedGraph operand contradicts itself (re-assemble via
-    ``pg.source`` to run single-device).
+    "sharded", a ``Sharded2DGraph`` implies "2d", and the context
+    activates the container's mesh for the providers; a plain Graph
+    resolves normally. Mismatches are errors, never silent overrides: a
+    plain Graph under a distributed selection has nothing to shard over,
+    and an explicit per-call placement that contradicts the operand's
+    own layout cannot be honoured (re-assemble via ``pg.source`` to run
+    single-device).
     Use as ``pl, ctx = resolve_graph_placement(g); with ctx: ...``.
     """
     import contextlib
 
-    from .partition import ShardedGraph
-    if isinstance(graph, ShardedGraph):
-        if placement == SINGLE:
+    from .partition import Sharded2DGraph, ShardedGraph
+    implied = (SHARDED if isinstance(graph, ShardedGraph)
+               else TWOD if isinstance(graph, Sharded2DGraph) else None)
+    if implied is not None:
+        if placement is not None and placement != implied:
             raise ValueError(
-                "placement='single' with a ShardedGraph operand: the "
-                "per-device slices cannot run the single-device path; "
-                "pass the unpartitioned graph (PartitionedGraph.source) "
-                "instead")
-        return SHARDED, use_placement(SHARDED, mesh=graph.mesh,
-                                      axis=graph.axis)
+                f"placement={placement!r} with a "
+                f"{type(graph).__name__} operand: the per-device "
+                f"slices only run the {implied!r} path; pass the "
+                f"unpartitioned graph (the partition's .source) to run "
+                f"elsewhere")
+        axis = graph.axis if implied == SHARDED else graph.axes
+        return implied, use_placement(implied, mesh=graph.mesh, axis=axis)
     pl = resolve_placement(placement)
     if pl == SHARDED:
         raise ValueError(
             "sharded placement needs a ShardedGraph operand "
             "(partition_1d(graph, p).shard(mesh)); got a single-device "
             "graph")
+    if pl == TWOD:
+        raise ValueError(
+            "2d placement needs a Sharded2DGraph operand "
+            "(partition_2d(graph, r, c).shard(mesh)); got a "
+            "single-device graph")
     return pl, contextlib.nullcontext()
 
 
@@ -277,10 +299,11 @@ def dispatch(op: str, backend: Optional[str] = None,
 
     Single placement falls back to the "xla" implementation when the
     backend has none registered (e.g. ops with no Pallas kernel yet).
-    Sharded placement falls back only across *backends* (pallas → xla
-    sharded provider) and raises if the op has no sharded provider at
-    all — a silent drop to single-device execution would not be the
-    program the caller selected. Internal call sites pass ``backend`` /
+    Distributed placements ("sharded", "2d") fall back only across
+    *backends* (pallas → the xla provider of the same placement) and
+    raise if the op has no provider for that placement at all — a
+    silent drop to single-device execution would not be the program the
+    caller selected. Internal call sites pass ``backend`` /
     ``placement`` only — the deprecated ``use_kernel`` alias lives
     solely in the public wrappers, which resolve it (with a warning)
     before anything reaches the registry.
@@ -301,10 +324,10 @@ def _lookup(op: str, bk: str, pl: str) -> tuple[tuple, Callable]:
         key = (op, XLA, pl)
         impl = _REGISTRY.get(key)
     if impl is None:
-        if pl == SHARDED:
+        if pl != SINGLE:
             raise KeyError(
-                f"no sharded implementation registered for operator "
-                f"{op!r} (sharded dispatch never falls back to the "
+                f"no {pl} implementation registered for operator "
+                f"{op!r} ({pl} dispatch never falls back to the "
                 f"single-device path)")
         raise KeyError(f"no implementation registered for operator {op!r}")
     return key, impl
@@ -388,15 +411,16 @@ def dispatch_tiered(op: str, backend: Optional[str] = None,
     """Resolve ``op`` plus the capacity ladder its call site may switch
     over: ``(impl, caps)``.
 
-    ``pin=True`` and the sharded placement both pin to the top tier
-    (single-rung ladder): a dense sweep touches every row regardless of
-    the frontier, and sharded providers run collectives whose shapes
-    must agree across devices no matter what any one device's frontier
-    holds — per-device tier choices would deadlock the exchange.
+    ``pin=True`` and the distributed placements both pin to the top
+    tier (single-rung ladder): a dense sweep touches every row
+    regardless of the frontier, and sharded/2d providers run
+    collectives whose shapes must agree across devices no matter what
+    any one device's frontier holds — per-device tier choices would
+    deadlock the exchange.
     """
     bk = resolve(backend)
     pl = resolve_placement(placement)
     impl = dispatch(op, bk, pl)
-    if pin or pl == SHARDED:
+    if pin or pl != SINGLE:
         return impl, (max(int(cap), 1),)
     return impl, tier_plan(op, cap)

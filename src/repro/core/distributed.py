@@ -38,6 +38,35 @@ update is an exact min/OR combine, so labels and distances bit-match
 the single-device primitives. All impls are module-level jits with the
 mesh as a static argument — repeated calls (the serving driver) reuse
 one trace per (shape, mesh).
+
+placement="2d" (the vertex-cut R×C mesh, ``partition_2d``) registers a
+second provider family with different exchange geometry:
+
+  * "advance"/"advance_filter" (2d) — chunked bitmask exchange: device
+    (i, j) expands its edge block into a ceil(n/C) *column-chunk* mask,
+    the R devices of each mesh column psum-OR their chunks (row-axis
+    collective), and the C chunks all-gather along the column axis into
+    the global mask (the mirror-merge: every mirror's discoveries fold
+    into the owner chunk's lane). The chunk exchange is DOUBLE-BUFFERED
+    over static edge tiles — the psum for tile t is consumed one loop
+    iteration after it is issued, so tile t+1's local gathers overlap
+    the collective (XLA overlaps the in-flight psum with the next
+    tile's scatter; OR is idempotent and order-free, so the overlap
+    cannot change bits). Per-device bytes/step drop from the 1-D
+    2·(p−1)/p·n·4 to tiles·2·(R−1)/R·vpc + (C−1)·vpc uint8 lanes.
+  * "spmv"/"spmm" (2d) — pre-fold product exchange: each device
+    computes its block's per-edge products (bit-identical IEEE ops),
+    scatters them at their ``Blocks2D.epos`` slots into one
+    ⊕-identity-background (chunk_emax,) buffer, and the mesh row
+    ⊕-all-reduces — slots are DISJOINT across the row, so the combine
+    merges identities only and is exact for every semiring. The merged
+    chunk then replays the exact single-device per-row fold
+    (``fold_products``, the product-level twin of hybrid_ell_reduce),
+    keeping PR-4 bit parity through the vertex cut.
+  * "mxm" (2d) — both axes expand their block slices of the owned mask
+    rows; per-edge partials ⊕-combine over the whole mesh (exact for
+    the exact-⊕ and integer-sum semirings, which covers the tc
+    workload; arbitrary-float plus-times SpGEMM regroups, documented).
 """
 from __future__ import annotations
 
@@ -51,7 +80,8 @@ from jax.sharding import PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 from . import backend as B
-from .partition import PartitionedGraph, check_mesh_axis
+from .partition import (Partitioned2DGraph, PartitionedGraph,
+                        check_mesh_axes, check_mesh_axis)
 
 # a plain Python int on purpose: this module is imported LAZILY by the
 # registry, possibly in the middle of someone else's jit trace, and a
@@ -75,18 +105,57 @@ class DistCCResult(NamedTuple):
     iterations: jax.Array
 
 
-def _check_mesh(pg: PartitionedGraph, mesh: Mesh, axis: str) -> None:
-    check_mesh_axis(mesh, axis, pg.num_parts)
+# how many static edge tiles the 2-D bitmask exchange double-buffers
+# over (the comm–compute overlap depth); 1 disables the overlap
+DEFAULT_EXCHANGE_TILES = 2
+
+
+def _axes_arg(axis) -> tuple:
+    """Normalize the ``axis`` argument of the distributed entry points
+    for a 2-D partition: an explicit (row, col) pair passes through, the
+    1-D default name maps to the canonical ("row", "col") axes."""
+    if isinstance(axis, (tuple, list)):
+        if len(axis) != 2:
+            raise ValueError(f"2-D placement needs two mesh axes, got "
+                             f"{tuple(axis)}")
+        return tuple(axis)
+    return ("row", "col")
+
+
+def _check_mesh(pg, mesh: Mesh, axis) -> None:
+    if isinstance(pg, Partitioned2DGraph):
+        check_mesh_axes(mesh, _axes_arg(axis), (pg.rows, pg.cols))
+    else:
+        check_mesh_axis(mesh, axis, pg.num_parts)
+
+
+def _shard_any(pg, mesh: Mesh, axis):
+    """Shard either partition container on its mesh (the entry-point
+    glue that keeps 1-D and 2-D one code path, not a fork)."""
+    if isinstance(pg, Partitioned2DGraph):
+        return pg.shard(mesh, _axes_arg(axis))
+    return pg.shard(mesh, axis)
 
 
 def _require_placement_mesh():
     ctx = B.placement_mesh()
     if ctx is None:
         raise RuntimeError(
-            "sharded dispatch needs an active placement context that "
-            "carries a mesh: with backend.use_placement('sharded', "
-            "mesh=mesh, axis='graph'): ...")
+            "distributed dispatch needs an active placement context "
+            "that carries a mesh: with backend.use_placement('sharded', "
+            "mesh=mesh, axis='graph'): ... (or '2d' with "
+            "axis=('row', 'col'))")
     return ctx
+
+
+def _require_2d_mesh():
+    mesh, axes = _require_placement_mesh()
+    if not (isinstance(axes, tuple) and len(axes) == 2):
+        raise RuntimeError(
+            "2d providers need a (row, col) mesh-axis pair: "
+            "use_placement('2d', mesh=mesh, axis=('row', 'col')) — "
+            f"got axis={axes!r}")
+    return mesh, axes
 
 
 def _all_reduce(sr, x: jax.Array, axis: str) -> jax.Array:
@@ -133,13 +202,24 @@ def _local_expand_mask(local_ro, local_ci, frontier_slice, n, vpp):
 # ---------------------------------------------------------------------------
 
 
+def _owned_slice(vec: jax.Array, base, vpp: int, fill=0):
+    """The (vpp,) owned slice of a replicated vector, correct for the
+    padded tail part: ``dynamic_slice`` CLAMPS an out-of-range start, so
+    slicing (n,) state directly would hand the tail part a shifted
+    window whenever p·vpp > n — pad by one part first so every start is
+    in range (pad lanes belong to no real row and never survive the
+    validity masks)."""
+    padded = jnp.pad(vec, (0, vpp), constant_values=fill)
+    return jax.lax.dynamic_slice(padded, (base,), (vpp,))
+
+
 @B.register("advance", B.XLA, B.SHARDED)
 def _advance_bitmask_exchange(local_ro, local_ci, frontier, base, vpp: int,
                               axis: str):
     """Bitmask-exchange advance step — see the module docstring contract.
     Must be called inside an active shard_map over ``axis``."""
     n = frontier.shape[0]
-    my_slice = jax.lax.dynamic_slice(frontier, (base,), (vpp,))
+    my_slice = _owned_slice(frontier, base, vpp)
     disc = _local_expand_mask(local_ro, local_ci, my_slice, n, vpp)
     return jax.lax.psum(disc.astype(jnp.int32), axis) > 0
 
@@ -298,6 +378,268 @@ def _mxm_sharded(a_off, a_idx, a_vals, bt_off, bt_idx, bt_vals,
 
 
 # ---------------------------------------------------------------------------
+# 2-D vertex-cut providers (placement="2d")
+# ---------------------------------------------------------------------------
+
+
+def _block_slots(block_ro, block_ci, vpr: int):
+    """(local source row, validity) of every block CSR slot — the block
+    twin of ``_local_slots``."""
+    return _local_slots(block_ro, block_ci, vpr)
+
+
+def _block_discover_chunk(block_ro, block_ci, frontier, row_base,
+                          col_base, vpr: int, vpc: int, row_ax: str,
+                          tiles: int):
+    """The per-device half of the 2-D bitmask exchange: expand this
+    block's edges from the owned frontier slice into a (vpc,) column
+    chunk mask, psum-OR'd along the mesh row — double-buffered over
+    ``tiles`` static edge tiles so the collective for tile t is in
+    flight while tile t+1's local gathers run (OR is idempotent and
+    order-free, so the overlap cannot change bits; a tile's clamped
+    re-read at the ragged tail re-marks targets idempotently for the
+    same reason). uint8 lanes keep the exchange byte-proportional to
+    the chunk, not to n."""
+    src_local, valid = _block_slots(block_ro, block_ci, vpr)
+    my_src = _owned_slice(frontier, row_base, vpr)
+    active = my_src[src_local] & valid
+    # local column-chunk target of every block edge; inactive ⇒ vpc
+    # (dropped by the scatter)
+    tgt = jnp.where(active, block_ci - col_base, vpc).astype(jnp.int32)
+    be = int(block_ci.shape[0])
+    tiles = max(int(tiles), 1)
+    ept = max(-(-be // tiles), 1)
+
+    def tile_mask(t):
+        sl = jax.lax.dynamic_slice(tgt, (t * ept,), (ept,))
+        return jnp.zeros((vpc,), jnp.uint8).at[sl].set(1, mode="drop")
+
+    def body(t, carry):
+        acc, inflight = carry
+        cur = tile_mask(t)                 # local gathers for tile t …
+        acc = jnp.maximum(acc, inflight)   # … overlap tile t−1's psum
+        return acc, jax.lax.psum(cur, row_ax)
+
+    inflight0 = jax.lax.psum(tile_mask(0), row_ax)
+    acc0 = jnp.zeros((vpc,), jnp.uint8)
+    if tiles > 1:
+        acc, inflight = jax.lax.fori_loop(1, tiles, body,
+                                          (acc0, inflight0))
+    else:
+        acc, inflight = acc0, inflight0
+    return jnp.maximum(acc, inflight) > 0
+
+
+def _gather_chunks(chunk, col_ax: str, n: int):
+    """Column-axis mirror-merge: assemble the global (n,) vector from
+    the C per-chunk lanes (each chunk is already the exact row-combined
+    value for its vertices — concatenate and trim the ceil padding)."""
+    full = jax.lax.all_gather(chunk, col_ax, axis=0, tiled=False)
+    return full.reshape(-1)[:n]
+
+
+@B.register("advance", B.XLA, B.TWOD)
+def _advance_2d(block_ro, block_ci, frontier, row_base, col_base,
+                vpr: int, vpc: int, axes: tuple,
+                tiles: int = DEFAULT_EXCHANGE_TILES):
+    """2-D chunked bitmask-exchange advance. Must be called inside an
+    active shard_map over both mesh axes. Contract:
+      (block_ro (vpr+1,), block_ci (be,), frontier (n,), row_base (),
+       col_base (), vpr, vpc, axes, tiles) → (n,) bool discovered mask,
+    already row-psum'd and column-gathered (identical on every
+    device)."""
+    row_ax, col_ax = axes
+    chunk = _block_discover_chunk(block_ro, block_ci, frontier, row_base,
+                                  col_base, vpr, vpc, row_ax, tiles)
+    return _gather_chunks(chunk, col_ax, int(frontier.shape[0]))
+
+
+@B.register("advance_filter", B.XLA, B.TWOD)
+def _advance_filter_2d(block_ro, block_ci, frontier, visited, row_base,
+                       col_base, vpr: int, vpc: int, axes: tuple,
+                       tiles: int = DEFAULT_EXCHANGE_TILES):
+    """Fused 2-D advance+filter: the visited filter applies to the
+    merged column chunk BEFORE the column-axis gather, so the filter
+    costs no extra exchange (the 2-D analogue of the single-device
+    fused megakernel). Same contract as the 2d "advance" plus the
+    replicated (n,) visited mask; returns the new frontier."""
+    row_ax, col_ax = axes
+    chunk = _block_discover_chunk(block_ro, block_ci, frontier, row_base,
+                                  col_base, vpr, vpc, row_ax, tiles)
+    my_visited = _owned_slice(visited, col_base, vpc)
+    return _gather_chunks(chunk & ~my_visited, col_ax,
+                          int(frontier.shape[0]))
+
+
+def _merge_block_products(store_leaf, valid, prod, sr, emax: int,
+                          col_ax: str):
+    """Scatter this block's per-edge products to their row-chunk slice
+    positions and ⊕-merge the mesh row: slots are disjoint across the
+    row's blocks, so the all-reduce only ever combines a product with
+    ⊕-identities — exact for every semiring, including float plus
+    (the pre-fold product exchange that keeps 2-D spmv/spmm
+    bit-identical to the single-device sweep)."""
+    merged = jnp.full(((emax,) + prod.shape[1:]), sr.zero, jnp.float32)
+    tgt = jnp.where(valid, store_leaf, emax)
+    merged = merged.at[tgt].set(prod.astype(jnp.float32), mode="drop")
+    return _all_reduce(sr, merged, col_ax)
+
+
+@B.register("spmv", B.XLA, B.TWOD)
+def _spmv_2d(offsets, store, values, x, sr, ell_width, mask,
+             row_seg=None, over_pos=None, over_row=None):
+    """2-D vertex-cut semiring SpMV: pre-fold product exchange along
+    the mesh row, then the EXACT single-device per-row fold on the
+    merged chunk (``fold_products`` — the product-level twin of
+    hybrid_ell_reduce, same ELL tree, same overflow scatter order), row
+    chunks concatenating over the row axis. ``store`` is the
+    ``Blocks2D`` pytree a Sharded2DGraph's col/csc store yields."""
+    del row_seg, over_pos, over_row
+    if ell_width is None:
+        return _spmm_2d(offsets, store, values, x[:, None], sr, None,
+                        mask)[:, 0]
+    from repro.linalg.ops import fold_products
+    mesh, axes = _require_2d_mesh()
+    row_ax, col_ax = axes
+    vpr = int(offsets.shape[2]) - 1
+    n = int(x.shape[0])
+    emax = int(store.chunk_emax)
+    blk, rep = P(row_ax, col_ax), P()
+
+    def local(ro_s, st, ev_s, xg):
+        ro = ro_s[0, 0]
+        ci, ep, cro = st.cols[0, 0], st.epos[0, 0], st.chunk_ro[0, 0]
+        ev = None if ev_s is None else ev_s[0, 0]
+        _, valid = _block_slots(ro, ci, vpr)
+        xv = xg[jnp.where(valid, ci, 0)]
+        prod = sr.round_prod(xv) if ev is None else sr.mul_op(ev, xv)
+        merged = _merge_block_products(ep, valid, prod, sr, emax, col_ax)
+        edge_valid = jnp.arange(emax, dtype=jnp.int32) < cro[-1]
+        y = fold_products(cro, merged, sr, int(ell_width),
+                          edge_valid=edge_valid)
+        deg = cro[1:] - cro[:-1]
+        return jnp.where(deg > 0, y, sr.zero)
+
+    if values is None:
+        run = shard_map(lambda ro, st, xg: local(ro, st, None, xg),
+                        mesh=mesh, in_specs=(blk, blk, rep),
+                        out_specs=P(row_ax), check_rep=False)
+        y = run(offsets, store, x)
+    else:
+        run = shard_map(local, mesh=mesh,
+                        in_specs=(blk, blk, blk, rep),
+                        out_specs=P(row_ax), check_rep=False)
+        y = run(offsets, store, values, x)
+    y = y[:n]
+    if mask is not None:
+        y = jnp.where(mask, y, sr.zero)
+    return y.astype(jnp.float32)
+
+
+@B.register("spmm", B.XLA, B.TWOD)
+def _spmm_2d(offsets, store, values, x, sr, ell_width, mask,
+             row_seg=None):
+    """2-D vertex-cut semiring SpMM: the same pre-fold product exchange
+    as the 2d spmv, then the single-device gather+segment formulation
+    on the merged (chunk_emax, k) products (per-row value sequence
+    identical to the 1-D/single sweeps ⇒ bit parity)."""
+    del ell_width, row_seg
+    mesh, axes = _require_2d_mesh()
+    row_ax, col_ax = axes
+    vpr = int(offsets.shape[2]) - 1
+    n = int(x.shape[0])
+    emax = int(store.chunk_emax)
+    blk, rep = P(row_ax, col_ax), P()
+
+    def local(ro_s, st, ev_s, xg):
+        ci, ep, cro = st.cols[0, 0], st.epos[0, 0], st.chunk_ro[0, 0]
+        ev = None if ev_s is None else ev_s[0, 0]
+        _, valid = _block_slots(ro_s[0, 0], ci, vpr)
+        xv = xg[jnp.where(valid, ci, 0)]                       # (be, k)
+        prod = xv if ev is None else sr.mul_op(ev[:, None], xv)
+        prod = jnp.where(valid[:, None], prod, sr.zero)
+        merged = _merge_block_products(ep, valid, prod, sr, emax, col_ax)
+        slot = jnp.arange(emax, dtype=jnp.int32)
+        seg = jnp.clip(jnp.searchsorted(cro, slot, side="right") - 1,
+                       0, vpr - 1).astype(jnp.int32)
+        y = sr.segment_reduce(merged, seg, vpr, indices_are_sorted=True)
+        deg = cro[1:] - cro[:-1]
+        return jnp.where((deg > 0)[:, None], y, sr.zero)
+
+    if values is None:
+        run = shard_map(lambda ro, st, xg: local(ro, st, None, xg),
+                        mesh=mesh, in_specs=(blk, blk, rep),
+                        out_specs=P(row_ax), check_rep=False)
+        y = run(offsets, store, x)
+    else:
+        run = shard_map(local, mesh=mesh,
+                        in_specs=(blk, blk, blk, rep),
+                        out_specs=P(row_ax), check_rep=False)
+        y = run(offsets, store, values, x)
+    y = y[:n]
+    if mask is not None:
+        y = jnp.where(mask[:, None], y, sr.zero)
+    return y.astype(jnp.float32)
+
+
+@B.register("mxm", B.XLA, B.TWOD)
+def _mxm_2d(a_off, a_store, a_vals, bt_off, bt_idx, bt_vals,
+            base, probe_rows, sr, cap_out: int):
+    """2-D masked SpGEMM: every device expands ITS block slice of the
+    mask edges whose base row its mesh row owns (the row's edges are
+    split across the C column blocks), probes the replicated Bᵀ
+    structure, and per-edge partials ⊕-combine over the whole mesh.
+    Block ownership of A-edges is disjoint, so the combine is exact for
+    the exact-⊕ semirings and for integer-valued sums (plus_and
+    triangle counts); arbitrary-float plus-times regroups the per-edge
+    dot (documented 2-D caveat — use the 1-D placement for bit-exact
+    float SpGEMM)."""
+    from . import operators as _ops
+    mesh, axes = _require_2d_mesh()
+    row_ax, col_ax = axes
+    vpr = int(a_off.shape[2]) - 1
+    e = int(base.shape[0])
+    a_idx = a_store.cols if hasattr(a_store, "cols") else a_store
+    blk, rep = P(row_ax, col_ax), P()
+    has_av = a_vals is not None
+    has_btv = bt_vals is not None
+    av_in = (a_vals if has_av
+             else jnp.zeros(a_idx.shape[:2] + (0,), jnp.float32))
+    btv_in = bt_vals if has_btv else jnp.zeros((0,), jnp.float32)
+
+    def local(ao_s, ai_s, av_s, bto, bti, btv, base_g, rows_g):
+        ao, ai = ao_s[0, 0], ai_s[0, 0]
+        me = int(ai.shape[0])
+        my_base = jax.lax.axis_index(row_ax).astype(jnp.int32) * vpr
+        owned = (base_g >= my_base) & (base_g < my_base + vpr)
+        base_l = jnp.where(owned, base_g - my_base, 0)
+        deg = ao[base_l + 1] - ao[base_l]       # this block's slice only
+        sizes = jnp.where(owned, deg, 0).astype(jnp.int32)
+        _, needles, eid, pair, _, valid, _ = _ops._advance_xla(
+            ao, ai, base_l, sizes, cap_out)
+        rows = rows_g[pair]
+        pos = _ops._searchsorted_segment(bti, bto[rows], bto[rows + 1],
+                                         needles, locate=True)
+        found = (pos >= 0) & valid
+        sv = (av_s[0, 0][jnp.clip(eid, 0, me - 1)] if has_av
+              else jnp.float32(sr.one))
+        lv = (btv[jnp.clip(pos, 0, int(bti.shape[0]) - 1)] if has_btv
+              else jnp.float32(sr.one))
+        prod = jnp.where(found, sr.mul_op(sv, lv), sr.zero)
+        c = sr.segment_reduce(prod.astype(jnp.float32), pair, e,
+                              indices_are_sorted=True)
+        c = _all_reduce(sr, c, (row_ax, col_ax))
+        gsizes = jax.lax.psum(sizes, (row_ax, col_ax))
+        return jnp.where(gsizes > 0, c, sr.zero).astype(jnp.float32)
+
+    run = shard_map(local, mesh=mesh,
+                    in_specs=(blk, blk, blk, rep, rep, rep, rep, rep),
+                    out_specs=rep, check_rep=False)
+    return run(a_off, a_idx, av_in, bt_off, bt_idx, btv_in, base,
+               probe_rows)
+
+
+# ---------------------------------------------------------------------------
 # traversal primitives (whole loop inside one shard_map)
 # ---------------------------------------------------------------------------
 
@@ -342,12 +684,68 @@ def _bfs_dist_impl(ro, ci, base, src, *, n: int, vpp: int, mesh: Mesh,
     return run(ro, ci, base, src)
 
 
-def distributed_bfs(pg: PartitionedGraph, src: int, mesh: Mesh,
-                    axis: str = "graph",
-                    backend: Optional[str] = None) -> DistBFSResult:
-    """Multi-device BFS (bitmask-exchange advance). `mesh` must have a
-    1-D axis named ``axis`` whose size equals pg.num_parts. Labels are
-    bit-identical to the single-device ``bfs``."""
+@functools.partial(jax.jit,
+                   static_argnames=("n", "vpr", "vpc", "mesh", "axes",
+                                    "tiles", "backend"))
+def _bfs_2d_impl(ro, ci, row_base, col_base, src, *, n: int, vpr: int,
+                 vpc: int, mesh: Mesh, axes: tuple, tiles: int,
+                 backend: str):
+    af = B.dispatch("advance_filter", backend, B.TWOD)
+    row_ax, col_ax = axes
+    blk, rep = P(row_ax, col_ax), P()
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(blk, blk, P(row_ax), P(col_ax), rep),
+        out_specs=(rep, rep),
+        check_rep=False)
+    def run(ro_s, ci_s, rb_s, cb_s, src_v):
+        block_ro, block_ci = ro_s[0, 0], ci_s[0, 0]
+        my_rb, my_cb = rb_s[0], cb_s[0]
+
+        def cond(carry):
+            labels, frontier, it = carry
+            return jnp.any(frontier) & (it <= n)
+
+        def body(carry):
+            labels, frontier, it = carry
+            # fused 2-D advance+filter: row-psum'd chunk discovery with
+            # the visited filter applied pre-gather
+            new = af(block_ro, block_ci, frontier, labels >= 0, my_rb,
+                     my_cb, vpr, vpc, axes, tiles)
+            labels = jnp.where(new, it + 1, labels)
+            return labels, new, it + 1
+
+        labels0 = jnp.full((n,), -1, jnp.int32).at[src_v].set(0)
+        frontier0 = jnp.zeros((n,), bool).at[src_v].set(True)
+        labels, _, it = jax.lax.while_loop(cond, body,
+                                           (labels0, frontier0,
+                                            jnp.int32(0)))
+        return labels, it
+
+    return run(ro, ci, row_base, col_base, src)
+
+
+def distributed_bfs(pg, src: int, mesh: Mesh, axis="graph",
+                    backend: Optional[str] = None,
+                    tiles: int = DEFAULT_EXCHANGE_TILES) -> DistBFSResult:
+    """Multi-device BFS (bitmask-exchange advance). A PartitionedGraph
+    runs the 1-D row placement (``mesh`` must have a 1-D axis named
+    ``axis`` whose size equals pg.num_parts); a Partitioned2DGraph runs
+    the vertex-cut 2-D placement (``axis`` may name the (row, col) axis
+    pair; ``tiles`` sets the double-buffer depth of the chunked bitmask
+    exchange). Labels are bit-identical to the single-device ``bfs``
+    either way."""
+    if isinstance(pg, Partitioned2DGraph):
+        axes = _axes_arg(axis)
+        _check_mesh(pg, mesh, axes)
+        sg = pg.shard(mesh, axes)
+        labels, it = _bfs_2d_impl(
+            sg.row_offsets, sg.col_indices, sg.row_base, sg.col_base,
+            jnp.int32(src), n=pg.n, vpr=pg.vpr, vpc=pg.vpc, mesh=mesh,
+            axes=axes, tiles=max(int(tiles), 1),
+            backend=B.resolve(backend))
+        return DistBFSResult(labels=labels, iterations=it)
     sg = pg.shard(mesh, axis)            # cached device arrays per mesh
     labels, it = _bfs_dist_impl(
         sg.row_offsets, sg.col_indices, sg.vertex_base, jnp.int32(src),
@@ -378,8 +776,8 @@ def _sssp_dist_impl(ro, ci, ev, base, src, delta, *, n: int, vpp: int,
             # distances scatter-min locally, min-combine across devices
             # (min is exact — the atomicMin of paper §5.2 twice over)
             dist, near, far, bucket = st
-            my_near = jax.lax.dynamic_slice(near, (my_base,), (vpp,))
-            my_dist = jax.lax.dynamic_slice(dist, (my_base,), (vpp,))
+            my_near = _owned_slice(near, my_base, vpp)
+            my_dist = _owned_slice(dist, my_base, vpp)
             active = my_near[src_local] & valid
             cand_v = my_dist[src_local] + local_ev
             cand = jnp.full((n,), inf, jnp.float32)
@@ -430,15 +828,91 @@ def _sssp_dist_impl(ro, ci, ev, base, src, delta, *, n: int, vpp: int,
     return run(ro, ci, ev, base, src, delta)
 
 
-def distributed_sssp(pg: PartitionedGraph, src: int, mesh: Mesh,
-                     axis: str = "graph",
+@functools.partial(jax.jit,
+                   static_argnames=("n", "vpr", "vpc", "use_delta",
+                                    "mesh", "axes"))
+def _sssp_2d_impl(ro, ci, ev, row_base, col_base, src, delta, *, n: int,
+                  vpr: int, vpc: int, use_delta: bool, mesh: Mesh,
+                  axes: tuple):
+    row_ax, col_ax = axes
+    blk, rep = P(row_ax, col_ax), P()
+    inf = jnp.float32(jnp.inf)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(blk, blk, blk, P(row_ax), P(col_ax), rep, rep),
+        out_specs=(rep, rep),
+        check_rep=False)
+    def run(ro_s, ci_s, ev_s, rb_s, cb_s, src_v, delta_v):
+        block_ro, block_ci, block_ev = ro_s[0, 0], ci_s[0, 0], ev_s[0, 0]
+        my_rb, my_cb = rb_s[0], cb_s[0]
+        src_local, valid = _block_slots(block_ro, block_ci, vpr)
+
+        def relax_step(st):
+            # dense relax of this block's edges: candidates scatter-min
+            # into the (vpc,) column chunk, min-combine the mesh row,
+            # then chunks concatenate over the column axis (min is
+            # exact, so the 2-D regrouping cannot move a bit)
+            dist, near, far, bucket = st
+            my_near = _owned_slice(near, my_rb, vpr)
+            my_dist = _owned_slice(dist, my_rb, vpr)
+            active = my_near[src_local] & valid
+            cand_v = my_dist[src_local] + block_ev
+            chunk = jnp.full((vpc,), inf, jnp.float32)
+            tgt = jnp.where(active, block_ci - my_cb, vpc)
+            chunk = chunk.at[tgt].min(jnp.where(active, cand_v, inf),
+                                      mode="drop")
+            chunk = jax.lax.pmin(chunk, row_ax)
+            cand = _gather_chunks(chunk, col_ax, n)
+            new_dist = jnp.minimum(dist, cand)
+            improved = new_dist < dist
+            thresh = (bucket.astype(jnp.float32) + 1.0) * delta_v
+            if use_delta:
+                add_near = improved & (new_dist < thresh)
+                add_far = improved & (new_dist >= thresh)
+            else:
+                add_near = improved
+                add_far = jnp.zeros_like(improved)
+            far2 = (far | add_far) & ~add_near
+            return new_dist, add_near, far2, bucket
+
+        def pop_far(st):
+            dist, near, far, bucket = st
+            far_min = jnp.min(jnp.where(far, dist, inf))
+            new_bucket = jnp.where(jnp.isfinite(far_min),
+                                   (far_min / delta_v).astype(jnp.int32),
+                                   bucket + 1)
+            thresh = (new_bucket.astype(jnp.float32) + 1.0) * delta_v
+            near2 = far & (dist < thresh)
+            return dist, near2, far & ~near2, new_bucket
+
+        def body(carry):
+            st, it = carry
+            st = jax.lax.cond(jnp.any(st[1]), relax_step, pop_far, st)
+            return st, it + 1
+
+        def cond(carry):
+            (dist, near, far, bucket), it = carry
+            return (jnp.any(near) | jnp.any(far)) & (it < 4 * n + 8)
+
+        dist0 = jnp.full((n,), inf, jnp.float32).at[src_v].set(0.0)
+        near0 = jnp.zeros((n,), bool).at[src_v].set(True)
+        far0 = jnp.zeros((n,), bool)
+        (dist, _, _, _), it = jax.lax.while_loop(
+            cond, body, ((dist0, near0, far0, jnp.int32(0)), jnp.int32(0)))
+        return dist, it
+
+    return run(ro, ci, ev, row_base, col_base, src, delta)
+
+
+def distributed_sssp(pg, src: int, mesh: Mesh, axis="graph",
                      delta: Optional[float] = None) -> DistSSSPResult:
     """Multi-device delta-stepping SSSP: per-bucket dense relaxation of
-    owned rows with min-all-reduced distance improvements. Distances are
-    bit-identical to the single-device ``sssp`` (every relaxation value
-    ``dist[u] + w`` is computed the same way and min is exact)."""
+    owned rows (1-D) or owned blocks (2-D vertex cut) with
+    min-all-reduced distance improvements. Distances are bit-identical
+    to the single-device ``sssp`` (every relaxation value ``dist[u] + w``
+    is computed the same way and min is exact)."""
     assert pg.edge_values is not None, "SSSP needs edge weights"
-    sg = pg.shard(mesh, axis)
     if delta is None:
         if pg.source is not None:
             from .primitives.sssp import _auto_delta
@@ -449,6 +923,17 @@ def distributed_sssp(pg: PartitionedGraph, src: int, mesh: Mesh,
             mean_w = float(np.asarray(pg.edge_values)[real].mean())
             delta = mean_w * max(pg.m / max(pg.n, 1), 1.0) / 2.0
     use_delta = bool(jnp.isfinite(delta)) and delta > 0
+    if isinstance(pg, Partitioned2DGraph):
+        axes = _axes_arg(axis)
+        _check_mesh(pg, mesh, axes)
+        sg = pg.shard(mesh, axes)
+        dist, it = _sssp_2d_impl(
+            sg.row_offsets, sg.col_indices, sg.edge_values, sg.row_base,
+            sg.col_base, jnp.int32(src), jnp.float32(delta),
+            n=pg.n, vpr=pg.vpr, vpc=pg.vpc, use_delta=use_delta,
+            mesh=mesh, axes=axes)
+        return DistSSSPResult(dist=dist, iterations=it)
+    sg = pg.shard(mesh, axis)
     dist, it = _sssp_dist_impl(
         sg.row_offsets, sg.col_indices, sg.edge_values, sg.vertex_base,
         jnp.int32(src), jnp.float32(delta),
@@ -511,12 +996,79 @@ def _cc_dist_impl(ro, ci, base, *, n: int, vpp: int, mesh: Mesh, axis: str):
     return labels, ncomp, it
 
 
-def distributed_cc(pg: PartitionedGraph, mesh: Mesh,
-                   axis: str = "graph") -> DistCCResult:
-    """Multi-device connected components: hooking over owned edges with
-    all-reduced label mins + replicated pointer-jumping. Labels are
-    bit-identical to the single-device ``connected_components`` (every
-    combine is an exact integer min)."""
+@functools.partial(jax.jit, static_argnames=("n", "vpr", "mesh", "axes"))
+def _cc_2d_impl(ro, ci, row_base, *, n: int, vpr: int, mesh: Mesh,
+                axes: tuple):
+    row_ax, col_ax = axes
+    blk, rep = P(row_ax, col_ax), P()
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(blk, blk, P(row_ax)),
+        out_specs=(rep, rep),
+        check_rep=False)
+    def run(ro_s, ci_s, rb_s):
+        block_ro, block_ci = ro_s[0, 0], ci_s[0, 0]
+        my_rb = rb_s[0]
+        src_local, valid = _block_slots(block_ro, block_ci, vpr)
+        src_g = my_rb + src_local
+        dst = jnp.where(valid, block_ci, 0)
+
+        def pointer_jump(cid):
+            return jax.lax.while_loop(lambda c: jnp.any(c[c] != c),
+                                      lambda c: c[c], cid)
+
+        def body(carry):
+            cid, live, n_live, it = carry
+            cu = cid[src_g]
+            cv = cid[dst]
+            live = live & (cu != cv)
+            lo = jnp.minimum(cu, cv)
+            hi = jnp.maximum(cu, cv)
+            # hooking: labels target arbitrary component ids, so the
+            # candidate vector stays (n,) and min-combines over the
+            # WHOLE mesh (both axes) — a vertex cut cannot shrink this
+            # exchange, which exchange_bytes_per_step reports honestly
+            tgt = jnp.where(live, hi, n)
+            cand = jnp.full((n,), INT_BIG, jnp.int32)
+            cand = cand.at[tgt].min(jnp.where(live, lo, INT_BIG),
+                                    mode="drop")
+            cand = jax.lax.pmin(cand, (row_ax, col_ax))
+            cid = pointer_jump(jnp.minimum(cid, cand))
+            still = live & (cid[src_g] != cid[dst])
+            n_live = jax.lax.psum(jnp.sum(still.astype(jnp.int32)),
+                                  (row_ax, col_ax))
+            return cid, still, n_live, it + 1
+
+        def cond(carry):
+            _, _, n_live, it = carry
+            return (n_live > 0) & (it < n + 1)
+
+        cid0 = jnp.arange(n, dtype=jnp.int32)
+        cid, _, _, it = jax.lax.while_loop(
+            cond, body,
+            (cid0, valid, jnp.int32(1), jnp.int32(0)))
+        return cid, it
+
+    labels, it = run(ro, ci, row_base)
+    ncomp = jnp.sum((labels == jnp.arange(n)).astype(jnp.int32))
+    return labels, ncomp, it
+
+
+def distributed_cc(pg, mesh: Mesh, axis="graph") -> DistCCResult:
+    """Multi-device connected components: hooking over owned edges (1-D
+    rows or 2-D blocks) with all-reduced label mins + replicated
+    pointer-jumping. Labels are bit-identical to the single-device
+    ``connected_components`` (every combine is an exact integer min)."""
+    if isinstance(pg, Partitioned2DGraph):
+        axes = _axes_arg(axis)
+        _check_mesh(pg, mesh, axes)
+        sg = pg.shard(mesh, axes)
+        labels, ncomp, it = _cc_2d_impl(
+            sg.row_offsets, sg.col_indices, sg.row_base,
+            n=pg.n, vpr=pg.vpr, mesh=mesh, axes=axes)
+        return DistCCResult(labels=labels, num_components=ncomp,
+                            iterations=it)
     sg = pg.shard(mesh, axis)
     labels, ncomp, it = _cc_dist_impl(
         sg.row_offsets, sg.col_indices, sg.vertex_base,
@@ -524,14 +1076,14 @@ def distributed_cc(pg: PartitionedGraph, mesh: Mesh,
     return DistCCResult(labels=labels, num_components=ncomp, iterations=it)
 
 
-def distributed_pagerank(pg: PartitionedGraph, mesh: Mesh,
-                         axis: str = "graph", damping: float = 0.85,
+def distributed_pagerank(pg, mesh: Mesh, axis="graph",
+                         damping: float = 0.85,
                          iters: int = 20) -> jax.Array:
-    """1-D SpMV PageRank through the sharded "spmv" provider: the rank
-    vector stays replicated (the all-gather side of a 1-D SpMV), each
-    device reduces its owned CSC rows locally. This runs the SAME
-    ``_pagerank_impl`` as the single-device primitive — only the
-    dispatched spmv differs — so ranks are bit-identical to
+    """SpMV PageRank through the sharded/2d "spmv" provider: the rank
+    vector stays replicated, each device reduces its owned CSC rows
+    (1-D) or ⊕-merges its CSC block's pre-fold products (2-D). This
+    runs the SAME ``_pagerank_impl`` as the single-device primitive —
+    only the dispatched spmv differs — so ranks are bit-identical to
     ``pagerank``, not merely close."""
     from .primitives.pagerank import pagerank
     _check_mesh(pg, mesh, axis)
@@ -539,7 +1091,7 @@ def distributed_pagerank(pg: PartitionedGraph, mesh: Mesh,
         raise ValueError(
             "distributed_pagerank needs the partitioned CSC mirror; "
             "partition a Graph built with build_csc=True")
-    return pagerank(pg.shard(mesh, axis), damping=damping,
+    return pagerank(_shard_any(pg, mesh, axis), damping=damping,
                     max_iter=iters).rank
 
 
@@ -549,20 +1101,67 @@ def distributed_pagerank(pg: PartitionedGraph, mesh: Mesh,
 # ---------------------------------------------------------------------------
 
 
-def distributed_label_propagation(pg: PartitionedGraph, mesh: Mesh,
-                                  axis: str = "graph", **kwargs):
-    """Label propagation on the partition: the one-hot SpMM blocks run
-    through the sharded "spmm" provider; labels bit-match the
-    single-device primitive."""
+def distributed_label_propagation(pg, mesh: Mesh, axis="graph",
+                                  **kwargs):
+    """Label propagation on the partition (1-D or 2-D): the one-hot
+    SpMM blocks run through the placement's "spmm" provider; labels
+    bit-match the single-device primitive (the vote sums are
+    small-integer-valued floats, exact under any regrouping)."""
     from .primitives.label_propagation import label_propagation
     _check_mesh(pg, mesh, axis)
-    return label_propagation(pg.shard(mesh, axis), **kwargs)
+    return label_propagation(_shard_any(pg, mesh, axis), **kwargs)
 
 
-def distributed_reach(pg: PartitionedGraph, srcs, k: int = 3, *,
-                      mesh: Mesh, axis: str = "graph", **kwargs):
+def distributed_reach(pg, srcs, k: int = 3, *,
+                      mesh: Mesh, axis="graph", **kwargs):
     """Batched k-hop reachability on the partition (or-and SpMM closure
-    through the sharded provider)."""
+    through the placement's provider)."""
     from .primitives.reach import reach_batch
     _check_mesh(pg, mesh, axis)
-    return reach_batch(pg.shard(mesh, axis), srcs, k, **kwargs)
+    return reach_batch(_shard_any(pg, mesh, axis), srcs, k, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# comm-volume model (the benchmark's bytes-per-step column)
+# ---------------------------------------------------------------------------
+
+
+def exchange_bytes_per_step(pg, primitive: str = "bfs",
+                            tiles: int = DEFAULT_EXCHANGE_TILES) -> int:
+    """Analytic bytes exchanged PER DEVICE in one BSP step of
+    ``primitive`` under ``pg``'s placement, with the standard ring
+    cost model (an all-reduce of b bytes moves 2·(p−1)/p·b per device;
+    an all-gather of b-byte shards moves (p−1)·b).
+
+    1-D exchanges are n-proportional (the replicated-vector tax the
+    2-D cut removes): bfs/sssp/cc all-reduce an (n,) candidate vector,
+    pagerank all-gathers its (n/p,) spmv output shard. 2-D traversal
+    exchanges are chunk-proportional: bfs psums ``tiles`` uint8
+    (vpc,)-chunk tiles along the R-row and gathers C chunks; sssp the
+    float32 twin; pagerank trades them for a (chunk_emax,) product
+    psum along the column axis plus the output-row gather. cc hooks
+    into arbitrary component ids, so its exchange stays (n,) on any
+    mesh — reported as-is, not hidden."""
+    tiles = max(int(tiles), 1)
+    n = pg.n
+    if isinstance(pg, Partitioned2DGraph):
+        r, c = pg.rows, pg.cols
+        if primitive == "bfs":
+            return int(tiles * 2 * (r - 1) / r * pg.vpc
+                       + (c - 1) * pg.vpc)
+        if primitive == "sssp":
+            return int((2 * (r - 1) / r * pg.vpc
+                        + (c - 1) * pg.vpc) * 4)
+        if primitive == "cc":
+            p = r * c
+            return int(2 * (p - 1) / p * n * 4)
+        if primitive == "pagerank":
+            return int(2 * (c - 1) / c * pg.csc_chunk_emax * 4
+                       + (r - 1) * pg.vpr * 4)
+        raise ValueError(f"unknown primitive {primitive!r}")
+    p = pg.num_parts
+    if primitive in ("bfs", "sssp", "cc"):
+        return int(2 * (p - 1) / p * n * 4)
+    if primitive == "pagerank":
+        return int((p - 1) / p * n * 4)
+    raise ValueError(f"unknown primitive {primitive!r}")

@@ -117,8 +117,9 @@ def tiered_step(need, caps: Sequence[int],
     which holds by construction when only frontier/vertex-shaped state
     crosses the boundary and the tier sizes just the edge-shaped
     intermediates. A single-rung ladder skips the switch entirely (the
-    untiered / pinned case — also the sharded contract, where per-device
-    tier choices would desynchronize collective shapes).
+    untiered / pinned case — also the contract of every distributed
+    placement, sharded and 2d alike, where per-device tier choices
+    would desynchronize collective shapes).
     """
     if len(caps) == 1:
         return step_of(caps[0])(state)

@@ -11,6 +11,12 @@ its operator hot path in ``repro.core.backend``; the operator layer in
 ``use_kernel`` booleans by hand. This module is imported lazily by the
 registry on the first pallas dispatch.
 
+All registrations here are single-placement: under the distributed
+placements (``"sharded"``, ``"2d"``) a pallas selection falls back to
+the placement's xla provider — within the placement, never across to a
+single-device impl (Pallas kernels under shard_map are future work;
+they would need per-shard/per-block ELL repacking, see DESIGN.md §6).
+
 Set ``REPRO_FORCE_INTERPRET=0`` to attempt native compilation.
 """
 from __future__ import annotations

@@ -26,7 +26,12 @@ when it joins its slot queue) and aggregate queries/sec.
 partitioned once at startup, traversal kinds run the distributed
 engine (bitmask-exchange advance), algebraic kinds the sharded
 spmv/spmm providers — results bit-match single-device serving, and
-``--json`` rows gain per-device balance accounting.
+``--json`` rows gain per-device balance accounting (edge AND vertex
+imbalance — on rmat graphs the former is what hub skew shows up in).
+``--mesh RxC`` serves from the 2-D vertex-cut placement instead
+(``--parts P`` is the 1-D alias): edges are blocked on an R×C device
+mesh and the frontier exchange is chunk-proportional, not
+n-proportional. Results bit-match either way.
 
   PYTHONPATH=src python -m repro.launch.graph_serve --graph rmat \
       --scale 10 --kinds bfs,pagerank,reach --requests 64 --batch 8
@@ -34,6 +39,11 @@ spmv/spmm providers — results bit-match single-device serving, and
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
   PYTHONPATH=src python -m repro.launch.graph_serve --graph rmat \
       --scale 10 --parts 4 --kinds bfs,sssp,pagerank,reach \
+      --requests 64 --batch 8
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+  PYTHONPATH=src python -m repro.launch.graph_serve --graph rmat \
+      --scale 10 --mesh 2x4 --kinds bfs,sssp,pagerank,reach \
       --requests 64 --batch 8
 
   PYTHONPATH=src python -m repro.launch.graph_serve --graph rmat \
@@ -143,20 +153,21 @@ def _run_kind(g, kind: str, srcs: np.ndarray, backend: str, hops: int):
     raise ValueError(kind)
 
 
-def make_sharded_runner(pg, mesh, axis: str = "graph"):
-    """Mesh-backed query runner: every kind is served from the 1-D
-    partition built once at startup. Traversal kinds (bfs/sssp) run one
-    cached distributed trace per query lane (the trace is keyed on the
-    partition shapes + mesh, so lanes reuse it); algebraic kinds run the
-    sharded "spmm"/"spmv" providers through the unchanged primitives.
-    Results bit-match the single-device runner, so the oracle validation
-    path needs no sharded variant."""
+def make_sharded_runner(pg, mesh, axis="graph"):
+    """Mesh-backed query runner: every kind is served from the 1-D (or
+    2-D vertex-cut) partition built once at startup. Traversal kinds
+    (bfs/sssp) run one cached distributed trace per query lane (the
+    trace is keyed on the partition shapes + mesh, so lanes reuse it);
+    algebraic kinds run the placement's "spmm"/"spmv" providers through
+    the unchanged primitives. Results bit-match the single-device
+    runner, so the oracle validation path needs no sharded variant."""
     import jax.numpy as jnp
 
-    from repro.core.distributed import distributed_bfs, distributed_sssp
+    from repro.core.distributed import (_shard_any, distributed_bfs,
+                                        distributed_sssp)
     from repro.core.primitives import pagerank, reach_batch
 
-    sg = pg.shard(mesh, axis)
+    sg = _shard_any(pg, mesh, axis)
 
     def _per_source(srcs, one):
         # padding lanes repeat the final real query — run each distinct
@@ -341,6 +352,10 @@ def main(argv=None):
                          "first P local devices (sharded placement; "
                          "builds the partition once, reports per-device "
                          "balance in --json)")
+    ap.add_argument("--mesh", default=None, metavar="RxC",
+                    help="serve from an R×C 2-D vertex-cut partition "
+                         "(2d placement) over the first R*C local "
+                         "devices; --parts P is the 1-D alias")
     ap.add_argument("--validate", action="store_true",
                     help="check every lane against the numpy oracle")
     ap.add_argument("--backend", default=None,
@@ -361,32 +376,61 @@ def main(argv=None):
             if k not in KINDS:
                 raise SystemExit(f"unknown query kind {k!r}; pick from "
                                  f"{KINDS}")
-    if args.parts and not kinds:
+    mesh_shape = None
+    if args.mesh:
+        if args.parts:
+            raise SystemExit(
+                "--mesh and --parts are mutually exclusive (--parts P "
+                "is the 1-D alias of --mesh 1xP; pick one)")
+        try:
+            r, c = (int(t) for t in args.mesh.lower().split("x"))
+            if r < 1 or c < 1:
+                raise ValueError(args.mesh)
+        except ValueError:
+            raise SystemExit(
+                f"--mesh wants RxC with positive integers (e.g. 2x4), "
+                f"got {args.mesh!r}")
+        mesh_shape = (r, c)
+    if (args.parts or mesh_shape) and not kinds:
         kinds = [args.primitive]     # sharded serving goes through the
     runner = None                    # mixed-kind (runner-based) path
     pg = None
-    if args.parts:
-        if len(jax.devices()) < args.parts:
+    if args.parts or mesh_shape:
+        need = args.parts if args.parts else mesh_shape[0] * mesh_shape[1]
+        flag = (f"--parts {args.parts}" if args.parts
+                else f"--mesh {mesh_shape[0]}x{mesh_shape[1]} "
+                     f"(= {need} devices)")
+        if len(jax.devices()) < need:
             raise SystemExit(
-                f"--parts {args.parts} needs {args.parts} devices but "
+                f"{flag} needs {need} devices but "
                 f"only {len(jax.devices())} are visible (set XLA_FLAGS="
-                f"--xla_force_host_platform_device_count={args.parts} "
+                f"--xla_force_host_platform_device_count={need} "
                 f"for host-platform serving)")
         from jax.sharding import Mesh
-
-        from repro.core.partition import partition_1d
-        pg = partition_1d(g, args.parts)
-        mesh = Mesh(np.array(jax.devices()[:args.parts]), ("graph",))
-        runner = make_sharded_runner(pg, mesh)
+        if mesh_shape:
+            from repro.core.partition import partition_2d
+            pg = partition_2d(g, *mesh_shape)
+            mesh = Mesh(np.array(jax.devices()[:need]).reshape(mesh_shape),
+                        ("row", "col"))
+            axis = ("row", "col")
+        else:
+            from repro.core.partition import partition_1d
+            pg = partition_1d(g, args.parts)
+            mesh = Mesh(np.array(jax.devices()[:need]), ("graph",))
+            axis = "graph"
+        runner = make_sharded_runner(pg, mesh, axis)
         bal = pg.balance()
-        print(f"[graph_serve] partition: {args.parts} parts, "
-              f"edges/part={bal['edges_per_part']} "
-              f"(imbalance {bal['edge_imbalance']}x)")
+        shape = (f"{mesh_shape[0]}x{mesh_shape[1]} mesh" if mesh_shape
+                 else f"{need} parts")
+        print(f"[graph_serve] partition: {shape}, "
+              f"edge imbalance {bal['edge_imbalance']}x, "
+              f"vertex imbalance {bal['vertex_imbalance']}x")
     what = ",".join(kinds) if kinds else args.primitive
+    placement = ("2d" if mesh_shape
+                 else "sharded" if args.parts else "single")
     print(f"[graph_serve] {args.graph} scale={args.scale}: "
           f"n={g.num_vertices} m={g.num_edges} kinds={what} "
-          f"batch={args.batch} backend={bk} "
-          f"placement={'sharded' if args.parts else 'single'}")
+          f"batch={args.batch} backend={bk} placement={placement}")
     pl = storage["plan"]
     print(f"[graph_serve] storage: {pl['index_dtype']}/{pl['encoding']} "
           f"{storage['total_bytes'] / 2**20:.1f} MiB resident, "
@@ -405,8 +449,10 @@ def main(argv=None):
                    for i in range(args.requests)]
         stats = serve_mixed(g, queries, args.batch, bk, hops=args.hops,
                             validate=args.validate, runner=runner)
-        if args.parts:
-            stats["parts"] = args.parts
+        if pg is not None:
+            stats["parts"] = pg.num_parts
+            if mesh_shape:
+                stats["mesh"] = list(mesh_shape)
             stats["balance"] = pg.balance()
     else:
         run = {"bfs": bfs_batch, "sssp": sssp_batch}[args.primitive]

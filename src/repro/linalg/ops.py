@@ -151,6 +151,44 @@ def hybrid_ell_reduce(offsets, indices, values, x, sr: Semiring,
     return sr.scatter_accum(y, jnp.where(over, seg, nrows), ov)
 
 
+def fold_products(offsets, prods, sr: Semiring, width: int, *,
+                  row_seg=None, edge_valid=None):
+    """``hybrid_ell_reduce``'s product-level twin for pre-multiplied
+    edge buffers: fold an (m,) per-slot product vector into per-row
+    values with the IDENTICAL dataflow — same rank-aligned ELL gather,
+    same explicit pairwise halving tree, same ascending-order overflow
+    drop-scatter. A caller that ⊕-merged per-edge products across
+    devices first (the 2-D vertex cut's pre-fold product exchange,
+    where disjoint slot ownership makes the merge identity-only) then
+    lands on the same bits as the single-device sweep for EVERY
+    semiring. ``prods`` is indexed by CSR slot; slots past
+    ``offsets[-1]`` are padding that ``edge_valid`` masks off the
+    overflow scatter (the ELL lanes never touch them)."""
+    nrows = int(offsets.shape[0]) - 1
+    m = int(prods.shape[0])
+    width = max(int(width), 1)
+    wp = 1
+    while wp < width:
+        wp *= 2
+    starts = offsets[:-1]
+    deg = offsets[1:] - offsets[:-1]
+    lanes = jnp.arange(wp, dtype=jnp.int32)
+    e = jnp.minimum(starts[:, None] + lanes[None, :], max(m - 1, 0))
+    lane_ok = lanes[None, :] < jnp.minimum(deg, width)[:, None]
+    p = jnp.where(lane_ok, prods[e], sr.zero)
+    k = wp
+    while k > 1:                      # explicit halving: grouping fixed
+        k //= 2
+        p = sr.add_op(p[:, :k], p[:, k:2 * k])
+    y = p[:, 0]
+    seg = _row_segments(offsets, m) if row_seg is None else row_seg
+    rank = jnp.arange(m, dtype=jnp.int32) - starts[seg]
+    over = rank >= width
+    if edge_valid is not None:
+        over = over & edge_valid
+    return sr.scatter_accum(y, jnp.where(over, seg, nrows), prods)
+
+
 @B.register("spmv", B.XLA, encodings=("dense", "delta"))
 def _spmv_xla(offsets, indices, values, x, sr: Semiring, ell_width, mask,
               row_seg=None, over_pos=None, over_row=None):
@@ -246,9 +284,11 @@ def _csr_side(a, transpose: bool):
     wrappers run it through ``B.coerce_store`` for the provider that
     will execute. A ShardedGraph yields the (p, …) stacked per-device
     slices the sharded registry providers understand (its per-shard
-    edge→row maps are derived locally, so row_seg is None)."""
-    from repro.core.partition import ShardedGraph
-    if isinstance(a, (Graph, ShardedGraph)):
+    edge→row maps are derived locally, so row_seg is None). A
+    Sharded2DGraph yields (R, C, …) blocked arrays with Blocks2D column
+    stores for the 2d providers."""
+    from repro.core.partition import Sharded2DGraph, ShardedGraph
+    if isinstance(a, (Graph, ShardedGraph, Sharded2DGraph)):
         if transpose:
             if not a.has_csc:
                 raise ValueError("transpose=True needs the CSC mirror "
@@ -365,12 +405,12 @@ def spmsv(a, ids, xvals=None, *, semiring=plus_times, mask=None,
     Output is dense (n,) — the direction-optimization contract: callers
     pick spmsv (push) for small frontiers and spmv (pull) for large ones.
     """
-    from repro.core.partition import ShardedGraph
-    if isinstance(a, ShardedGraph):
+    from repro.core.partition import Sharded2DGraph, ShardedGraph
+    if isinstance(a, (ShardedGraph, Sharded2DGraph)):
         raise ValueError(
-            "spmsv has no sharded provider (the push expansion is "
-            "frontier-shaped); use spmv/spmm on the ShardedGraph, or "
-            "run spmsv on the unpartitioned source graph")
+            "spmsv has no sharded/2d provider (the push expansion is "
+            "frontier-shaped); use spmv/spmm on the partitioned graph, "
+            "or run spmsv on the unpartitioned source graph")
     sr = S.get(semiring)
     bk = B.resolve(backend, use_kernel)
     off, idx, vals, _, _, _, _ = _csr_side(a, transpose=False)
@@ -448,11 +488,11 @@ def mxm(a, b, mask, *, semiring=plus_times, b_transpose: bool = False,
     probe side stays replicated — the 1-D SpGEMM split). The SmallLarge
     swap is disabled there (the sides live in different layouts).
     """
-    from repro.core.partition import ShardedGraph
+    from repro.core.partition import Sharded2DGraph, ShardedGraph
     sr = S.get(semiring)
     bk = B.resolve(backend, use_kernel)
     pl, ctx = B.resolve_graph_placement(a, placement)
-    if isinstance(b, ShardedGraph):
+    if isinstance(b, (ShardedGraph, Sharded2DGraph)):
         # the probe side is ALWAYS replicated (the 1-D SpGEMM split):
         # stacked per-device slices can neither be probed globally nor
         # feed the single-device path's degree planning
@@ -477,6 +517,12 @@ def mxm(a, b, mask, *, semiring=plus_times, b_transpose: bool = False,
         # stacked (p, vpp+1) offsets → global out-degrees, pads → 0
         deg_all = np.diff(np.asarray(a_off), axis=1).reshape(-1)
         deg_a = deg_all[:a.num_vertices][msrc]
+    elif pl == B.TWOD:
+        # (R, C, vpr+1) block offsets: a row's global out-degree is the
+        # SUM of its per-column-block degrees
+        deg_all = np.diff(np.asarray(a_off), axis=2).sum(axis=1) \
+                    .reshape(-1)
+        deg_a = deg_all[:a.num_vertices][msrc]
     else:
         deg_a = np.diff(np.asarray(a_off))[msrc]
     deg_b = np.diff(np.asarray(bt_off))[mdst]
@@ -491,7 +537,8 @@ def mxm(a, b, mask, *, semiring=plus_times, b_transpose: bool = False,
         cap = int(deg_a.sum())
     cap = max(cap, 1) if cap_out is None else int(cap_out)
     impl = B.dispatch("mxm", bk, pl)
-    mesh_key = (a.mesh, a.axis) if pl == B.SHARDED else None
+    mesh_key = ((a.mesh, a.axis) if pl == B.SHARDED
+                else (a.mesh, a.axes) if pl == B.TWOD else None)
     with ctx:
         run = _jit_mxm(impl, sr, cap, mesh_key)
         return run(a_off, a_idx, a_vals, bt_off, bt_idx, bt_vals,
