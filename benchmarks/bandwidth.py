@@ -138,6 +138,7 @@ def run(scales=SCALES, repeats: int = 3, json_path: str = "BENCH_pr6.json",
     emit([[r[h] for h in header] for r in rows], header,
          table="bandwidth")
     best = max(speedups.values()) if speedups else 0.0
+    from benchmarks.common import provenance
     payload = {
         "schema": "bandwidth-v1",
         "backend": backend,
@@ -147,6 +148,7 @@ def run(scales=SCALES, repeats: int = 3, json_path: str = "BENCH_pr6.json",
         "speedups": speedups,
         "best_traversal_speedup": best,
         "bytes_per_edge_drop": drops,
+        "provenance": provenance(),
     }
     with open(json_path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)

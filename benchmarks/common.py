@@ -13,6 +13,7 @@ accumulates rows into ``RESULTS`` for JSON output (benchmarks.run
 from __future__ import annotations
 
 import json
+import os
 import time
 
 import jax
@@ -66,13 +67,50 @@ def timed(fn, *args, repeats: int = REPEATS, **kw):
     return out, float(np.median(times))
 
 
+_PROVENANCE = None
+
+
+def provenance() -> dict:
+    """Platform/provenance stamp merged into every JSON bench row, so a
+    number can never outlive the context that produced it (the ROADMAP's
+    "CPU interpret-mode caveat" made queryable): jax version, backend
+    platform, device kind, interpret-mode flags, and the git SHA of the
+    tree that ran. Memoized — one device query per process."""
+    global _PROVENANCE
+    if _PROVENANCE is not None:
+        return _PROVENANCE
+    from repro.kernels import runtime
+    dev = jax.devices()[0]
+    try:
+        import subprocess
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=5,
+            cwd=os.path.dirname(os.path.abspath(__file__)),
+        ).stdout.strip() or None
+    except Exception:
+        sha = None
+    _PROVENANCE = {
+        "jax_version": jax.__version__,
+        "platform": jax.default_backend(),
+        "device_kind": getattr(dev, "device_kind", str(dev)),
+        "interpret": runtime.interpret_mode(None),
+        "force_interpret_env":
+            os.environ.get(runtime.ENV_VAR, "") or None,
+        "git_sha": sha,
+    }
+    return _PROVENANCE
+
+
 def emit(rows, header, table: str | None = None):
     backend = B.resolve()
     print(",".join(list(header) + ["backend"]))
     for r in rows:
         print(",".join(str(x) for x in list(r) + [backend]))
+        # JSON rows carry the full provenance stamp; the CSV stays the
+        # historical column set (smoke-test greps parse it)
         RESULTS.append({"table": table, "backend": backend,
-                        **dict(zip(header, r))})
+                        **dict(zip(header, r)), **provenance()})
     return rows
 
 

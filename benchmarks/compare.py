@@ -1,0 +1,130 @@
+"""Bench-regression gate: diff a fresh run against a committed trajectory.
+
+    python benchmarks/compare.py FRESH.json [MORE.json ...] \
+        --baseline BENCH_pr8.json --threshold 0.25
+
+Rows are matched into cells by their identity keys — everything that
+names the workload (bench, primitive, tiered, backend, n, m, parts,
+placement, ...) and nothing that measures it (ms, mteps, speedups) or
+stamps it (provenance). A cell present in both files whose fresh ``ms``
+exceeds baseline by more than ``--threshold`` (fractional, default 25%)
+fails the gate (exit 1). Cells only on one side are reported and
+ignored — CI quick runs at a different scale simply share no cells with
+a full-scale trajectory instead of producing nonsense ratios.
+
+Cross-platform guard: rows stamped with provenance (``platform``,
+``device_kind``) only compare against rows from the same platform —
+a CPU-interpret CI runner can never "regress" a GPU trajectory.
+
+Exit codes: 0 = no regression (including the no-shared-cells case,
+which warns), 1 = regression past threshold, 2 = usage/load error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# measurement / stamp keys never used for cell identity
+MEASURE_KEYS = frozenset({
+    "ms", "mteps", "ms_tiered", "ms_pinned", "qps", "total_s",
+    "baseline_pr4_ms", "speedup_vs_pr4", "occupancy", "workload",
+    "tier", "comm_bytes_per_step", "edge_imbalance",
+    "jax_version", "git_sha", "force_interpret_env", "samples",
+})
+PLATFORM_KEYS = ("platform", "device_kind", "interpret")
+
+
+def load_rows(path: str) -> list:
+    with open(path) as f:
+        data = json.load(f)
+    if isinstance(data, dict):           # pr6-style payload or {"results"}
+        data = data.get("rows") or data.get("results") or []
+    return [r for r in data if isinstance(r, dict)]
+
+
+def cell_key(row: dict):
+    ident = {k: v for k, v in sorted(row.items())
+             if k not in MEASURE_KEYS and k not in PLATFORM_KEYS
+             and not isinstance(v, (dict, list))}
+    return tuple(ident.items())
+
+
+def platform_of(row: dict):
+    return tuple(row.get(k) for k in PLATFORM_KEYS)
+
+
+def index(rows: list) -> dict:
+    out = {}
+    for r in rows:
+        if "ms" not in r:                # occupancy/storage rows: no gate
+            continue
+        # keep the best (min) ms per cell — reruns in one file collapse
+        # to the strongest number, matching the benches' min-of-reps
+        key = (cell_key(r), platform_of(r))
+        if key not in out or r["ms"] < out[key]["ms"]:
+            out[key] = r
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="fail CI when a fresh bench run regresses the "
+                    "committed trajectory")
+    ap.add_argument("fresh", nargs="+", help="fresh bench JSON file(s)")
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_pr*.json to compare against")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max tolerated fractional slowdown (default "
+                         "0.25 = 25%%)")
+    args = ap.parse_args(argv)
+
+    try:
+        base = index(load_rows(args.baseline))
+        fresh_rows = []
+        for p in args.fresh:
+            fresh_rows.extend(load_rows(p))
+        fresh = index(fresh_rows)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"[compare] cannot load input: {e}", file=sys.stderr)
+        return 2
+
+    shared = sorted(set(base) & set(fresh),
+                    key=lambda k: str(k))
+    only_base = len(set(base) - set(fresh))
+    only_fresh = len(set(fresh) - set(base))
+    if only_base or only_fresh:
+        print(f"[compare] unshared cells ignored: {only_base} "
+              f"baseline-only, {only_fresh} fresh-only")
+    if not shared:
+        print("[compare] WARNING: no shared (workload, backend, "
+              "platform) cells between fresh run and baseline — "
+              "nothing gated")
+        return 0
+
+    regressions = 0
+    for key in shared:
+        b, f = base[key]["ms"], fresh[key]["ms"]
+        ratio = f / b if b > 0 else float("inf")
+        ident = dict(key[0])
+        name = (f"{ident.get('bench', '?')}/{ident.get('primitive', '?')}"
+                f" backend={ident.get('backend', '?')}"
+                f" tiered={ident.get('tiered', '-')}"
+                f" n={ident.get('n', '?')}")
+        flag = ""
+        if ratio > 1.0 + args.threshold:
+            flag = f"  REGRESSION (> +{args.threshold:.0%})"
+            regressions += 1
+        print(f"[compare] {name}: {b:.2f} ms -> {f:.2f} ms "
+              f"({ratio - 1.0:+.1%}){flag}")
+    if regressions:
+        print(f"[compare] FAIL: {regressions}/{len(shared)} cells "
+              f"regressed past +{args.threshold:.0%}", file=sys.stderr)
+        return 1
+    print(f"[compare] OK: {len(shared)} shared cells within "
+          f"+{args.threshold:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

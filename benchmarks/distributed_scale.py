@@ -148,8 +148,12 @@ def main():
         bench_scale(scale, args.edge_factor, args.seed, iters,
                     parts_1d, meshes_2d, rows)
 
+    try:
+        from benchmarks.common import provenance
+    except ImportError:              # run as a bare script
+        from common import provenance
     with open(args.json, "w") as f:
-        json.dump(rows, f, indent=1)
+        json.dump([{**r, **provenance()} for r in rows], f, indent=1)
     print(f"[bench] wrote {args.json}")
 
 

@@ -176,8 +176,15 @@ def main(argv=None):
         bench_occupancy(g, backend, args.reps)
 
     if args.json:
+        # stamp platform provenance into every persisted row so a
+        # committed trajectory records what produced it (and compare.py
+        # can refuse cross-platform comparisons)
+        try:
+            from benchmarks.common import provenance
+        except ImportError:          # run as a bare script
+            from common import provenance
         with open(args.json, "w") as f:
-            json.dump(ROWS, f, indent=1)
+            json.dump([{**r, **provenance()} for r in ROWS], f, indent=1)
         print(f"[bench] wrote {args.json}")
     # machine-checkable summary (the CI perf-smoke contract)
     worst = min((r.get("mteps", 1) for r in ROWS

@@ -61,7 +61,6 @@ from __future__ import annotations
 import importlib
 import os
 import threading
-import warnings
 from contextlib import contextmanager
 from typing import Callable, Optional
 
@@ -155,10 +154,12 @@ def resolve(backend: Optional[str] = None,
     ``backend`` (which wins).
     """
     if use_kernel is not None:
-        warnings.warn(
+        # the obs.log funnel: a real DeprecationWarning (the pinned API
+        # contract) plus a debug log under REPRO_LOG=debug
+        from repro.obs.log import deprecated
+        deprecated(
             "use_kernel= is deprecated; pass backend='pallas'/'xla' or use "
-            "repro.core.backend.use_backend(...)", DeprecationWarning,
-            stacklevel=3)
+            "repro.core.backend.use_backend(...)", stacklevel=3)
         if backend is None:
             backend = PALLAS if use_kernel else XLA
     if backend is None:

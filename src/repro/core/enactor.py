@@ -24,6 +24,15 @@ static shapes: one BSP step dispatched over a static capacity ladder
 sized to the live workload's tier instead of the graph. Only state —
 frontier/vertex-shaped, tier-independent — crosses the switch boundary,
 which is what makes every rung bit-identical given enough capacity.
+
+Telemetry (`obs.telemetry`): both loops accept an optional read-only
+``probe`` — ``probe(prev_state, new_state) -> {column: value}`` —
+recorded into a caller-provided ``TelemetryBuffer`` carried alongside
+the loop state. ``probe=None`` is byte-for-byte the historical path;
+with a probe the loop returns the filled buffer as one extra element.
+Probes observe, never steer: nothing they compute feeds back into the
+step, which is what makes the telemetry on/off bit-parity contract
+(tests/test_obs.py) hold by construction.
 """
 from __future__ import annotations
 
@@ -38,23 +47,48 @@ S = TypeVar("S")
 def run_until(cond: Callable[[S], jax.Array],
               body: Callable[[S], S],
               state: S,
-              max_iter: int) -> tuple[S, jax.Array]:
+              max_iter: int,
+              probe: Callable[[S, S], dict] | None = None,
+              telemetry=None):
     """while (cond(state) && it < max_iter): state = body(state).
 
     Returns (final_state, iterations_run). ``max_iter`` bounds the loop so
     XLA sees a well-founded while; primitives pass n (or a diameter bound).
+
+    With ``probe``/``telemetry`` set, each step additionally records
+    ``probe(prev, new)`` into the ``TelemetryBuffer`` and the loop
+    returns (final_state, iterations_run, filled_buffer).
     """
 
-    def _cond(carry):
-        state, it = carry
+    if probe is None:
+
+        def _cond(carry):
+            state, it = carry
+            return jnp.logical_and(cond(state), it < max_iter)
+
+        def _body(carry):
+            state, it = carry
+            return body(state), it + 1
+
+        (final, iters) = jax.lax.while_loop(_cond, _body,
+                                            (state, jnp.int32(0)))
+        return final, iters
+
+    if telemetry is None:
+        raise ValueError("probe= requires a telemetry buffer")
+
+    def _cond_t(carry):
+        state, it, _ = carry
         return jnp.logical_and(cond(state), it < max_iter)
 
-    def _body(carry):
-        state, it = carry
-        return body(state), it + 1
+    def _body_t(carry):
+        state, it, buf = carry
+        new = body(state)
+        return new, it + 1, buf.record(**probe(state, new))
 
-    (final, iters) = jax.lax.while_loop(_cond, _body, (state, jnp.int32(0)))
-    return final, iters
+    final, iters, buf = jax.lax.while_loop(
+        _cond_t, _body_t, (state, jnp.int32(0), telemetry))
+    return final, iters, buf
 
 
 def select_lanes(mask: jax.Array, on_true: S, on_false: S) -> S:
@@ -73,7 +107,9 @@ def select_lanes(mask: jax.Array, on_true: S, on_false: S) -> S:
 def run_until_any(cond: Callable[[S], jax.Array],
                   body: Callable[[S], S],
                   state: S,
-                  max_iter: int) -> tuple[S, jax.Array, jax.Array]:
+                  max_iter: int,
+                  probe: Callable[[S, S], dict] | None = None,
+                  telemetry=None):
     """Batched BSP loop: iterate while any lane of ``cond(state)`` holds.
 
     Contract:
@@ -85,29 +121,58 @@ def run_until_any(cond: Callable[[S], jax.Array],
     entering the step keeps its old state bit-for-bit (frozen), so a
     converged traversal is a no-op while ragged stragglers continue.
     Returns (final_state, per_lane_iters (B,) int32, iterations_run ()).
+
+    With ``probe``/``telemetry`` set, each wall-clock step records
+    ``probe(prev, new)`` (``new`` is the already lane-masked state, so
+    frozen lanes report their frozen values) and the filled buffer comes
+    back as a fourth element; per-lane valid lengths are exactly the
+    returned ``lane_iters``.
     """
 
     # the (B,) active mask rides in the carry so cond runs once per step
-    def _cond(carry):
-        _, _, it, active = carry
+    if probe is None:
+
+        def _cond(carry):
+            _, _, it, active = carry
+            return jnp.logical_and(jnp.any(active), it < max_iter)
+
+        def _body(carry):
+            st, lane_iters, it, active = carry
+            st = select_lanes(active, body(st), st)  # freeze finished lanes
+            return (st, lane_iters + active.astype(jnp.int32), it + 1,
+                    cond(st))
+
+        active0 = cond(state)
+        lanes0 = jnp.zeros(active0.shape, jnp.int32)
+        final, lane_iters, iters, _ = jax.lax.while_loop(
+            _cond, _body, (state, lanes0, jnp.int32(0), active0))
+        return final, lane_iters, iters
+
+    if telemetry is None:
+        raise ValueError("probe= requires a telemetry buffer")
+
+    def _cond_t(carry):
+        _, _, it, active, _ = carry
         return jnp.logical_and(jnp.any(active), it < max_iter)
 
-    def _body(carry):
-        st, lane_iters, it, active = carry
-        st = select_lanes(active, body(st), st)      # freeze finished lanes
-        return (st, lane_iters + active.astype(jnp.int32), it + 1,
-                cond(st))
+    def _body_t(carry):
+        st, lane_iters, it, active, buf = carry
+        new = select_lanes(active, body(st), st)
+        buf = buf.record(**probe(st, new))
+        return (new, lane_iters + active.astype(jnp.int32), it + 1,
+                cond(new), buf)
 
     active0 = cond(state)
     lanes0 = jnp.zeros(active0.shape, jnp.int32)
-    final, lane_iters, iters, _ = jax.lax.while_loop(
-        _cond, _body, (state, lanes0, jnp.int32(0), active0))
-    return final, lane_iters, iters
+    final, lane_iters, iters, _, buf = jax.lax.while_loop(
+        _cond_t, _body_t,
+        (state, lanes0, jnp.int32(0), active0, telemetry))
+    return final, lane_iters, iters, buf
 
 
 def tiered_step(need, caps: Sequence[int],
                 step_of: Callable[[int], Callable[[S], S]],
-                state: S) -> S:
+                state: S, with_index: bool = False):
     """Run one BSP step at the smallest capacity tier holding ``need``.
 
     ``caps`` is the static power-of-two ladder (``backend.tier_plan``),
@@ -120,9 +185,18 @@ def tiered_step(need, caps: Sequence[int],
     untiered / pinned case — also the contract of every distributed
     placement, sharded and 2d alike, where per-device tier choices
     would desynchronize collective shapes).
+
+    ``with_index=True`` additionally returns the chosen tier index as a
+    traced int32 — the telemetry hook for "which rung fired this step"
+    without the caller recomputing the ladder search.
     """
     if len(caps) == 1:
+        if with_index:
+            return step_of(caps[0])(state), jnp.int32(0)
         return step_of(caps[0])(state)
     from .frontier import tier_index
-    return jax.lax.switch(tier_index(need, tuple(caps)),
-                          [step_of(c) for c in caps], state)
+    idx = tier_index(need, tuple(caps))
+    out = jax.lax.switch(idx, [step_of(c) for c in caps], state)
+    if with_index:
+        return out, idx
+    return out

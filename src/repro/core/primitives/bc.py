@@ -24,6 +24,7 @@ chunking runs underneath.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple, Optional
 
 import jax
@@ -60,9 +61,9 @@ class MultiBCResult(NamedTuple):
     chunks: int            # python int: number of batched passes run
 
 
-@jax.jit
+@functools.partial(jax.jit, static_argnames=("telemetry",))
 def _bc_impl(graph: Graph, esrc: jax.Array, srcs: jax.Array,
-             weights: jax.Array) -> BCResult:
+             weights: jax.Array, telemetry: bool = False):
     """B Brandes passes in one program. ``weights`` (B,) scales each
     lane's dependency contribution (0 masks a padding lane)."""
     n, m = graph.num_vertices, graph.num_edges
@@ -92,12 +93,23 @@ def _bc_impl(graph: Graph, esrc: jax.Array, srcs: jax.Array,
 
     depth0 = jnp.full((b, n), -1, jnp.int32).at[lane, srcs].set(0)
     sigma0 = jnp.zeros((b, n)).at[lane, srcs].set(1.0)
-    fwd, _, _ = run_until_any(
-        lambda st: st.n_f > 0, fwd_body,
-        FwdState(depth=depth0, sigma=sigma0,
-                 level=jnp.zeros((b,), jnp.int32),
-                 n_f=jnp.ones((b,), jnp.int32)),
-        max_iter=n + 1)
+    fwd0 = FwdState(depth=depth0, sigma=sigma0,
+                    level=jnp.zeros((b,), jnp.int32),
+                    n_f=jnp.ones((b,), jnp.int32))
+    buf = None
+    if telemetry:
+        # instrument the forward (BFS) phase: its per-level frontier is
+        # the trajectory that matters; the backward phase replays the
+        # same levels in reverse by construction
+        from ...obs.telemetry import TelemetryBuffer
+        buf0 = TelemetryBuffer.make(n + 1, {"frontier": ((b,), jnp.int32)})
+        fwd, _, _, buf = run_until_any(
+            lambda st: st.n_f > 0, fwd_body, fwd0, max_iter=n + 1,
+            probe=lambda prev, new: {"frontier": new.n_f},
+            telemetry=buf0)
+    else:
+        fwd, _, _ = run_until_any(
+            lambda st: st.n_f > 0, fwd_body, fwd0, max_iter=n + 1)
     max_level = fwd.level  # (B,) one past each lane's deepest level
 
     # ---- backward: dependency accumulation ------------------------------
@@ -120,30 +132,35 @@ def _bc_impl(graph: Graph, esrc: jax.Array, srcs: jax.Array,
         BwdState(delta=jnp.zeros((b, n)), lvl=max_level - 1),
         max_iter=n + 1)
     bc_lanes = bwd.delta.at[lane, srcs].set(0.0)
-    return BCResult(bc=(bc_lanes * weights[:, None]).astype(jnp.float32),
-                    sigma=fwd.sigma, depth=fwd.depth, max_level=max_level)
+    result = BCResult(bc=(bc_lanes * weights[:, None]).astype(jnp.float32),
+                      sigma=fwd.sigma, depth=fwd.depth,
+                      max_level=max_level)
+    return (result, buf) if telemetry else result
 
 
 def bc_batch(graph: Graph, srcs, weights=None, *,
-             backend: Optional[str] = None) -> BCResult:
+             backend: Optional[str] = None, telemetry: bool = False):
     """One batched Brandes pass: lane i holds the per-source dependency
     of ``srcs[i]`` (scaled by ``weights[i]`` if given). ``backend`` is
     accepted for a uniform primitive interface; both phases are
     whole-edge-list sweeps (scatter/segment algebra) with no dedicated
     Pallas kernel yet, so the registry resolves both backends to the
-    same XLA sweep."""
+    same XLA sweep. ``telemetry=True`` returns
+    ``(BCResult, TelemetryBuffer)`` with the forward phase's per-level
+    frontier sizes; the result is bit-identical to
+    ``telemetry=False``."""
     B.resolve(backend)
     srcs = jnp.asarray(srcs, dtype=jnp.int32).reshape(-1)
     if weights is None:
         weights = jnp.ones(srcs.shape, jnp.float32)
     esrc, _ = edge_list(graph)
     return _bc_impl(graph, jnp.asarray(esrc, dtype=jnp.int32), srcs,
-                    jnp.asarray(weights, jnp.float32))
+                    jnp.asarray(weights, jnp.float32), telemetry)
 
 
 def bc(graph: Graph, src: Optional[int] = None, *, chunk: int = 32,
        samples: Optional[int] = None, seed: int = 0,
-       backend: Optional[str] = None):
+       backend: Optional[str] = None, telemetry: bool = False):
     """Betweenness centrality.
 
     * ``src`` given — one Brandes pass; returns the per-source dependency
@@ -155,8 +172,14 @@ def bc(graph: Graph, src: Optional[int] = None, *, chunk: int = 32,
       scaled by n/k (unbiased estimator). Returns ``MultiBCResult``.
     """
     if src is not None:
-        r = bc_batch(graph, [src], backend=backend)
+        r = bc_batch(graph, [src], backend=backend, telemetry=telemetry)
+        if telemetry:
+            res, buf = r
+            return jax.tree_util.tree_map(lambda x: x[0], res), buf
         return jax.tree_util.tree_map(lambda x: x[0], r)
+    if telemetry:
+        raise ValueError("telemetry= is per-pass; pass src= (or use "
+                         "bc_batch) to collect a trajectory")
     n = graph.num_vertices
     if samples is None:
         roots = np.arange(n, dtype=np.int32)

@@ -71,11 +71,11 @@ class BFSResult(NamedTuple):
 
 @functools.partial(jax.jit, static_argnames=(
     "direction", "idempotence", "strategy", "record_preds", "backend",
-    "tiered"))
+    "tiered", "telemetry"))
 def _bfs_impl(graph: Graph, srcs: jax.Array, do_a: float, do_b: float,
               direction: bool, idempotence: bool, strategy: str,
               record_preds: bool, backend: str,
-              tiered: bool = True) -> BFSResult:
+              tiered: bool = True, telemetry: bool = False):
     n, m = graph.num_vertices, graph.num_edges
     b = srcs.shape[0]
     # edge frontiers are worst-case expansion (m); vertex frontiers are
@@ -246,14 +246,41 @@ def _bfs_impl(graph: Graph, srcs: jax.Array, do_a: float, do_b: float,
                                     pull_step, mixed_step, s2),
             st)
 
-    final, lane_iters, _ = run_until_any(lambda st: st.n_f > 0, body,
-                                         state, max_iter=n + 1)
+    buf = None
+    if telemetry:
+        # read-only probe: per-lane frontier size / direction / overflow
+        # delta after each step, plus the tier rung the step's workload
+        # selected (recomputed from the prev frontier — XLA CSEs it
+        # against the dispatch in push_step, so it costs nothing).
+        from ...obs.telemetry import TelemetryBuffer
+        from ..frontier import tier_index
+        caps_arr = jnp.asarray(caps_e, jnp.int32)
+
+        def probe(prev: BFSState, new: BFSState) -> dict:
+            need = jnp.max(ops.frontier_workload(graph, prev.frontier))
+            tier = caps_arr[tier_index(need, caps_e)]
+            return {"frontier": new.n_f, "tier": tier,
+                    "direction": new.mode,
+                    "overflow": new.overflow - prev.overflow}
+
+        buf0 = TelemetryBuffer.make(n + 1, {
+            "frontier": ((b,), jnp.int32),
+            "tier": ((), jnp.int32),
+            "direction": ((b,), jnp.int32),
+            "overflow": ((b,), jnp.int32)})
+        final, lane_iters, _, buf = run_until_any(
+            lambda st: st.n_f > 0, body, state, max_iter=n + 1,
+            probe=probe, telemetry=buf0)
+    else:
+        final, lane_iters, _ = run_until_any(lambda st: st.n_f > 0, body,
+                                             state, max_iter=n + 1)
     edges = jnp.sum(jnp.where(final.labels >= 0,
                               graph.degrees[None, :], 0),
                     axis=1).astype(jnp.int32)
-    return BFSResult(labels=final.labels, preds=final.preds,
-                     iterations=lane_iters, pull_iters=final.pull_iters,
-                     edges_visited=edges, overflow=final.overflow)
+    result = BFSResult(labels=final.labels, preds=final.preds,
+                       iterations=lane_iters, pull_iters=final.pull_iters,
+                       edges_visited=edges, overflow=final.overflow)
+    return (result, buf) if telemetry else result
 
 
 def bfs_batch(graph: Graph, srcs, *, direction: bool = True,
@@ -261,7 +288,7 @@ def bfs_batch(graph: Graph, srcs, *, direction: bool = True,
               idempotence: bool = True, strategy: str = "LB",
               record_preds: bool = True,
               backend: Optional[str] = None,
-              tiered: bool = True) -> BFSResult:
+              tiered: bool = True, telemetry: bool = False):
     """Multi-source BFS: one jitted batched BSP loop over ``srcs``.
 
     Every ``BFSResult`` field carries a leading batch axis; lane i is
@@ -272,27 +299,38 @@ def bfs_batch(graph: Graph, srcs, *, direction: bool = True,
     ``tiered=False`` pins every push to the top capacity tier (the
     worst-case-sized program) — results are bit-identical to the tiered
     default; the flag exists for the tier-parity tests and A/B
-    benchmarking."""
+    benchmarking.
+
+    ``telemetry=True`` returns ``(BFSResult, TelemetryBuffer)`` — the
+    buffer holds per-iteration frontier size / tier / direction /
+    overflow columns (``obs.telemetry.trim`` converts to host arrays);
+    the result itself is bit-identical to ``telemetry=False``."""
     if direction and not graph.has_csc:
         direction = False
     srcs = jnp.asarray(srcs, dtype=jnp.int32).reshape(-1)
     return _bfs_impl(graph, srcs, do_a, do_b, direction, idempotence,
                      strategy, record_preds, B.resolve(backend),
-                     tiered)
+                     tiered, telemetry)
 
 
 def bfs(graph: Graph, src: int, *, direction: bool = True,
         do_a: float = 0.001, do_b: float = 0.2, idempotence: bool = True,
         strategy: str = "LB", record_preds: bool = True,
         backend: Optional[str] = None,
-        use_kernel: Optional[bool] = None) -> BFSResult:
+        use_kernel: Optional[bool] = None, telemetry: bool = False):
     """Run BFS from ``src`` — a squeezed batch-of-1 ``bfs_batch`` call.
 
     ``backend`` selects the operator backend ("xla" | "pallas" | "auto";
     None defers to the ambient context / REPRO_BACKEND). ``use_kernel``
-    is the deprecated alias (public wrapper only) and always warns."""
+    is the deprecated alias (public wrapper only) and always warns.
+    ``telemetry=True`` returns ``(BFSResult, TelemetryBuffer)`` with the
+    result squeezed but the buffer keeping its lane axis (lane 0)."""
     r = bfs_batch(graph, [src], direction=direction, do_a=do_a, do_b=do_b,
                   idempotence=idempotence, strategy=strategy,
                   record_preds=record_preds,
-                  backend=B.resolve(backend, use_kernel))
+                  backend=B.resolve(backend, use_kernel),
+                  telemetry=telemetry)
+    if telemetry:
+        res, buf = r
+        return jax.tree_util.tree_map(lambda x: x[0], res), buf
     return jax.tree_util.tree_map(lambda x: x[0], r)

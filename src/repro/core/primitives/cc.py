@@ -37,8 +37,8 @@ class CCResult(NamedTuple):
     iterations: jax.Array
 
 
-@jax.jit
-def _cc_impl(graph: Graph, src: jax.Array) -> CCResult:
+@functools.partial(jax.jit, static_argnames=("telemetry",))
+def _cc_impl(graph: Graph, src: jax.Array, telemetry: bool = False):
     n, m = graph.num_vertices, graph.num_edges
     # dense decoded view, hoisted once before the loop (the hooking sweep
     # reads every edge every iteration — an in-loop decode would re-run)
@@ -72,18 +72,34 @@ def _cc_impl(graph: Graph, src: jax.Array) -> CCResult:
 
     state = CCState(cid=jnp.arange(n, dtype=jnp.int32),
                     live=jnp.ones((m,), bool), n_live=jnp.int32(m))
-    final, iters = run_until(lambda st: st.n_live > 0, body, state,
-                             max_iter=n + 1)
+    if telemetry:
+        # CC's frontier is the live-edge set — its per-iteration size is
+        # the convergence trajectory (hooking halves component trees)
+        from ...obs.telemetry import TelemetryBuffer
+        buf0 = TelemetryBuffer.make(n + 1, {
+            "live_edges": ((), jnp.int32)})
+        final, iters, buf = run_until(
+            lambda st: st.n_live > 0, body, state, max_iter=n + 1,
+            probe=lambda prev, new: {"live_edges": new.n_live},
+            telemetry=buf0)
+    else:
+        buf = None
+        final, iters = run_until(lambda st: st.n_live > 0, body, state,
+                                 max_iter=n + 1)
     ncomp = jnp.sum((final.cid == jnp.arange(n)).astype(jnp.int32))
-    return CCResult(labels=final.cid, num_components=ncomp, iterations=iters)
+    result = CCResult(labels=final.cid, num_components=ncomp,
+                      iterations=iters)
+    return (result, buf) if telemetry else result
 
 
-def connected_components(graph: Graph, *, backend: Optional[str] = None
-                         ) -> CCResult:
+def connected_components(graph: Graph, *, backend: Optional[str] = None,
+                         telemetry: bool = False):
     """Hooking + pointer-jumping CC. ``backend`` is accepted for a uniform
     primitive interface; CC is pure scatter/segment algebra with no
     dedicated Pallas kernel yet, so the registry resolves both backends to
-    the same XLA sweep."""
+    the same XLA sweep. ``telemetry=True`` returns
+    ``(CCResult, TelemetryBuffer)`` with the per-iteration live-edge
+    count; the result is bit-identical to ``telemetry=False``."""
     B.resolve(backend)
     src, _ = edge_list(graph)
-    return _cc_impl(graph, jnp.asarray(src, dtype=jnp.int32))
+    return _cc_impl(graph, jnp.asarray(src, dtype=jnp.int32), telemetry)

@@ -60,12 +60,13 @@ def _fixed_tree_sum(x: jax.Array) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnames=("max_iter", "backend",
                                              "ell_width", "placement",
-                                             "precision"))
+                                             "precision", "telemetry"))
 def _pagerank_impl(graph: Graph, inv_deg: jax.Array, damping: jax.Array,
                    tol: jax.Array, max_iter: int, backend: str,
                    ell_width: Optional[int],
                    placement: str = B.SINGLE,
-                   precision: str = "fp32") -> PRResult:
+                   precision: str = "fp32",
+                   telemetry: bool = False):
     n = graph.num_vertices
     # PageRank's sweep is dense — every row contributes every iteration —
     # so it is explicitly PINNED to the top capacity tier (pin=True); the
@@ -116,6 +117,18 @@ def _pagerank_impl(graph: Graph, inv_deg: jax.Array, damping: jax.Array,
     state = PRState(rank=jnp.full((n,), 1.0 / n, jnp.float32),
                     active=jnp.ones((n,), bool),
                     n_active=jnp.int32(n), iters=jnp.int32(0))
+    if telemetry:
+        # per-sweep active (not-yet-converged) vertex count: the dense
+        # analogue of a frontier trajectory — with tol=0 it stays n
+        # until the final sweep, with tol>0 it charts convergence
+        from ...obs.telemetry import TelemetryBuffer
+        buf0 = TelemetryBuffer.make(max_iter, {
+            "active": ((), jnp.int32)})
+        final, iters, buf = run_until(
+            lambda st: st.n_active > 0, body, state, max_iter=max_iter,
+            probe=lambda prev, new: {"active": new.n_active},
+            telemetry=buf0)
+        return PRResult(rank=final.rank, iterations=iters), buf
     final, iters = run_until(lambda st: st.n_active > 0, body, state,
                              max_iter=max_iter)
     return PRResult(rank=final.rank, iterations=iters)
@@ -126,7 +139,7 @@ def pagerank(graph, *, damping: float = 0.85, tol: float = 0.0,
              use_kernel: Optional[bool] = None,
              ell_width: Optional[int] = None,
              placement: Optional[str] = None,
-             precision: str = "fp32") -> PRResult:
+             precision: str = "fp32", telemetry: bool = False):
     """``graph`` may be a ``Graph`` or a ``ShardedGraph``
     (``partition_1d(...).shard(mesh)``) — a sharded graph routes the
     SpMV sweep through the mesh providers and the SAME impl otherwise,
@@ -152,7 +165,7 @@ def pagerank(graph, *, damping: float = 0.85, tol: float = 0.0,
             graph, _inv_out_degrees(graph), jnp.float32(damping),
             jnp.float32(tol), max_iter, bk,
             None if ell_width is None else int(ell_width), pl,
-            precision)
+            precision, telemetry)
 
 
 def _inv_out_degrees(graph) -> jax.Array:

@@ -52,10 +52,12 @@ class SSSPResult(NamedTuple):
 
 
 @functools.partial(jax.jit, static_argnames=("use_delta", "strategy",
-                                             "backend", "tiered"))
+                                             "backend", "tiered",
+                                             "telemetry"))
 def _sssp_impl(graph: Graph, srcs: jax.Array, delta: jax.Array,
                use_delta: bool, strategy: str,
-               backend: str, tiered: bool = True) -> SSSPResult:
+               backend: str, tiered: bool = True,
+               telemetry: bool = False):
     n, m = graph.num_vertices, graph.num_edges
     b = srcs.shape[0]
     # relax sweeps run at the smallest capacity tier holding the near
@@ -163,11 +165,38 @@ def _sssp_impl(graph: Graph, srcs: jax.Array, delta: jax.Array,
     def cond(st: SSSPState):
         return (st.n_near > 0) | jnp.any(st.far, axis=1)
 
-    final, lane_iters, _ = run_until_any(cond, body, state,
-                                         max_iter=4 * n + 8)
-    return SSSPResult(dist=final.dist, preds=final.preds,
-                      iterations=lane_iters,
-                      relaxations=final.relaxations)
+    buf = None
+    if telemetry:
+        # per-step near-pile size, bucket level, relaxation delta, and
+        # the relax tier the step's workload selected (bucket-pop steps
+        # record the hypothetical tier of their empty near pile — rung 0)
+        from ...obs.telemetry import TelemetryBuffer
+        from ..frontier import tier_index
+        caps_arr = jnp.asarray(caps_e, jnp.int32)
+
+        def probe(prev: SSSPState, new: SSSPState) -> dict:
+            need = jnp.max(jnp.sum(
+                jnp.where(prev.near, graph.degrees[None, :], 0), axis=1))
+            tier = caps_arr[tier_index(need, caps_e)]
+            return {"frontier": new.n_near, "tier": tier,
+                    "bucket": new.bucket,
+                    "relaxations": new.relaxations - prev.relaxations}
+
+        buf0 = TelemetryBuffer.make(4 * n + 8, {
+            "frontier": ((b,), jnp.int32),
+            "tier": ((), jnp.int32),
+            "bucket": ((b,), jnp.int32),
+            "relaxations": ((b,), jnp.int32)})
+        final, lane_iters, _, buf = run_until_any(
+            cond, body, state, max_iter=4 * n + 8,
+            probe=probe, telemetry=buf0)
+    else:
+        final, lane_iters, _ = run_until_any(cond, body, state,
+                                             max_iter=4 * n + 8)
+    result = SSSPResult(dist=final.dist, preds=final.preds,
+                        iterations=lane_iters,
+                        relaxations=final.relaxations)
+    return (result, buf) if telemetry else result
 
 
 def _auto_delta(graph: Graph) -> float:
@@ -180,28 +209,35 @@ def _auto_delta(graph: Graph) -> float:
 def sssp_batch(graph: Graph, srcs, *, delta: Optional[float] = None,
                strategy: str = "LB",
                backend: Optional[str] = None,
-               tiered: bool = True) -> SSSPResult:
+               tiered: bool = True, telemetry: bool = False):
     """Multi-source delta-stepping: one jitted batched program over
     ``srcs``; lane i is bit-identical to ``sssp(graph, srcs[i])``.
     ``tiered=False`` pins relax sweeps to the worst-case capacity
-    (bit-identical results; the tier-parity test hook)."""
+    (bit-identical results; the tier-parity test hook).
+    ``telemetry=True`` returns ``(SSSPResult, TelemetryBuffer)`` with
+    per-iteration near-pile size / tier / bucket / relaxation columns;
+    the result is bit-identical to ``telemetry=False``."""
     assert graph.weighted, "SSSP needs edge weights"
     if delta is None:
         delta = _auto_delta(graph)
     use_delta = bool(jnp.isfinite(delta)) and delta > 0
     srcs = jnp.asarray(srcs, dtype=jnp.int32).reshape(-1)
     return _sssp_impl(graph, srcs, jnp.float32(delta), use_delta,
-                      strategy, B.resolve(backend), tiered)
+                      strategy, B.resolve(backend), tiered, telemetry)
 
 
 def sssp(graph: Graph, src: int, *, delta: Optional[float] = None,
          strategy: str = "LB", backend: Optional[str] = None,
-         use_kernel: Optional[bool] = None) -> SSSPResult:
+         use_kernel: Optional[bool] = None, telemetry: bool = False):
     """Delta-stepping SSSP — a squeezed batch-of-1 ``sssp_batch`` call.
     ``delta=None`` = auto heuristic; ``use_kernel`` is the deprecated
     alias (public wrapper only) and always warns."""
     r = sssp_batch(graph, [src], delta=delta, strategy=strategy,
-                   backend=B.resolve(backend, use_kernel))
+                   backend=B.resolve(backend, use_kernel),
+                   telemetry=telemetry)
+    if telemetry:
+        res, buf = r
+        return jax.tree_util.tree_map(lambda x: x[0], res), buf
     return jax.tree_util.tree_map(lambda x: x[0], r)
 
 

@@ -51,21 +51,33 @@ def _orient(graph: Graph) -> tuple[Graph, np.ndarray, np.ndarray]:
 
 
 def triangle_count(graph: Graph, *, backend: Optional[str] = None,
-                   use_kernel: Optional[bool] = None) -> TCResult:
+                   use_kernel: Optional[bool] = None,
+                   telemetry: bool = False):
     """Exact TC via ``C⟨G'⟩ = G' ⊗ G'ᵀ`` over ⟨plus,and⟩. The graph must
     be undirected (both edge directions present), with sorted neighbor
-    lists (from_edge_list guarantees)."""
+    lists (from_edge_list guarantees). ``telemetry=True`` returns
+    ``(TCResult, TelemetryBuffer)`` — TC is single-shot (no BSP loop),
+    so the trajectory is one row recording the oriented workload; the
+    kwarg exists so all six primitives share the telemetry contract."""
     bk = B.resolve(backend, use_kernel)
     sub, ssrc, sdst = _orient(graph)
     mp = sub.num_edges
     if mp == 0:
         z = jnp.int32(0)
-        return TCResult(z, jnp.zeros((0,), jnp.int32), ssrc, sdst)
-    counts = linalg.mxm(sub, sub, (ssrc, sdst), semiring=linalg.plus_and,
-                        b_transpose=True, structural=True,
-                        backend=bk).astype(jnp.int32)
-    return TCResult(total=jnp.sum(counts).astype(jnp.int32),
-                    per_edge=counts, edge_src=ssrc, edge_dst=sdst)
+        result = TCResult(z, jnp.zeros((0,), jnp.int32), ssrc, sdst)
+    else:
+        counts = linalg.mxm(sub, sub, (ssrc, sdst),
+                            semiring=linalg.plus_and,
+                            b_transpose=True, structural=True,
+                            backend=bk).astype(jnp.int32)
+        result = TCResult(total=jnp.sum(counts).astype(jnp.int32),
+                          per_edge=counts, edge_src=ssrc, edge_dst=sdst)
+    if telemetry:
+        from ...obs.telemetry import TelemetryBuffer
+        buf = TelemetryBuffer.make(1, {"oriented_edges": ((), jnp.int32)})
+        buf = buf.record(oriented_edges=jnp.int32(mp))
+        return result, buf
+    return result
 
 
 def triangle_count_full(graph: Graph, *, backend: Optional[str] = None,

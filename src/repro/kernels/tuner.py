@@ -233,8 +233,14 @@ def autotune(op: str, cap: int, probe: Optional[Callable] = None, *,
             continue
         if s < best_s:
             best_tile, best_s = tile, s
+    from repro.obs.log import get_logger
+    log = get_logger("tuner")
     if best_tile is None:
+        log.debug(f"{op} cap={cap}: no candidate tile survived, "
+                  f"using heuristic")
         return tile_for(op, cap, min_tile=min_tile, encoding=encoding)
+    log.debug(f"{op} cap={cap} {encoding}: picked tile {best_tile} "
+              f"({best_s * 1e3:.3f} ms)")
     cache["entries"][key] = {"tile": int(best_tile),
                              "ms": round(best_s * 1e3, 4),
                              "cap": int(cap),
@@ -273,10 +279,12 @@ def main(argv=None) -> None:
     import repro.kernels.ops  # noqa: F401  (registers the probes)
     ops = args.ops.split(",") if args.ops else None
     caps = [int(c) for c in args.caps.split(",")]
+    from repro.obs.log import get_logger
+    log = get_logger("tuner")
     picked = autotune_all(caps, ops)
     for (op, cap, enc), tile in sorted(picked.items()):
-        print(f"{op:16s} cap={cap:<8d} {enc:5s} -> tile {tile}")
-    print(f"# cache: {cache_path()}")
+        log.info(f"{op:16s} cap={cap:<8d} {enc:5s} -> tile {tile}")
+    log.info(f"cache: {cache_path()}")
 
 
 if __name__ == "__main__":

@@ -12,6 +12,12 @@ Multi-source: ``--sources 3,99,512`` runs bfs/sssp as ONE batched
 multi-source program over the listed roots (per-lane validation) instead
 of a single-source run; ``bc`` accumulates exactly those roots. For the
 continuous-serving version of the same idea see launch/graph_serve.py.
+
+Observability: ``--stats`` reruns each primitive with ``telemetry=``
+and prints the per-iteration trajectory (frontier size, tier,
+direction — the characterization tables of paper §5); ``--trace
+out.json`` writes the phase spans (build/dispatch/validate) as Chrome
+trace-event JSON, loadable at ui.perfetto.dev.
 """
 from __future__ import annotations
 
@@ -21,6 +27,7 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core import backend as B
 from repro.core import graph as G
 from repro.core import ref as R
@@ -29,6 +36,9 @@ from repro.core.primitives import (bc, bc_batch, bfs, bfs_batch,
                                    pagerank, reach, reach_batch, sssp,
                                    sssp_batch, triangle_count,
                                    who_to_follow)
+from repro.obs import telemetry as T
+
+log = obs.get_logger("graph")
 
 
 def make_graph(kind: str, scale: int, edge_factor: int, seed: int,
@@ -54,8 +64,8 @@ def _warn_overflow(overflow: np.ndarray) -> None:
     labels are untrustworthy and must not pass silently."""
     total = int(np.sum(overflow))
     if total:
-        print(f"[graph] WARNING: bfs dropped {total} frontier entries "
-              f"(overflow); rerun with idempotence=False")
+        log.warning(f"bfs dropped {total} frontier entries "
+                    f"(overflow); rerun with idempotence=False")
 
 
 def run_primitive(name: str, g, src: int, validate: bool,
@@ -175,6 +185,38 @@ def run_primitive(name: str, g, src: int, validate: bool,
     return dt, mteps, ok, bk
 
 
+def collect_stats(name: str, g, src: int,
+                  sources: list[int] | None = None,
+                  backend: str | None = None, hops: int = 3):
+    """Rerun ``name`` with ``telemetry=`` and return the trimmed host
+    trace (lane 0 of a batched run), or None for primitives without a
+    telemetry hook. A separate run on purpose: the timed run stays the
+    exact program the perf numbers describe."""
+    bk = B.resolve(backend)
+    if name == "bfs":
+        r, buf = bfs_batch(g, sources if sources else [src],
+                           backend=bk, telemetry=True)
+        return T.trim(buf, np.asarray(r.iterations)).lane(0)
+    if name == "sssp":
+        r, buf = sssp_batch(g, sources if sources else [src],
+                            backend=bk, telemetry=True)
+        return T.trim(buf, np.asarray(r.iterations)).lane(0)
+    if name == "pagerank":
+        _, buf = pagerank(g, max_iter=20, backend=bk, telemetry=True)
+        return T.trim(buf)
+    if name == "cc":
+        _, buf = connected_components(g, backend=bk, telemetry=True)
+        return T.trim(buf)
+    if name == "bc":
+        _, buf = bc_batch(g, sources if sources else [src],
+                          backend=bk, telemetry=True)
+        return T.trim(buf).lane(0)
+    if name == "tc":
+        _, buf = triangle_count(g, backend=bk, telemetry=True)
+        return T.trim(buf)
+    return None
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--graph", default="rmat",
@@ -197,28 +239,55 @@ def main(argv=None):
                     choices=(B.XLA, B.PALLAS, B.AUTO),
                     help="operator backend (default: ambient context / "
                          "REPRO_BACKEND env / xla)")
+    ap.add_argument("--stats", action="store_true",
+                    help="print each primitive's per-iteration telemetry "
+                         "trajectory (frontier / tier / direction)")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write phase spans as Chrome trace-event JSON "
+                         "(open at ui.perfetto.dev)")
     args = ap.parse_args(argv)
 
-    g = make_graph(args.graph, args.scale, args.edge_factor, args.seed)
+    if args.trace:
+        obs.reset()
+    with obs.span("build_graph", category="setup",
+                  args={"kind": args.graph, "scale": args.scale}):
+        g = make_graph(args.graph, args.scale, args.edge_factor,
+                       args.seed)
+        jax.block_until_ready(g.row_offsets)
     deg = np.diff(np.asarray(g.row_offsets))
     src = args.src if args.src is not None else int(np.argmax(deg))
     sources = ([int(s) for s in args.sources.split(",")]
                if args.sources else None)
-    print(f"[graph] {args.graph} scale={args.scale}: n={g.num_vertices} "
-          f"m={g.num_edges} max_deg={deg.max()} "
-          f"src={sources if sources else src} "
-          f"backend={B.resolve(args.backend)}")
+    log.info(f"{args.graph} scale={args.scale}: n={g.num_vertices} "
+             f"m={g.num_edges} max_deg={deg.max()} "
+             f"src={sources if sources else src} "
+             f"backend={B.resolve(args.backend)}")
 
     failures = 0
     for name in args.primitives.split(","):
-        dt, mteps, ok, bk = run_primitive(name.strip(), g, src,
-                                          args.validate, args.backend,
-                                          sources=sources, hops=args.hops)
+        name = name.strip()
+        with obs.span(f"run:{name}", category="dispatch",
+                      args={"backend": B.resolve(args.backend)}):
+            dt, mteps, ok, bk = run_primitive(
+                name, g, src, args.validate, args.backend,
+                sources=sources, hops=args.hops)
         status = "" if ok is None else ("  PASS" if ok else "  FAIL")
-        print(f"[graph] {name:9s} {dt*1000:9.2f} ms  {mteps:9.2f} MTEPS"
-              f"  backend={bk}{status}")
+        log.info(f"{name:9s} {dt*1000:9.2f} ms  {mteps:9.2f} MTEPS"
+                 f"  backend={bk}{status}")
         if ok is False:
             failures += 1
+        if args.stats:
+            with obs.span(f"stats:{name}", category="dispatch"):
+                trace = collect_stats(name, g, src, sources=sources,
+                                      backend=args.backend,
+                                      hops=args.hops)
+            if trace is not None and trace.steps:
+                log.info(f"{name} per-iteration trajectory"
+                         + (" (lane 0)" if sources else "") + ":")
+                print(trace.format_table(prefix="  "))
+    if args.trace:
+        n_ev = obs.export_chrome_trace(args.trace)
+        log.info(f"wrote {n_ev} trace events to {args.trace}")
     if failures:
         raise SystemExit(f"{failures} primitives failed validation")
 

@@ -58,20 +58,29 @@ import time
 import jax
 import numpy as np
 
+from repro import obs
 from repro.core import backend as B
 from repro.core import ref as R
 from repro.core.storage import resident_bytes
 from repro.core.primitives import bfs_batch, pagerank, reach_batch, \
     sssp_batch
+from repro.obs.metrics import Metrics, latency_summary
 
 from .graph_run import make_graph
 
 KINDS = ("bfs", "sssp", "pagerank", "reach")
 
+log = obs.get_logger("graph_serve")
+
 
 def serve(g, primitive: str, sources: np.ndarray, batch: int,
-          backend: str, validate: bool = False) -> dict:
-    """Serve ``sources`` in fixed batches; returns latency/qps stats."""
+          backend: str, validate: bool = False,
+          metrics: Metrics | None = None) -> dict:
+    """Serve ``sources`` in fixed batches; returns latency/qps stats.
+    Quantiles are linearly interpolated (``obs.metrics.latency_summary``)
+    and reported alongside their sample count. An optional ``metrics``
+    registry collects per-kind latency histograms / occupancy gauges /
+    counters for the ``--metrics`` Prometheus dump."""
     run = {"bfs": bfs_batch, "sssp": sssp_batch}[primitive]
     n_q = len(sources)
     if n_q == 0:
@@ -100,8 +109,11 @@ def serve(g, primitive: str, sources: np.ndarray, batch: int,
             overflow += int(np.asarray(r.overflow)[:len(sl)].sum())
         if validate:
             answers.append((sl, np.asarray(field)))
-        lat_ms[done:done + len(sl)] = \
-            (t_done - enqueue[done:done + len(sl)]) * 1e3
+        batch_lat = (t_done - enqueue[done:done + len(sl)]) * 1e3
+        lat_ms[done:done + len(sl)] = batch_lat
+        if metrics is not None:
+            _observe_batch(metrics, primitive, batch_lat,
+                           len(sl), batch, queue_depth=n_q - done)
         done += len(sl)
         batches += 1
     total_s = time.monotonic() - t_start
@@ -114,16 +126,46 @@ def serve(g, primitive: str, sources: np.ndarray, batch: int,
                       if primitive == "sssp"
                       else np.array_equal(field[i], oracle(g, int(s))))
                 failures += not ok
+    if metrics is not None:
+        _count_totals(metrics, batches, overflow)
     return {
         "primitive": primitive, "backend": backend, "batch": batch,
         "requests": n_q, "batches": batches, "total_s": round(total_s, 4),
         "qps": round(n_q / total_s, 2),
-        "lat_ms_mean": round(float(lat_ms.mean()), 2),
-        "lat_ms_p50": round(float(np.percentile(lat_ms, 50)), 2),
-        "lat_ms_p95": round(float(np.percentile(lat_ms, 95)), 2),
+        **latency_summary(lat_ms),
         "overflow": overflow,
         "validation_failures": failures if validate else None,
     }
+
+
+def _observe_batch(m: Metrics, kind: str, batch_lat, real: int,
+                   batch: int, queue_depth: int) -> None:
+    """One flushed batch's worth of serving metrics: per-kind latency
+    observations, batch-slot occupancy, and the queue-depth high-water
+    mark at flush time."""
+    for v in np.asarray(batch_lat, np.float64).reshape(-1):
+        m.observe("latency_ms", float(v),
+                  help="per-query latency, enqueue to batch completion",
+                  kind=kind)
+    m.counter("queries_total", real,
+              help="queries answered", kind=kind)
+    m.observe("batch_occupancy", real / max(batch, 1),
+              help="fraction of batch slots holding real queries",
+              kind=kind)
+    m.gauge_max("queue_depth_peak", queue_depth,
+                help="high-water mark of queued-but-unflushed queries")
+
+
+def _count_totals(m: Metrics, batches: int, overflow: int) -> None:
+    """Stream-level counters. Cache hits/misses are declared at zero —
+    the serving scheduler the ROADMAP plans (answer caching, continuous
+    batching) increments them; the exposition shows the series now so
+    dashboards don't break when it lands."""
+    m.counter("batches_total", batches, help="batches flushed")
+    m.counter("overflow_total", overflow,
+              help="BFS discoveries dropped by capped frontiers")
+    m.counter("cache_hits_total", 0, help="answer-cache hits")
+    m.counter("cache_misses_total", 0, help="answer-cache misses")
 
 
 def _run_kind(g, kind: str, srcs: np.ndarray, backend: str, hops: int):
@@ -224,7 +266,8 @@ def _validate_kind(g, kind: str, srcs, field, hops: int) -> int:
 
 
 def serve_mixed(g, queries, batch: int, backend: str, hops: int = 3,
-                validate: bool = False, runner=None) -> dict:
+                validate: bool = False, runner=None,
+                metrics: Metrics | None = None) -> dict:
     """Serve a mixed-kind query stream through per-kind fixed batch slots.
 
     ``queries`` is a sequence of ``(kind, source)`` pairs, kinds drawn
@@ -241,7 +284,9 @@ def serve_mixed(g, queries, batch: int, backend: str, hops: int = 3,
 
     ``runner(kind, srcs, backend, hops)`` overrides query execution (the
     sharded driver passes a mesh-backed runner); defaults to the
-    single-device ``_run_kind``.
+    single-device ``_run_kind``. ``metrics`` (an ``obs.metrics.Metrics``)
+    collects per-kind latency histograms, queue-depth / batch-occupancy
+    gauges, and counters for the ``--metrics`` Prometheus dump.
     """
     n_q = len(queries)
     if n_q == 0:
@@ -272,8 +317,12 @@ def serve_mixed(g, queries, batch: int, backend: str, hops: int = 3,
         overflow += int(ovf[:len(sl)].sum())
         if validate:
             answers.append((kind, sl, np.asarray(field)))
-        lat_ms[kind].extend([(t_done - t_enq) * 1e3
-                             for t_enq in enqueue[kind]])
+        batch_lat = [(t_done - t_enq) * 1e3 for t_enq in enqueue[kind]]
+        lat_ms[kind].extend(batch_lat)
+        if metrics is not None:
+            depth = sum(len(p) for p in pending.values())
+            _observe_batch(metrics, kind, batch_lat, len(sl), batch,
+                           queue_depth=depth)
         pending[kind] = []
         enqueue[kind] = []
         batches += 1
@@ -281,6 +330,11 @@ def serve_mixed(g, queries, batch: int, backend: str, hops: int = 3,
     for kind, src in queries:
         pending[kind].append(src)
         enqueue[kind].append(time.monotonic())
+        if metrics is not None:
+            metrics.gauge_max(
+                "queue_depth_peak",
+                sum(len(p) for p in pending.values()),
+                help="high-water mark of queued-but-unflushed queries")
         if len(pending[kind]) == batch:
             flush(kind)
     for kind in KINDS:                   # ragged tails, padded
@@ -290,6 +344,8 @@ def serve_mixed(g, queries, batch: int, backend: str, hops: int = 3,
     if validate:                         # oracles off the serving clock
         for kind, sl, field in answers:
             failures += _validate_kind(g, kind, sl, field, hops)
+    if metrics is not None:
+        _count_totals(metrics, batches, overflow)
 
     all_lat = np.asarray(sum(lat_ms.values(), []))
     per_kind = {}
@@ -297,19 +353,13 @@ def serve_mixed(g, queries, batch: int, backend: str, hops: int = 3,
         lk = np.asarray(lat_ms[kind])
         if not len(lk):
             continue
-        per_kind[kind] = {
-            "requests": int(len(lk)),
-            "lat_ms_mean": round(float(lk.mean()), 2),
-            "lat_ms_p50": round(float(np.percentile(lk, 50)), 2),
-            "lat_ms_p95": round(float(np.percentile(lk, 95)), 2),
-        }
+        per_kind[kind] = {"requests": int(len(lk)),
+                          **latency_summary(lk)}
     return {
         "kinds": sorted(per_kind), "backend": backend, "batch": batch,
         "hops": hops, "requests": n_q, "batches": batches,
         "total_s": round(total_s, 4), "qps": round(n_q / total_s, 2),
-        "lat_ms_mean": round(float(all_lat.mean()), 2),
-        "lat_ms_p50": round(float(np.percentile(all_lat, 50)), 2),
-        "lat_ms_p95": round(float(np.percentile(all_lat, 95)), 2),
+        **latency_summary(all_lat),
         "per_kind": per_kind,
         "overflow": overflow,
         "validation_failures": failures if validate else None,
@@ -362,11 +412,25 @@ def main(argv=None):
                     choices=(B.XLA, B.PALLAS, B.AUTO))
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="append the stats row to a JSON file")
+    ap.add_argument("--metrics", default=None, metavar="PATH",
+                    help="write serving metrics (per-kind latency "
+                         "histograms with p50/p95/p99, gauges, counters) "
+                         "as Prometheus text; '-' prints to stdout")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write phase spans as Chrome trace-event JSON "
+                         "(open at ui.perfetto.dev)")
     args = ap.parse_args(argv)
 
+    if args.trace:
+        obs.reset()
     bk = B.resolve(args.backend)
-    g = make_graph(args.graph, args.scale, args.edge_factor, args.seed,
-                   index_dtype=args.index_dtype, encoding=args.encoding)
+    metrics = Metrics() if args.metrics else None
+    with obs.span("build_graph", category="setup",
+                  args={"kind": args.graph, "scale": args.scale}):
+        g = make_graph(args.graph, args.scale, args.edge_factor,
+                       args.seed, index_dtype=args.index_dtype,
+                       encoding=args.encoding)
+        jax.block_until_ready(g.row_offsets)
     storage = resident_bytes(g)
     rng = np.random.default_rng(args.seed)
     kinds = None
@@ -407,48 +471,71 @@ def main(argv=None):
                 f"--xla_force_host_platform_device_count={need} "
                 f"for host-platform serving)")
         from jax.sharding import Mesh
-        if mesh_shape:
-            from repro.core.partition import partition_2d
-            pg = partition_2d(g, *mesh_shape)
-            mesh = Mesh(np.array(jax.devices()[:need]).reshape(mesh_shape),
-                        ("row", "col"))
-            axis = ("row", "col")
-        else:
-            from repro.core.partition import partition_1d
-            pg = partition_1d(g, args.parts)
-            mesh = Mesh(np.array(jax.devices()[:need]), ("graph",))
-            axis = "graph"
-        runner = make_sharded_runner(pg, mesh, axis)
+        with obs.span("partition", category="setup",
+                      args={"parts": need}):
+            if mesh_shape:
+                from repro.core.partition import partition_2d
+                pg = partition_2d(g, *mesh_shape)
+                mesh = Mesh(
+                    np.array(jax.devices()[:need]).reshape(mesh_shape),
+                    ("row", "col"))
+                axis = ("row", "col")
+            else:
+                from repro.core.partition import partition_1d
+                pg = partition_1d(g, args.parts)
+                mesh = Mesh(np.array(jax.devices()[:need]), ("graph",))
+                axis = "graph"
+            runner = make_sharded_runner(pg, mesh, axis)
         bal = pg.balance()
         shape = (f"{mesh_shape[0]}x{mesh_shape[1]} mesh" if mesh_shape
                  else f"{need} parts")
-        print(f"[graph_serve] partition: {shape}, "
-              f"edge imbalance {bal['edge_imbalance']}x, "
-              f"vertex imbalance {bal['vertex_imbalance']}x")
+        log.info(f"partition: {shape}, "
+                 f"edge imbalance {bal['edge_imbalance']}x, "
+                 f"vertex imbalance {bal['vertex_imbalance']}x")
+        if metrics is not None:
+            # analytic per-BSP-step exchange volume (the PR 7 comm
+            # model) per served traversal kind — the distributed
+            # counterpart of the single-device telemetry columns
+            from repro.core.distributed import exchange_bytes_per_step
+            for kind in (kinds or [args.primitive]):
+                try:
+                    metrics.gauge(
+                        "exchange_bytes_per_step",
+                        exchange_bytes_per_step(pg, kind),
+                        help="analytic per-device exchange bytes per "
+                             "BSP step (comm model)", kind=kind)
+                except (KeyError, ValueError):
+                    pass            # kind without a comm-model entry
     what = ",".join(kinds) if kinds else args.primitive
     placement = ("2d" if mesh_shape
                  else "sharded" if args.parts else "single")
-    print(f"[graph_serve] {args.graph} scale={args.scale}: "
-          f"n={g.num_vertices} m={g.num_edges} kinds={what} "
-          f"batch={args.batch} backend={bk} placement={placement}")
+    log.info(f"{args.graph} scale={args.scale}: "
+             f"n={g.num_vertices} m={g.num_edges} kinds={what} "
+             f"batch={args.batch} backend={bk} placement={placement}")
     pl = storage["plan"]
-    print(f"[graph_serve] storage: {pl['index_dtype']}/{pl['encoding']} "
-          f"{storage['total_bytes'] / 2**20:.1f} MiB resident, "
-          f"{storage['bytes_per_edge']} column bytes/edge "
-          f"({storage['total_bytes_per_edge']} total)")
+    log.info(f"storage: {pl['index_dtype']}/{pl['encoding']} "
+             f"{storage['total_bytes'] / 2**20:.1f} MiB resident, "
+             f"{storage['bytes_per_edge']} column bytes/edge "
+             f"({storage['total_bytes_per_edge']} total)")
 
     if kinds:
         run_warm = runner if runner is not None else \
             (lambda k, srcs, b, h: _run_kind(g, k, srcs, b, h))
-        for _ in range(args.warmup):        # one trace per kind
-            for k in kinds:
-                run_warm(k, rng.integers(0, g.num_vertices, args.batch),
-                         bk, args.hops)
+        with obs.span("warmup", category="compile",
+                      args={"kinds": ",".join(kinds)}):
+            for _ in range(args.warmup):        # one trace per kind
+                for k in kinds:
+                    run_warm(k,
+                             rng.integers(0, g.num_vertices, args.batch),
+                             bk, args.hops)
         queries = [(kinds[i % len(kinds)],
                     int(rng.integers(0, g.num_vertices)))
                    for i in range(args.requests)]
-        stats = serve_mixed(g, queries, args.batch, bk, hops=args.hops,
-                            validate=args.validate, runner=runner)
+        with obs.span("serve", category="serve",
+                      args={"requests": args.requests}):
+            stats = serve_mixed(g, queries, args.batch, bk,
+                                hops=args.hops, validate=args.validate,
+                                runner=runner, metrics=metrics)
         if pg is not None:
             stats["parts"] = pg.num_parts
             if mesh_shape:
@@ -456,32 +543,48 @@ def main(argv=None):
             stats["balance"] = pg.balance()
     else:
         run = {"bfs": bfs_batch, "sssp": sssp_batch}[args.primitive]
-        for _ in range(args.warmup):
-            w = run(g, rng.integers(0, g.num_vertices, args.batch),
-                    backend=bk)
-            jax.block_until_ready(
-                w.dist if args.primitive == "sssp" else w.labels)
+        with obs.span("warmup", category="compile",
+                      args={"kinds": args.primitive}):
+            for _ in range(args.warmup):
+                w = run(g, rng.integers(0, g.num_vertices, args.batch),
+                        backend=bk)
+                jax.block_until_ready(
+                    w.dist if args.primitive == "sssp" else w.labels)
         sources = rng.integers(0, g.num_vertices, args.requests)
-        stats = serve(g, args.primitive, sources, args.batch, bk,
-                      validate=args.validate)
+        with obs.span("serve", category="serve",
+                      args={"requests": args.requests}):
+            stats = serve(g, args.primitive, sources, args.batch, bk,
+                          validate=args.validate, metrics=metrics)
     stats["storage"] = storage
-    print(f"[graph_serve] {stats['requests']} queries in "
-          f"{stats['total_s']:.2f}s = {stats['qps']:.1f} q/s  "
-          f"(lat ms mean {stats['lat_ms_mean']} p50 {stats['lat_ms_p50']} "
-          f"p95 {stats['lat_ms_p95']})")
+    log.info(f"{stats['requests']} queries in "
+             f"{stats['total_s']:.2f}s = {stats['qps']:.1f} q/s  "
+             f"(lat ms mean {stats['lat_ms_mean']} "
+             f"p50 {stats['lat_ms_p50']} p95 {stats['lat_ms_p95']} "
+             f"p99 {stats['lat_ms_p99']}, n={stats['samples']})")
     for k, row in stats.get("per_kind", {}).items():
-        print(f"[graph_serve]   {k:9s} {row['requests']:4d} queries  "
-              f"lat ms mean {row['lat_ms_mean']} p50 {row['lat_ms_p50']} "
-              f"p95 {row['lat_ms_p95']}")
+        log.info(f"  {k:9s} {row['requests']:4d} queries  "
+                 f"lat ms mean {row['lat_ms_mean']} "
+                 f"p50 {row['lat_ms_p50']} p95 {row['lat_ms_p95']} "
+                 f"p99 {row['lat_ms_p99']}")
     if stats["overflow"]:
-        print(f"[graph_serve] WARNING: {stats['overflow']} BFS "
-              f"discoveries dropped by capped frontiers — rerun the "
-              f"affected queries with idempotence=False")
+        log.warning(f"{stats['overflow']} BFS discoveries dropped by "
+                    f"capped frontiers — rerun the affected queries "
+                    f"with idempotence=False")
     if args.validate:
-        print(f"[graph_serve] validation failures: "
-              f"{stats['validation_failures']}")
+        log.info(f"validation failures: {stats['validation_failures']}")
         if stats["validation_failures"]:
             raise SystemExit("validation failed")
+    if args.metrics:
+        text = metrics.render()
+        if args.metrics == "-":
+            print(text, end="")
+        else:
+            with open(args.metrics, "w") as f:
+                f.write(text)
+            log.info(f"wrote Prometheus metrics to {args.metrics}")
+    if args.trace:
+        n_ev = obs.export_chrome_trace(args.trace)
+        log.info(f"wrote {n_ev} trace events to {args.trace}")
     if args.json:
         try:
             with open(args.json) as f:

@@ -1,0 +1,110 @@
+"""One logger for the scattered diagnostics (`REPRO_LOG` level knob).
+
+Before this module existed, runtime diagnostics were split between bare
+``print`` calls (graph_serve's per-run banner, the tuner CLI) and
+``warnings.warn`` (the backend registry's deprecation shim) — impossible
+to silence in a serving loop and impossible to make chattier when
+debugging a kernel. Everything now routes through one ``logging``
+hierarchy rooted at ``"repro"``:
+
+  * ``get_logger("graph_serve")`` → the ``repro.graph_serve`` logger,
+    emitting to stdout as ``[graph_serve] message`` (the historical
+    prefix format, so smoke-test greps keep working).
+  * ``REPRO_LOG=debug|info|warning|error`` sets the root level (default
+    ``info`` — the pre-existing diagnostics stay visible by default).
+  * ``deprecated(msg, stacklevel=…)`` is the deprecation funnel: it
+    still raises a real ``DeprecationWarning`` through ``warnings``
+    (the API contract tests pin) and additionally logs at debug so a
+    ``REPRO_LOG=debug`` run shows where the deprecated path fired.
+
+Handlers are installed exactly once, on the ``repro`` root logger only,
+and ``propagate`` stays on below it — applications embedding the
+library can detach the default handler and attach their own.
+"""
+from __future__ import annotations
+
+import logging
+import os
+import sys
+import warnings
+
+ENV_VAR = "REPRO_LOG"
+
+_LEVELS = {
+    "debug": logging.DEBUG,
+    "info": logging.INFO,
+    "warning": logging.WARNING,
+    "warn": logging.WARNING,
+    "error": logging.ERROR,
+}
+
+_configured = False
+
+
+class _ShortNameFormatter(logging.Formatter):
+    """``[graph_serve] message`` — the short (leaf) logger name in the
+    historical bracket-prefix style; warnings and errors keep their
+    severity visible."""
+
+    def format(self, record: logging.LogRecord) -> str:
+        leaf = record.name.rsplit(".", 1)[-1]
+        msg = record.getMessage()
+        if record.levelno >= logging.WARNING:
+            return f"[{leaf}] {record.levelname}: {msg}"
+        return f"[{leaf}] {msg}"
+
+
+class _StdoutHandler(logging.StreamHandler):
+    """Resolves ``sys.stdout`` at emit time, so streams swapped *after*
+    configure (pytest capture, ``contextlib.redirect_stdout``) still
+    receive the log output."""
+
+    def __init__(self):
+        super().__init__(sys.stdout)
+
+    @property
+    def stream(self):
+        return sys.stdout
+
+    @stream.setter
+    def stream(self, value):            # base __init__ assigns; ignore
+        pass
+
+
+def _level_from_env() -> int:
+    raw = os.environ.get(ENV_VAR, "").strip().lower()
+    return _LEVELS.get(raw, logging.INFO)
+
+
+def configure(level: int | None = None, stream=None) -> logging.Logger:
+    """Install the stdout handler on the ``repro`` root logger (idempotent
+    unless called with explicit arguments, which reconfigure)."""
+    global _configured
+    root = logging.getLogger("repro")
+    if _configured and level is None and stream is None:
+        return root
+    for h in list(root.handlers):
+        root.removeHandler(h)
+    handler = (_StdoutHandler() if stream is None
+               else logging.StreamHandler(stream))
+    handler.setFormatter(_ShortNameFormatter())
+    root.addHandler(handler)
+    root.setLevel(_level_from_env() if level is None else level)
+    root.propagate = False
+    _configured = True
+    return root
+
+
+def get_logger(name: str = "") -> logging.Logger:
+    """The ``repro.<name>`` logger (the bare root for ``name=""``),
+    with the default stdout handler installed on first use."""
+    configure()
+    return logging.getLogger(f"repro.{name}" if name else "repro")
+
+
+def deprecated(message: str, *, stacklevel: int = 2) -> None:
+    """Deprecation funnel: a real ``DeprecationWarning`` (the testable
+    API contract) plus a debug-level log line for ``REPRO_LOG=debug``
+    sessions chasing where a legacy path still fires."""
+    warnings.warn(message, DeprecationWarning, stacklevel=stacklevel + 1)
+    get_logger("deprecation").debug(message)

@@ -1,0 +1,198 @@
+"""Jit-safe BSP telemetry: fixed-size on-device per-iteration buffers.
+
+Gunrock's contribution is *characterizing* traversal — per-iteration
+frontier size is what justifies direction switching (paper §5.1.4) and
+tiered dispatch; the Multi-GPU follow-up does the same with per-step
+communication volume. This module makes that trajectory observable
+without breaking the one-trace discipline every primitive is built on:
+
+  * ``TelemetryBuffer`` is a pytree of fixed-capacity columns plus a
+    cursor. It rides the ``while_loop`` carry of the enactor loops
+    (``run_until`` / ``run_until_any`` grow an optional ``probe=``
+    hook), each BSP step writes one row at the cursor, and writes past
+    capacity drop silently (``mode="drop"``) while the cursor keeps the
+    true step count — the buffer is max-iteration sized by the caller,
+    so the drop path is a guard, not a policy.
+  * Probes are *read-only*: a probe maps (state before, state after)
+    to scalar/per-lane values and never feeds anything back into the
+    step, which is what makes the telemetry=on/off bit-parity contract
+    (tests/test_obs.py) hold by construction.
+  * ``trim`` converts a device buffer to a host ``TelemetryTrace`` —
+    numpy columns truncated to the recorded step count, with per-lane
+    valid lengths when the loop was batched.
+  * For the distributed placements, ``distributed_trace`` builds the
+    same trace shape from the PR 7 analytic comm model
+    (``exchange_bytes_per_step``) plus — for BFS — level sizes
+    recovered exactly from the result labels (level t's frontier is
+    ``|{v : labels[v] == t}|``), so sharded/2d runs report per-step
+    exchange bytes without instrumenting the shard_map interior.
+
+Buffer layout (documented for DESIGN.md §10): every column is a
+``(capacity, *tail)`` array, ``capacity`` = the loop's max_iter bound;
+scalar-per-step columns have an empty tail, per-lane columns a ``(B,)``
+tail. The cursor is a single int32 — one extra carry slot per loop.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Mapping, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass(frozen=True)
+class TelemetryBuffer:
+    """Fixed-capacity per-iteration telemetry columns + a step cursor.
+
+    A pytree (column names live in the static treedef aux, so two
+    buffers with the same spec share one trace), safe to carry through
+    ``jax.lax.while_loop``.
+    """
+
+    cursor: jax.Array                 # () int32 — true steps recorded
+    data: Dict[str, jax.Array]        # name -> (capacity, *tail) column
+
+    def tree_flatten(self):
+        names = tuple(self.data)
+        return (self.cursor, tuple(self.data[k] for k in names)), names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        cursor, cols = children
+        return cls(cursor=cursor, data=dict(zip(names, cols)))
+
+    @classmethod
+    def make(cls, capacity: int,
+             spec: Mapping[str, Tuple[Tuple[int, ...], object]]
+             ) -> "TelemetryBuffer":
+        """Zero-filled buffer for ``capacity`` steps. ``spec`` maps a
+        column name to ``(tail_shape, dtype)`` — ``()`` tail for one
+        scalar per step, ``(B,)`` for a per-lane value."""
+        capacity = max(int(capacity), 1)
+        data = {name: jnp.zeros((capacity,) + tuple(tail), dtype)
+                for name, (tail, dtype) in spec.items()}
+        return cls(cursor=jnp.int32(0), data=data)
+
+    @property
+    def capacity(self) -> int:
+        for col in self.data.values():
+            return int(col.shape[0])
+        return 0
+
+    def record(self, **values) -> "TelemetryBuffer":
+        """Write one row at the cursor (traced). Unknown names raise at
+        trace time; missing columns keep their zeros. Writes past
+        capacity drop; the cursor still counts them."""
+        unknown = set(values) - set(self.data)
+        if unknown:
+            raise KeyError(f"telemetry columns not in spec: "
+                           f"{sorted(unknown)}")
+        i = self.cursor
+        data = dict(self.data)
+        for name, val in values.items():
+            col = data[name]
+            val = jnp.asarray(val, col.dtype)
+            data[name] = col.at[i].set(val, mode="drop")
+        return TelemetryBuffer(cursor=i + 1, data=data)
+
+
+class TelemetryTrace:
+    """Host-side trimmed trajectory: numpy columns over ``steps`` BSP
+    iterations, optionally with per-lane valid lengths.
+
+    ``columns[name]`` is ``(steps,)`` or ``(steps, B)``; entries of a
+    per-lane column past ``lane_steps[b]`` are frozen-lane repeats (the
+    batched loop computes every lane every wall-clock step)."""
+
+    def __init__(self, columns: Dict[str, np.ndarray], steps: int,
+                 lane_steps: Optional[np.ndarray] = None):
+        self.steps = int(steps)
+        self.columns = {k: np.asarray(v) for k, v in columns.items()}
+        self.lane_steps = (None if lane_steps is None
+                           else np.asarray(lane_steps))
+
+    def __getitem__(self, name: str) -> np.ndarray:
+        return self.columns[name]
+
+    def __contains__(self, name: str) -> bool:
+        return name in self.columns
+
+    @property
+    def names(self) -> Tuple[str, ...]:
+        return tuple(sorted(self.columns))
+
+    def lane(self, b: int) -> "TelemetryTrace":
+        """One lane's trajectory: per-lane columns sliced at lane ``b``
+        and trimmed to that lane's own iteration count."""
+        steps = (self.steps if self.lane_steps is None
+                 else int(self.lane_steps[b]))
+        cols = {k: (v[:steps, b] if v.ndim > 1 else v[:steps])
+                for k, v in self.columns.items()}
+        return TelemetryTrace(cols, steps)
+
+    def format_table(self, columns: Optional[Tuple[str, ...]] = None,
+                     prefix: str = "") -> str:
+        """Fixed-width per-iteration table. A column named
+        ``direction`` renders push/pull; multi-lane columns render
+        lane 0 (use ``.lane(b)`` first for another lane)."""
+        names = list(columns) if columns else list(self.names)
+        names = [n for n in names if n in self.columns]
+        widths = {n: max(len(n), 9) for n in names}
+        head = prefix + "iter  " + "  ".join(
+            f"{n:>{widths[n]}s}" for n in names)
+        lines = [head]
+        for it in range(self.steps):
+            cells = []
+            for n in names:
+                col = self.columns[n]
+                v = col[it, 0] if col.ndim > 1 else col[it]
+                if n == "direction":
+                    v = "pull" if int(v) else "push"
+                cells.append(f"{v:>{widths[n]}}")
+            lines.append(prefix + f"{it + 1:4d}  " + "  ".join(cells))
+        return "\n".join(lines)
+
+
+def trim(buf: TelemetryBuffer,
+         lane_steps=None) -> TelemetryTrace:
+    """Device buffer → host trace, truncated to the recorded step count
+    (writes past capacity were dropped, so the usable region is
+    ``min(cursor, capacity)``). ``lane_steps`` is the per-lane iteration
+    count from ``run_until_any`` when the loop was batched."""
+    steps = min(int(buf.cursor), buf.capacity)
+    cols = {k: np.asarray(v)[:steps] for k, v in buf.data.items()}
+    return TelemetryTrace(cols, steps,
+                          None if lane_steps is None
+                          else np.asarray(lane_steps))
+
+
+def distributed_trace(pg, primitive: str, iterations,
+                      labels=None, tiles: Optional[int] = None
+                      ) -> TelemetryTrace:
+    """Telemetry trace for a distributed (sharded/2d) run, built from
+    the PR 7 analytic comm model rather than in-loop instrumentation:
+    ``exchange_bytes`` is the per-device bytes each BSP step moved
+    (``core.distributed.exchange_bytes_per_step`` — constant per step
+    by construction of the dense bitmask/vector exchanges), and for BFS
+    the per-step ``frontier`` column is recovered exactly from the
+    result labels (iteration t discovers the depth-t level)."""
+    from repro.core import distributed as D
+    steps = max(int(iterations), 0)
+    kwargs = {} if tiles is None else {"tiles": tiles}
+    per_step = D.exchange_bytes_per_step(pg, primitive, **kwargs)
+    cols: Dict[str, np.ndarray] = {
+        "exchange_bytes": np.full((steps,), per_step, np.int64)}
+    if labels is not None and primitive == "bfs":
+        lab = np.asarray(labels).reshape(-1)
+        depth_counts = np.bincount(lab[lab >= 0],
+                                   minlength=steps + 1)
+        # iteration t (1-based) discovers the depth-t level; the final
+        # iteration discovers nothing (that is how the loop terminates)
+        frontier = np.zeros((steps,), np.int64)
+        upto = min(steps, len(depth_counts) - 1)
+        frontier[:upto] = depth_counts[1:upto + 1]
+        cols["frontier"] = frontier
+    return TelemetryTrace(cols, steps)

@@ -1,0 +1,157 @@
+"""Host-side span tracing: phase timing as Chrome trace events.
+
+The device-side telemetry (``obs.telemetry``) answers "what did the BSP
+loop do per iteration"; this module answers "where did the wall clock
+go" — graph build, partition, shard, compile, dispatch, validate — as
+nested spans exportable to the Chrome trace-event JSON format (load the
+file at ``ui.perfetto.dev`` or ``chrome://tracing``).
+
+  * ``span("compile", args={"primitive": "bfs"})`` — a context manager
+    timing its block with ``time.perf_counter_ns``. Spans nest; each
+    records (name, category, start, duration, thread) into the ambient
+    ``SpanRegistry``.
+  * Async-dispatch fencing: JAX returns before the device finishes, so
+    a span that should measure execution must fence. Pass the result
+    pytree via ``sync=``: ``jax.block_until_ready`` runs INSIDE the
+    span, immediately before the end stamp.
+  * ``export_chrome_trace(path)`` writes ``{"traceEvents": [...]}``
+    with complete ("ph": "X") events, microsecond timestamps.
+  * ``REPRO_TRACE_JAX=1`` additionally wraps every span in
+    ``jax.profiler.TraceAnnotation`` so span names land inside a
+    ``jax.profiler.trace`` capture (the opt-in bridge; a missing or
+    drifted profiler API degrades to host-only spans, never an error).
+
+Span taxonomy (DESIGN.md §10): category "setup" for build/partition/
+shard, "compile" for first-trace runs, "dispatch" for steady-state
+execution, "validate" for oracle checks, "serve" for serving-loop
+phases. The registry is per-process and explicitly clearable
+(``reset()``) so drivers emit one file per run.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+
+@dataclass
+class SpanEvent:
+    name: str
+    category: str
+    start_ns: int
+    duration_ns: int
+    thread_id: int
+    args: Dict[str, Any] = field(default_factory=dict)
+
+
+@dataclass
+class SpanRegistry:
+    """Accumulates finished spans; thread-safe appends."""
+
+    events: List[SpanEvent] = field(default_factory=list)
+    _lock: threading.Lock = field(default_factory=threading.Lock,
+                                  repr=False)
+
+    def add(self, ev: SpanEvent) -> None:
+        with self._lock:
+            self.events.append(ev)
+
+    def reset(self) -> None:
+        with self._lock:
+            self.events.clear()
+
+    def total_ns(self, name: str) -> int:
+        return sum(e.duration_ns for e in self.events if e.name == name)
+
+    def to_chrome(self) -> dict:
+        """The Chrome trace-event JSON object (Perfetto-loadable)."""
+        pid = os.getpid()
+        return {
+            "displayTimeUnit": "ms",
+            "traceEvents": [
+                {"name": e.name, "cat": e.category, "ph": "X",
+                 "pid": pid, "tid": e.thread_id,
+                 "ts": e.start_ns / 1e3, "dur": e.duration_ns / 1e3,
+                 "args": e.args}
+                for e in self.events
+            ],
+        }
+
+
+_registry = SpanRegistry()
+
+
+def registry() -> SpanRegistry:
+    """The ambient per-process registry ``span()`` records into."""
+    return _registry
+
+
+def reset() -> None:
+    _registry.reset()
+
+
+def _jax_annotation(name: str):
+    """The opt-in ``jax.profiler`` bridge: a TraceAnnotation context for
+    ``name`` when REPRO_TRACE_JAX is set and the API exists, else None.
+    Never raises — profiler API drift degrades to host-only spans."""
+    if os.environ.get("REPRO_TRACE_JAX", "") not in ("1", "true"):
+        return None
+    try:
+        from jax.profiler import TraceAnnotation
+        return TraceAnnotation(name)
+    except Exception:
+        return None
+
+
+@contextmanager
+def span(name: str, category: str = "phase",
+         args: Optional[Dict[str, Any]] = None, sync=None,
+         into: Optional[SpanRegistry] = None):
+    """Time a block as one span. ``sync`` is a pytree fenced with
+    ``jax.block_until_ready`` before the end stamp (async dispatch
+    would otherwise end the span at enqueue time, not completion)."""
+    reg = into if into is not None else _registry
+    bridge = _jax_annotation(name)
+    if bridge is not None:
+        bridge.__enter__()
+    t0 = time.perf_counter_ns()
+    try:
+        yield reg
+    finally:
+        if sync is not None:
+            import jax
+            jax.block_until_ready(sync)
+        dur = time.perf_counter_ns() - t0
+        if bridge is not None:
+            bridge.__exit__(None, None, None)
+        reg.add(SpanEvent(name=name, category=category, start_ns=t0,
+                          duration_ns=dur,
+                          thread_id=threading.get_ident(),
+                          args=dict(args or {})))
+
+
+@contextmanager
+def timed_span(name: str, **kw):
+    """``span`` that also hands back the duration: yields a dict whose
+    ``"ms"`` key is filled at exit (for drivers that print the phase
+    time as well as tracing it)."""
+    out: Dict[str, float] = {}
+    t0 = time.perf_counter_ns()
+    with span(name, **kw):
+        yield out
+    out["ms"] = (time.perf_counter_ns() - t0) / 1e6
+
+
+def export_chrome_trace(path: str,
+                        reg: Optional[SpanRegistry] = None) -> int:
+    """Write the registry as Chrome trace-event JSON; returns the event
+    count (drivers log it so an empty trace is visible, not silent)."""
+    reg = reg if reg is not None else _registry
+    obj = reg.to_chrome()
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1)
+    return len(obj["traceEvents"])
