@@ -58,6 +58,7 @@ def run(scale: int = 14, edge_factor: int = 16, repeats: int = 1,
     rows = []
     for backend in backends:
         for name in prims:
+            # reprolint: disable=RL004 -- progress wall-clock; _run_one fences its own measurement
             t0 = time.monotonic()
             row = _run_one(name, g, src, backend, repeats)
             rows.append(row)

@@ -4,8 +4,6 @@ baseline. Paper claim reproduced: filtering removes ~5/6 of intersection
 work and wins on scale-free graphs."""
 from __future__ import annotations
 
-import time
-
 import numpy as np
 
 from repro.core import ref as R
@@ -19,9 +17,7 @@ def run():
     rows = []
     for name in DATASETS:
         g = dataset(name)
-        t0 = time.monotonic()
-        ref = R.tc_ref(g)
-        t_cpu = time.monotonic() - t0
+        ref, t_cpu = timed(lambda: R.tc_ref(g))
         r, t_f = timed(lambda: triangle_count(g))
         rf, t_u = timed(lambda: triangle_count_full(g))
         rows.append([name, ref, int(r.total), int(rf),

@@ -60,6 +60,7 @@ def main() -> None:
     failures = []
     for name in mods:
         print(f"\n===== {name} =====", flush=True)
+        # reprolint: disable=RL004 -- progress wall-clock around a whole module run
         t0 = time.monotonic()
         try:
             mod = importlib.import_module(f"benchmarks.{name}")

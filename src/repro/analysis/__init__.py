@@ -1,0 +1,31 @@
+"""repro.analysis — correctness tooling for the provider matrix.
+
+Three tools, one package (ISSUE 9):
+
+  * ``repro.analysis.lint`` — *reprolint*, an AST linter (stdlib ``ast``,
+    zero dependencies) enforcing the conventions the engine's
+    correctness rests on: no host syncs inside jitted paths, no Python
+    control flow over tracers, int32-pinned accumulators under x64,
+    fenced wall-clock timing, diagnostics routed through
+    ``repro.obs.log``. CLI: ``python -m repro.analysis.lint src/repro``.
+  * ``repro.analysis.contracts`` — the registry contract checker: loads
+    ``core.backend``'s (op × backend × placement × encoding) provider
+    matrix and verifies its invariants (distributed coverage or declared
+    fallbacks, encodings declared everywhere, telemetry= on every
+    primitive, no silent fallback to single, compile budgets declared).
+    CLI: ``python -m repro.analysis.contracts``.
+  * ``repro.analysis.sanitize`` — runtime sanitizers: a trace-time
+    retrace detector with per-primitive compile budgets
+    (``budgets.COMPILE_BUDGETS``) and a Pallas grid/BlockSpec memory
+    sanitizer (out-of-bounds tile maps, write-write races between grid
+    cells) hooked into ``kernels.runtime.pallas_call`` under
+    ``REPRO_SANITIZE=1``.
+
+This module stays import-light on purpose: ``lint`` and ``sanitize``
+are stdlib-only, so ``repro.core`` / ``repro.kernels`` may import them
+without cycles; ``contracts`` imports the registry and is pulled in
+lazily (tests and CLI only).
+"""
+from __future__ import annotations
+
+__all__ = ["budgets", "contracts", "lint", "sanitize"]

@@ -1,0 +1,36 @@
+"""Per-primitive compile budgets — the retrace-detector contract.
+
+A budget is the number of fresh traces ONE fixed workload configuration
+(same graph shapes, same batch size, same static flags) is allowed to
+cost inside a ``sanitize.retrace_guard`` window, warmup included. The
+serving hot path compiles each kind once and then replays the cached
+executable; a primitive that traces per call turns a sub-millisecond
+query into a multi-second compile — the regression these budgets make
+un-ignorable (``tests/test_analysis.py`` pins them on a live hot loop).
+
+Budgets are 1 wherever the primitive is a single jitted impl (one
+static config → one trace). ``bc`` gets 2: the full-graph estimator
+sweeps sources in fixed-size chunks and a ragged tail chunk legally
+costs a second trace.
+"""
+from __future__ import annotations
+
+COMPILE_BUDGETS: dict[str, int] = {
+    "bfs": 1,
+    "sssp": 1,
+    "pagerank": 1,
+    "cc": 1,
+    "bc": 2,
+    "tc": 1,
+}
+
+
+def budget_for(name: str) -> int:
+    """The declared budget for ``name``; unknown names raise — an
+    undeclared primitive must not silently get an infinite budget."""
+    try:
+        return COMPILE_BUDGETS[name]
+    except KeyError:
+        raise KeyError(
+            f"no compile budget declared for primitive {name!r}; add it "
+            f"to repro.analysis.budgets.COMPILE_BUDGETS") from None

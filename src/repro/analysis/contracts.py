@@ -1,0 +1,226 @@
+"""Registry contract checker: static audit of the provider matrix.
+
+``core.backend`` routes every operator hot path through a
+(op × backend × placement × encoding) registry. The dispatch rules are
+load-bearing — distributed placements never silently drop to single,
+encoding-restricted providers must declare what they decode, every
+primitive exposes ``telemetry=`` — but nothing re-verifies them once
+the decorators have run. This module loads every provider module the
+registry pulls lazily and checks the assembled matrix:
+
+  CT001  distributed coverage: every op with a "sharded" provider has a
+         "2d" provider and vice versa, OR the hole is a declared
+         fallback (``backend.declare_fallback``). An undeclared hole is
+         a provider someone forgot, not a design decision.
+  CT002  encodings declared: every registered key has an encodings
+         entry, the entry is a non-empty subset of {dense, delta}, and
+         contains "dense" (the universal contract every provider must
+         accept after the registry-level decode fallback).
+  CT003  telemetry surface: each of the six paper primitives exposes a
+         ``telemetry=`` keyword.
+  CT004  no silent fallback to single: a distributed dispatch with no
+         provider raises ``ProviderMissError``, and no distributed key
+         shares its callable with the op's single-placement key (which
+         would be a fallback wearing a registration).
+  CT005  xla twin: every pallas provider has an xla provider under the
+         same placement — the pallas→xla fallback the dispatch rules
+         promise must have somewhere to land.
+  CT006  compile budgets: each of the six primitives has a declared
+         retrace budget (``analysis.budgets.COMPILE_BUDGETS``).
+
+Run as a test (``tests/test_analysis.py``) and a CLI:
+``python -m repro.analysis.contracts`` (exit 1 on findings).
+"""
+from __future__ import annotations
+
+import importlib
+import inspect
+from dataclasses import dataclass
+from typing import List
+
+# The six paper primitives: registry name -> (module, public callable).
+PRIMITIVES = {
+    "bfs": ("repro.core.primitives.bfs", "bfs"),
+    "sssp": ("repro.core.primitives.sssp", "sssp"),
+    "pagerank": ("repro.core.primitives.pagerank", "pagerank"),
+    "cc": ("repro.core.primitives.cc", "connected_components"),
+    "bc": ("repro.core.primitives.bc", "bc"),
+    "tc": ("repro.core.primitives.tc", "triangle_count"),
+}
+
+# Every module that registers providers on import — the registry is
+# lazy, so the checker must pull them all in before reading the matrix.
+PROVIDER_MODULES = (
+    "repro.core.operators",
+    "repro.core.frontier",
+    "repro.linalg.ops",
+    "repro.kernels.ops",
+    "repro.core.distributed",
+)
+
+VALID_ENCODINGS = frozenset({"dense", "delta"})
+
+
+@dataclass(frozen=True)
+class ContractFinding:
+    rule: str
+    key: str      # "op/backend/placement" or "op"
+    message: str
+
+    def render(self) -> str:
+        return f"{self.rule} [{self.key}] {self.message}"
+
+
+def _load_registry():
+    for mod in PROVIDER_MODULES:
+        importlib.import_module(mod)
+    from repro.core import backend as B
+    return B
+
+
+def check_registry() -> List[ContractFinding]:
+    """Audit the fully-loaded provider matrix; returns all findings."""
+    B = _load_registry()
+    reg = dict(B._REGISTRY)
+    enc = dict(B._ENCODINGS)
+    findings: List[ContractFinding] = []
+
+    ops = sorted({k[0] for k in reg})
+    by_placement = {pl: {k[0] for k in reg if k[2] == pl}
+                    for pl in B.PLACEMENTS}
+
+    # CT001 — sharded <-> 2d coverage, honouring declared fallbacks
+    for a, b in ((B.SHARDED, B.TWOD), (B.TWOD, B.SHARDED)):
+        for op in sorted(by_placement[a] - by_placement[b]):
+            if B.declared_fallback(op, b) is None:
+                findings.append(ContractFinding(
+                    "CT001", f"{op}/{b}",
+                    f"op has a {a!r} provider but no {b!r} provider and "
+                    f"no declared fallback — register one or "
+                    f"declare_fallback({op!r}, {b!r}, reason=...)"))
+
+    # CT002 — encodings declared and valid for every registered key
+    for key in sorted(reg):
+        kid = "/".join(key)
+        declared = enc.get(key)
+        if declared is None:
+            findings.append(ContractFinding(
+                "CT002", kid, "registered provider has no encodings "
+                "entry (register() must record one)"))
+            continue
+        bad = set(declared) - VALID_ENCODINGS
+        if bad:
+            findings.append(ContractFinding(
+                "CT002", kid, f"unknown encodings declared: {sorted(bad)}"))
+        if "dense" not in declared:
+            findings.append(ContractFinding(
+                "CT002", kid, "provider does not declare 'dense' — every "
+                "provider must accept the decode-to-dense fallback"))
+
+    # CT003 — telemetry= on every primitive's public wrapper
+    for name, (mod, fn_name) in PRIMITIVES.items():
+        fn = getattr(importlib.import_module(mod), fn_name)
+        params = inspect.signature(fn).parameters
+        if "telemetry" not in params:
+            findings.append(ContractFinding(
+                "CT003", name,
+                f"{mod}.{fn_name} does not expose a telemetry= keyword"))
+
+    # CT004 — no silent fallback to single.
+    # (a) behavioural: a distributed miss must raise ProviderMissError
+    probe = [op for op in ops if op not in by_placement[B.SHARDED]]
+    for op in probe[:1]:
+        try:
+            B.dispatch(op, B.XLA, B.SHARDED)
+        except B.ProviderMissError:
+            pass
+        except KeyError:
+            findings.append(ContractFinding(
+                "CT004", f"{op}/xla/sharded",
+                "distributed miss raised a bare KeyError, not "
+                "ProviderMissError — the structured miss contract"))
+        else:
+            findings.append(ContractFinding(
+                "CT004", f"{op}/xla/sharded",
+                "distributed dispatch with no provider returned an "
+                "implementation — a silent fallback to single"))
+    # (b) structural: no distributed key aliases the single callable
+    for (op, bk, pl), fn in sorted(reg.items()):
+        if pl == B.SINGLE:
+            continue
+        single = reg.get((op, bk, B.SINGLE)) or reg.get((op, B.XLA, B.SINGLE))
+        if single is not None and fn is single:
+            findings.append(ContractFinding(
+                "CT004", f"{op}/{bk}/{pl}",
+                "distributed registration reuses the single-placement "
+                "callable — a silent single fallback wearing a "
+                "registration"))
+
+    # CT005 — every pallas provider has an xla twin (fallback target)
+    for (op, bk, pl) in sorted(reg):
+        if bk == B.PALLAS and (op, B.XLA, pl) not in reg:
+            findings.append(ContractFinding(
+                "CT005", f"{op}/pallas/{pl}",
+                f"pallas provider has no xla twin under {pl!r}; the "
+                f"pallas→xla fallback has nowhere to land"))
+
+    # CT006 — compile budget declared for each primitive
+    from .budgets import COMPILE_BUDGETS
+    for name in PRIMITIVES:
+        if name not in COMPILE_BUDGETS:
+            findings.append(ContractFinding(
+                "CT006", name,
+                "primitive has no declared compile budget in "
+                "repro.analysis.budgets.COMPILE_BUDGETS"))
+
+    return findings
+
+
+def matrix() -> str:
+    """Human-readable provider matrix: one row per op, one column per
+    (backend, placement) pair, encodings annotated."""
+    B = _load_registry()
+    reg = B._REGISTRY
+    enc = B._ENCODINGS
+    cols = [(bk, pl) for pl in B.PLACEMENTS for bk in (B.XLA, B.PALLAS)]
+    ops = sorted({k[0] for k in reg})
+    head = ["op"] + [f"{bk}/{pl}" for bk, pl in cols]
+    rows = [head]
+    for op in ops:
+        row = [op]
+        for bk, pl in cols:
+            key = (op, bk, pl)
+            if key in reg:
+                e = enc.get(key, ())
+                row.append("+delta" if "delta" in e else "yes")
+            elif B.declared_fallback(op, pl) is not None:
+                row.append("(declared)")
+            else:
+                row.append("-")
+        rows.append(row)
+    widths = [max(len(r[i]) for r in rows) for i in range(len(head))]
+    return "\n".join(
+        "  ".join(c.ljust(w) for c, w in zip(r, widths)) for r in rows)
+
+
+def main(argv=None) -> int:
+    import argparse
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis.contracts",
+        description="Check the backend registry's provider-matrix "
+                    "contracts (CT001-CT006).")
+    p.add_argument("--matrix", action="store_true",
+                   help="print the provider matrix and exit")
+    ns = p.parse_args(argv)
+    if ns.matrix:
+        print(matrix())                      # reprolint: disable=RL005 -- CLI output channel
+        return 0
+    findings = check_registry()
+    for f in findings:
+        print(f.render())                    # reprolint: disable=RL005 -- CLI output channel
+    print(f"{len(findings)} contract finding(s)")  # reprolint: disable=RL005 -- CLI output channel
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,251 @@
+"""Runtime sanitizers: retrace detection and Pallas grid memory checks.
+
+Both detectors exploit the same fact: a jitted function's *Python body*
+runs only when JAX traces it, so pure-Python side effects placed there
+are exact compile counters, and every shape/grid/BlockSpec a kernel
+wrapper builds is concrete at trace time — checkable without executing
+the kernel and without breaking jit (nothing here touches tracer
+values).
+
+Retrace detector
+    Each of the six primitives calls ``trace_probe("<name>")`` at the
+    top of its jitted impl. The counter increments once per jit cache
+    miss — a retrace-per-call bug (the serving-path recompile killer)
+    shows up as a counter that tracks the call count.
+    ``retrace_guard(name)`` wraps a hot loop and raises
+    ``RetraceError`` when the window's fresh traces exceed the
+    primitive's declared budget (``budgets.COMPILE_BUDGETS``).
+
+Pallas memory sanitizer
+    ``kernels.runtime.pallas_call`` routes every kernel's grid +
+    BlockSpecs through ``check_pallas_spec`` when sanitizing is on
+    (``REPRO_SANITIZE=1`` or the ``sanitizing()`` context). For every
+    grid cell it evaluates each operand's ``index_map`` and verifies
+    (1) the mapped block lies inside the operand — an out-of-bounds
+    tile load/store corrupts neighbours silently in interpret mode and
+    faults unpredictably compiled; (2) no two grid cells map the same
+    OUTPUT block unless the wrapper declared that output an accumulator
+    (the sequential-grid accumulation pattern, e.g. the
+    ``advance_filter`` bitmap) — an undeclared revisit is a write-write
+    race on any platform with a parallel grid dimension.
+
+Scope/limits: the checker sees block-granularity addressing only —
+element-level indexing bugs *inside* a kernel body (a bad ``pl.load``
+index) are out of scope, as is cross-operand aliasing. Grids larger
+than ``MAX_CELLS`` are sampled (all boundary cells plus a stride
+through the interior), so a race between two interior cells of a huge
+grid can in principle be missed; every grid this codebase launches at
+test sizes enumerates fully.
+
+This module is stdlib-only so ``repro.core`` / ``repro.kernels`` can
+import it without cycles.
+"""
+from __future__ import annotations
+
+import itertools
+import math
+import os
+import threading
+from collections import Counter
+from contextlib import contextmanager
+from typing import Optional, Sequence
+
+ENV_VAR = "REPRO_SANITIZE"
+
+_tls = threading.local()
+
+# ---------------------------------------------------------------------------
+# activation
+# ---------------------------------------------------------------------------
+
+
+def _ctx_stack() -> list:
+    if not hasattr(_tls, "stack"):
+        _tls.stack = []
+    return _tls.stack
+
+
+def enabled() -> bool:
+    """Sanitizing active? Innermost ``sanitizing()`` context wins, else
+    the ``REPRO_SANITIZE`` env var (any value but ''/'0'/'false')."""
+    stack = _ctx_stack()
+    if stack:
+        return stack[-1]
+    return os.environ.get(ENV_VAR, "") not in ("", "0", "false", "False")
+
+
+@contextmanager
+def sanitizing(on: bool = True):
+    """Context manager: force sanitizing on (or off) for the block.
+    Resolution happens at kernel *trace* time, so already-cached traces
+    are not re-checked — use fresh shapes (or explicit ``interpret=``)
+    when asserting on the checks in tests."""
+    _ctx_stack().append(bool(on))
+    try:
+        yield
+    finally:
+        _ctx_stack().pop()
+
+
+# ---------------------------------------------------------------------------
+# retrace detector
+# ---------------------------------------------------------------------------
+
+_TRACE_COUNTS: Counter = Counter()
+
+
+class RetraceError(RuntimeError):
+    """A primitive exceeded its declared compile budget inside a
+    ``retrace_guard`` window."""
+
+
+def trace_probe(name: str) -> None:
+    """Count one trace of ``name``. Call this from INSIDE a jitted
+    function body: the Python body only runs on a jit cache miss, so
+    the count is exactly the compile count. Costs nothing at runtime —
+    the compiled program never sees it."""
+    _TRACE_COUNTS[name] += 1
+
+
+def trace_count(name: str) -> int:
+    """Total traces recorded for ``name`` in this process."""
+    return _TRACE_COUNTS[name]
+
+
+@contextmanager
+def retrace_guard(name: str, budget: Optional[int] = None,
+                  enforce: bool = True):
+    """Fail a hot loop that recompiles: raises ``RetraceError`` when the
+    block traces ``name`` more than ``budget`` times (default: the
+    primitive's declared ``budgets.COMPILE_BUDGETS`` entry).
+
+    Yields a report dict; ``report["traces"]`` is filled at exit so
+    callers can log the window even when it passes. ``enforce=False``
+    records without raising (the observability mode).
+    """
+    if budget is None:
+        from .budgets import budget_for
+        budget = budget_for(name)
+    start = _TRACE_COUNTS[name]
+    report = {"name": name, "budget": budget, "traces": None}
+    try:
+        yield report
+    finally:
+        report["traces"] = _TRACE_COUNTS[name] - start
+    if enforce and report["traces"] > budget:
+        raise RetraceError(
+            f"primitive {name!r} traced {report['traces']}× in a guarded "
+            f"window (budget {budget}): a fixed workload config is "
+            f"recompiling per call — check for unhashed static args, "
+            f"Python branches on call data, or shape churn in the caller")
+
+
+# ---------------------------------------------------------------------------
+# pallas grid/BlockSpec memory sanitizer
+# ---------------------------------------------------------------------------
+
+MAX_CELLS = 4096
+
+
+class MemoryFault(RuntimeError):
+    """An out-of-bounds tile map or an undeclared write-write race."""
+
+
+def _cells(grid: Sequence[int]):
+    """Grid cells to check: the full product when small enough, else
+    every boundary cell plus an interior stride (sampled grids can in
+    principle miss an interior-only fault; see module docstring)."""
+    grid = tuple(int(g) for g in grid)
+    total = math.prod(grid) if grid else 1
+    if total <= MAX_CELLS:
+        yield from itertools.product(*(range(g) for g in grid))
+        return
+    seen = set()
+    # all cells touching any face of the grid box
+    for d in range(len(grid)):
+        for edge in (0, grid[d] - 1):
+            axes = [range(g) if i != d else (edge,)
+                    for i, g in enumerate(grid)]
+            budget = MAX_CELLS // (2 * len(grid))
+            for cell in itertools.islice(itertools.product(*axes), budget):
+                if cell not in seen:
+                    seen.add(cell)
+                    yield cell
+    # a deterministic stride through the flat interior
+    stride = max(total // MAX_CELLS, 1)
+    for flat in range(0, total, stride):
+        cell = []
+        rem = flat
+        for g in reversed(grid):
+            cell.append(rem % g)
+            rem //= g
+        cell = tuple(reversed(cell))
+        if cell not in seen:
+            seen.add(cell)
+            yield cell
+
+
+def _block_index(spec, cell, *, name: str, operand: str):
+    idx = spec.index_map(*cell)
+    if not isinstance(idx, tuple):
+        idx = (idx,)
+    return tuple(int(i) for i in idx)
+
+
+def check_pallas_spec(*, name: str, grid, in_specs, out_specs,
+                      in_shapes, out_shapes,
+                      accumulate: Sequence[int] = ()) -> None:
+    """Trace-time audit of one ``pallas_call``'s tile addressing.
+
+    ``accumulate`` lists OUTPUT positions whose blocks are legitimately
+    revisited across (sequential) grid steps — the accumulation
+    pattern; any other output block mapped by two different cells is a
+    write-write race and faults.
+    """
+    grid = (grid,) if isinstance(grid, int) else tuple(grid)
+    accumulate = set(accumulate)
+    operands = (
+        [("in", i, spec, shape)
+         for i, (spec, shape) in enumerate(zip(in_specs, in_shapes))]
+        + [("out", i, spec, shape)
+           for i, (spec, shape) in enumerate(zip(out_specs, out_shapes))])
+
+    checked = []
+    for kind, i, spec, shape in operands:
+        block = tuple(int(b) for b in spec.block_shape)
+        shape = tuple(int(s) for s in shape)
+        opname = f"{kind}[{i}]"
+        if len(block) != len(shape):
+            raise MemoryFault(
+                f"{name}: {opname} block rank {len(block)} != operand "
+                f"rank {len(shape)} (block {block}, shape {shape})")
+        nblocks = tuple(-(-s // b) for s, b in zip(shape, block))
+        checked.append((kind, i, spec, block, shape, nblocks, opname))
+
+    writes: dict[int, dict] = {}
+    for cell in _cells(grid):
+        for kind, i, spec, block, shape, nblocks, opname in checked:
+            idx = _block_index(spec, cell, name=name, operand=opname)
+            if len(idx) != len(shape):
+                raise MemoryFault(
+                    f"{name}: {opname} index_map{cell} returned rank "
+                    f"{len(idx)}, operand rank is {len(shape)}")
+            for d, (b_idx, nb) in enumerate(zip(idx, nblocks)):
+                if not 0 <= b_idx < nb:
+                    lo = b_idx * block[d]
+                    raise MemoryFault(
+                        f"{name}: out-of-bounds tile on {opname} at grid "
+                        f"cell {cell}: index_map -> block {idx}, but dim "
+                        f"{d} has {nb} block(s) of {block[d]} over extent "
+                        f"{shape[d]} (elements [{lo}, {lo + block[d]}) "
+                        f"are outside the operand)")
+            if kind == "out" and i not in accumulate:
+                prev = writes.setdefault(i, {}).get(idx)
+                if prev is not None and prev != cell:
+                    raise MemoryFault(
+                        f"{name}: write-write race on out[{i}]: grid "
+                        f"cells {prev} and {cell} both map output block "
+                        f"{idx}; declare the output an accumulator "
+                        f"(accumulate=) if the revisit is the sequential "
+                        f"accumulation pattern")
+                writes.setdefault(i, {})[idx] = cell

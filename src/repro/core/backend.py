@@ -79,6 +79,69 @@ PLACEMENT_ENV_VAR = "REPRO_PLACEMENT"
 
 _tls = threading.local()
 
+
+class ProviderMissError(KeyError):
+    """No provider for a (op, backend, placement) dispatch.
+
+    Subclasses ``KeyError`` (the pinned public contract) but carries the
+    structured miss — which op, which resolved backend/placement, the
+    requested encoding when one was in play, and the nearest registered
+    key — so a miss reads as "you asked for X, the registry has Y"
+    instead of a bare repr.
+    """
+
+    def __init__(self, op: str, backend: str, placement: str,
+                 encoding: Optional[str] = None,
+                 nearest: Optional[tuple] = None,
+                 detail: str = ""):
+        self.op = op
+        self.backend = backend
+        self.placement = placement
+        self.encoding = encoding
+        self.nearest = nearest
+        self.detail = detail
+        super().__init__(str(self))
+
+    def __str__(self) -> str:
+        want = f"op={self.op!r} backend={self.backend!r} " \
+               f"placement={self.placement!r}"
+        if self.encoding is not None:
+            want += f" encoding={self.encoding!r}"
+        msg = f"no provider registered for {want}"
+        if self.detail:
+            msg += f" ({self.detail})"
+        if self.nearest is not None:
+            n_op, n_bk, n_pl = self.nearest
+            msg += (f"; nearest registered key: op={n_op!r} "
+                    f"backend={n_bk!r} placement={n_pl!r}")
+        return msg
+
+
+# (op, placement) -> reason. A distributed placement hole an op has
+# consciously opted out of: dispatch still raises (the no-silent-drop
+# rule stands), but the contract checker (repro.analysis.contracts)
+# treats the hole as documented instead of flagging missing coverage.
+_DECLARED_FALLBACKS: dict[tuple[str, str], str] = {}
+
+
+def declare_fallback(op: str, placement: str, *, reason: str) -> None:
+    """Declare that ``op`` intentionally has no ``placement`` provider.
+
+    This does NOT change dispatch — a distributed miss still raises
+    ``ProviderMissError`` — it makes the gap explicit so the registry
+    contract checker can tell a declared design decision from an
+    accidentally missing provider."""
+    _check_placement(placement)
+    if not reason:
+        raise ValueError("declare_fallback requires a non-empty reason")
+    _DECLARED_FALLBACKS[(op, placement)] = reason
+
+
+def declared_fallback(op: str, placement: str) -> Optional[str]:
+    """The declared-fallback reason for (op, placement), or None."""
+    return _DECLARED_FALLBACKS.get((op, placement))
+
+
 # (op_name, backend, placement) -> implementation. Populated by @register
 # decorators in core.operators / core.frontier (xla), kernels.ops
 # (pallas) and core.distributed (sharded).
@@ -326,12 +389,28 @@ def _lookup(op: str, bk: str, pl: str) -> tuple[tuple, Callable]:
         impl = _REGISTRY.get(key)
     if impl is None:
         if pl != SINGLE:
-            raise KeyError(
-                f"no {pl} implementation registered for operator "
-                f"{op!r} ({pl} dispatch never falls back to the "
-                f"single-device path)")
-        raise KeyError(f"no implementation registered for operator {op!r}")
+            raise ProviderMissError(
+                op, bk, pl, nearest=_nearest_key(op, bk, pl),
+                detail=f"{pl} dispatch never falls back to the "
+                       f"single-device path")
+        raise ProviderMissError(op, bk, pl,
+                                nearest=_nearest_key(op, bk, pl))
     return key, impl
+
+
+def _nearest_key(op: str, bk: str, pl: str) -> Optional[tuple]:
+    """The registered key closest to the missed (op, bk, pl): prefer the
+    same op under another backend/placement, else the closest op name."""
+    same_op = [k for k in _REGISTRY if k[0] == op]
+    if same_op:
+        # same backend beats same placement beats anything
+        return min(same_op, key=lambda k: (k[1] != bk, k[2] != pl, k))
+    import difflib
+    names = sorted({k[0] for k in _REGISTRY})
+    close = difflib.get_close_matches(op, names, n=1)
+    if close:
+        return min(k for k in _REGISTRY if k[0] == close[0])
+    return None
 
 
 def registered(op: str, backend: str, placement: str = SINGLE) -> bool:

@@ -322,6 +322,21 @@ def _spmv_sharded(offsets, indices, values, x, sr, ell_width, mask,
     return y.astype(jnp.float32)
 
 
+# advance_filter has no sharded (1-D) provider BY DESIGN, not omission:
+# the fused predicate needs the global visited bitmap coherent per tile,
+# and the 1-D exchange only reconciles it per BSP step — the sharded BFS
+# path composes advance + a post-exchange filter instead. The 2-D path
+# registers one because its row-axis psum-OR makes the bitmap coherent
+# inside the step. Declared so the registry contract checker (CT001)
+# reads the hole as a decision, while dispatch still refuses to drop to
+# single-device.
+B.declare_fallback(
+    "advance_filter", B.SHARDED,
+    reason="1-D exchange cannot keep the visited bitmap coherent inside "
+           "a fused tile sweep; sharded BFS composes advance + filter "
+           "around the frontier exchange instead")
+
+
 @B.register("mxm", B.XLA, B.SHARDED)
 def _mxm_sharded(a_off, a_idx, a_vals, bt_off, bt_idx, bt_vals,
                  base, probe_rows, sr, cap_out: int):
@@ -978,7 +993,8 @@ def _cc_dist_impl(ro, ci, base, *, n: int, vpp: int, mesh: Mesh, axis: str):
             cand = jax.lax.pmin(cand, axis)
             cid = pointer_jump(jnp.minimum(cid, cand))
             still = live & (cid[src_g] != cid[dst])
-            n_live = jax.lax.psum(jnp.sum(still.astype(jnp.int32)), axis)
+            n_live = jax.lax.psum(
+                jnp.sum(still, dtype=jnp.int32), axis)
             return cid, still, n_live, it + 1
 
         def cond(carry):
@@ -992,7 +1008,7 @@ def _cc_dist_impl(ro, ci, base, *, n: int, vpp: int, mesh: Mesh, axis: str):
         return cid, it
 
     labels, it = run(ro, ci, base)
-    ncomp = jnp.sum((labels == jnp.arange(n)).astype(jnp.int32))
+    ncomp = jnp.sum(labels == jnp.arange(n), dtype=jnp.int32)
     return labels, ncomp, it
 
 
@@ -1036,7 +1052,7 @@ def _cc_2d_impl(ro, ci, row_base, *, n: int, vpr: int, mesh: Mesh,
             cand = jax.lax.pmin(cand, (row_ax, col_ax))
             cid = pointer_jump(jnp.minimum(cid, cand))
             still = live & (cid[src_g] != cid[dst])
-            n_live = jax.lax.psum(jnp.sum(still.astype(jnp.int32)),
+            n_live = jax.lax.psum(jnp.sum(still, dtype=jnp.int32),
                                   (row_ax, col_ax))
             return cid, still, n_live, it + 1
 
@@ -1051,7 +1067,7 @@ def _cc_2d_impl(ro, ci, row_base, *, n: int, vpr: int, mesh: Mesh,
         return cid, it
 
     labels, it = run(ro, ci, row_base)
-    ncomp = jnp.sum((labels == jnp.arange(n)).astype(jnp.int32))
+    ncomp = jnp.sum(labels == jnp.arange(n), dtype=jnp.int32)
     return labels, ncomp, it
 
 

@@ -247,7 +247,7 @@ def _compact_xla(values: jax.Array, mask: jax.Array
     """
     n = mask.shape[0]
     mask_i = mask.astype(jnp.int32)
-    pos = jnp.cumsum(mask_i) - mask_i            # exclusive scan
+    pos = jnp.cumsum(mask_i, dtype=jnp.int32) - mask_i   # exclusive scan
     buf = jnp.full((n,), INVALID, values.dtype)
     tgt = jnp.where(mask, pos, n)                # invalid lanes fall off
     buf = buf.at[tgt].set(values, mode="drop")

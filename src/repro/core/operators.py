@@ -91,7 +91,7 @@ def lb_expand(sizes: jax.Array, valid_in: jax.Array, cap_out: int) -> Expansion:
     Every output slot costs O(log cap_in) — perfectly balanced by output.
     """
     sizes = jnp.where(valid_in, sizes, 0).astype(jnp.int32)
-    offsets = jnp.cumsum(sizes) - sizes                     # exclusive scan
+    offsets = jnp.cumsum(sizes, dtype=jnp.int32) - sizes    # exclusive scan
     total = (offsets[-1] + sizes[-1]) if sizes.shape[0] else jnp.int32(0)
     slots = jnp.arange(cap_out, dtype=jnp.int32)
     # sorted search: which segment does each output slot land in?
@@ -204,7 +204,7 @@ def advance(graph: Graph, frontier: SparseFrontier, cap_out: int,
             edge_id=jnp.where(valid, slot, INVALID)[:cap_out],
             in_pos=src_of[:cap_out],
             valid=valid[:cap_out],
-            total=jnp.sum(valid.astype(jnp.int32)))
+            total=jnp.sum(valid, dtype=jnp.int32))
         if functor is None:
             return res, data
         keep, data = functor(res.src, res.dst, res.edge_id,
@@ -293,7 +293,7 @@ def advance_batch(graph: Graph, frontier: BatchedSparseFrontier,
             in_pos=jnp.broadcast_to(src_of[None, :],
                                     valid.shape)[:, :cap_out],
             valid=valid[:, :cap_out],
-            total=jnp.sum(valid.astype(jnp.int32), axis=1))
+            total=jnp.sum(valid, dtype=jnp.int32, axis=1))
     else:
         if strategy not in ("LB", "TWC"):
             raise ValueError(f"unknown strategy {strategy}")

@@ -31,6 +31,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitize
+
 from .. import backend as B
 from ..enactor import run_until_any
 from ..graph import Graph, edge_list
@@ -66,6 +68,7 @@ def _bc_impl(graph: Graph, esrc: jax.Array, srcs: jax.Array,
              weights: jax.Array, telemetry: bool = False):
     """B Brandes passes in one program. ``weights`` (B,) scales each
     lane's dependency contribution (0 masks a padding lane)."""
+    sanitize.trace_probe("bc")   # compile counter: body runs only on a jit cache miss
     n, m = graph.num_vertices, graph.num_edges
     b = srcs.shape[0]
     edst = graph.cols()

@@ -37,6 +37,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import sanitize
+
 from .. import backend as B
 from .. import operators as ops
 from ..direction import PULL, PUSH, DirectionParams, decide_direction
@@ -76,6 +78,7 @@ def _bfs_impl(graph: Graph, srcs: jax.Array, do_a: float, do_b: float,
               direction: bool, idempotence: bool, strategy: str,
               record_preds: bool, backend: str,
               tiered: bool = True, telemetry: bool = False):
+    sanitize.trace_probe("bfs")   # compile counter: body runs only on a jit cache miss
     n, m = graph.num_vertices, graph.num_edges
     b = srcs.shape[0]
     # edge frontiers are worst-case expansion (m); vertex frontiers are

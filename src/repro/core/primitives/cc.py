@@ -20,6 +20,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import sanitize
+
 from .. import backend as B
 from ..enactor import run_until
 from ..graph import Graph, edge_list
@@ -39,6 +41,7 @@ class CCResult(NamedTuple):
 
 @functools.partial(jax.jit, static_argnames=("telemetry",))
 def _cc_impl(graph: Graph, src: jax.Array, telemetry: bool = False):
+    sanitize.trace_probe("cc")   # compile counter: body runs only on a jit cache miss
     n, m = graph.num_vertices, graph.num_edges
     # dense decoded view, hoisted once before the loop (the hooking sweep
     # reads every edge every iteration — an in-loop decode would re-run)
@@ -86,7 +89,7 @@ def _cc_impl(graph: Graph, src: jax.Array, telemetry: bool = False):
         buf = None
         final, iters = run_until(lambda st: st.n_live > 0, body, state,
                                  max_iter=n + 1)
-    ncomp = jnp.sum((final.cid == jnp.arange(n)).astype(jnp.int32))
+    ncomp = jnp.sum(final.cid == jnp.arange(n), dtype=jnp.int32)
     result = CCResult(labels=final.cid, num_components=ncomp,
                       iterations=iters)
     return (result, buf) if telemetry else result

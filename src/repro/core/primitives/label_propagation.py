@@ -71,7 +71,7 @@ def _lp_impl(graph: Graph, labels0: jax.Array, max_iter: int, backend: str,
 
         best0 = jnp.zeros((n,), jnp.float32)
         _, new_labels = jax.lax.fori_loop(0, nblk, blk, (best0, labels))
-        changed = jnp.sum((new_labels != labels).astype(jnp.int32))
+        changed = jnp.sum(new_labels != labels, dtype=jnp.int32)
         return new_labels, changed
 
     state = (labels0, jnp.int32(1))

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 
 from repro.linalg import semiring as SR
 
+from repro.analysis import sanitize
+
 from .. import backend as B
 from ..enactor import run_until
 from ..graph import Graph
@@ -67,6 +69,7 @@ def _pagerank_impl(graph: Graph, inv_deg: jax.Array, damping: jax.Array,
                    placement: str = B.SINGLE,
                    precision: str = "fp32",
                    telemetry: bool = False):
+    sanitize.trace_probe("pagerank")   # compile counter: body runs only on a jit cache miss
     n = graph.num_vertices
     # PageRank's sweep is dense — every row contributes every iteration —
     # so it is explicitly PINNED to the top capacity tier (pin=True); the

@@ -25,6 +25,8 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import sanitize
+
 from .. import backend as B
 from .. import operators as ops
 from ..enactor import run_until_any, select_lanes, tiered_step
@@ -58,6 +60,7 @@ def _sssp_impl(graph: Graph, srcs: jax.Array, delta: jax.Array,
                use_delta: bool, strategy: str,
                backend: str, tiered: bool = True,
                telemetry: bool = False):
+    sanitize.trace_probe("sssp")   # compile counter: body runs only on a jit cache miss
     n, m = graph.num_vertices, graph.num_edges
     b = srcs.shape[0]
     # relax sweeps run at the smallest capacity tier holding the near

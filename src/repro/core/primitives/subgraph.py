@@ -76,7 +76,7 @@ def subgraph_match(graph: Graph, n_q: int,
         keep = keep & (labels == int(q_labels[0]))
     cand0, count = compact_values(jnp.arange(n, dtype=jnp.int32), keep,
                                   cap)
-    truncated = bool(int(jnp.sum(keep.astype(jnp.int32))) > cap)
+    truncated = bool(int(jnp.sum(keep, dtype=jnp.int32)) > cap)
     emb = jnp.full((cap, n_q), -1, jnp.int32)
     emb = emb.at[:, 0].set(cand0)
     count = jnp.minimum(count, cap)
@@ -114,8 +114,9 @@ def subgraph_match(graph: Graph, n_q: int,
         for j in range(k):
             ok = ok & (cand != emb[src_row, j])
         # compact surviving (embedding, candidate) pairs
-        pos = jnp.cumsum(ok.astype(jnp.int32)) - ok.astype(jnp.int32)
-        raw = jnp.sum(ok.astype(jnp.int32))
+        oki = ok.astype(jnp.int32)
+        pos = jnp.cumsum(oki, dtype=jnp.int32) - oki
+        raw = jnp.sum(ok, dtype=jnp.int32)
         truncated = truncated or int(raw) > cap
         new_count = jnp.minimum(raw, cap)
         tgt = jnp.where(ok & (pos < cap), pos, cap)

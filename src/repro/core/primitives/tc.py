@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import linalg
+from repro.analysis import sanitize
 
 from .. import backend as B
 from ..graph import Graph, edge_list, from_edge_list
@@ -34,6 +35,15 @@ class TCResult(NamedTuple):
     per_edge: jax.Array       # (m',) per-oriented-edge counts
     edge_src: np.ndarray      # (m',) oriented edge sources (host)
     edge_dst: np.ndarray      # (m',) oriented edge dsts (host)
+
+
+@jax.jit
+def _tc_total(counts: jax.Array) -> jax.Array:
+    """Jitted reduction tail — TC's mxm plans capacity host-side (it
+    cannot be jitted whole), so the retrace probe lives here: one fixed
+    oriented-edge count → one trace."""
+    sanitize.trace_probe("tc")   # compile counter: runs on cache miss only
+    return jnp.sum(counts, dtype=jnp.int32)
 
 
 def _orient(graph: Graph) -> tuple[Graph, np.ndarray, np.ndarray]:
@@ -70,7 +80,7 @@ def triangle_count(graph: Graph, *, backend: Optional[str] = None,
                             semiring=linalg.plus_and,
                             b_transpose=True, structural=True,
                             backend=bk).astype(jnp.int32)
-        result = TCResult(total=jnp.sum(counts).astype(jnp.int32),
+        result = TCResult(total=_tc_total(counts),
                           per_edge=counts, edge_src=ssrc, edge_dst=sdst)
     if telemetry:
         from ...obs.telemetry import TelemetryBuffer

@@ -84,7 +84,7 @@ def _step(offsets, base, row_offsets, col_indices, vis, bm_prev, ids_prev,
     bm = bm.at[safe_dst].max(keep.astype(jnp.int32))
 
     kept = keep.astype(jnp.int32)
-    gpos = cnt + jnp.cumsum(kept) - kept
+    gpos = cnt + jnp.cumsum(kept, dtype=jnp.int32) - kept
     tgt = jnp.where(keep & (gpos < cap_front), gpos, cap_front)
     out_ids = out_ids.at[tgt].set(dst, mode="drop")
     out_src = out_src.at[tgt].set(src, mode="drop")
@@ -147,10 +147,14 @@ def advance_filter_fused_kernel(offsets: jax.Array, base: jax.Array,
     iters = max(math.ceil(math.log2(max(cap_in, 2))) + 1, 1)
     grid = (padded // tile,)
     bcast = lambda shape: pl.BlockSpec(shape, lambda i: (0,))
-    ids, srcs, cnt, _ = pl.pallas_call(
+    # every output block persists across the sequential grid (the
+    # accumulation pattern the module docstring describes) — declared so
+    # the memory sanitizer doesn't read the revisits as races
+    ids, srcs, cnt, _ = runtime.pallas_call(
         functools.partial(_kernel, cap_in=cap_in, num_edges=m, n=n,
                           iters=iters, tile=tile, cap_front=cap_front,
                           encoded=encoded),
+        name="advance_filter_fused",
         grid=grid,
         in_specs=[bcast((cap_in + 1,)), bcast((cap_in,)),
                   bcast(row_offsets.shape), bcast(ci.shape),
@@ -162,6 +166,7 @@ def advance_filter_fused_kernel(offsets: jax.Array, base: jax.Array,
                    jax.ShapeDtypeStruct((1,), jnp.int32),
                    jax.ShapeDtypeStruct((n,), jnp.int32)],
         interpret=interpret,
+        accumulate=(0, 1, 2, 3),
     )(offsets, base, row_offsets, ci, anchor,
       visited.astype(jnp.int32))
     total = cnt[0]
@@ -217,10 +222,14 @@ def advance_filter_fused_batch_kernel(offsets: jax.Array, base: jax.Array,
     grid = (b, padded // tile)
     row = lambda shape: pl.BlockSpec((1,) + shape, lambda bi, ti: (bi, 0))
     bcast = lambda shape: pl.BlockSpec((1,) + shape, lambda bi, ti: (0, 0))
-    ids, srcs, cnt, _ = pl.pallas_call(
+    # per-lane output rows persist across the (row-major sequential)
+    # tile axis — the batched accumulation pattern; declared for the
+    # memory sanitizer
+    ids, srcs, cnt, _ = runtime.pallas_call(
         functools.partial(_batch_kernel, cap_in=cap_in, num_edges=m, n=n,
                           iters=iters, tile=tile, cap_front=cap_front,
                           encoded=encoded),
+        name="advance_filter_fused_batch",
         grid=grid,
         in_specs=[row((cap_in + 1,)), row((cap_in,)),
                   bcast(row_offsets.shape), bcast(ci.shape),
@@ -232,6 +241,7 @@ def advance_filter_fused_batch_kernel(offsets: jax.Array, base: jax.Array,
                    jax.ShapeDtypeStruct((b, 1), jnp.int32),
                    jax.ShapeDtypeStruct((b, n), jnp.int32)],
         interpret=interpret,
+        accumulate=(0, 1, 2, 3),
     )(offsets, base, row_offsets[None, :], ci[None, :], anchor[None, :],
       visited.astype(jnp.int32))
     totals = cnt[:, 0]

@@ -169,9 +169,10 @@ def advance_fused_kernel(offsets: jax.Array, base: jax.Array,
     grid = (padded // tile,)
     out_shape = [jax.ShapeDtypeStruct((padded,), jnp.int32)] * 6
     bcast = lambda shape: pl.BlockSpec(shape, lambda i: (0,))
-    src, dst, eid, ipos, rank, valid = pl.pallas_call(
+    src, dst, eid, ipos, rank, valid = runtime.pallas_call(
         functools.partial(_kernel, cap_in=cap_in, num_edges=m, iters=iters,
                           tile=tile, encoded=encoded),
+        name="advance_fused",
         grid=grid,
         in_specs=[bcast((cap_in + 1,)), bcast((cap_in,)),
                   bcast(row_offsets.shape), bcast(ci.shape),
@@ -234,9 +235,10 @@ def advance_fused_batch_kernel(offsets: jax.Array, base: jax.Array,
     out_shape = [jax.ShapeDtypeStruct((b, padded), jnp.int32)] * 6
     row = lambda shape: pl.BlockSpec((1,) + shape, lambda bi, ti: (bi, 0))
     bcast = lambda shape: pl.BlockSpec((1,) + shape, lambda bi, ti: (0, 0))
-    src, dst, eid, ipos, rank, valid = pl.pallas_call(
+    src, dst, eid, ipos, rank, valid = runtime.pallas_call(
         functools.partial(_batch_kernel, cap_in=cap_in, num_edges=m,
                           iters=iters, tile=tile, encoded=encoded),
+        name="advance_fused_batch",
         grid=grid,
         in_specs=[row((cap_in + 1,)), row((cap_in,)),
                   bcast(row_offsets.shape), bcast(ci.shape),

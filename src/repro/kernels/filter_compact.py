@@ -24,7 +24,8 @@ TILE = 256          # heuristic floor; the tuner may pick larger tiles
 def _kernel(ids_ref, keep_ref, packed_ref, count_ref, *, tile: int):
     ids = ids_ref[...]                       # (tile,)
     keep = keep_ref[...] > 0                 # (tile,)
-    pos = jnp.cumsum(keep.astype(jnp.int32)) - keep.astype(jnp.int32)
+    keep_i = keep.astype(jnp.int32)
+    pos = jnp.cumsum(keep_i, dtype=jnp.int32) - keep_i
     lane = jax.lax.iota(jnp.int32, tile)
     # one-hot "scatter": packed[j] = ids[i] where pos[i]==j and keep[i]
     onehot = (pos[:, None] == lane[None, :]) & keep[:, None]
@@ -58,8 +59,9 @@ def filter_compact_kernel(ids: jax.Array, keep: jax.Array,
     else:
         keep = keep.astype(jnp.int32)
     ntile = padded // tile
-    packed, counts = pl.pallas_call(
+    packed, counts = runtime.pallas_call(
         functools.partial(_kernel, tile=tile),
+        name="filter_compact",
         grid=(ntile,),
         in_specs=[pl.BlockSpec((tile,), lambda i: (i,)),
                   pl.BlockSpec((tile,), lambda i: (i,))],

@@ -88,9 +88,13 @@ def flash_attention_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
     kp = jnp.pad(k, ((0, psk - sk), (0, 0)))
     vp = jnp.pad(v, ((0, psk - sk), (0, 0)))
     nq, nk = psq // bq, psk // bk
-    out = pl.pallas_call(
+    # the (i, 0) output map revisits each q block across the k axis —
+    # the online-softmax accumulation; declared for the memory sanitizer
+    out = runtime.pallas_call(
         functools.partial(_kernel, scale=scale, causal=causal, sq=sq,
                           sk=sk, bq=bq, bk=bk, nk=nk),
+        name="flash_attention",
+        accumulate=(0,),
         grid=(nq, nk),
         in_specs=[
             pl.BlockSpec((bq, d), lambda i, j: (i, 0)),

@@ -63,8 +63,9 @@ def lb_expand_kernel(offsets: jax.Array, cap_out: int,
     iters = max(math.ceil(math.log2(max(cap_in, 2))) + 1, 1)
     grid = (padded // tile,)
     out_shape = [jax.ShapeDtypeStruct((padded,), jnp.int32)] * 3
-    in_pos, rank, valid = pl.pallas_call(
+    in_pos, rank, valid = runtime.pallas_call(
         functools.partial(_kernel, cap_in=cap_in, iters=iters, tile=tile),
+        name="lb_expand",
         grid=grid,
         in_specs=[pl.BlockSpec((cap_in + 1,), lambda i: (0,))],
         out_specs=[pl.BlockSpec((tile,), lambda i: (i,))] * 3,

@@ -45,8 +45,9 @@ def moe_gather_kernel(x: jax.Array, slot_token: jax.Array,
     padded = -(-s // TILE_S) * TILE_S
     st = jnp.concatenate([slot_token.astype(jnp.int32),
                           jnp.full((padded - s,), -1, jnp.int32)])
-    out = pl.pallas_call(
+    out = runtime.pallas_call(
         _kernel,
+        name="moe_gather",
         grid=(padded // TILE_S,),
         in_specs=[pl.BlockSpec((TILE_S,), lambda i: (i,)),
                   pl.BlockSpec((t, d), lambda i: (0, 0))],

@@ -53,7 +53,7 @@ def lb_expand(sizes: jax.Array, cap_out: int) -> KExpansion:
     """Kernel-backed LB expansion; drop-in for operators.lb_expand."""
     sizes = sizes.astype(jnp.int32)
     offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                               jnp.cumsum(sizes)])
+                               jnp.cumsum(sizes, dtype=jnp.int32)])
     in_pos, rank, valid = lb_expand_kernel(offsets, cap_out,
                                            interpret=_interpret())
     return KExpansion(in_pos=in_pos, rank=rank, valid=valid > 0,
@@ -73,7 +73,7 @@ def advance_fused(row_offsets: jax.Array, col_indices,
     to a decoded dense view inside the kernel wrapper)."""
     sizes = sizes.astype(jnp.int32)
     offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                               jnp.cumsum(sizes)])
+                               jnp.cumsum(sizes, dtype=jnp.int32)])
     src, dst, eid, in_pos, rank, valid, total = advance_fused_kernel(
         offsets, base.astype(jnp.int32), row_offsets, col_indices, cap_out,
         interpret=_interpret())
@@ -90,7 +90,7 @@ def advance_fused_batch(row_offsets: jax.Array, col_indices,
     sizes = sizes.astype(jnp.int32)
     offsets = jnp.concatenate(
         [jnp.zeros((sizes.shape[0], 1), jnp.int32),
-         jnp.cumsum(sizes, axis=1)], axis=1)
+         jnp.cumsum(sizes, axis=1, dtype=jnp.int32)], axis=1)
     src, dst, eid, in_pos, rank, valid, totals = advance_fused_batch_kernel(
         offsets, base.astype(jnp.int32), row_offsets, col_indices, cap_out,
         interpret=_interpret())
@@ -109,7 +109,7 @@ def advance_filter_fused(row_offsets: jax.Array, col_indices,
     total) with ids/srcs (cap_front,) compacted survivors."""
     sizes = sizes.astype(jnp.int32)
     offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                               jnp.cumsum(sizes)])
+                               jnp.cumsum(sizes, dtype=jnp.int32)])
     return advance_filter_fused_kernel(
         offsets, base.astype(jnp.int32), row_offsets, col_indices,
         visited, cap_out, cap_front, interpret=_interpret())
@@ -126,7 +126,7 @@ def advance_filter_fused_batch(row_offsets: jax.Array,
     sizes = sizes.astype(jnp.int32)
     offsets = jnp.concatenate(
         [jnp.zeros((sizes.shape[0], 1), jnp.int32),
-         jnp.cumsum(sizes, axis=1)], axis=1)
+         jnp.cumsum(sizes, axis=1, dtype=jnp.int32)], axis=1)
     return advance_filter_fused_batch_kernel(
         offsets, base.astype(jnp.int32), row_offsets, col_indices,
         visited, cap_out, cap_front, interpret=_interpret())
@@ -296,7 +296,7 @@ def _probe_advance(cap: int, tile: int, encoding: str = "dense") -> float:
     base = jnp.arange(k, dtype=jnp.int32) % n
     sizes = jnp.full((k,), 8, jnp.int32)
     offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                               jnp.cumsum(sizes)])
+                               jnp.cumsum(sizes, dtype=jnp.int32)])
     return _time(lambda: advance_fused_kernel(
         offsets, base, ro, ci, cap, interpret=_interpret(), tile=tile))
 
@@ -313,7 +313,7 @@ def _probe_advance_filter(cap: int, tile: int,
     base = jnp.arange(k, dtype=jnp.int32) % n
     sizes = jnp.full((k,), 8, jnp.int32)
     offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                               jnp.cumsum(sizes)])
+                               jnp.cumsum(sizes, dtype=jnp.int32)])
     visited = jnp.zeros((n,), jnp.int32)
     return _time(lambda: advance_filter_fused_kernel(
         offsets, base, ro, ci, visited, cap, min(cap, n),
@@ -331,7 +331,7 @@ def _probe_lb_expand(cap: int, tile: int) -> float:
     k = max(cap // 8, 1)
     sizes = jnp.full((k,), 8, jnp.int32)
     offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
-                               jnp.cumsum(sizes)])
+                               jnp.cumsum(sizes, dtype=jnp.int32)])
     return _time(lambda: lb_expand_kernel(
         offsets, cap, interpret=_interpret(), tile=tile))
 

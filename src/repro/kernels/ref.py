@@ -65,7 +65,8 @@ def filter_compact_ref(ids: jax.Array, keep: jax.Array):
     Returns (packed, count)."""
     cap = ids.shape[0]
     keep = keep.astype(bool)
-    pos = jnp.cumsum(keep.astype(jnp.int32)) - keep.astype(jnp.int32)
+    keep_i = keep.astype(jnp.int32)
+    pos = jnp.cumsum(keep_i, dtype=jnp.int32) - keep_i
     out = jnp.full((cap,), -1, ids.dtype)
     tgt = jnp.where(keep, pos, cap)
     out = out.at[tgt].set(ids, mode="drop")

@@ -1,4 +1,4 @@
-"""Shared Pallas runtime probes: interpret-mode selection and platform id.
+"""Shared Pallas runtime probes: interpret mode, platform id, call gate.
 
 Every kernel module used to hardcode ``interpret: bool = True`` defaults
 while ``kernels/ops.py`` carried its own platform probe — two sources of
@@ -14,13 +14,24 @@ kernels interpreted). This module is now the single probe:
   * ``platform()`` — the string the autotuner keys its cache on
     ("tpu" | "cpu+interpret" | …): tile choices measured in interpret
     mode must never be replayed on compiled TPU kernels and vice versa.
+  * ``pallas_call(...)`` — the one gate every kernel wrapper launches
+    through. Identical to ``pl.pallas_call`` when sanitizing is off;
+    under ``REPRO_SANITIZE=1`` (or ``analysis.sanitize.sanitizing()``)
+    it audits the grid/BlockSpec addressing against the actual operand
+    shapes at trace time (out-of-bounds tile maps, undeclared
+    write-write races between grid cells) before launching. Wrappers
+    whose outputs are legitimately revisited across sequential grid
+    steps declare them with ``accumulate=``.
 """
 from __future__ import annotations
 
 import os
-from typing import Optional
+from typing import Optional, Sequence
 
 import jax
+from jax.experimental import pallas as pl
+
+from repro.analysis import sanitize
 
 ENV_VAR = "REPRO_FORCE_INTERPRET"
 
@@ -51,3 +62,44 @@ def platform() -> str:
     round trip per grid step) is unrelated to compiled-kernel cost."""
     base = jax.default_backend()
     return base if not interpret_mode() else f"{base}+interpret"
+
+
+def pallas_call(kernel, *, grid, in_specs, out_specs, out_shape,
+                interpret: bool = False, name: Optional[str] = None,
+                accumulate: Sequence[int] = (), scratch_shapes=None):
+    """``pl.pallas_call`` with the memory sanitizer attached.
+
+    Returns the launch callable. With sanitizing off this is exactly the
+    ``pl.pallas_call`` result; with it on, the returned callable first
+    audits every operand's BlockSpec against its *actual* shape
+    (``sanitize.check_pallas_spec``), then launches. The audit runs at
+    trace time — it sees concrete shapes/grids even inside jit and costs
+    nothing in the compiled program.
+
+    ``accumulate`` lists output positions whose blocks are revisited by
+    design across (sequential) grid steps; any other revisit faults as a
+    write-write race. ``name`` labels faults (defaults to the kernel
+    function's name).
+    """
+    extra = {} if scratch_shapes is None else {
+        "scratch_shapes": scratch_shapes}
+    call = pl.pallas_call(kernel, grid=grid, in_specs=list(in_specs),
+                          out_specs=out_specs, out_shape=out_shape,
+                          interpret=interpret, **extra)
+    if not sanitize.enabled():
+        return call
+    label = name or getattr(kernel, "__name__", None) or "pallas_call"
+    multi_out = isinstance(out_shape, (list, tuple))
+    out_specs_l = list(out_specs) if multi_out else [out_specs]
+    out_shapes = [tuple(s.shape) for s in
+                  (out_shape if multi_out else [out_shape])]
+
+    def checked(*operands):
+        sanitize.check_pallas_spec(
+            name=label, grid=grid, in_specs=list(in_specs),
+            out_specs=out_specs_l,
+            in_shapes=[tuple(o.shape) for o in operands],
+            out_shapes=out_shapes, accumulate=accumulate)
+        return call(*operands)
+
+    return checked

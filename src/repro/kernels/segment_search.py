@@ -74,8 +74,9 @@ def segment_search_kernel(haystack: jax.Array, lo: jax.Array, hi: jax.Array,
         lo = lo.astype(jnp.int32)
         hi = hi.astype(jnp.int32)
     iters = max(math.ceil(math.log2(max(haystack.shape[0], 2))) + 1, 1)
-    found = pl.pallas_call(
+    found = runtime.pallas_call(
         functools.partial(_kernel, iters=iters, locate=locate),
+        name="segment_search",
         grid=(padded // tile,),
         in_specs=[
             pl.BlockSpec(haystack.shape, lambda i: (0,)),

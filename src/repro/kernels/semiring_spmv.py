@@ -77,8 +77,9 @@ def semiring_ell_kernel(nbrs: jax.Array, vals: jax.Array, x: jax.Array,
         vals = jnp.concatenate([vals, jnp.zeros((pad, w), vals.dtype)])
         mask = jnp.concatenate([mask, jnp.zeros((pad,), mask.dtype)])
     grid = (k, padded // tile)
-    y = pl.pallas_call(
+    y = runtime.pallas_call(
         functools.partial(_row_kernel, sr=semiring),
+        name="semiring_ell",
         grid=grid,
         in_specs=[
             pl.BlockSpec((tile, w), lambda b, t: (t, 0)),

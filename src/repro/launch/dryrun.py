@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_config, shapes_for
+from repro.obs.log import get_logger
 from repro.jax_compat import set_mesh
 from repro.launch.mesh import make_production_mesh, mesh_axis_sizes
 from repro.models import build_model
@@ -270,6 +271,7 @@ def dryrun_cell(arch: str, shape_name: str, shape: dict, multi_pod: bool,
     accum = GRAD_ACCUM.get(arch, 1) if kind == "train" else 1
 
     # ---- 1. the real program: compile proof + memory analysis -----------
+    # reprolint: disable=RL004 -- lower/compile is synchronous host work; nothing to fence
     t0 = time.monotonic()
     compiled = lower_program(cfg, shape, kind, mesh, quant,
                              grad_accum=accum)
@@ -324,14 +326,14 @@ def dryrun_cell(arch: str, shape_name: str, shape: dict, multi_pod: bool,
         "n_active_params": n_active,
     }
     if verbose:
-        msg = (f"[dryrun] {arch} × {shape_name} × {row['mesh']}: "
+        msg = (f"{arch} × {shape_name} × {row['mesh']}: "
                f"compile {compile_s:.1f}s, peak mem/dev "
                f"{row['memory']['peak_per_device']/2**30:.2f} GiB")
         if est:
             msg += (f", est flops/dev {est['flops']:.3e}, bytes/dev "
                     f"{est['bytes']:.3e}, coll link-bytes/dev "
                     f"{est['coll_link_bytes']:.3e}")
-        print(msg, flush=True)
+        get_logger("dryrun").info(msg)
     return row
 
 
@@ -360,8 +362,9 @@ def main(argv=None):
             else [args.shape]
         for name in names:
             if name not in shp:
-                print(f"[dryrun] skip {arch} × {name} "
-                      f"(inapplicable for family {cfg.family})")
+                get_logger("dryrun").info(
+                    f"skip {arch} × {name} "
+                    f"(inapplicable for family {cfg.family})")
                 continue
             for mp in pods:
                 try:
@@ -374,13 +377,13 @@ def main(argv=None):
         os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
         with open(args.out, "w") as f:
             json.dump({"rows": rows, "failures": failures}, f, indent=1)
-        print(f"[dryrun] wrote {len(rows)} rows to {args.out}")
+        get_logger("dryrun").info(f"wrote {len(rows)} rows to {args.out}")
     if failures:
-        print(f"[dryrun] {len(failures)} FAILURES:")
+        get_logger("dryrun").error(f"{len(failures)} FAILURES:")
         for f_ in failures:
-            print("   ", f_)
+            get_logger("dryrun").error(f"    {f_}")
         sys.exit(1)
-    print(f"[dryrun] all {len(rows)} cells compiled OK")
+    get_logger("dryrun").info(f"all {len(rows)} cells compiled OK")
 
 
 if __name__ == "__main__":

@@ -300,6 +300,7 @@ def serve_mixed(g, queries, batch: int, backend: str, hops: int = 3,
     overflow = 0
     answers = []
     batches = 0
+    # reprolint: disable=RL004 -- run_kind fences internally (block_until_ready before return)
     t_start = time.monotonic()
 
     def flush(kind):
@@ -577,7 +578,7 @@ def main(argv=None):
     if args.metrics:
         text = metrics.render()
         if args.metrics == "-":
-            print(text, end="")
+            print(text, end="")  # reprolint: disable=RL005 -- --metrics "-" selects stdout
         else:
             with open(args.metrics, "w") as f:
                 f.write(text)

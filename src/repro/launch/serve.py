@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs.log import get_logger
 from repro.configs import get_config, get_smoke_config
 from repro.models import build_model
 
@@ -67,14 +68,16 @@ def main(argv=None):
             logits, cache = decode(params, cache, {"tokens": toks})
             toks = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
             outputs.append(toks)
-        gen = jnp.concatenate(outputs, axis=1)
+        gen = jax.block_until_ready(jnp.concatenate(outputs, axis=1))
         served += args.batch
         total_tokens += int(gen.size)
-        print(f"[serve] batch done: {args.batch} requests, "
-              f"sample output ids: {np.asarray(gen[0])[:8].tolist()}")
+        get_logger("serve").info(
+            f"batch done: {args.batch} requests, "
+            f"sample output ids: {np.asarray(gen[0])[:8].tolist()}")
     dt = time.monotonic() - t0
-    print(f"[serve] {served} requests, {total_tokens} tokens in {dt:.2f}s "
-          f"({total_tokens/dt:.1f} tok/s)")
+    get_logger("serve").info(
+        f"{served} requests, {total_tokens} tokens in {dt:.2f}s "
+        f"({total_tokens/dt:.1f} tok/s)")
 
 
 if __name__ == "__main__":

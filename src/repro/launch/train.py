@@ -19,6 +19,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.obs.log import get_logger
 from repro.configs import get_config, get_smoke_config
 from repro.data import SyntheticLMDataset, make_batch_for
 from repro.ft import RestartableTrainer
@@ -119,6 +120,7 @@ def main(argv=None):
             for step in range(args.steps):
                 t0 = time.monotonic()
                 state, metrics = step_fn(state, step)
+                jax.block_until_ready(metrics)
                 history.append({"step": step,
                                 "dt": time.monotonic() - t0,
                                 **{k: float(v) for k, v
@@ -128,9 +130,10 @@ def main(argv=None):
 
     first = report["history"][0]["loss"] if report["history"] else None
     last = report["history"][-1]["loss"] if report["history"] else None
-    print(f"[train] arch={args.arch} completed={report['completed']} "
-          f"restarts={report['restarts']} steps={len(report['history'])} "
-          f"loss {first:.4f} -> {last:.4f}")
+    get_logger("train").info(
+        f"arch={args.arch} completed={report['completed']} "
+        f"restarts={report['restarts']} steps={len(report['history'])} "
+        f"loss {first:.4f} -> {last:.4f}")
     if args.log:
         with open(args.log, "w") as f:
             for row in report["history"]:

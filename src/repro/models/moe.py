@@ -194,5 +194,5 @@ def moe_ffn(params, x, cfg, use_kernel: bool = False):
     ce = jnp.zeros((e,), jnp.float32).at[flat_e.reshape(-1)].add(
         1.0 / (t * k))
     aux = {"moe_aux_loss": e * jnp.sum(me * ce),
-           "moe_drop_frac": 1.0 - jnp.sum(keep) / (t * k)}
+           "moe_drop_frac": 1.0 - jnp.sum(keep, dtype=jnp.float32) / (t * k)}
     return y2.reshape(b, s, d), aux

@@ -106,5 +106,6 @@ def deprecated(message: str, *, stacklevel: int = 2) -> None:
     """Deprecation funnel: a real ``DeprecationWarning`` (the testable
     API contract) plus a debug-level log line for ``REPRO_LOG=debug``
     sessions chasing where a legacy path still fires."""
+    # reprolint: disable=RL005 -- this IS the funnel: the one warnings.warn the rule routes to
     warnings.warn(message, DeprecationWarning, stacklevel=stacklevel + 1)
     get_logger("deprecation").debug(message)

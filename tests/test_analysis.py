@@ -1,0 +1,409 @@
+"""The analysis layer's own contract: every lint rule and every
+sanitizer must fire on a seeded bug (true positives) and stay silent on
+the shipped tree / healthy kernels (no false positives).
+
+  * reprolint: one seeded violation per rule (RL001-RL005) through
+    ``lint_source``, the suppression syntax, and the shipped-tree-green
+    invariant the CI job enforces;
+  * registry contracts: the real provider matrix passes CT001-CT006;
+    seeded registry corruptions surface the right finding; provider
+    misses raise the structured ``ProviderMissError``;
+  * sanitizers: the retrace guard passes a cached hot loop and fails a
+    shape-churning one; the Pallas memory checker faults a seeded
+    out-of-bounds tile map and a seeded write-write race, and passes
+    the real kernels bit-identically on dense and delta storage.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.experimental import pallas as pl
+
+from repro.analysis import budgets, sanitize
+from repro.analysis.contracts import PRIMITIVES, check_registry, matrix
+from repro.analysis.lint import RULES, lint_paths, lint_source
+from repro.core import backend as B
+from repro.core import graph as G
+from repro.core.primitives import (bc, bfs, connected_components, pagerank,
+                                   sssp, triangle_count)
+from repro.kernels import runtime
+from repro.kernels.advance_fused import advance_fused_kernel
+from repro.kernels.semiring_spmv import semiring_ell_kernel
+from repro.linalg import semiring as SR
+
+rng = np.random.default_rng(11)
+
+
+# ---- reprolint: seeded true positives ------------------------------------
+
+JITTED = "import jax\n@jax.jit\ndef f(x):\n"
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+def test_rl001_host_sync_in_jit():
+    src = JITTED + "    return x.sum().item()\n"
+    assert "RL001" in rules_of(lint_source(src))
+
+
+def test_rl001_int_cast_in_jit():
+    src = JITTED + "    n = int(x.sum())\n    return n\n"
+    assert "RL001" in rules_of(lint_source(src))
+
+
+def test_rl002_python_branch_on_tracer():
+    src = JITTED + "    if x.sum() > 0:\n        return x\n    return -x\n"
+    assert "RL002" in rules_of(lint_source(src))
+
+
+def test_rl002_python_loop_over_tracer():
+    # iterating an array EXPRESSION (a bare-Name iter may be a static
+    # argument, which Python control flow is legal over)
+    src = JITTED + ("    import jax.numpy as jnp\n    t = 0\n"
+                    "    for v in jnp.cumsum(x):\n        t = t + v\n"
+                    "    return t\n")
+    assert "RL002" in rules_of(lint_source(src))
+
+
+def test_rl003_unpinned_int_sum():
+    src = ("import jax.numpy as jnp\n"
+           "def f(m):\n"
+           "    k = m.astype(jnp.int32)\n"
+           "    return jnp.sum(k)\n")
+    assert "RL003" in rules_of(lint_source(src))
+
+
+def test_rl003_pinned_is_clean():
+    src = ("import jax.numpy as jnp\n"
+           "def f(m):\n"
+           "    k = m.astype(jnp.int32)\n"
+           "    return jnp.sum(k, dtype=jnp.int32)\n")
+    assert "RL003" not in rules_of(lint_source(src))
+
+
+def test_rl004_unfenced_timing():
+    src = ("import time\n"
+           "def f(step):\n"
+           "    t0 = time.monotonic()\n"
+           "    y = step()\n"
+           "    return time.monotonic() - t0\n")
+    assert "RL004" in rules_of(lint_source(src))
+
+
+def test_rl004_fenced_is_clean():
+    src = ("import time, jax\n"
+           "def f(step):\n"
+           "    t0 = time.monotonic()\n"
+           "    y = jax.block_until_ready(step())\n"
+           "    return time.monotonic() - t0\n")
+    assert "RL004" not in rules_of(lint_source(src))
+
+
+def test_rl005_bare_print_in_lib():
+    src = "def f():\n    print('hi')\n"
+    assert "RL005" in rules_of(lint_source(src, lib=True))
+    # the rule is library-scoped: scripts/benchmark CLIs are exempt
+    assert "RL005" not in rules_of(lint_source(src, lib=False))
+
+
+def test_every_rule_has_a_seeded_test():
+    # the five tests above cover exactly the declared rule set
+    assert set(RULES) == {"RL001", "RL002", "RL003", "RL004", "RL005"}
+
+
+# ---- reprolint: suppression syntax ---------------------------------------
+
+def test_suppress_same_line():
+    src = "def f():\n    print('x')  # reprolint: disable=RL005 -- CLI\n"
+    assert lint_source(src, lib=True) == []
+
+
+def test_suppress_line_above():
+    src = ("def f():\n"
+           "    # reprolint: disable=RL005 -- CLI output\n"
+           "    print('x')\n")
+    assert lint_source(src, lib=True) == []
+
+
+def test_suppress_bare_disables_all():
+    src = "def f():\n    print('x')  # reprolint: disable\n"
+    assert lint_source(src, lib=True) == []
+
+
+def test_suppress_wrong_rule_does_not_silence():
+    src = "def f():\n    print('x')  # reprolint: disable=RL001\n"
+    assert "RL005" in rules_of(lint_source(src, lib=True))
+
+
+def test_skip_file():
+    src = "# reprolint: skip-file\ndef f():\n    print('x')\n"
+    assert lint_source(src, lib=True) == []
+
+
+def test_shipped_tree_is_lint_clean():
+    # the CI gate: the library and benchmarks carry zero findings
+    assert lint_paths(["src/repro", "benchmarks"]) == []
+
+
+# ---- registry contracts --------------------------------------------------
+
+def test_real_registry_passes_contracts():
+    assert check_registry() == []
+
+
+def test_matrix_renders_every_op():
+    out = matrix()
+    for op in ("advance", "advance_filter", "spmv", "mxm"):
+        assert op in out
+    assert "(declared)" in out        # advance_filter's sharded hole
+
+
+def test_seeded_ct001_undeclared_hole(monkeypatch):
+    monkeypatch.setitem(B._REGISTRY, ("fakeop", B.XLA, B.SHARDED),
+                        lambda: None)
+    monkeypatch.setitem(B._ENCODINGS, ("fakeop", B.XLA, B.SHARDED),
+                        ("dense",))
+    found = [f for f in check_registry() if f.rule == "CT001"]
+    assert any("fakeop" in f.key for f in found)
+
+
+def test_seeded_ct002_missing_dense(monkeypatch):
+    key = ("advance", B.XLA, B.SINGLE)
+    assert key in B._ENCODINGS
+    monkeypatch.setitem(B._ENCODINGS, key, ("delta",))
+    found = [f for f in check_registry() if f.rule == "CT002"]
+    assert any("advance/xla/single" == f.key for f in found)
+
+
+def test_seeded_ct004_aliased_single_callable(monkeypatch):
+    single = B._REGISTRY[("advance", B.XLA, B.SINGLE)]
+    monkeypatch.setitem(B._REGISTRY, ("advance", B.XLA, B.TWOD), single)
+    found = [f for f in check_registry() if f.rule == "CT004"]
+    assert any(f.key == "advance/xla/2d" for f in found)
+
+
+def test_register_rejects_unknown_encoding():
+    with pytest.raises(ValueError, match="unknown storage encoding"):
+        B.register("x", B.XLA, encodings=("zstd",))
+
+
+def test_provider_miss_is_structured():
+    with pytest.raises(B.ProviderMissError) as ei:
+        B.dispatch("compact", B.XLA, B.SHARDED)
+    err = ei.value
+    assert isinstance(err, KeyError)          # the pinned public contract
+    assert (err.op, err.backend, err.placement) == \
+        ("compact", B.XLA, B.SHARDED)
+    assert err.nearest == ("compact", B.XLA, B.SINGLE)
+    msg = str(err)
+    assert "compact" in msg and "sharded" in msg and "nearest" in msg
+
+
+def test_provider_miss_suggests_closest_op_name():
+    with pytest.raises(B.ProviderMissError) as ei:
+        B.dispatch("advanse", B.XLA, B.SINGLE)
+    assert ei.value.nearest is not None
+    assert ei.value.nearest[0] == "advance"
+
+
+def test_declare_fallback_requires_reason():
+    with pytest.raises(ValueError):
+        B.declare_fallback("advance", B.SHARDED, reason="")
+    assert B.declared_fallback("advance_filter", B.SHARDED)
+    assert B.declared_fallback("advance", B.SHARDED) is None
+
+
+# ---- retrace detector ----------------------------------------------------
+
+def test_trace_probe_counts_cache_misses():
+    @jax.jit
+    def f(x):
+        sanitize.trace_probe("probe_unit_test")
+        return x + 1
+
+    f(jnp.zeros((3,)))
+    c1 = sanitize.trace_count("probe_unit_test")
+    assert c1 >= 1
+    f(jnp.ones((3,)))                     # same shape: cache hit
+    assert sanitize.trace_count("probe_unit_test") == c1
+    f(jnp.zeros((4,)))                    # new shape: one more trace
+    assert sanitize.trace_count("probe_unit_test") == c1 + 1
+
+
+def test_retrace_guard_fires_on_shape_churn():
+    @jax.jit
+    def f(x):
+        sanitize.trace_probe("seeded_retrace")
+        return x * 2
+
+    with pytest.raises(sanitize.RetraceError, match="seeded_retrace"):
+        with sanitize.retrace_guard("seeded_retrace", budget=1):
+            for k in range(3):            # 3 shapes -> 3 traces > budget 1
+                f(jnp.zeros((5 + k,)))
+
+
+def test_retrace_guard_clean_and_reports():
+    @jax.jit
+    def f(x):
+        sanitize.trace_probe("clean_retrace")
+        return x * 2
+
+    with sanitize.retrace_guard("clean_retrace", budget=1) as rep:
+        for _ in range(5):
+            f(jnp.zeros((9,)))
+    assert rep["traces"] <= 1
+
+
+def test_budget_pins():
+    # the declared contract; bc's 2 covers the ragged tail chunk of the
+    # chunked Brandes sweep
+    assert budgets.COMPILE_BUDGETS == {
+        "bfs": 1, "sssp": 1, "pagerank": 1, "cc": 1, "bc": 2, "tc": 1}
+    with pytest.raises(KeyError, match="no compile budget"):
+        budgets.budget_for("nope")
+
+
+def test_primitive_probes_wired_and_within_budget():
+    """Each primitive's jitted impl carries a probe, and one fixed
+    workload config stays inside its declared budget across repeat
+    calls — the serving-path no-recompile property."""
+    g = G.rmat(6, 4, seed=31, weighted=True)
+    calls = {
+        "bfs": lambda: bfs(g, 0),
+        "sssp": lambda: sssp(g, 0),
+        "pagerank": lambda: pagerank(g, max_iter=4),
+        "cc": lambda: connected_components(g),
+        "bc": lambda: bc(g, 0),
+        "tc": lambda: triangle_count(g),
+    }
+    assert set(calls) == set(PRIMITIVES)
+    for name, call in calls.items():
+        call()                                      # warm the cache
+        assert sanitize.trace_count(name) >= 1, name
+        with sanitize.retrace_guard(name):          # declared budget
+            call()
+            call()
+
+
+# ---- pallas memory sanitizer ---------------------------------------------
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...]
+
+
+def test_seeded_out_of_bounds_tile():
+    with sanitize.sanitizing():
+        call = runtime.pallas_call(
+            _copy_kernel, name="seeded_oob", grid=(4,),
+            # off-by-one tile map: cell 3 -> block 4 of 4 valid blocks
+            in_specs=[pl.BlockSpec((8,), lambda i: (i + 1,))],
+            out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((32,), jnp.float32),
+            interpret=True)
+        with pytest.raises(sanitize.MemoryFault, match="out-of-bounds"):
+            call(jnp.zeros((32,), jnp.float32))
+
+
+def test_seeded_write_write_race():
+    with sanitize.sanitizing():
+        call = runtime.pallas_call(
+            _copy_kernel, name="seeded_race", grid=(4,),
+            in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+            # every cell writes output block 0 — a race unless declared
+            out_specs=pl.BlockSpec((8,), lambda i: (0,)),
+            out_shape=jax.ShapeDtypeStruct((32,), jnp.float32),
+            interpret=True)
+        with pytest.raises(sanitize.MemoryFault, match="write-write race"):
+            call(jnp.zeros((32,), jnp.float32))
+
+
+def test_accumulate_declares_the_race_away():
+    with sanitize.sanitizing():
+        call = runtime.pallas_call(
+            _copy_kernel, name="declared_accum", grid=(4,),
+            in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+            out_specs=pl.BlockSpec((8,), lambda i: (0,)),
+            out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+            interpret=True, accumulate=(0,))
+        out = call(jnp.arange(32, dtype=jnp.float32))
+        assert out.shape == (8,)
+
+
+def test_rank_mismatch_faults():
+    with sanitize.sanitizing():
+        with pytest.raises(sanitize.MemoryFault, match="rank"):
+            runtime.pallas_call(
+                _copy_kernel, name="seeded_rank", grid=(2,),
+                in_specs=[pl.BlockSpec((4, 4), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((4, 4), lambda i: (i, 0)),
+                out_shape=jax.ShapeDtypeStruct((8, 8), jnp.float32),
+                interpret=True)(jnp.zeros((16,), jnp.float32))
+
+
+def test_sanitizer_off_means_no_check():
+    call = runtime.pallas_call(
+        _copy_kernel, name="oob_unsanitized", grid=(1,),
+        in_specs=[pl.BlockSpec((8,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((8,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((8,), jnp.float32),
+        interpret=True)
+    out = call(jnp.arange(8, dtype=jnp.float32))
+    assert np.array_equal(np.asarray(out), np.arange(8, dtype=np.float32))
+
+
+# ---- clean-run matrix: real kernels under the sanitizer ------------------
+
+@pytest.mark.parametrize("encoding", ["dense", "delta"])
+def test_advance_kernels_clean_under_sanitizer(encoding):
+    """The fused advance kernels' declared accumulate pattern passes the
+    checker, bit-identically to an unsanitized run, on both storage
+    encodings (fresh shapes force a trace inside the context)."""
+    kw = {} if encoding == "dense" else {"encoding": "delta"}
+    g = G.rmat(7, 5, seed=97, **kw)
+    with sanitize.sanitizing():
+        r1 = bfs(g, 0, backend="pallas")
+    r2 = bfs(g, 0, backend="pallas")
+    assert np.array_equal(np.asarray(r1.labels), np.asarray(r2.labels))
+
+
+def test_semiring_ell_clean_under_sanitizer():
+    n, w, k = 37, 5, 3
+    nbrs = jnp.asarray(rng.integers(-1, n, (n, w)), jnp.int32)
+    vals = jnp.asarray(rng.standard_normal((n, w)), jnp.float32)
+    x = jnp.asarray(rng.standard_normal((n, k)), jnp.float32)
+    mask = jnp.ones((n,), jnp.int32)
+    with sanitize.sanitizing():
+        y1 = semiring_ell_kernel(nbrs, vals, x, mask, SR.plus_times,
+                                 interpret=True)
+    y2 = semiring_ell_kernel(nbrs, vals, x, mask, SR.plus_times,
+                             interpret=True)
+    assert np.array_equal(np.asarray(y1), np.asarray(y2))
+
+
+def test_advance_fused_clean_under_sanitizer():
+    n = 41
+    src = np.arange(n - 1)
+    dst = np.arange(1, n)
+    g = G.from_edge_list(src, dst, n=n, undirected=True)
+    sizes = jnp.asarray(np.diff(np.asarray(g.row_offsets)), jnp.int32)
+    offsets = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                               jnp.cumsum(sizes, dtype=jnp.int32)])
+    base = jnp.arange(n, dtype=jnp.int32)
+    with sanitize.sanitizing():
+        out1 = advance_fused_kernel(offsets, base, g.row_offsets,
+                                    g.col_indices, 96, interpret=True)
+    out2 = advance_fused_kernel(offsets, base, g.row_offsets,
+                                g.col_indices, 96, interpret=True)
+    for a, b in zip(out1, out2):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_env_var_enables_sanitizer(monkeypatch):
+    monkeypatch.setenv(sanitize.ENV_VAR, "1")
+    assert sanitize.enabled()
+    monkeypatch.setenv(sanitize.ENV_VAR, "0")
+    assert not sanitize.enabled()
+    with sanitize.sanitizing():              # context wins over env
+        assert sanitize.enabled()
