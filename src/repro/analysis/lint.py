@@ -34,6 +34,14 @@ Rules
   RL005 bare-diagnostic       ``print(...)`` or ``warnings.warn(...)``
                               in library code (under ``src/repro``) —
                               route through ``repro.obs.log``.
+  RL006 swallowed-exception   a bare ``except:`` that never re-raises, or
+                              an ``except Exception/BaseException`` whose
+                              body is only ``pass``/``...``/``continue``.
+                              Blanket swallowing hides the exact faults
+                              the robustness layer exists to surface;
+                              legitimate boundaries (the retry/degrade
+                              ladder) declare themselves with a
+                              ``# reprolint: disable=RL006 -- why``.
 
 Suppression syntax (same line or the line above)::
 
@@ -73,6 +81,7 @@ RULES = {
     "RL003": "integer/bool accumulation without a pinned dtype",
     "RL004": "wall-clock timing without a fence in the measured region",
     "RL005": "bare print()/warnings.warn() in library code",
+    "RL006": "exception swallowed outside a declared retry boundary",
 }
 
 _SUPPRESS_RE = re.compile(
@@ -350,6 +359,8 @@ class _FileLinter:
     def _check_node(self, node, *, traced: bool, env: dict) -> None:
         if isinstance(node, ast.Call):
             self._check_call(node, traced=traced, env=env)
+        elif isinstance(node, ast.ExceptHandler):
+            self._check_except(node)
         elif isinstance(node, (ast.If, ast.While)) and traced:
             if _is_arrayish(node.test):
                 kw = "if" if isinstance(node, ast.If) else "while"
@@ -410,6 +421,51 @@ class _FileLinter:
                 self._flag(node, "RL005",
                            "warnings.warn() in library code — route "
                            "through repro.obs.log (deprecated()/logger)")
+
+    # -- RL006: swallowed exceptions --------------------------------------
+
+    @staticmethod
+    def _broad_types(handler: ast.ExceptHandler):
+        """Names among Exception/BaseException the handler catches."""
+        nodes = (handler.type.elts if isinstance(handler.type, ast.Tuple)
+                 else [handler.type])
+        out = []
+        for t in nodes:
+            d = _dotted(t)
+            leaf = d.rsplit(".", 1)[-1] if d else None
+            if leaf in ("Exception", "BaseException"):
+                out.append(leaf)
+        return out
+
+    def _check_except(self, handler: ast.ExceptHandler) -> None:
+        body_raises = any(isinstance(n, ast.Raise)
+                          for stmt in handler.body
+                          for n in ast.walk(stmt))
+        if handler.type is None:
+            # a bare except: catches KeyboardInterrupt/SystemExit too —
+            # only a re-raising cleanup handler gets a pass
+            if not body_raises:
+                self._flag(handler, "RL006",
+                           "bare `except:` swallows every exception "
+                           "(including KeyboardInterrupt) — catch a "
+                           "concrete type, re-raise, or declare the "
+                           "boundary with a disable comment")
+            return
+        broad = self._broad_types(handler)
+        if not broad or body_raises:
+            return
+        trivial = all(
+            isinstance(stmt, (ast.Pass, ast.Continue))
+            or (isinstance(stmt, ast.Expr)
+                and isinstance(stmt.value, ast.Constant)
+                and stmt.value.value is Ellipsis)
+            for stmt in handler.body)
+        if trivial:
+            self._flag(handler, "RL006",
+                       f"`except {broad[0]}` with an empty body discards "
+                       f"the failure — handle it, narrow the type, or "
+                       f"declare the retry boundary with a disable "
+                       f"comment")
 
     # -- RL004: per-scope timing analysis ---------------------------------
 

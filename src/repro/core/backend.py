@@ -380,7 +380,17 @@ def dispatch(op: str, backend: Optional[str] = None,
 def _lookup(op: str, bk: str, pl: str) -> tuple[tuple, Callable]:
     """Resolved (registry key, impl) — the key identifies the provider
     that will actually run (fallbacks included), which is what encoding
-    acceptance must be read from."""
+    acceptance must be read from.
+
+    Chaos hook: an installed ``repro.ft.inject`` plan with a
+    ``provider_miss`` clause makes this lookup fail deterministically as
+    if the table had no entry — the injection point the retry/degradation
+    ladder is tested against. With no plan installed the hook is a single
+    ``None`` check."""
+    plan = _fault_plan()
+    if plan is not None and plan.should("provider_miss", op):
+        raise ProviderMissError(op, bk, pl, nearest=_nearest_key(op, bk, pl),
+                                detail="injected by repro.ft.inject")
     _load_lazy(op, bk, pl)
     key = (op, bk, pl)
     impl = _REGISTRY.get(key)
@@ -396,6 +406,17 @@ def _lookup(op: str, bk: str, pl: str) -> tuple[tuple, Callable]:
         raise ProviderMissError(op, bk, pl,
                                 nearest=_nearest_key(op, bk, pl))
     return key, impl
+
+
+def _fault_plan():
+    """The active ``repro.ft.inject`` plan, or None. Imported lazily so
+    the registry module never pulls ``repro.ft`` (and its jax-importing
+    health probes) at import time."""
+    import sys
+    mod = sys.modules.get("repro.ft.inject")
+    if mod is None:
+        return None
+    return mod.active()
 
 
 def _nearest_key(op: str, bk: str, pl: str) -> Optional[tuple]:

@@ -49,16 +49,28 @@ def run_until(cond: Callable[[S], jax.Array],
               state: S,
               max_iter: int,
               probe: Callable[[S, S], dict] | None = None,
-              telemetry=None):
+              telemetry=None,
+              budget=None):
     """while (cond(state) && it < max_iter): state = body(state).
 
     Returns (final_state, iterations_run). ``max_iter`` bounds the loop so
     XLA sees a well-founded while; primitives pass n (or a diameter bound).
 
+    ``budget`` (a ``repro.ft.Budget``, duck-typed via ``cap_iters`` to keep
+    the core free of an ft import) clamps ``max_iter`` to the query's
+    iteration budget: the loop then returns the *partial* state at the cap
+    — callers compare ``iters`` against their convergence predicate to
+    stamp ``converged`` / ``deadline_exceeded`` flags. ``budget=None`` is
+    byte-for-byte the historical path. Wall-clock budgets are enforced
+    host-side by the serving loop, not here — a jitted while cannot
+    consult the host clock.
+
     With ``probe``/``telemetry`` set, each step additionally records
     ``probe(prev, new)`` into the ``TelemetryBuffer`` and the loop
     returns (final_state, iterations_run, filled_buffer).
     """
+    if budget is not None:
+        max_iter = budget.cap_iters(max_iter)
 
     if probe is None:
 
@@ -109,7 +121,8 @@ def run_until_any(cond: Callable[[S], jax.Array],
                   state: S,
                   max_iter: int,
                   probe: Callable[[S, S], dict] | None = None,
-                  telemetry=None):
+                  telemetry=None,
+                  budget=None):
     """Batched BSP loop: iterate while any lane of ``cond(state)`` holds.
 
     Contract:
@@ -127,7 +140,13 @@ def run_until_any(cond: Callable[[S], jax.Array],
     frozen lanes report their frozen values) and the filled buffer comes
     back as a fourth element; per-lane valid lengths are exactly the
     returned ``lane_iters``.
+
+    ``budget`` clamps ``max_iter`` exactly as in :func:`run_until`; lanes
+    still active at the cap come back partial, and ``cond(final)`` tells
+    the caller which lanes those are.
     """
+    if budget is not None:
+        max_iter = budget.cap_iters(max_iter)
 
     # the (B,) active mask rides in the carry so cond runs once per step
     if probe is None:

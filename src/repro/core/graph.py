@@ -164,7 +164,8 @@ class Graph:
                  sort_neighbors: bool = True,
                  index_dtype: Optional[str] = None,
                  encoding: str = "dense",
-                 value_dtype: str = "fp32") -> "Graph":
+                 value_dtype: str = "fp32",
+                 validate: bool = False) -> "Graph":
         """Build a Graph from host-side CSR arrays.
 
         ALL static kernel metadata — the CSC mirror and both ELL pack
@@ -184,11 +185,19 @@ class Graph:
         structural array is pinned to it — notably under
         ``jax_enable_x64``, where index arrays would otherwise drift to
         int64. ``encoding="delta"`` requires sorted neighbor lists.
+
+        ``validate=True`` runs :func:`validate_csr` on the RAW input
+        arrays — before any dtype cast can silently truncate a bad id —
+        and raises :class:`GraphValidationError` with the offending
+        row/edge named. Off by default: trusted in-process builders
+        (rmat, from_edge_list) construct valid CSR by construction.
         """
         ro = np.asarray(row_offsets, np.int64)
         n = len(ro) - 1
         plan = S.plan_for(n, index_dtype=index_dtype, encoding=encoding,
                           value_dtype=value_dtype)
+        if validate:
+            validate_csr(row_offsets, col_indices, edge_values, plan=plan)
         # delta encoding needs sorted rows; callers that pre-sort (e.g.
         # from_edge_list) pass sort_neighbors=False and encode_delta
         # itself rejects genuinely unsorted input.
@@ -266,6 +275,98 @@ class Graph:
             csc_ell_width=csc_ell,
             plan=plan,
         )
+
+
+class GraphValidationError(ValueError):
+    """Structurally invalid CSR input (see :func:`validate_csr`)."""
+
+
+def validate_csr(row_offsets, col_indices, edge_values=None, *,
+                 plan: Optional[S.StoragePlan] = None) -> tuple[int, int]:
+    """Strict structural validation of host-side CSR arrays.
+
+    Runs on the raw (pre-cast) arrays so a column id that would overflow
+    the storage plan's index dtype is caught instead of silently
+    truncated. Checks, each with the offending row/edge in the message:
+
+      * indptr is 1-D, non-empty, starts at 0, and is non-decreasing;
+      * ``indptr[-1]`` equals ``len(col_indices)`` (edge-count match);
+      * every column id is in ``[0, n)``;
+      * ids and ``n`` fit the storage plan's index dtype (when given);
+      * ``edge_values`` (when given) has one finite value per edge.
+
+    Returns ``(num_vertices, num_edges)``; raises
+    :class:`GraphValidationError` on the first violation.
+    """
+    ro = np.asarray(row_offsets, np.int64)
+    ci = np.asarray(col_indices, np.int64)
+    if ro.ndim != 1 or len(ro) < 1:
+        raise GraphValidationError(
+            f"row_offsets must be a 1-D array of n+1 offsets; got "
+            f"shape {ro.shape}")
+    n = len(ro) - 1
+    if len(ro) and ro[0] != 0:
+        raise GraphValidationError(
+            f"row_offsets[0] must be 0 (CSR rows start at the origin), "
+            f"got {int(ro[0])}")
+    diffs = np.diff(ro)
+    bad = np.nonzero(diffs < 0)[0]
+    if len(bad):
+        i = int(bad[0])
+        raise GraphValidationError(
+            f"non-monotone row_offsets at row {i}: offsets[{i}]="
+            f"{int(ro[i])} > offsets[{i + 1}]={int(ro[i + 1])}; each "
+            f"row's edge range must be non-decreasing")
+    if int(ro[-1]) != len(ci):
+        raise GraphValidationError(
+            f"indptr/edge-count mismatch: row_offsets[-1]={int(ro[-1])} "
+            f"but col_indices has {len(ci)} entries — the offsets claim "
+            f"a different edge count than the column array holds")
+    if len(ci):
+        oob = np.nonzero((ci < 0) | (ci >= n))[0]
+        if len(oob):
+            e = int(oob[0])
+            raise GraphValidationError(
+                f"column id out of range at edge {e}: {int(ci[e])} not "
+                f"in [0, {n}) — every destination must name an existing "
+                f"vertex")
+    if plan is not None:
+        info = np.iinfo(plan.np_index_dtype)
+        top = max(n - 1, int(ci.max()) if len(ci) else 0)
+        if top > info.max:
+            raise GraphValidationError(
+                f"index dtype overflow: storage plan "
+                f"index_dtype={plan.index_dtype!r} holds ids up to "
+                f"{info.max} but the graph needs {top}; pass a wider "
+                f"index_dtype (or index_dtype=None to auto-size)")
+    if edge_values is not None:
+        ev = np.asarray(edge_values, np.float64)
+        if len(ev) != len(ci):
+            raise GraphValidationError(
+                f"edge_values length {len(ev)} != edge count {len(ci)}")
+        nf = np.nonzero(~np.isfinite(ev))[0]
+        if len(nf):
+            e = int(nf[0])
+            raise GraphValidationError(
+                f"non-finite edge value at edge {e}: {ev[e]!r}; weights "
+                f"must be finite")
+    return n, len(ci)
+
+
+def validate_graph(g: "Graph") -> tuple[int, int]:
+    """Re-run structural validation on a built ``Graph`` (the CLI
+    ``--validate`` hook): pulls the device CSR back to host and applies
+    :func:`validate_csr` against the graph's own storage plan, plus the
+    CSC mirror's offsets/edge-count when one exists."""
+    ro = np.asarray(g.row_offsets)
+    cols = g.cols_np()
+    vals = (None if g.edge_values is None
+            else np.asarray(g.edge_values, np.float32))
+    shape = validate_csr(ro, cols, vals, plan=g.plan)
+    if g.has_csc:
+        validate_csr(np.asarray(g.csc_offsets), np.asarray(g.csc_cols()),
+                     plan=g.plan)
+    return shape
 
 
 def _overflow_edges(offsets: np.ndarray, seg: np.ndarray,

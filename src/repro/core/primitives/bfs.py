@@ -69,15 +69,20 @@ class BFSResult(NamedTuple):
     pull_iters: jax.Array
     edges_visited: jax.Array
     overflow: jax.Array
+    # (B,) bool: lane's frontier drained (False = an iteration budget cut
+    # the traversal short and labels are partial). Defaults keep older
+    # construction sites valid.
+    converged: jax.Array = None
 
 
 @functools.partial(jax.jit, static_argnames=(
     "direction", "idempotence", "strategy", "record_preds", "backend",
-    "tiered", "telemetry"))
+    "tiered", "telemetry", "max_iters"))
 def _bfs_impl(graph: Graph, srcs: jax.Array, do_a: float, do_b: float,
               direction: bool, idempotence: bool, strategy: str,
               record_preds: bool, backend: str,
-              tiered: bool = True, telemetry: bool = False):
+              tiered: bool = True, telemetry: bool = False,
+              max_iters: Optional[int] = None):
     sanitize.trace_probe("bfs")   # compile counter: body runs only on a jit cache miss
     n, m = graph.num_vertices, graph.num_edges
     b = srcs.shape[0]
@@ -249,6 +254,9 @@ def _bfs_impl(graph: Graph, srcs: jax.Array, do_a: float, do_b: float,
                                     pull_step, mixed_step, s2),
             st)
 
+    # a query budget just lowers the loop guard — the loop stays
+    # jit-clean and lanes still running at the cap come back partial
+    mi = n + 1 if max_iters is None else min(n + 1, max_iters)
     buf = None
     if telemetry:
         # read-only probe: per-lane frontier size / direction / overflow
@@ -272,17 +280,18 @@ def _bfs_impl(graph: Graph, srcs: jax.Array, do_a: float, do_b: float,
             "direction": ((b,), jnp.int32),
             "overflow": ((b,), jnp.int32)})
         final, lane_iters, _, buf = run_until_any(
-            lambda st: st.n_f > 0, body, state, max_iter=n + 1,
+            lambda st: st.n_f > 0, body, state, max_iter=mi,
             probe=probe, telemetry=buf0)
     else:
         final, lane_iters, _ = run_until_any(lambda st: st.n_f > 0, body,
-                                             state, max_iter=n + 1)
+                                             state, max_iter=mi)
     edges = jnp.sum(jnp.where(final.labels >= 0,
                               graph.degrees[None, :], 0),
                     axis=1).astype(jnp.int32)
     result = BFSResult(labels=final.labels, preds=final.preds,
                        iterations=lane_iters, pull_iters=final.pull_iters,
-                       edges_visited=edges, overflow=final.overflow)
+                       edges_visited=edges, overflow=final.overflow,
+                       converged=final.n_f == 0)
     return (result, buf) if telemetry else result
 
 
@@ -291,7 +300,8 @@ def bfs_batch(graph: Graph, srcs, *, direction: bool = True,
               idempotence: bool = True, strategy: str = "LB",
               record_preds: bool = True,
               backend: Optional[str] = None,
-              tiered: bool = True, telemetry: bool = False):
+              tiered: bool = True, telemetry: bool = False,
+              budget=None):
     """Multi-source BFS: one jitted batched BSP loop over ``srcs``.
 
     Every ``BFSResult`` field carries a leading batch axis; lane i is
@@ -307,13 +317,19 @@ def bfs_batch(graph: Graph, srcs, *, direction: bool = True,
     ``telemetry=True`` returns ``(BFSResult, TelemetryBuffer)`` — the
     buffer holds per-iteration frontier size / tier / direction /
     overflow columns (``obs.telemetry.trim`` converts to host arrays);
-    the result itself is bit-identical to ``telemetry=False``."""
+    the result itself is bit-identical to ``telemetry=False``.
+
+    ``budget`` (``repro.ft.Budget``) caps BSP iterations per query: lanes
+    cut short come back with partial labels and ``converged=False``; the
+    wall-clock half of the budget is the serving loop's job. ``budget=None``
+    (or an unlimited budget) is bit-identical to the historical path."""
     if direction and not graph.has_csc:
         direction = False
     srcs = jnp.asarray(srcs, dtype=jnp.int32).reshape(-1)
+    max_iters = None if budget is None else budget.max_iters
     return _bfs_impl(graph, srcs, do_a, do_b, direction, idempotence,
                      strategy, record_preds, B.resolve(backend),
-                     tiered, telemetry)
+                     tiered, telemetry, max_iters)
 
 
 def bfs(graph: Graph, src: int, *, direction: bool = True,

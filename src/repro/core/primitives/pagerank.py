@@ -41,6 +41,9 @@ class PRState(NamedTuple):
 class PRResult(NamedTuple):
     rank: jax.Array
     iterations: jax.Array
+    # () bool: ranks settled below tol OR the *requested* sweep count ran
+    # to completion; False only when a query budget cut sweeps short
+    converged: jax.Array = None
 
 
 def _fixed_tree_sum(x: jax.Array) -> jax.Array:
@@ -62,13 +65,15 @@ def _fixed_tree_sum(x: jax.Array) -> jax.Array:
 
 @functools.partial(jax.jit, static_argnames=("max_iter", "backend",
                                              "ell_width", "placement",
-                                             "precision", "telemetry"))
+                                             "precision", "telemetry",
+                                             "full_iter"))
 def _pagerank_impl(graph: Graph, inv_deg: jax.Array, damping: jax.Array,
                    tol: jax.Array, max_iter: int, backend: str,
                    ell_width: Optional[int],
                    placement: str = B.SINGLE,
                    precision: str = "fp32",
-                   telemetry: bool = False):
+                   telemetry: bool = False,
+                   full_iter: Optional[int] = None):
     sanitize.trace_probe("pagerank")   # compile counter: body runs only on a jit cache miss
     n = graph.num_vertices
     # PageRank's sweep is dense — every row contributes every iteration —
@@ -120,6 +125,14 @@ def _pagerank_impl(graph: Graph, inv_deg: jax.Array, damping: jax.Array,
     state = PRState(rank=jnp.full((n,), 1.0 / n, jnp.float32),
                     active=jnp.ones((n,), bool),
                     n_active=jnp.int32(n), iters=jnp.int32(0))
+    # the caller's *requested* sweep count: "converged" means ranks
+    # settled OR the requested sweeps all ran — only a budget cutting
+    # max_iter below full_iter can make it False
+    fi = max_iter if full_iter is None else full_iter
+
+    def _conv(final, iters):
+        return (final.n_active == 0) | (iters >= fi)
+
     if telemetry:
         # per-sweep active (not-yet-converged) vertex count: the dense
         # analogue of a frontier trajectory — with tol=0 it stays n
@@ -131,10 +144,12 @@ def _pagerank_impl(graph: Graph, inv_deg: jax.Array, damping: jax.Array,
             lambda st: st.n_active > 0, body, state, max_iter=max_iter,
             probe=lambda prev, new: {"active": new.n_active},
             telemetry=buf0)
-        return PRResult(rank=final.rank, iterations=iters), buf
+        return PRResult(rank=final.rank, iterations=iters,
+                        converged=_conv(final, iters)), buf
     final, iters = run_until(lambda st: st.n_active > 0, body, state,
                              max_iter=max_iter)
-    return PRResult(rank=final.rank, iterations=iters)
+    return PRResult(rank=final.rank, iterations=iters,
+                    converged=_conv(final, iters))
 
 
 def pagerank(graph, *, damping: float = 0.85, tol: float = 0.0,
@@ -142,14 +157,20 @@ def pagerank(graph, *, damping: float = 0.85, tol: float = 0.0,
              use_kernel: Optional[bool] = None,
              ell_width: Optional[int] = None,
              placement: Optional[str] = None,
-             precision: str = "fp32", telemetry: bool = False):
+             precision: str = "fp32", telemetry: bool = False,
+             budget=None):
     """``graph`` may be a ``Graph`` or a ``ShardedGraph``
     (``partition_1d(...).shard(mesh)``) — a sharded graph routes the
     SpMV sweep through the mesh providers and the SAME impl otherwise,
     so ranks bit-match across placements. ``precision="bf16"`` runs the
     sweep's ⊗ in bfloat16 (fp32 accumulate) — ranks then agree with the
     fp32 run to ~1e-2 absolute on a unit-mass vector (the documented
-    parity tolerance; see DESIGN.md §8), not bit-exactly."""
+    parity tolerance; see DESIGN.md §8), not bit-exactly.
+
+    ``budget`` (``repro.ft.Budget``) caps the sweep count below
+    ``max_iter``: a cut-short run returns the partial ranks with
+    ``converged=False``; without a budget the result is bit-identical to
+    the historical path."""
     assert graph.has_csc, "pagerank uses the CSC transpose"
     bk = B.resolve(backend, use_kernel)
     pl, ctx = B.resolve_graph_placement(graph, placement)
@@ -163,12 +184,13 @@ def pagerank(graph, *, damping: float = 0.85, tol: float = 0.0,
             "pagerank on the pallas backend needs Graph.csc_ell_width; "
             "build the Graph via Graph.from_csr / from_edge_list (the "
             "width is computed once at build time) or pass ell_width=")
+    effective = max_iter if budget is None else budget.cap_iters(max_iter)
     with ctx:
         return _pagerank_impl(
             graph, _inv_out_degrees(graph), jnp.float32(damping),
-            jnp.float32(tol), max_iter, bk,
+            jnp.float32(tol), effective, bk,
             None if ell_width is None else int(ell_width), pl,
-            precision, telemetry)
+            precision, telemetry, full_iter=max_iter)
 
 
 def _inv_out_degrees(graph) -> jax.Array:

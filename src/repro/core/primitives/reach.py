@@ -34,6 +34,8 @@ class ReachResult(NamedTuple):
     reached: jax.Array    # (B, n) bool — within k hops of srcs[b]
     counts: jax.Array     # (B,) int32 reachable-set sizes
     hops: jax.Array       # () int32 the k that was run
+    # () bool: all requested hops ran; False only when a budget clamps k
+    converged: jax.Array = None
 
 
 @functools.partial(jax.jit, static_argnames=("k", "backend", "ell_width",
@@ -61,16 +63,21 @@ def _reach_impl(graph: Graph, srcs: jax.Array, k: int, backend: str,
     reached = r.T > 0
     return ReachResult(reached=reached,
                        counts=jnp.sum(reached, axis=1).astype(jnp.int32),
-                       hops=jnp.int32(k))
+                       hops=jnp.int32(k),
+                       converged=jnp.bool_(True))
 
 
 def reach_batch(graph, srcs, k: int = 3, *,
                 backend: Optional[str] = None,
                 use_kernel: Optional[bool] = None,
-                placement: Optional[str] = None) -> ReachResult:
+                placement: Optional[str] = None,
+                budget=None) -> ReachResult:
     """B-source k-hop reachability as ONE jitted or-and program.
     ``graph`` may be a ``ShardedGraph`` — each hop's CSC SpMM then runs
-    through the sharded registry provider (bit-matching results)."""
+    through the sharded registry provider (bit-matching results).
+    ``budget`` clamps ``k`` to ``budget.max_iters``: a clamped run
+    answers the smaller neighborhood (``hops`` records what actually ran,
+    ``converged=False``)."""
     assert graph.has_csc, "reach uses the CSC transpose (pull sweeps)"
     bk = B.resolve(backend, use_kernel)
     pl, ctx = B.resolve_graph_placement(graph, placement)
@@ -80,10 +87,14 @@ def reach_batch(graph, srcs, k: int = 3, *,
             "reach on the pallas backend needs Graph.csc_ell_width; "
             "build the Graph via Graph.from_csr / from_edge_list")
     srcs = jnp.asarray(srcs, jnp.int32).reshape(-1)
+    k_eff = int(k) if budget is None else budget.cap_iters(int(k))
     with ctx:
-        return _reach_impl(graph, srcs, int(k), bk,
-                           None if ell_width is None else int(ell_width),
-                           pl)
+        res = _reach_impl(graph, srcs, k_eff, bk,
+                          None if ell_width is None else int(ell_width),
+                          pl)
+    if k_eff < int(k):
+        res = res._replace(converged=jnp.bool_(False))
+    return res
 
 
 def reach(graph: Graph, src: int, k: int = 3, *,

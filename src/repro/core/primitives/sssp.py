@@ -51,15 +51,19 @@ class SSSPResult(NamedTuple):
     preds: jax.Array
     iterations: jax.Array
     relaxations: jax.Array
+    # (B,) bool: both piles drained (False = iteration budget cut the
+    # relaxation short and dist is an upper bound, not the fixpoint)
+    converged: jax.Array = None
 
 
 @functools.partial(jax.jit, static_argnames=("use_delta", "strategy",
                                              "backend", "tiered",
-                                             "telemetry"))
+                                             "telemetry", "max_iters"))
 def _sssp_impl(graph: Graph, srcs: jax.Array, delta: jax.Array,
                use_delta: bool, strategy: str,
                backend: str, tiered: bool = True,
-               telemetry: bool = False):
+               telemetry: bool = False,
+               max_iters: Optional[int] = None):
     sanitize.trace_probe("sssp")   # compile counter: body runs only on a jit cache miss
     n, m = graph.num_vertices, graph.num_edges
     b = srcs.shape[0]
@@ -168,6 +172,8 @@ def _sssp_impl(graph: Graph, srcs: jax.Array, delta: jax.Array,
     def cond(st: SSSPState):
         return (st.n_near > 0) | jnp.any(st.far, axis=1)
 
+    # query budget: lower the guard, keep the loop jit-clean
+    mi = 4 * n + 8 if max_iters is None else min(4 * n + 8, max_iters)
     buf = None
     if telemetry:
         # per-step near-pile size, bucket level, relaxation delta, and
@@ -191,14 +197,15 @@ def _sssp_impl(graph: Graph, srcs: jax.Array, delta: jax.Array,
             "bucket": ((b,), jnp.int32),
             "relaxations": ((b,), jnp.int32)})
         final, lane_iters, _, buf = run_until_any(
-            cond, body, state, max_iter=4 * n + 8,
+            cond, body, state, max_iter=mi,
             probe=probe, telemetry=buf0)
     else:
         final, lane_iters, _ = run_until_any(cond, body, state,
-                                             max_iter=4 * n + 8)
+                                             max_iter=mi)
     result = SSSPResult(dist=final.dist, preds=final.preds,
                         iterations=lane_iters,
-                        relaxations=final.relaxations)
+                        relaxations=final.relaxations,
+                        converged=~cond(final))
     return (result, buf) if telemetry else result
 
 
@@ -212,21 +219,26 @@ def _auto_delta(graph: Graph) -> float:
 def sssp_batch(graph: Graph, srcs, *, delta: Optional[float] = None,
                strategy: str = "LB",
                backend: Optional[str] = None,
-               tiered: bool = True, telemetry: bool = False):
+               tiered: bool = True, telemetry: bool = False,
+               budget=None):
     """Multi-source delta-stepping: one jitted batched program over
     ``srcs``; lane i is bit-identical to ``sssp(graph, srcs[i])``.
     ``tiered=False`` pins relax sweeps to the worst-case capacity
     (bit-identical results; the tier-parity test hook).
     ``telemetry=True`` returns ``(SSSPResult, TelemetryBuffer)`` with
     per-iteration near-pile size / tier / bucket / relaxation columns;
-    the result is bit-identical to ``telemetry=False``."""
+    the result is bit-identical to ``telemetry=False``.
+    ``budget`` caps BSP iterations per query (``converged=False`` on lanes
+    cut short — their ``dist`` is an upper bound, not the fixpoint)."""
     assert graph.weighted, "SSSP needs edge weights"
     if delta is None:
         delta = _auto_delta(graph)
     use_delta = bool(jnp.isfinite(delta)) and delta > 0
     srcs = jnp.asarray(srcs, dtype=jnp.int32).reshape(-1)
+    max_iters = None if budget is None else budget.max_iters
     return _sssp_impl(graph, srcs, jnp.float32(delta), use_delta,
-                      strategy, B.resolve(backend), tiered, telemetry)
+                      strategy, B.resolve(backend), tiered, telemetry,
+                      max_iters)
 
 
 def sssp(graph: Graph, src: int, *, delta: Optional[float] = None,

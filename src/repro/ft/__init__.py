@@ -1,4 +1,19 @@
+from .admission import AdmissionPolicy, UNBOUNDED
+from .budget import Budget, UNLIMITED
+from .degrade import Rung, engage, ladder, rung_for_attempt
 from .elastic import RestartableTrainer
 from .health import StepWatchdog, check_devices
+from .inject import (FaultPlan, FaultSpecError, ShardLossError, active,
+                     faults, install_from_env)
+from .retry import RetryPolicy, backoff_ms, with_retry
 
-__all__ = ["RestartableTrainer", "StepWatchdog", "check_devices"]
+__all__ = [
+    "AdmissionPolicy", "UNBOUNDED",
+    "Budget", "UNLIMITED",
+    "Rung", "engage", "ladder", "rung_for_attempt",
+    "RestartableTrainer",
+    "StepWatchdog", "check_devices",
+    "FaultPlan", "FaultSpecError", "ShardLossError",
+    "active", "faults", "install_from_env",
+    "RetryPolicy", "backoff_ms", "with_retry",
+]

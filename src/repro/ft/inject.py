@@ -1,0 +1,160 @@
+"""Deterministic, seeded fault injection for the graph engine.
+
+This is the chaos rig the robustness layer is tested against.  A
+:class:`FaultPlan` is parsed from a compact spec string and installed either
+programmatically (the :func:`faults` context manager) or from the
+``REPRO_FAULTS`` environment variable (picked up once per process by
+:func:`install_from_env`, which ``graph_serve`` calls at startup).
+
+Spec syntax — semicolon-separated clauses, each ``kind[:site]@prob``::
+
+    provider_miss@0.5;nan@0.25;straggler:flush@0.1;shard_loss@0.2
+
+Fault kinds:
+
+``provider_miss``
+    :func:`repro.core.backend._lookup` raises ``ProviderMissError`` as if the
+    provider table had no entry — exercises the retry + degradation ladder.
+``nan``
+    Poisons kernel output fields with NaN after a batch completes —
+    exercises the serve-side NaN/Inf guardrail.
+``straggler``
+    Adds an artificial host-side delay to a batch flush — exercises the
+    :class:`repro.ft.health.StepWatchdog` straggler gauge.
+``shard_loss``
+    Raises :class:`ShardLossError` from the sharded runner as if a shard's
+    device dropped out — exercises the 2d→sharded→single placement ladder.
+
+Determinism: each (kind, site) pair draws from its own counter-indexed
+stream seeded by ``(seed, kind, site)``, so a given call site sees the same
+fault schedule regardless of what other sites do, and two runs with the
+same seed inject identical faults.  When no plan is installed every hook is
+a single ``None`` check — bit-parity of the healthy path is preserved by
+construction.
+"""
+from __future__ import annotations
+
+import contextlib
+import hashlib
+import os
+from typing import Dict, Optional, Tuple
+
+KINDS = ("provider_miss", "nan", "straggler", "shard_loss")
+
+_PLAN: Optional["FaultPlan"] = None
+_ENV_DONE = False
+
+
+class ShardLossError(RuntimeError):
+    """A graph shard's device dropped out mid-batch (injected or real)."""
+
+
+class FaultSpecError(ValueError):
+    """A ``REPRO_FAULTS`` spec string could not be parsed."""
+
+
+def _parse(spec: str) -> Dict[str, Tuple[str, float]]:
+    plan: Dict[str, Tuple[str, float]] = {}
+    for clause in spec.split(";"):
+        clause = clause.strip()
+        if not clause:
+            continue
+        head, sep, prob_s = clause.partition("@")
+        if not sep:
+            raise FaultSpecError(
+                f"fault clause {clause!r} has no '@prob' part "
+                f"(expected 'kind[:site]@prob')")
+        kind, _, site = head.partition(":")
+        kind = kind.strip()
+        if kind not in KINDS:
+            raise FaultSpecError(
+                f"unknown fault kind {kind!r}; known kinds: {', '.join(KINDS)}")
+        try:
+            prob = float(prob_s)
+        except ValueError:
+            raise FaultSpecError(f"fault clause {clause!r}: bad probability "
+                                 f"{prob_s!r}") from None
+        if not 0.0 <= prob <= 1.0:
+            raise FaultSpecError(
+                f"fault clause {clause!r}: probability must be in [0, 1]")
+        plan[kind] = (site.strip(), prob)
+    return plan
+
+
+def _draw(seed: int, kind: str, site: str, n: int) -> float:
+    """n-th uniform in [0, 1) of the (seed, kind, site) stream."""
+    h = hashlib.sha256(f"{seed}:{kind}:{site}:{n}".encode()).digest()
+    return int.from_bytes(h[:8], "big") / float(1 << 64)
+
+
+class FaultPlan:
+    """Parsed fault schedule with per-site deterministic draw counters."""
+
+    def __init__(self, spec: str, seed: int = 0):
+        self.spec = spec
+        self.seed = int(seed)
+        self.clauses = _parse(spec)
+        self._counters: Dict[Tuple[str, str], int] = {}
+        self.fired: Dict[str, int] = {k: 0 for k in self.clauses}
+
+    def should(self, kind: str, site: str = "") -> bool:
+        """Deterministically decide whether this call site faults now."""
+        clause = self.clauses.get(kind)
+        if clause is None:
+            return False
+        want_site, prob = clause
+        if want_site and want_site != site:
+            return False
+        key = (kind, site)
+        n = self._counters.get(key, 0)
+        self._counters[key] = n + 1
+        hit = _draw(self.seed, kind, site, n) < prob
+        if hit:
+            self.fired[kind] += 1
+        return hit
+
+    def __repr__(self):
+        return f"FaultPlan({self.spec!r}, seed={self.seed})"
+
+
+def active() -> Optional[FaultPlan]:
+    """The installed plan, or None (the fast path) when chaos is off."""
+    return _PLAN
+
+
+@contextlib.contextmanager
+def faults(spec: str, seed: int = 0):
+    """Install a seeded fault plan for the duration of the block."""
+    global _PLAN
+    prev = _PLAN
+    _PLAN = FaultPlan(spec, seed)
+    try:
+        yield _PLAN
+    finally:
+        _PLAN = prev
+
+
+def install_from_env() -> Optional[FaultPlan]:
+    """Install a process-wide plan from ``REPRO_FAULTS`` (idempotent).
+
+    ``REPRO_FAULTS_SEED`` selects the stream seed (default 0).  Returns the
+    installed plan, the already-installed one, or None when the variable is
+    unset.
+    """
+    global _PLAN, _ENV_DONE
+    if _ENV_DONE:
+        return _PLAN
+    _ENV_DONE = True
+    spec = os.environ.get("REPRO_FAULTS", "").strip()
+    if not spec:
+        return _PLAN
+    seed = int(os.environ.get("REPRO_FAULTS_SEED", "0"))
+    _PLAN = FaultPlan(spec, seed)
+    return _PLAN
+
+
+def _reset_for_tests():
+    """Clear installed plan and env latch (test helper)."""
+    global _PLAN, _ENV_DONE
+    _PLAN = None
+    _ENV_DONE = False

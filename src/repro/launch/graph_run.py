@@ -254,6 +254,12 @@ def main(argv=None):
         g = make_graph(args.graph, args.scale, args.edge_factor,
                        args.seed)
         jax.block_until_ready(g.row_offsets)
+    if args.validate:
+        # structural validation first: a malformed CSR fails loudly with
+        # the offending row/edge named, instead of as a wrong oracle
+        from repro.core.graph import validate_graph
+        validate_graph(g)
+        log.info("structural validation: CSR/CSC clean")
     deg = np.diff(np.asarray(g.row_offsets))
     src = args.src if args.src is not None else int(np.argmax(deg))
     sources = ([int(s) for s in args.sources.split(",")]

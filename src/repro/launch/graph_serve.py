@@ -59,18 +59,40 @@ import jax
 import numpy as np
 
 from repro import obs
+from repro import ft
 from repro.core import backend as B
 from repro.core import ref as R
 from repro.core.storage import resident_bytes
 from repro.core.primitives import bfs_batch, pagerank, reach_batch, \
     sssp_batch
+from repro.ft import inject
 from repro.obs.metrics import Metrics, latency_summary
 
 from .graph_run import make_graph
 
 KINDS = ("bfs", "sssp", "pagerank", "reach")
 
+# query terminal statuses (the per-query contract of serve_mixed) and
+# the metrics counter each one lands in — the reconciliation invariant
+# the chaos suite asserts: counter sums == status counts in the results
+STATUSES = ("ok", "degraded", "deadline_exceeded", "shed", "error")
+_STATUS_COUNTER = {
+    "ok": "queries_ok_total",
+    "degraded": "queries_degraded_total",
+    "deadline_exceeded": "queries_deadline_total",
+    "shed": "queries_shed_total",
+    "error": "queries_error_total",
+}
+
+# injected-straggler stall: long enough that the watchdog's robust-median
+# multiple flags it on any realistic batch cadence
+_STRAGGLER_SLEEP_S = 0.2
+
 log = obs.get_logger("graph_serve")
+
+
+class PoisonedResultError(RuntimeError):
+    """A kernel output failed the NaN/Inf guardrail probe."""
 
 
 def serve(g, primitive: str, sources: np.ndarray, batch: int,
@@ -168,30 +190,33 @@ def _count_totals(m: Metrics, batches: int, overflow: int) -> None:
     m.counter("cache_misses_total", 0, help="answer-cache misses")
 
 
-def _run_kind(g, kind: str, srcs: np.ndarray, backend: str, hops: int):
-    """Execute one flushed batch of ``kind``; returns the ready field
-    plus per-lane BFS overflow counts (zeros for other kinds — callers
-    trim the ragged-tail padding lanes before summing)."""
+def _run_kind(g, kind: str, srcs: np.ndarray, backend: str, hops: int,
+              budget=None):
+    """Execute one flushed batch of ``kind``; returns the ready field,
+    per-lane BFS overflow counts (zeros for other kinds — callers trim
+    the ragged-tail padding lanes before summing), and the primitive's
+    ``converged`` flags (per-lane or scalar; lanes cut short by an
+    iteration budget report False and carry partial answers)."""
     zeros = np.zeros(len(srcs), np.int64)
     if kind == "bfs":
-        r = bfs_batch(g, srcs, backend=backend)
+        r = bfs_batch(g, srcs, backend=backend, budget=budget)
         jax.block_until_ready(r.labels)
-        return r.labels, np.asarray(r.overflow)
+        return r.labels, np.asarray(r.overflow), np.asarray(r.converged)
     if kind == "sssp":
-        r = sssp_batch(g, srcs, backend=backend)
+        r = sssp_batch(g, srcs, backend=backend, budget=budget)
         jax.block_until_ready(r.dist)
-        return r.dist, zeros
+        return r.dist, zeros, np.asarray(r.converged)
     if kind == "reach":
-        r = reach_batch(g, srcs, hops, backend=backend)
+        r = reach_batch(g, srcs, hops, backend=backend, budget=budget)
         jax.block_until_ready(r.reached)
-        return r.reached, zeros
+        return r.reached, zeros, np.asarray(r.converged)
     if kind == "pagerank":
         # a global analytics query: one run answers every slot of the
         # batch (sources are ignored; the slot discipline still bounds
         # how many queries ride one execution)
-        r = pagerank(g, backend=backend)
+        r = pagerank(g, backend=backend, budget=budget)
         jax.block_until_ready(r.rank)
-        return r.rank, zeros
+        return r.rank, zeros, np.asarray(r.converged)
     raise ValueError(kind)
 
 
@@ -265,9 +290,47 @@ def _validate_kind(g, kind: str, srcs, field, hops: int) -> int:
     return fails
 
 
+def _norm_run(out):
+    """Normalize a runner return to (field, overflow, converged). The
+    runner contract is 2-tuple (field, overflow); the default in-process
+    runner adds the primitives' ``converged`` flags as a third element,
+    and runners that don't surface convergence report None (= assume
+    converged — they ran to completion by construction)."""
+    if len(out) == 3:
+        return out
+    field, ovf = out
+    return field, ovf, None
+
+
+def _guardrail(kind: str, field: np.ndarray) -> None:
+    """NaN/Inf guardrail: reject poisoned float outputs before they ship.
+
+    Reads the already-host-side result array — a pure probe, so healthy
+    results stay bit-identical. Per-kind semantics: sssp distances are
+    legitimately +inf on unreachable vertices (NaN is the poison there);
+    pagerank ranks must be finite; bfs/reach fields are integral and
+    can't carry float poison."""
+    if field.dtype.kind != "f":
+        return
+    if kind == "sssp":
+        bad = np.isnan(field)
+    else:
+        bad = ~np.isfinite(field)
+    if bad.any():
+        frac = float(bad.mean())
+        raise PoisonedResultError(
+            f"{kind} output failed the NaN/Inf guardrail "
+            f"({frac:.1%} of entries non-finite)")
+
+
 def serve_mixed(g, queries, batch: int, backend: str, hops: int = 3,
                 validate: bool = False, runner=None,
-                metrics: Metrics | None = None) -> dict:
+                metrics: Metrics | None = None,
+                budget: ft.Budget | None = None,
+                admission: ft.AdmissionPolicy | None = None,
+                retry: ft.RetryPolicy | None = None,
+                placement: str = "single",
+                watchdog=None) -> dict:
     """Serve a mixed-kind query stream through per-kind fixed batch slots.
 
     ``queries`` is a sequence of ``(kind, source)`` pairs, kinds drawn
@@ -287,50 +350,260 @@ def serve_mixed(g, queries, batch: int, backend: str, hops: int = 3,
     single-device ``_run_kind``. ``metrics`` (an ``obs.metrics.Metrics``)
     collects per-kind latency histograms, queue-depth / batch-occupancy
     gauges, and counters for the ``--metrics`` Prometheus dump.
+
+    Request-lifecycle hardening (the robustness layer):
+
+      * every query ends in exactly one terminal status — ``ok``,
+        ``degraded``, ``deadline_exceeded``, ``shed`` or ``error`` —
+        returned per-query under ``stats["queries"]`` and counted in the
+        matching metrics counter; malformed input (unknown kind,
+        out-of-range source) becomes a per-query ``error``, never an
+        exception out of the stream;
+      * ``budget`` bounds each query: ``max_iters`` rides into the
+        primitives (lanes cut short → ``deadline_exceeded`` with partial
+        answers), ``wall_ms`` is checked host-side at flush boundaries
+        (already-expired queries are not dispatched; late completions
+        are stamped ``deadline_exceeded``);
+      * ``admission`` bounds the slot queues — arrivals over the cap are
+        shed with a structured rejection;
+      * batch dispatch runs under ``retry`` (exponential backoff,
+        deterministic jitter) escalating through the ``repro.ft.degrade``
+        ladder (pallas→xla, placement→single, reach reduced-hop); a
+        downgraded batch's queries are stamped ``degraded`` and every
+        rung change is declared + logged;
+      * a NaN/Inf guardrail probes each batch's host-side output and
+        aborts a poisoned batch cleanly (retryable; terminal ``error``
+        if the ladder runs dry);
+      * a :class:`repro.ft.StepWatchdog` times every flush — the
+        robust-median straggler multiple lands in ``--metrics``.
     """
     n_q = len(queries)
     if n_q == 0:
         raise ValueError("empty query stream (requests must be > 0)")
-    run_kind = runner if runner is not None else \
-        (lambda kind, srcs, bk, h: _run_kind(g, kind, srcs, bk, h))
+    retry = retry if retry is not None else ft.RetryPolicy()
+    wd = watchdog if watchdog is not None else ft.StepWatchdog()
+    plan = inject.active()
+    # a custom runner may not need the graph at all (stub/mesh drivers
+    # pass g=None); range hardening then has no bound to check against
+    num_v = None if g is None else g.num_vertices
+    results: list = [None] * n_q
     lat_ms = {k: [] for k in KINDS}
-    pending: dict = {k: [] for k in KINDS}
-    enqueue: dict = {k: [] for k in KINDS}   # per-query enqueue stamps
+    pending: dict = {k: [] for k in KINDS}   # (qid, src, t_enq, deadline)
+    status_counts = {s: 0 for s in STATUSES}
     failures = 0
     overflow = 0
+    retried = 0
     answers = []
     batches = 0
+    if metrics is not None:
+        # declare every lifecycle counter up front so the reconciliation
+        # invariant (counters == per-query statuses) holds even for
+        # fault classes that never fire in this run
+        for s in STATUSES:
+            metrics.counter(_STATUS_COUNTER[s], 0,
+                            help=f"queries finished with status={s}")
+        metrics.counter("queries_retried_total", 0,
+                        help="queries whose batch needed >=1 retry")
     # reprolint: disable=RL004 -- run_kind fences internally (block_until_ready before return)
     t_start = time.monotonic()
 
+    def finish(qid, kind, src, status, t_enq, t_done=None, reason=None,
+               attempts=1, degraded_to=None):
+        t_done = time.monotonic() if t_done is None else t_done
+        rec = {"id": qid, "kind": kind, "source": src, "status": status,
+               "lat_ms": round((t_done - t_enq) * 1e3, 3),
+               "attempts": attempts}
+        if reason:
+            rec["reason"] = reason
+        if degraded_to:
+            rec["degraded_to"] = degraded_to
+        results[qid] = rec
+        status_counts[status] += 1
+        if metrics is not None:
+            metrics.counter(_STATUS_COUNTER[status], 1,
+                            help=f"queries finished with status={status}",
+                            kind=str(kind))
+        return rec
+
+    def dispatch(kind, srcs):
+        """One batch through retry + the degradation ladder. Returns
+        (field, ovf, conv, attempts, rung, error): on success ``error``
+        is None; when the ladder runs dry ``field`` is None and
+        ``error`` carries the terminal exception."""
+        rungs = [r for r in ft.ladder(kind, backend, placement,
+                                      hops=hops if kind == "reach"
+                                      else None)
+                 # rungs we can realize here: the runner's own placement,
+                 # or the in-process single-device fallback
+                 if r.placement in (placement, "single")]
+        run_default = lambda k, s, bk2, h: _run_kind(g, k, s, bk2, h,
+                                                     budget)
+        run_kind = runner if runner is not None else run_default
+        state = {"attempts": 1}
+
+        def attempt(a):
+            state["attempts"] = a + 1
+            rung = ft.rung_for_attempt(rungs, a)
+            state["rung"] = rung
+            if rung.reason:
+                ft.engage(kind, rung)
+            if plan is not None and plan.should("provider_miss", kind):
+                raise B.ProviderMissError(
+                    kind, rung.backend, rung.placement,
+                    detail="injected by repro.ft.inject")
+            if (placement != "single" and rung.placement == placement
+                    and plan is not None
+                    and plan.should("shard_loss", kind)):
+                raise inject.ShardLossError(
+                    f"injected shard loss during {kind} flush")
+            h = rung.hops if rung.hops is not None else hops
+            if rung.placement != placement:
+                out = run_default(kind, srcs, rung.backend, h)
+            else:
+                out = run_kind(kind, srcs, rung.backend, h)
+            field, ovf, conv = _norm_run(out)
+            field = np.asarray(field)
+            if (plan is not None and field.dtype.kind == "f"
+                    and plan.should("nan", kind)):
+                field = field.copy()
+                field.reshape(-1)[0] = np.nan
+            if plan is not None and plan.should("straggler", kind):
+                time.sleep(_STRAGGLER_SLEEP_S)
+            _guardrail(kind, field)
+            return field, ovf, conv
+
+        def on_retry(a, exc):
+            log.warning(f"{kind} batch attempt {a + 1} failed "
+                        f"({type(exc).__name__}: {exc}); backing off")
+
+        try:
+            (field, ovf, conv), attempts = ft.with_retry(
+                attempt, retry, seed=batches, sleep=time.sleep,
+                on_retry=on_retry)
+            return field, ovf, conv, attempts, state["rung"], None
+        except Exception as exc:   # declared retry boundary: ladder dry
+            log.error(f"{kind} batch failed after {state['attempts']} "
+                      f"attempts: {type(exc).__name__}: {exc}")
+            return (None, None, None, state["attempts"],
+                    state.get("rung"), exc)
+
     def flush(kind):
-        nonlocal batches, overflow
+        nonlocal batches, overflow, retried, failures
         q = pending[kind]
         if not q:
             return
-        sl = np.asarray(q, np.int64)
+        pending[kind] = []
+        # serving latency deliberately includes queue wait; the device is
+        # fenced inside dispatch (np.asarray pulls the result to host)
+        now = time.monotonic()  # reprolint: disable=RL004 -- queue latency is the metric; dispatch fences
+        live = []
+        for qid, src, t_enq, dl in q:
+            if dl is not None and now >= dl:
+                # expired while queued: don't spend a batch slot on it
+                finish(qid, kind, src, "deadline_exceeded", t_enq,
+                       t_done=now, reason="deadline expired in queue")
+            else:
+                live.append((qid, src, t_enq, dl))
+        if not live:
+            return
+        sl = np.asarray([src for _, src, _, _ in live], np.int64)
         srcs = np.concatenate([sl, np.full(batch - len(sl), sl[-1],
                                            sl.dtype)])
-        field, ovf = run_kind(kind, srcs, backend, hops)
+        wd.start(batches)
+        field, ovf, conv, attempts, rung, err = dispatch(kind, srcs)
+        dt = wd.stop()
         t_done = time.monotonic()
+        batches += 1
+        if metrics is not None and wd.median():
+            metrics.gauge_max(
+                "straggler_multiple_max", dt / wd.median(),
+                help="worst batch wall time as a multiple of the "
+                     "robust-median batch time")
+        if field is None:
+            # retries + the whole ladder failed: the queries get a
+            # structured error, the stream lives on
+            for qid, src, t_enq, _ in live:
+                finish(qid, kind, src, "error", t_enq, t_done=t_done,
+                       reason=f"{type(err).__name__}: {err}",
+                       attempts=attempts)
+            if metrics is not None:
+                metrics.counter("queries_retried_total", len(live),
+                                kind=kind)
+            retried += len(live)
+            return
         # padding lanes repeat the last real query; don't double-count
         # their overflow (same trim as serve())
         overflow += int(ovf[:len(sl)].sum())
-        if validate:
-            answers.append((kind, sl, np.asarray(field)))
-        batch_lat = [(t_done - t_enq) * 1e3 for t_enq in enqueue[kind]]
+        # degraded = the answer came from a lower rung; a retry that
+        # recovered at the requested rung is full-fidelity "ok" (the
+        # attempts field and retried counter still record it)
+        degraded = bool(rung.reason)
+        conv_arr = (None if conv is None
+                    else np.asarray(conv).reshape(-1))
+        if validate and not degraded and (conv_arr is None
+                                          or conv_arr.all()):
+            # oracle-comparable only when nothing was cut short or
+            # approximated (a reduced-hop reach answers a different
+            # question than the oracle's)
+            answers.append((kind, sl, field))
+        batch_lat = []
+        for i, (qid, src, t_enq, dl) in enumerate(live):
+            conv_i = (True if conv_arr is None else
+                      bool(conv_arr[min(i, len(conv_arr) - 1)]))
+            late = dl is not None and t_done > dl
+            if not conv_i:
+                st = "deadline_exceeded"
+                reason = "iteration budget exhausted (partial result)"
+            elif late:
+                st = "deadline_exceeded"
+                reason = "completed after deadline"
+            elif degraded:
+                st = "degraded"
+                reason = None
+            else:
+                st = "ok"
+                reason = None
+            finish(qid, kind, src, st, t_enq, t_done=t_done,
+                   reason=reason, attempts=attempts,
+                   degraded_to=rung.reason if degraded else None)
+            batch_lat.append((t_done - t_enq) * 1e3)
+        if attempts > 1:
+            retried += len(live)
+            if metrics is not None:
+                metrics.counter("queries_retried_total", len(live),
+                                kind=kind)
         lat_ms[kind].extend(batch_lat)
         if metrics is not None:
             depth = sum(len(p) for p in pending.values())
             _observe_batch(metrics, kind, batch_lat, len(sl), batch,
                            queue_depth=depth)
-        pending[kind] = []
-        enqueue[kind] = []
-        batches += 1
 
-    for kind, src in queries:
-        pending[kind].append(src)
-        enqueue[kind].append(time.monotonic())
+    for qid, (kind, src) in enumerate(queries):
+        t_enq = time.monotonic()
+        # input hardening: malformed queries become structured per-query
+        # errors — never an exception that kills the stream
+        if kind not in KINDS:
+            finish(qid, str(kind), src, "error", t_enq,
+                   reason=f"unknown kind {kind!r}; expected one of "
+                          f"{','.join(KINDS)}")
+            continue
+        try:
+            src = int(src)
+        except (TypeError, ValueError):
+            finish(qid, kind, src, "error", t_enq,
+                   reason=f"source {src!r} is not an integer")
+            continue
+        if num_v is not None and not 0 <= src < num_v:
+            finish(qid, kind, src, "error", t_enq,
+                   reason=f"source {src} out of range [0, {num_v})")
+            continue
+        if admission is not None:
+            shed_reason = admission.admit(kind, pending)
+            if shed_reason is not None:
+                finish(qid, kind, src, "shed", t_enq, reason=shed_reason)
+                continue
+        dl = None if budget is None else budget.deadline_from(t_enq)
+        pending[kind].append((qid, src, t_enq, dl))
         if metrics is not None:
             metrics.gauge_max(
                 "queue_depth_peak",
@@ -347,6 +620,8 @@ def serve_mixed(g, queries, batch: int, backend: str, hops: int = 3,
             failures += _validate_kind(g, kind, sl, field, hops)
     if metrics is not None:
         _count_totals(metrics, batches, overflow)
+        metrics.counter("straggler_batches_total", len(wd.stragglers),
+                        help="flushes the watchdog flagged as stragglers")
 
     all_lat = np.asarray(sum(lat_ms.values(), []))
     per_kind = {}
@@ -363,6 +638,10 @@ def serve_mixed(g, queries, batch: int, backend: str, hops: int = 3,
         **latency_summary(all_lat),
         "per_kind": per_kind,
         "overflow": overflow,
+        "queries": results,
+        "status_counts": status_counts,
+        "retried": retried,
+        "stragglers": len(wd.stragglers),
         "validation_failures": failures if validate else None,
     }
 
@@ -408,7 +687,25 @@ def main(argv=None):
                          "(2d placement) over the first R*C local "
                          "devices; --parts P is the 1-D alias")
     ap.add_argument("--validate", action="store_true",
-                    help="check every lane against the numpy oracle")
+                    help="structurally validate the built graph "
+                         "(Graph.validate_graph) and check every lane "
+                         "against the numpy oracle")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-query wall-clock budget: queries that "
+                         "expire in queue or complete late are stamped "
+                         "deadline_exceeded")
+    ap.add_argument("--max-iters", type=int, default=None,
+                    help="per-query BSP iteration budget: lanes cut "
+                         "short return partial results stamped "
+                         "deadline_exceeded")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="batch dispatch retries before the query is "
+                         "declared failed (escalates through the "
+                         "degradation ladder)")
+    ap.add_argument("--max-pending", type=int, default=None,
+                    help="admission control: shed arrivals once this "
+                         "many queries are queued (structured per-query "
+                         "rejection, never an exception)")
     ap.add_argument("--backend", default=None,
                     choices=(B.XLA, B.PALLAS, B.AUTO))
     ap.add_argument("--json", default=None, metavar="PATH",
@@ -424,6 +721,19 @@ def main(argv=None):
 
     if args.trace:
         obs.reset()
+    # chaos rig: a seeded REPRO_FAULTS spec installs the fault plan for
+    # the whole serving process (no-op when unset)
+    plan = inject.install_from_env()
+    if plan is not None:
+        log.warning(f"fault injection ACTIVE: {plan.spec!r} "
+                    f"seed={plan.seed}")
+    # device health probe, once at startup: a failed device is named in
+    # the log (the eviction signal a multi-host controller would act on)
+    health = ft.check_devices()
+    for dev, ok in health.items():
+        if not ok:
+            log.warning(f"device {dev} failed the health probe — "
+                        f"evicting from the serving pool")
     bk = B.resolve(args.backend)
     metrics = Metrics() if args.metrics else None
     with obs.span("build_graph", category="setup",
@@ -432,6 +742,10 @@ def main(argv=None):
                        args.seed, index_dtype=args.index_dtype,
                        encoding=args.encoding)
         jax.block_until_ready(g.row_offsets)
+    if args.validate:
+        from repro.core.graph import validate_graph
+        validate_graph(g)    # raises GraphValidationError with the
+        log.info("structural validation: CSR/CSC clean")   # bad row/edge
     storage = resident_bytes(g)
     rng = np.random.default_rng(args.seed)
     kinds = None
@@ -526,17 +840,34 @@ def main(argv=None):
                       args={"kinds": ",".join(kinds)}):
             for _ in range(args.warmup):        # one trace per kind
                 for k in kinds:
-                    run_warm(k,
-                             rng.integers(0, g.num_vertices, args.batch),
-                             bk, args.hops)
+                    try:
+                        run_warm(k, rng.integers(0, g.num_vertices,
+                                                 args.batch),
+                                 bk, args.hops)
+                    except Exception as exc:
+                        # warmup is best-effort: under an installed
+                        # fault plan a cold trace can hit an injected
+                        # provider miss here; serving traces the kind on
+                        # first flush, inside the retry boundary
+                        log.warning(f"warmup {k} failed "
+                                    f"({type(exc).__name__}: {exc}); "
+                                    f"first flush will pay the trace")
         queries = [(kinds[i % len(kinds)],
                     int(rng.integers(0, g.num_vertices)))
                    for i in range(args.requests)]
+        budget = (ft.Budget(max_iters=args.max_iters,
+                            wall_ms=args.deadline_ms)
+                  if (args.max_iters or args.deadline_ms) else None)
+        admission = (ft.AdmissionPolicy(max_pending=args.max_pending)
+                     if args.max_pending else None)
         with obs.span("serve", category="serve",
                       args={"requests": args.requests}):
             stats = serve_mixed(g, queries, args.batch, bk,
                                 hops=args.hops, validate=args.validate,
-                                runner=runner, metrics=metrics)
+                                runner=runner, metrics=metrics,
+                                budget=budget, admission=admission,
+                                retry=ft.RetryPolicy(retries=args.retries),
+                                placement=placement)
         if pg is not None:
             stats["parts"] = pg.num_parts
             if mesh_shape:
@@ -559,9 +890,14 @@ def main(argv=None):
     stats["storage"] = storage
     log.info(f"{stats['requests']} queries in "
              f"{stats['total_s']:.2f}s = {stats['qps']:.1f} q/s  "
-             f"(lat ms mean {stats['lat_ms_mean']} "
-             f"p50 {stats['lat_ms_p50']} p95 {stats['lat_ms_p95']} "
-             f"p99 {stats['lat_ms_p99']}, n={stats['samples']})")
+             f"(lat ms mean {stats.get('lat_ms_mean', 0)} "
+             f"p50 {stats.get('lat_ms_p50', 0)} "
+             f"p95 {stats.get('lat_ms_p95', 0)} "
+             f"p99 {stats.get('lat_ms_p99', 0)}, n={stats['samples']})")
+    counts = stats.get("status_counts")
+    if counts and any(counts[s] for s in STATUSES if s != "ok"):
+        log.info("statuses: " + " ".join(
+            f"{s}={counts[s]}" for s in STATUSES if counts[s]))
     for k, row in stats.get("per_kind", {}).items():
         log.info(f"  {k:9s} {row['requests']:4d} queries  "
                  f"lat ms mean {row['lat_ms_mean']} "

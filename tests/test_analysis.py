@@ -108,9 +108,71 @@ def test_rl005_bare_print_in_lib():
     assert "RL005" not in rules_of(lint_source(src, lib=False))
 
 
+def test_rl006_bare_except_swallows():
+    src = ("def f(step):\n"
+           "    try:\n"
+           "        step()\n"
+           "    except:\n"
+           "        pass\n")
+    assert "RL006" in rules_of(lint_source(src))
+
+
+def test_rl006_broad_except_trivial_body():
+    for body in ("pass", "..."):
+        src = ("def f(step):\n"
+               "    try:\n"
+               "        step()\n"
+               f"    except Exception:\n        {body}\n")
+        assert "RL006" in rules_of(lint_source(src)), body
+    src = ("def f(steps):\n"
+           "    for s in steps:\n"
+           "        try:\n"
+           "            s()\n"
+           "        except BaseException:\n"
+           "            continue\n")
+    assert "RL006" in rules_of(lint_source(src))
+
+
+def test_rl006_handled_or_narrow_is_clean():
+    # a broad handler with a real body is a decision, not a swallow
+    src = ("def f(step, log):\n"
+           "    try:\n"
+           "        return step()\n"
+           "    except Exception as e:\n"
+           "        log.error(e)\n"
+           "        return None\n")
+    assert "RL006" not in rules_of(lint_source(src))
+    # narrowing to a concrete type is deliberate even when empty
+    src = ("def f(step):\n"
+           "    try:\n"
+           "        step()\n"
+           "    except ValueError:\n"
+           "        pass\n")
+    assert "RL006" not in rules_of(lint_source(src))
+    # bare except that re-raises is a cleanup handler, not a swallow
+    src = ("def f(step, undo):\n"
+           "    try:\n"
+           "        step()\n"
+           "    except:\n"
+           "        undo()\n"
+           "        raise\n")
+    assert "RL006" not in rules_of(lint_source(src))
+
+
+def test_rl006_declared_boundary_suppresses():
+    src = ("def f(step):\n"
+           "    try:\n"
+           "        step()\n"
+           "    except Exception:  "
+           "# reprolint: disable=RL006 -- probe boundary\n"
+           "        pass\n")
+    assert lint_source(src) == []
+
+
 def test_every_rule_has_a_seeded_test():
-    # the five tests above cover exactly the declared rule set
-    assert set(RULES) == {"RL001", "RL002", "RL003", "RL004", "RL005"}
+    # the tests above cover exactly the declared rule set
+    assert set(RULES) == {"RL001", "RL002", "RL003", "RL004", "RL005",
+                          "RL006"}
 
 
 # ---- reprolint: suppression syntax ---------------------------------------

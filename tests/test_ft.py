@@ -1,0 +1,411 @@
+"""Robustness-layer contracts (PR 10).
+
+  * fault injection: spec parsing, seeded determinism (same seed → the
+    same fault schedule), site scoping, context install/restore;
+  * budgets: validation, iteration capping, deadlines — and the
+    primitive-level partial-result contract (``converged=False`` exactly
+    when a budget cut the loop short, bit-identical results otherwise);
+  * retry: the backoff schedule is exact and deterministic, escalation
+    hands the attempt index to the callable, exhaustion re-raises;
+  * degradation ladder: rung order (exact-preserving first), clamping;
+  * admission: per-kind and global sheds;
+  * chaos-through-serve: every injected fault class leaves the stream
+    alive with exactly one terminal status per query, and the metrics
+    counters reconcile with the per-query statuses;
+  * chaos parity: with a zero-probability plan installed (and after it
+    is torn down) the healthy path is bit-identical to never-installed.
+"""
+import numpy as np
+import pytest
+
+from repro import ft
+from repro.core import graph as G
+from repro.core.primitives import (bfs_batch, pagerank,
+                                   reach_batch, sssp_batch)
+from repro.ft import inject
+from repro.ft.retry import backoff_ms
+from repro.launch import graph_serve
+from repro.obs.metrics import Metrics
+
+from test_graph_serve import FakeClock, _stub_runner
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_plan():
+    inject._reset_for_tests()
+    yield
+    inject._reset_for_tests()
+
+
+# ---- fault injection ------------------------------------------------------
+
+def test_fault_spec_errors():
+    for bad in ("provider_miss", "frobnicate@0.5", "nan@lots",
+                "nan@1.5", "nan@-0.1"):
+        with pytest.raises(inject.FaultSpecError):
+            inject.FaultPlan(bad)
+
+
+def test_fault_plan_is_seed_deterministic():
+    spec = "provider_miss@0.5;nan:bfs@0.25"
+    a = inject.FaultPlan(spec, seed=7)
+    b = inject.FaultPlan(spec, seed=7)
+    seq = [(k, s) for k in ("provider_miss", "nan") for s in ("bfs", "sssp")]
+    draws_a = [a.should(k, s) for _ in range(40) for k, s in seq]
+    draws_b = [b.should(k, s) for _ in range(40) for k, s in seq]
+    assert draws_a == draws_b
+    assert any(draws_a) and not all(draws_a)
+    # a different seed yields a different schedule
+    c = inject.FaultPlan(spec, seed=8)
+    draws_c = [c.should(k, s) for _ in range(40) for k, s in seq]
+    assert draws_c != draws_a
+
+
+def test_fault_site_scoping():
+    plan = inject.FaultPlan("nan:bfs@1.0", seed=0)
+    assert plan.should("nan", "bfs")
+    assert not plan.should("nan", "sssp")     # clause is site-scoped
+    assert not plan.should("straggler", "bfs")  # kind not in the plan
+
+
+def test_faults_context_installs_and_restores():
+    assert inject.active() is None
+    with inject.faults("nan@1.0", seed=3) as plan:
+        assert inject.active() is plan
+        assert plan.seed == 3
+    assert inject.active() is None
+
+
+# ---- budgets --------------------------------------------------------------
+
+def test_budget_validation():
+    with pytest.raises(ValueError):
+        ft.Budget(max_iters=0)
+    with pytest.raises(ValueError):
+        ft.Budget(wall_ms=0)
+    assert ft.UNLIMITED.cap_iters(17) == 17
+    assert ft.UNLIMITED.deadline_from(5.0) is None
+    b = ft.Budget(max_iters=3, wall_ms=250.0)
+    assert b.cap_iters(17) == 3
+    assert b.cap_iters(2) == 2
+    assert b.deadline_from(1.0) == pytest.approx(1.25)
+
+
+@pytest.fixture(scope="module")
+def small_graph():
+    return G.rmat(6, 8, seed=3, weighted=True)
+
+
+def test_budget_partial_results_flag_converged(small_graph):
+    g = small_graph
+    srcs = [0, 1, 2, 3]
+    full = bfs_batch(g, srcs, backend="xla")
+    assert bool(np.asarray(full.converged).all())
+    cut = bfs_batch(g, srcs, backend="xla",
+                        budget=ft.Budget(max_iters=1))
+    # one hop cannot finish an rmat component: partial + flagged
+    assert not bool(np.asarray(cut.converged).all())
+    # the partial depths agree with the full run wherever they are set
+    d_cut, d_full = np.asarray(cut.labels), np.asarray(full.labels)
+    seen = d_cut >= 0
+    assert np.array_equal(d_cut[seen], d_full[seen])
+
+    pr_cut = pagerank(g, max_iter=20, backend="xla",
+                               budget=ft.Budget(max_iters=2))
+    assert not bool(np.asarray(pr_cut.converged))
+    assert int(pr_cut.iterations) == 2
+    pr_full = pagerank(g, max_iter=20, backend="xla")
+    assert bool(np.asarray(pr_full.converged))
+
+    r_cut = reach_batch(g, srcs, k=4, backend="xla",
+                              budget=ft.Budget(max_iters=2))
+    assert not bool(np.asarray(r_cut.converged))
+    assert int(r_cut.hops) == 2
+    # the clamped run answers the smaller neighborhood exactly
+    r2 = reach_batch(g, srcs, k=2, backend="xla")
+    assert np.array_equal(np.asarray(r_cut.reached), np.asarray(r2.reached))
+
+    s_cut = sssp_batch(g, srcs, backend="xla",
+                            budget=ft.Budget(max_iters=1))
+    assert not bool(np.asarray(s_cut.converged).all())
+
+
+def test_unbudgeted_results_unchanged(small_graph):
+    g = small_graph
+    a = bfs_batch(g, [0, 5], backend="xla")
+    b = bfs_batch(g, [0, 5], backend="xla", budget=ft.UNLIMITED)
+    assert np.array_equal(np.asarray(a.labels), np.asarray(b.labels))
+    assert bool(np.asarray(b.converged).all())
+
+
+# ---- retry ----------------------------------------------------------------
+
+def test_backoff_schedule_is_exact():
+    p = ft.RetryPolicy(retries=3, base_ms=10.0, factor=2.0, jitter=0.0)
+    assert [backoff_ms(p, a) for a in range(3)] == [10.0, 20.0, 40.0]
+    pj = ft.RetryPolicy(retries=3, base_ms=10.0, factor=2.0, jitter=0.5)
+    for a in range(3):
+        d = backoff_ms(pj, a, seed=11)
+        nominal = 10.0 * 2.0 ** a
+        assert nominal <= d <= nominal * 1.5
+        assert d == backoff_ms(pj, a, seed=11)   # deterministic
+
+
+def test_with_retry_escalates_and_records_sleeps():
+    p = ft.RetryPolicy(retries=2, base_ms=10.0, factor=2.0, jitter=0.0)
+    sleeps, seen = [], []
+
+    def flaky(attempt):
+        seen.append(attempt)
+        if attempt < 2:
+            raise RuntimeError("boom")
+        return "ok"
+
+    out, attempts = ft.with_retry(flaky, p, sleep=sleeps.append)
+    assert out == "ok" and attempts == 3
+    assert seen == [0, 1, 2]               # attempt index escalates
+    assert sleeps == [0.010, 0.020]        # exact backoff, seconds
+
+
+def test_with_retry_exhaustion_and_nonretryable():
+    p = ft.RetryPolicy(retries=1, base_ms=0.0, jitter=0.0)
+    with pytest.raises(RuntimeError):
+        ft.with_retry(lambda a: (_ for _ in ()).throw(RuntimeError("x")),
+                      p, sleep=lambda s: None)
+    calls = []
+
+    def bad(attempt):
+        calls.append(attempt)
+        raise KeyboardInterrupt
+
+    with pytest.raises(KeyboardInterrupt):
+        ft.with_retry(bad, p, retryable=(RuntimeError,),
+                      sleep=lambda s: None)
+    assert calls == [0]                    # no retry on non-retryable
+
+
+# ---- degradation ladder ---------------------------------------------------
+
+def test_ladder_orders_exact_preserving_first():
+    rungs = ft.ladder("bfs", "pallas", "single")
+    assert [(r.backend, r.placement) for r in rungs] == [
+        ("pallas", "single"), ("xla", "single")]
+    assert rungs[0].reason == "" and "pallas" in rungs[1].reason
+
+    rungs = ft.ladder("sssp", "pallas", "2d")
+    assert [(r.backend, r.placement) for r in rungs] == [
+        ("pallas", "2d"), ("xla", "2d"), ("xla", "sharded"),
+        ("xla", "single")]
+
+    rungs = ft.ladder("reach", "xla", "single", hops=4)
+    assert rungs[-1].hops == 2 and rungs[-1].approximate
+
+    rungs = ft.ladder("bc", "xla", "single")
+    assert rungs[-1].sampled and rungs[-1].approximate
+
+    # the ladder clamps at the bottom rung
+    assert ft.rung_for_attempt(rungs, 99) is rungs[-1]
+
+
+# ---- admission ------------------------------------------------------------
+
+def test_admission_policy():
+    with pytest.raises(ValueError):
+        ft.AdmissionPolicy(max_per_kind=0)
+    pol = ft.AdmissionPolicy(max_per_kind=2, max_pending=3)
+    assert pol.admit("bfs", {"bfs": [1, 2]}) is not None
+    assert pol.admit("bfs", {"bfs": [1]}) is None
+    assert pol.admit("sssp", {"bfs": [1, 2], "sssp": [3]}) is not None
+    assert ft.UNBOUNDED.admit("bfs", {"bfs": list(range(999))}) is None
+
+
+# ---- chaos through serve_mixed --------------------------------------------
+
+def _ctotal(metrics, name):
+    fam = metrics._families.get(f"graph_serve_{name}")
+    return 0 if fam is None else int(sum(fam.series.values()))
+
+
+def _statuses(stats):
+    return [q["status"] for q in stats["queries"]]
+
+
+def _assert_reconciled(stats, metrics):
+    """The acceptance invariant: counters == per-query statuses."""
+    counts = stats["status_counts"]
+    assert sum(counts.values()) == stats["requests"]
+    assert all(q is not None for q in stats["queries"])
+    for st in graph_serve.STATUSES:
+        assert _ctotal(metrics, graph_serve._STATUS_COUNTER[st]) == \
+            counts[st], st
+    assert _ctotal(metrics, "queries_retried_total") == stats["retried"]
+
+
+def _serve(queries, clock, monkeypatch, *, spec=None, seed=0,
+           backend="xla", **kw):
+    monkeypatch.setattr(graph_serve, "time", clock)
+    metrics = Metrics()
+    kw.setdefault("runner", _stub_runner(clock))
+    kw.setdefault("retry", ft.RetryPolicy(retries=2, base_ms=10.0,
+                                          jitter=0.0))
+    if spec is None:
+        stats = graph_serve.serve_mixed(None, queries, batch=2,
+                                        backend=backend, metrics=metrics,
+                                        **kw)
+    else:
+        with inject.faults(spec, seed=seed):
+            stats = graph_serve.serve_mixed(None, queries, batch=2,
+                                            backend=backend, metrics=metrics,
+                                            **kw)
+    _assert_reconciled(stats, metrics)
+    return stats
+
+
+def test_chaos_provider_miss_exhausts_ladder(monkeypatch):
+    clock = FakeClock()
+    stats = _serve([("bfs", 0)] * 4, clock, monkeypatch,
+                   spec="provider_miss@1.0")
+    assert _statuses(stats) == ["error"] * 4
+    assert all("ProviderMissError" in q["reason"]
+               for q in stats["queries"])
+    assert stats["retried"] == 4
+
+
+def test_chaos_nan_guardrail_retry_recovers(monkeypatch):
+    # a seed where the bfs nan stream hits on draw 0 and misses on
+    # draw 1: attempt 1 is poisoned, the retry comes back clean
+    seed = next(s for s in range(64)
+                if inject._draw(s, "nan", "bfs", 0) < 0.6
+                and inject._draw(s, "nan", "bfs", 1) >= 0.6)
+    clock = FakeClock()
+    stats = _serve([("bfs", 0)] * 2, clock, monkeypatch,
+                   spec="nan:bfs@0.6", seed=seed)
+    assert _statuses(stats) == ["ok", "ok"]
+    assert all(q["attempts"] == 2 for q in stats["queries"])
+    assert stats["retried"] == 2
+
+
+def test_chaos_nan_guardrail_terminal_error(monkeypatch):
+    clock = FakeClock()
+    stats = _serve([("sssp", 0)] * 2, clock, monkeypatch, spec="nan@1.0")
+    assert _statuses(stats) == ["error"] * 2
+    assert all("PoisonedResultError" in q["reason"]
+               for q in stats["queries"])
+
+
+def test_deadline_expires_in_queue(monkeypatch):
+    # sssp#1 (t=0) waits while two bfs batches burn 2 fake seconds; its
+    # 1.5 s deadline expires before its batch dispatches. sssp#2 joins
+    # at t=2 and completes inside its own window.
+    clock = FakeClock()
+    queries = [("sssp", 0)] + [("bfs", 0)] * 4 + [("sssp", 0)]
+    stats = _serve(queries, clock, monkeypatch,
+                   budget=ft.Budget(wall_ms=1500.0))
+    by_kind = [q for q in stats["queries"] if q["kind"] == "sssp"]
+    assert [q["status"] for q in by_kind] == ["deadline_exceeded", "ok"]
+    assert "expired in queue" in by_kind[0]["reason"]
+    assert [q["status"] for q in stats["queries"]
+            if q["kind"] == "bfs"] == ["ok"] * 4
+
+
+def test_deadline_late_completion_is_stamped(monkeypatch):
+    # every batch costs 1 fake second but the budget is 500 ms: queries
+    # still get their (partial-trust) answers, stamped past-deadline
+    clock = FakeClock()
+    stats = _serve([("bfs", 0)] * 2, clock, monkeypatch,
+                   budget=ft.Budget(wall_ms=500.0))
+    assert _statuses(stats) == ["deadline_exceeded"] * 2
+    assert all("after deadline" in q["reason"] for q in stats["queries"])
+
+
+def test_admission_sheds_over_cap(monkeypatch):
+    # cap below the batch size: the queue holds one query that never
+    # fills a batch, so later arrivals shed until the ragged-tail flush
+    clock = FakeClock()
+    stats = _serve([("bfs", i) for i in range(4)], clock, monkeypatch,
+                   admission=ft.AdmissionPolicy(max_per_kind=1))
+    assert _statuses(stats) == ["ok", "shed", "shed", "shed"]
+    assert all("full" in q["reason"] for q in stats["queries"][1:])
+
+
+def test_malformed_queries_become_structured_errors(small_graph):
+    metrics = Metrics()
+    n = small_graph.num_vertices
+    queries = [("bfs", 0), ("pagerank_typo", 0), ("bfs", "zero"),
+               ("sssp", n + 17), ("sssp", 1)]
+    stats = graph_serve.serve_mixed(
+        small_graph, queries, batch=1, backend="xla", metrics=metrics,
+        retry=ft.RetryPolicy(retries=0, base_ms=0.0, jitter=0.0))
+    _assert_reconciled(stats, metrics)
+    sts = _statuses(stats)
+    assert sts[0] == "ok" and sts[4] == "ok"
+    assert sts[1] == sts[2] == sts[3] == "error"
+    assert "unknown kind" in stats["queries"][1]["reason"]
+    assert "not an integer" in stats["queries"][2]["reason"]
+    assert "out of range" in stats["queries"][3]["reason"]
+
+
+def test_degraded_batch_is_stamped_and_declared(monkeypatch):
+    # provider_miss on attempt 0 only: the retry lands on the xla rung
+    # and the answers are stamped degraded (not ok, not error)
+    seed = next(s for s in range(64)
+                if inject._draw(s, "provider_miss", "bfs", 0) < 0.6
+                and inject._draw(s, "provider_miss", "bfs", 1) >= 0.6)
+    clock = FakeClock()
+    stats = _serve([("bfs", 0)] * 2, clock, monkeypatch,
+                   spec="provider_miss:bfs@0.6", seed=seed,
+                   backend="pallas")
+    assert _statuses(stats) == ["degraded"] * 2
+    assert all(q["degraded_to"] == "backend pallas→xla"
+               for q in stats["queries"])
+
+
+# ---- chaos parity ---------------------------------------------------------
+
+def test_zero_probability_plan_is_bit_invisible(small_graph):
+    g = small_graph
+    srcs = [0, 1, 2, 3]
+    base = {
+        "bfs": np.asarray(bfs_batch(g, srcs, backend="xla").labels),
+        "sssp": np.asarray(sssp_batch(g, srcs, backend="xla").dist),
+        "pr": np.asarray(pagerank(g, backend="xla").rank),
+        "reach": np.asarray(
+            reach_batch(g, srcs, k=3, backend="xla").reached),
+    }
+    spec = "provider_miss@0.0;nan@0.0;straggler@0.0;shard_loss@0.0"
+    with inject.faults(spec, seed=1):
+        inside = {
+            "bfs": np.asarray(bfs_batch(g, srcs, backend="xla").labels),
+            "sssp": np.asarray(
+                sssp_batch(g, srcs, backend="xla").dist),
+            "pr": np.asarray(pagerank(g, backend="xla").rank),
+            "reach": np.asarray(
+                reach_batch(g, srcs, k=3, backend="xla").reached),
+        }
+    after = np.asarray(bfs_batch(g, srcs, backend="xla").labels)
+    for k in base:
+        assert np.array_equal(base[k], inside[k]), k
+    assert np.array_equal(base["bfs"], after)
+
+
+def test_serve_statuses_identical_disabled_vs_never(monkeypatch,
+                                                    small_graph):
+    queries = [(k, i) for i in range(4)
+               for k in ("bfs", "sssp", "pagerank", "reach")]
+
+    def run(spec):
+        m = Metrics()
+        kw = dict(batch=4, backend="xla", metrics=m,
+                  retry=ft.RetryPolicy(retries=0, base_ms=0.0, jitter=0.0))
+        if spec is None:
+            st = graph_serve.serve_mixed(small_graph, queries, **kw)
+        else:
+            with inject.faults(spec, seed=5):
+                st = graph_serve.serve_mixed(small_graph, queries, **kw)
+        _assert_reconciled(st, m)
+        return st
+
+    never = run(None)
+    disabled = run("provider_miss@0.0;nan@0.0;straggler@0.0;shard_loss@0.0")
+    assert _statuses(never) == _statuses(disabled) == ["ok"] * len(queries)
+    assert never["status_counts"] == disabled["status_counts"]

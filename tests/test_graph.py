@@ -101,3 +101,58 @@ def test_neighbors_padded():
     assert np.array_equal(np.asarray(mask).sum(1),
                           np.minimum(deg, 4))
     assert np.all(np.asarray(nbrs)[~np.asarray(mask)] == -1)
+
+
+# ---- structural validation (PR 10, Graph.from_csr(validate=True)) --------
+
+def test_validate_accepts_wellformed():
+    indptr = np.array([0, 2, 3, 3, 4], np.int64)
+    cols = np.array([1, 3, 2, 0], np.int64)
+    vals = np.array([1.0, 2.0, 0.5, 3.0], np.float32)
+    assert G.validate_csr(indptr, cols, vals) == (4, 4)
+    g = G.Graph.from_csr(indptr, cols, vals, validate=True)
+    assert g.num_vertices == 4 and g.num_edges == 4
+
+
+@pytest.mark.parametrize("indptr, cols, vals, needle", [
+    # non-monotone indptr: row 1 named with both offsets
+    ([0, 3, 2, 4], [0, 1, 2, 3], None, "row 1"),
+    # indptr does not start at zero
+    ([1, 2, 4], [0, 1, 1], None, "must be 0"),
+    # last offset disagrees with the edge count
+    ([0, 2, 3], [0, 1], None, "col_indices"),
+    # out-of-range column id: the edge index is named
+    ([0, 2], [0, 7], None, "edge 1"),
+    # negative column id
+    ([0, 1], [-1], None, "edge 0"),
+    # edge_values length mismatch
+    ([0, 1, 2], [0, 1], [1.0], "edge_values"),
+    # non-finite weight
+    ([0, 1, 2], [0, 1], [1.0, float("nan")], "finite"),
+])
+def test_validate_rejects_malformed(indptr, cols, vals, needle):
+    vals = None if vals is None else np.asarray(vals, np.float32)
+    with pytest.raises(G.GraphValidationError, match=needle):
+        G.validate_csr(np.asarray(indptr, np.int64),
+                       np.asarray(cols, np.int64), vals)
+    with pytest.raises(G.GraphValidationError):
+        G.Graph.from_csr(np.asarray(indptr, np.int64),
+                         np.asarray(cols, np.int64), vals, validate=True)
+
+
+def test_validate_default_off_is_unchanged():
+    # an indptr that does not start at 0 builds (garbage-in) without
+    # validate= — the flag must not change default construction
+    indptr = np.array([0, 2, 3, 3, 4], np.int64)
+    cols = np.array([1, 3, 2, 0], np.int64)
+    a = G.Graph.from_csr(indptr, cols)
+    b = G.Graph.from_csr(indptr, cols, validate=True)
+    assert np.array_equal(np.asarray(a.row_offsets),
+                          np.asarray(b.row_offsets))
+    assert np.array_equal(a.cols_np(), b.cols_np())
+
+
+def test_validate_graph_roundtrip():
+    g = G.rmat(6, 8, seed=3, weighted=True)
+    n, m = G.validate_graph(g)
+    assert (n, m) == (g.num_vertices, g.num_edges)

@@ -19,6 +19,10 @@ class FakeClock:
     def monotonic(self):
         return self.t
 
+    def sleep(self, seconds):
+        # retry backoff advances fake time instead of blocking the suite
+        self.t += seconds
+
 
 def _stub_runner(clock, batch_seconds=1.0):
     def run(kind, srcs, backend, hops):
